@@ -1,0 +1,68 @@
+//! §Perf probe (EXPERIMENTS.md §Perf): quantifies the engine hot-path
+//! optimizations, before/after:
+//! (1) weights resident on device (`execute_b`) vs re-uploaded per step
+//!     (execute with literals) — the baseline the runtime started from;
+//! (2) shared-context residency vs per-step context upload.
+//!
+//!     cargo run --release --offline --example perf_probe
+
+use bifurcated_attn::bench::Bencher;
+use bifurcated_attn::runtime::client::{run_buffers, run_tensors, upload};
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::tensor::{load_weights_bin, HostTensor};
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load(&Manifest::default_root())?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&man, &client, "pico-mh")?;
+    let b = 8usize;
+    rt.warm(&[DecodeMode::Bifurcated], &[b])?;
+    let entry = man.serving_entry("pico-mh")?;
+    let weights = load_weights_bin(&entry.weights_bin, &entry.param_spec)?;
+
+    let mut prompt = vec![man.tokenizer.bos];
+    prompt.extend(man.tokenizer.encode("10+2=12;11+3=14;12+4=")?);
+    let pre = rt.prefill(&prompt)?;
+    let ctx = rt.upload_context(&pre.kc, &pre.vc, prompt.len())?;
+    let (kd, vd) = rt.zero_decode_cache(b);
+    let toks = vec![3i32; b];
+
+    let bench = Bencher::new("perf");
+    // AFTER (current engine path): weights + context resident
+    let s_resident = bench.run(|| {
+        rt.decode(DecodeMode::Bifurcated, b, &toks, 0, &ctx, &kd, &vd).unwrap();
+    });
+
+    // BEFORE: every input re-uploaded per step via literals (weights incl.)
+    let exe = rt.decode_exe(DecodeMode::Bifurcated, b)?;
+    let tok_t = HostTensor::from_i32(toks.clone(), &[b]);
+    let pos_t = HostTensor::scalar_i32(0);
+    let len_t = HostTensor::scalar_i32(prompt.len() as i32);
+    let s_literals = bench.run(|| {
+        let mut inputs: Vec<&HostTensor> = weights.iter().collect();
+        inputs.extend([&tok_t, &pos_t, &len_t, &pre.kc, &pre.vc, &kd, &vd]);
+        run_tensors(&exe, &inputs).unwrap();
+    });
+
+    // MIDDLE: weights resident, context re-uploaded each step
+    let weight_bufs: Vec<_> = weights.iter().map(|t| upload(&client, t).unwrap()).collect();
+    let s_ctx_upload = bench.run(|| {
+        let kc_buf = upload(&client, &pre.kc).unwrap();
+        let vc_buf = upload(&client, &pre.vc).unwrap();
+        let tok_buf = upload(&client, &tok_t).unwrap();
+        let pos_buf = upload(&client, &pos_t).unwrap();
+        let len_buf = upload(&client, &len_t).unwrap();
+        let kd_buf = upload(&client, &kd).unwrap();
+        let vd_buf = upload(&client, &vd).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = weight_bufs.iter().collect();
+        inputs.extend([&tok_buf, &pos_buf, &len_buf, &kc_buf, &vc_buf, &kd_buf, &vd_buf]);
+        run_buffers(&exe, &inputs).unwrap();
+    });
+
+    println!("decode step b={b} (pico-mh, bifurcated):");
+    println!("  all-literals per step (naive)        p50 = {:.3} ms", s_literals.p50);
+    println!("  weights resident, ctx re-uploaded    p50 = {:.3} ms", s_ctx_upload.p50);
+    println!("  weights + context resident (engine)  p50 = {:.3} ms", s_resident.p50);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load a trained pico model through the AOT artifacts, sample
+//! 8 parallel completions from one shared prompt, rerank by mean log-p.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use bifurcated_attn::coordinator::{
+    rerank_top_k, Engine, EngineConfig, GenerationRequest, SamplingParams,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. artifacts -> runtime -> engine
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&manifest, &client, "pico-mq")?;
+    let engine = Engine::new(&manifest, rt, EngineConfig::default());
+
+    // 2. one shared context, n parallel samplers (single-context batch
+    //    sampling — the paper's Fig. 1 right panel)
+    let request = GenerationRequest {
+        id: 1,
+        prompt: "10+2=12;11+3=14;7+8=".into(),
+        params: SamplingParams {
+            n: 8,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens: 6,
+            stop_token: Some(corpus::SEMI),
+            seed: 0,
+        },
+    };
+    let result = engine.generate(&request)?;
+
+    println!(
+        "mode={}  prefill {:.1} ms, {} decode steps at {:.1} ms/step",
+        result.mode_used,
+        result.timing.prefill_ms,
+        result.timing.decode_steps,
+        result.timing.per_step_ms()
+    );
+    for (i, c) in result.completions.iter().enumerate() {
+        let ok = if c.text.starts_with("15;") { "✓" } else { " " };
+        println!("  sample {i}: {:8} mean_logp={:+.3} {}", c.text, c.mean_logp(), ok);
+    }
+
+    // 3. mean-log-p reranking (the paper's pass@top3 selection)
+    let top3 = rerank_top_k(&result.completions, 3);
+    println!(
+        "top-3 by mean log-p: {:?}",
+        top3.iter().map(|c| c.text.as_str()).collect::<Vec<_>>()
+    );
+    Ok(())
+}

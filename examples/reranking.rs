@@ -1,0 +1,44 @@
+//! Reranking demo (paper Sec. 5.4): run the checkable task suite at
+//! several sample counts; show pass@1 / pass@n / pass@top3 rising with n
+//! while latency stays ~flat thanks to shared-prefix batch decoding.
+//!
+//!     cargo run --release --offline --example reranking [--quick]
+
+use bifurcated_attn::bench::{Cell, Table};
+use bifurcated_attn::coordinator::{Engine, EngineConfig};
+use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&manifest, &client, "pico-mq")?;
+    let engine = Engine::new(&manifest, rt, EngineConfig::default());
+
+    let ns: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let mut t = Table::new(
+        "pass@n / pass@top3 vs measured latency (pico-mq)",
+        &["n", "pass@1", "pass@n", "pass@top3", "latency ms"],
+    );
+    for &n in ns {
+        let res = run_suite(
+            &engine,
+            &SuiteConfig {
+                n_tasks: if quick { 5 } else { 12 },
+                n_samples: n,
+                seed: 21,
+                ..Default::default()
+            },
+        )?;
+        t.row(vec![
+            Cell::Num(n as f64),
+            Cell::Num((res.pass_at[0] * 100.0).round() / 100.0),
+            Cell::Num((res.pass_at[n - 1] * 100.0).round() / 100.0),
+            Cell::Num((res.pass_top3 * 100.0).round() / 100.0),
+            Cell::Ms(res.mean_latency_ms),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the repo's E2E validation run): start the
+//! HTTP server on the engine event loop, fire concurrent generate
+//! requests from client threads, and report latency/throughput. Recorded
+//! in EXPERIMENTS.md.
+//!
+//!     cargo run --release --offline --example serve_e2e [--requests 12] [--n 8]
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bifurcated_attn::coordinator::EngineConfig;
+use bifurcated_attn::runtime::Manifest;
+use bifurcated_attn::util::cli::Args;
+use bifurcated_attn::util::histogram::Histogram;
+use bifurcated_attn::util::prng::Pcg;
+
+fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: e2e\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    anyhow::ensure!(resp.starts_with("HTTP/1.1 200"), "bad response: {resp}");
+    Ok(resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 12);
+    let n_samples = args.usize_or("n", 8);
+    let addr = "127.0.0.1:8093";
+
+    // leader: engine event loop + HTTP front-end
+    let client = bifurcated_attn::server::spawn_engine(
+        Manifest::default_root(),
+        args.str_or("model", "pico-mq"),
+        EngineConfig::default(),
+    )?;
+    let server = bifurcated_attn::server::build_server(client);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&shutdown);
+    let server_thread = std::thread::spawn(move || server.serve(addr, 4, Some(flag)).unwrap());
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // workload: concurrent clients, each asking n parallel samples for a
+    // random arithmetic task (one shared prefix per request)
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(f64, bool)> {
+            let mut rng = Pcg::new(1000 + i as u64);
+            let task = bifurcated_attn::corpus::make_task(&mut rng, 3);
+            let body = format!(
+                r#"{{"prompt":"{}","n":{n_samples},"rerank_top_k":3,"seed":{i}}}"#,
+                task.prompt
+            );
+            let t = Instant::now();
+            let resp = http_post(&addr, "/generate", &body)?;
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            let doc = bifurcated_attn::util::json::parse(&resp)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let top_correct = doc
+                .req("reranked")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .any(|c| task.check(&c.str_or("text", "")));
+            Ok((ms, top_correct))
+        }));
+    }
+    let mut hist = Histogram::new();
+    let mut correct = 0usize;
+    for h in handles {
+        let (ms, ok) = h.join().unwrap()?;
+        hist.record(ms);
+        if ok {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = hist.summary();
+    println!(
+        "{n_requests} requests x {n_samples} samples in {wall:.1}s  ({:.2} req/s, {:.1} completions/s)",
+        n_requests as f64 / wall,
+        (n_requests * n_samples) as f64 / wall
+    );
+    println!(
+        "request latency ms: p50={:.0} p90={:.0} max={:.0}   top3-contains-answer: {}/{}",
+        s.p50, s.p90, s.max, correct, n_requests
+    );
+
+    shutdown.store(true, Ordering::SeqCst);
+    server_thread.join().unwrap();
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model + Pallas kernels -> HLO text artifacts.
+
+Never imported at serving time; the rust binary is self-contained once
+``make artifacts`` has run.
+"""

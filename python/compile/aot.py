@@ -1,0 +1,340 @@
+"""AOT compile path: train the pico serving models, lower every entry point
+to HLO *text*, and emit ``artifacts/`` for the rust runtime.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (all under ``--out``, default ``../artifacts``):
+
+    manifest.json                     everything the rust side needs
+    hlo/<variant>.prefill.hlo.txt
+    hlo/<variant>.decode.<mode>.b<b>.hlo.txt
+    hlo/<variant>.train_step.hlo.txt  (scaling family)
+    hlo/<variant>.eval_loss.hlo.txt
+    weights/<variant>.bin             flat f32 params in param_spec order
+
+Run via ``make artifacts``; python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .configs import (BATCH_BUCKETS, DECODE_MODES, PICO_TRAIN_BATCH,
+                      SCALING_VARIANTS, SERVING_VARIANTS, TRAIN_BATCH, VOCAB,
+                      ModelConfig)
+from . import model as M
+
+assert VOCAB == corpus.VOCAB_SIZE, "configs.VOCAB must match the tokenizer"
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> Dict:
+    """jit-lower ``fn`` at the example shapes and write HLO text.
+    Returns a small descriptor (arg shapes/dtypes) for the manifest."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    args_desc = [
+        {"shape": list(np.shape(a)), "dtype": str(np.asarray(a).dtype)}
+        for a in example_args
+    ]
+    return {"file": os.path.relpath(path, os.path.dirname(os.path.dirname(path))),
+            "args": args_desc, "bytes": len(text)}
+
+
+def shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# --------------------------------------------------------------------------
+# Weights I/O — raw little-endian f32, concatenated in param_spec order.
+# --------------------------------------------------------------------------
+
+
+def write_weights(path: str, cfg: ModelConfig, params: Dict[str, jax.Array]):
+    flat = M.flatten_params(cfg, params)
+    buf = b"".join(np.asarray(a, dtype="<f4").tobytes() for a in flat)
+    with open(path, "wb") as f:
+        f.write(buf)
+    return len(buf)
+
+
+# --------------------------------------------------------------------------
+# Pico training (serving family): learn the arithmetic grammar well enough
+# that temperature sampling lands in the pass@n-improves-with-n regime.
+# --------------------------------------------------------------------------
+
+
+def train_pico(cfg: ModelConfig, steps: int, seed: int = 0, lr: float = 1.5e-3):
+    rng = np.random.default_rng(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    m = M.zeros_like_params(cfg)
+    v = M.zeros_like_params(cfg)
+    step_fn = M.make_jitted_train(cfg, lr=lr)
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(1, steps + 1):
+        batch = corpus.training_batch(rng, PICO_TRAIN_BATCH, cfg.seq_len)
+        params, m, v, loss = step_fn(params, m, v, jnp.float32(i), batch)
+        if i % max(1, steps // 8) == 0:
+            print(f"    [{cfg.name}] step {i}/{steps} loss={float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    val = corpus.training_batch(np.random.default_rng(10_000), PICO_TRAIN_BATCH, cfg.seq_len)
+    val_loss = float(jax.jit(lambda p, b: M.eval_loss(p, cfg, b))(params, val))
+    return params, float(loss), val_loss
+
+
+def greedy_accuracy(cfg: ModelConfig, params, n_tasks: int = 40, seed: int = 7) -> float:
+    """Greedy-decode accuracy on held-out tasks (manifest metadata only)."""
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(lambda p, t, ln: M.forward_full(p, cfg, t, ln)[0])
+    hits = 0
+    for _ in range(n_tasks):
+        a = int(rng.integers(0, corpus.MAX_OPERAND + 1))
+        b = int(rng.integers(0, corpus.MAX_OPERAND + 1))
+        prompt = corpus.make_prompt(rng, n_shots=4, a=a, b=b)
+        ids = [corpus.BOS] + corpus.encode(prompt)
+        out = []
+        for _ in range(6):
+            toks = np.asarray([ids], dtype=np.int32)
+            logits = fwd(params, toks, len(ids))
+            nxt = int(jnp.argmax(logits[0, len(ids) - 1]))
+            ids.append(nxt)
+            out.append(nxt)
+            if nxt == corpus.SEMI:
+                break
+        if corpus.check_completion(a, b, corpus.decode_ids(out)):
+            hits += 1
+    return hits / n_tasks
+
+
+# --------------------------------------------------------------------------
+# Entry-point wrappers with flat (manifest-ordered) signatures.
+# Scalars travel as shape-[1] i32/f32 arrays — trivially constructed as
+# literals on the rust side.
+# --------------------------------------------------------------------------
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    n_params = len(M.param_spec(cfg))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, list(args[:n_params]))
+        tokens, length = args[n_params], args[n_params + 1]
+        logits, kc, vc = M.prefill(params, cfg, tokens, length[0])
+        return logits, kc, vc
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, mode: str):
+    n_params = len(M.param_spec(cfg))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, list(args[:n_params]))
+        tokens, d_pos, m_c_len, kc, vc, kd, vd = args[n_params:]
+        return M.decode_step(params, cfg, mode, tokens, d_pos[0], m_c_len[0],
+                             kc, vc, kd, vd, interpret=True)
+
+    return fn
+
+
+def make_train_fn(cfg: ModelConfig, lr: float):
+    spec = M.param_spec(cfg)
+    P = len(spec)
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, list(args[:P]))
+        m = M.unflatten_params(cfg, list(args[P:2 * P]))
+        v = M.unflatten_params(cfg, list(args[2 * P:3 * P]))
+        step, batch = args[3 * P], args[3 * P + 1]
+        p2, m2, v2, loss = M.train_step(params, m, v, step[0], batch, cfg, lr=lr)
+        out = tuple(M.flatten_params(cfg, p2)) + tuple(M.flatten_params(cfg, m2)) \
+            + tuple(M.flatten_params(cfg, v2)) + (jnp.reshape(loss, (1,)),)
+        return out
+
+    return fn
+
+
+def make_eval_fn(cfg: ModelConfig):
+    P = len(M.param_spec(cfg))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, list(args[:P]))
+        batch = args[P]
+        return (jnp.reshape(M.eval_loss(params, cfg, batch), (1,)),)
+
+    return fn
+
+
+def param_structs(cfg: ModelConfig):
+    return [shape_struct(s) for _, s in M.param_spec(cfg)]
+
+
+# --------------------------------------------------------------------------
+# Main build
+# --------------------------------------------------------------------------
+
+
+def build_serving(outdir: str, steps: int, buckets, quick: bool) -> List[Dict]:
+    entries = []
+    for cfg in SERVING_VARIANTS:
+        print(f"[aot] training {cfg.name} ({cfg.param_count():,} params, "
+              f"g={cfg.g}, {steps} steps)", flush=True)
+        params, train_loss, val_loss = train_pico(cfg, steps)
+        acc = greedy_accuracy(cfg, params) if not quick else -1.0
+        print(f"[aot]   {cfg.name}: train_loss={train_loss:.4f} "
+              f"val_loss={val_loss:.4f} greedy_acc={acc:.2f}", flush=True)
+
+        wpath = os.path.join(outdir, "weights", f"{cfg.name}.bin")
+        nbytes = write_weights(wpath, cfg, params)
+
+        l, g, k, mc, md = cfg.l, cfg.g, cfg.k, cfg.m_c_max, cfg.m_d_max
+        pstructs = param_structs(cfg)
+        i32_1 = shape_struct((1,), jnp.int32)
+
+        art: Dict = {"decode": {m: {} for m in DECODE_MODES}}
+        path = os.path.join(outdir, "hlo", f"{cfg.name}.prefill.hlo.txt")
+        art["prefill"] = lower_to_file(
+            make_prefill_fn(cfg),
+            pstructs + [shape_struct((1, mc), jnp.int32), i32_1],
+            path,
+        )
+        for mode in DECODE_MODES:
+            for b in buckets:
+                kc_shape = (l, g, mc, k) if mode == "bifurcated" else (l, b, g, mc, k)
+                example = pstructs + [
+                    shape_struct((b,), jnp.int32),   # tokens
+                    i32_1,                            # d_pos
+                    i32_1,                            # m_c_len
+                    shape_struct(kc_shape),           # kc
+                    shape_struct(kc_shape),           # vc
+                    shape_struct((l, b, g, md, k)),   # kd
+                    shape_struct((l, b, g, md, k)),   # vd
+                ]
+                path = os.path.join(outdir, "hlo", f"{cfg.name}.decode.{mode}.b{b}.hlo.txt")
+                art["decode"][mode][str(b)] = lower_to_file(make_decode_fn(cfg, mode), example, path)
+                print(f"[aot]   lowered {cfg.name} decode {mode} b={b}", flush=True)
+
+        entries.append({
+            "name": cfg.name,
+            "config": cfg_dict(cfg),
+            "weights_bin": f"weights/{cfg.name}.bin",
+            "weights_bytes": nbytes,
+            "param_spec": [[n, list(s)] for n, s in M.param_spec(cfg)],
+            "train_info": {"steps": steps, "train_loss": train_loss,
+                           "val_loss": val_loss, "greedy_acc": acc},
+            "artifacts": art,
+        })
+    return entries
+
+
+def build_scaling(outdir: str, quick: bool) -> List[Dict]:
+    entries = []
+    variants = SCALING_VARIANTS[:3] if quick else SCALING_VARIANTS
+    for cfg in variants:
+        cfg = cfg.with_(seq_len=64)
+        pstructs = param_structs(cfg)
+        P = len(pstructs)
+        batch_struct = shape_struct((TRAIN_BATCH, cfg.seq_len), jnp.int32)
+        f32_1 = shape_struct((1,), jnp.float32)
+
+        tpath = os.path.join(outdir, "hlo", f"{cfg.name}.train_step.hlo.txt")
+        train_desc = lower_to_file(
+            make_train_fn(cfg, lr=1e-3),
+            pstructs * 3 + [f32_1, batch_struct], tpath)
+        epath = os.path.join(outdir, "hlo", f"{cfg.name}.eval_loss.hlo.txt")
+        eval_desc = lower_to_file(make_eval_fn(cfg), pstructs + [batch_struct], epath)
+
+        params = M.init_params(cfg, jax.random.PRNGKey(42))
+        wpath = os.path.join(outdir, "weights", f"{cfg.name}.init.bin")
+        nbytes = write_weights(wpath, cfg, params)
+        print(f"[aot]   lowered scaling {cfg.name} ({cfg.param_count():,} params)", flush=True)
+
+        entries.append({
+            "name": cfg.name,
+            "config": cfg_dict(cfg),
+            "init_bin": f"weights/{cfg.name}.init.bin",
+            "init_bytes": nbytes,
+            "param_spec": [[n, list(s)] for n, s in M.param_spec(cfg)],
+            "train_step": train_desc,
+            "eval_loss": eval_desc,
+            "train_batch": TRAIN_BATCH,
+            "n_param_tensors": P,
+        })
+    return entries
+
+
+def cfg_dict(cfg: ModelConfig) -> Dict:
+    return {
+        "name": cfg.name, "d": cfg.d, "h": cfg.h, "g": cfg.g, "k": cfg.k,
+        "p": cfg.p, "l": cfg.l, "vocab": cfg.vocab, "ffn_mult": cfg.ffn_mult,
+        "m_c_max": cfg.m_c_max, "m_d_max": cfg.m_d_max, "m_max": cfg.m_max,
+        "seq_len": cfg.seq_len, "param_count": cfg.param_count(),
+        "attention_kind": cfg.attention_kind,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("AOT_STEPS", 1400)))
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny build for CI: fewer steps, b-buckets {1,4}")
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.out)
+    for sub in ("hlo", "weights"):
+        os.makedirs(os.path.join(outdir, sub), exist_ok=True)
+
+    buckets = (1, 4) if args.quick else BATCH_BUCKETS
+    steps = 200 if args.quick else args.steps
+
+    t0 = time.time()
+    serving = build_serving(outdir, steps, buckets, args.quick)
+    scaling = build_scaling(outdir, args.quick)
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python/compile/aot.py",
+        "tokenizer": corpus.tokenizer_table(),
+        "batch_buckets": list(buckets),
+        "decode_modes": list(DECODE_MODES),
+        "serving": serving,
+        "scaling": scaling,
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {outdir}/manifest.json in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

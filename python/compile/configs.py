@@ -1,0 +1,160 @@
+"""Model configurations for the bifurcated-attention reproduction.
+
+Two families:
+
+* the ``pico`` *serving* family — three capability-comparable variants of a
+  small LM (multi-head ``g=h``, multi-group ``1<g<h``, multi-query ``g=1``)
+  that are trained at artifact-build time on the synthetic arithmetic corpus
+  and then AOT-lowered (prefill + bucketed decode steps) for the rust
+  serving engine;
+
+* the *scaling-law* family (paper Fig. 3 / Fig. 9) — a grid of sizes x
+  attention types whose ``train_step`` / ``eval_loss`` entry points are
+  AOT-lowered with parameters as explicit inputs/outputs so the rust
+  coordinator can drive the training runs itself.
+
+All shapes here are static: the AOT interchange is HLO text, which has no
+dynamic dimensions, so batch sizes are bucketed and sequence capacities are
+fixed per artifact (mirroring how production engines pre-compile shape
+buckets).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one multi-group transformer LM.
+
+    Notation follows the paper (Sec. 3.1): ``d`` hidden dim, ``h`` query
+    heads, ``g`` attention groups (``g=h`` multi-head, ``g=1`` multi-query),
+    ``k = d/h`` head dim, ``l`` layers, ``m_c``/``m_d`` context/decode
+    KV-cache capacities.
+    """
+
+    name: str
+    d: int                      # hidden dimension
+    h: int                      # number of query heads
+    g: int                      # number of attention groups (1 <= g <= h)
+    l: int                      # number of layers
+    vocab: int                  # vocabulary size
+    ffn_mult: int = 4           # feed-forward fanout (paper's 2d ablation uses 2)
+    m_c_max: int = 96           # context KV capacity (prefill length bucket)
+    m_d_max: int = 32           # decode KV capacity (max generated tokens)
+    seq_len: int = 64           # training sequence length
+    tie_embeddings: bool = False
+
+    @property
+    def k(self) -> int:
+        """Head dimension."""
+        assert self.d % self.h == 0, f"{self.name}: d={self.d} not divisible by h={self.h}"
+        return self.d // self.h
+
+    @property
+    def p(self) -> int:
+        """Attention group size h/g (queries per KV group)."""
+        assert self.h % self.g == 0, f"{self.name}: h={self.h} not divisible by g={self.g}"
+        return self.h // self.g
+
+    @property
+    def m_max(self) -> int:
+        """Positional-table capacity."""
+        return max(self.m_c_max + self.m_d_max, self.seq_len)
+
+    @property
+    def attention_kind(self) -> str:
+        if self.g == 1:
+            return "multi_query"
+        if self.g == self.h:
+            return "multi_head"
+        return "multi_group"
+
+    def param_count(self) -> int:
+        """Exact parameter count (matches model.init_params)."""
+        d, k, v = self.d, self.k, self.vocab
+        per_layer = (
+            2 * d                          # ln1 scale/bias
+            + d * self.h * k               # wq
+            + 2 * d * self.g * k           # wk, wv
+            + self.h * k * d               # wo
+            + 2 * d                        # ln2 scale/bias
+            + d * self.ffn_mult * d + self.ffn_mult * d   # w1, b1
+            + self.ffn_mult * d * d + d    # w2, b2
+        )
+        head = 0 if self.tie_embeddings else d * v
+        return v * d + self.m_max * d + self.l * per_layer + 2 * d + head
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Serving family ("pico"): d=64, h=8 (single-core CPU build budget) — three capability-comparable variants.
+# The MQ/MG variants get extra layers, mirroring the paper's size
+# compensation (Sec. 5.1: MQ needs ~1.1x parameters to match MH).
+# ---------------------------------------------------------------------------
+
+VOCAB = 16  # set by the corpus tokenizer; asserted in aot.py
+
+PICO_MH = ModelConfig(name="pico-mh", d=64, h=8, g=8, l=3, vocab=VOCAB)
+PICO_MG = ModelConfig(name="pico-mg", d=64, h=8, g=2, l=3, vocab=VOCAB)
+PICO_MQ = ModelConfig(name="pico-mq", d=64, h=8, g=1, l=3, vocab=VOCAB)
+
+SERVING_VARIANTS: List[ModelConfig] = [PICO_MH, PICO_MG, PICO_MQ]
+
+# Batch-size buckets compiled for the decode step. The rust engine pads a
+# request's sample count up to the next bucket.
+BATCH_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+# Decode attention implementations lowered per bucket.
+DECODE_MODES: Tuple[str, ...] = ("bifurcated", "fused")
+
+
+# ---------------------------------------------------------------------------
+# Scaling-law family (Fig. 3 / Fig. 9): sizes x {MH, MG, MQ} + 2d-FFN
+# ablation. Parameters are explicit I/O; training is driven from rust.
+# ---------------------------------------------------------------------------
+
+def _scaling_grid() -> List[ModelConfig]:
+    base = [
+        # (tag, d, h, l)
+        ("s0", 32, 4, 2),
+        ("s1", 48, 4, 3),
+        ("s2", 64, 8, 4),
+        ("s3", 80, 8, 4),
+    ]
+    out: List[ModelConfig] = []
+    for tag, d, h, l in base:
+        for kind, g in (("mh", h), ("mg", 2), ("mq", 1)):
+            out.append(
+                ModelConfig(
+                    name=f"scale-{tag}-{kind}", d=d, h=h, g=g, l=l,
+                    vocab=VOCAB, m_c_max=0, m_d_max=0,
+                )
+            )
+    # 2d-FFN ablation (paper Appendix C.4 / Fig. 9): multi-group with the
+    # feed-forward fanout halved, for two sizes.
+    for tag, d, h, l in [("s1", 48, 4, 3), ("s2", 64, 8, 4)]:
+        out.append(
+            ModelConfig(
+                name=f"scale-{tag}-mg2d", d=d, h=h, g=2, l=l,
+                vocab=VOCAB, ffn_mult=2, m_c_max=0, m_d_max=0,
+            )
+        )
+    return out
+
+
+SCALING_VARIANTS: List[ModelConfig] = _scaling_grid()
+
+TRAIN_BATCH = 32   # training batch for the scaling family (rust-driven)
+PICO_TRAIN_BATCH = 32
+
+
+def find_config(name: str) -> ModelConfig:
+    for c in SERVING_VARIANTS + SCALING_VARIANTS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown model config: {name}")

@@ -1,0 +1,111 @@
+"""Synthetic arithmetic corpus + tokenizer.
+
+The paper evaluates single-context batch sampling on code-generation tasks
+(MBPP/MBXP) with real 16B models; offline we substitute a *checkable
+synthetic language* — addition expressions ``a+b=c;`` — that a pico-scale
+model can genuinely learn at artifact-build time. The grammar is shared
+verbatim with the rust eval harness (``rust/src/evalharness``): a task is a
+prompt ``a+b=`` whose unique correct completion is ``c;``, so pass@n /
+pass@top3 (Fig. 8/10) are computable by string checking exactly as MBPP
+checks execution.
+
+Tokenizer: fixed character vocabulary, id-stable across python and rust
+(the table is exported in artifacts/manifest.json).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+PAD = 0
+BOS = 1
+# characters, ids 2..14
+_CHARS = "0123456789+=;"
+CHAR_TO_ID = {c: i + 2 for i, c in enumerate(_CHARS)}
+ID_TO_CHAR = {i + 2: c for i, c in enumerate(_CHARS)}
+VOCAB_SIZE = 16  # 2 specials + 13 chars + 1 spare (keeps vocab a power of 2)
+
+SEMI = CHAR_TO_ID[";"]
+EQ = CHAR_TO_ID["="]
+
+# Operand range: kept small so a ~1M-param model trained for a few thousand
+# steps reaches a useful-but-imperfect per-sample accuracy — the regime in
+# which pass@n actually improves with n (paper Fig. 8).
+MAX_OPERAND = 19
+
+
+def encode(s: str) -> List[int]:
+    return [CHAR_TO_ID[c] for c in s]
+
+
+def decode_ids(ids) -> str:
+    return "".join(ID_TO_CHAR.get(int(i), "") for i in ids)
+
+
+def expression(a: int, b: int) -> str:
+    return f"{a}+{b}={a + b};"
+
+
+def sample_expression(rng: np.random.Generator) -> str:
+    a = int(rng.integers(0, MAX_OPERAND + 1))
+    b = int(rng.integers(0, MAX_OPERAND + 1))
+    return expression(a, b)
+
+
+def token_stream(rng: np.random.Generator, n_tokens: int) -> np.ndarray:
+    """An endless concatenation of random expressions, truncated to n_tokens."""
+    out: List[int] = []
+    while len(out) < n_tokens:
+        out.extend(encode(sample_expression(rng)))
+    return np.asarray(out[:n_tokens], dtype=np.int32)
+
+
+def training_batch(rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
+    """[batch, seq_len] int32 token windows, each starting with BOS."""
+    rows = []
+    for _ in range(batch):
+        row = np.concatenate([[BOS], token_stream(rng, seq_len - 1)])
+        rows.append(row)
+    return np.stack(rows).astype(np.int32)
+
+
+def make_prompt(rng: np.random.Generator, n_shots: int, a: int, b: int) -> str:
+    """A shared-prefix prompt: ``n_shots`` solved examples then ``a+b=``.
+
+    This is the paper's single-context scenario: the prompt (context) is
+    long relative to the completion, so K_c dominates the KV cache.
+    """
+    shots = "".join(sample_expression(rng) for _ in range(n_shots))
+    return shots + f"{a}+{b}="
+
+
+def prompt_tokens(prompt: str, m_c_max: int) -> Tuple[np.ndarray, int]:
+    """BOS + encoded prompt, right-padded with PAD to m_c_max. Returns
+    (tokens[1, m_c_max], true_length)."""
+    ids = [BOS] + encode(prompt)
+    if len(ids) > m_c_max:
+        raise ValueError(f"prompt of {len(ids)} tokens exceeds m_c_max={m_c_max}")
+    length = len(ids)
+    padded = ids + [PAD] * (m_c_max - length)
+    return np.asarray([padded], dtype=np.int32), length
+
+
+def check_completion(a: int, b: int, completion: str) -> bool:
+    """A completion is correct iff it starts with ``{a+b};``."""
+    want = f"{a + b};"
+    return completion.startswith(want)
+
+
+def tokenizer_table() -> dict:
+    """Exported to the manifest so rust shares the exact vocabulary."""
+    return {
+        "pad": PAD,
+        "bos": BOS,
+        "semicolon": SEMI,
+        "equals": EQ,
+        "vocab_size": VOCAB_SIZE,
+        "chars": {c: i for c, i in CHAR_TO_ID.items()},
+        "max_operand": MAX_OPERAND,
+    }

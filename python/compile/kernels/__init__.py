@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+- ``bifurcated``: the paper's context-aware bifurcated decode attention.
+- ``fused``: the baseline decode attention over the replicated KV layout.
+- ``ref``: pure-jnp oracles both are verified against.
+"""
+
+from . import bifurcated, fused, ref  # noqa: F401
+from .bifurcated import bifurcated_decode  # noqa: F401
+from .fused import fused_decode  # noqa: F401

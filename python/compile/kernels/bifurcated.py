@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: context-aware bifurcated attention (decode step).
+
+This is the paper's core contribution (Sec. 4) expressed as a Pallas
+kernel. The bifurcation is encoded **in the BlockSpec index maps**:
+
+* the K_c / V_c specs map grid point ``(i, j)`` (batch ``i``, group ``j``)
+  to block ``(j, 0, 0)`` — *independent of the batch index* ``i`` — so the
+  shared context block is fetched HBM→VMEM once per group and reused
+  across the whole batch. This is Eq. 3's ``einsum(bgpnk, gm_ck)`` stated
+  as a memory schedule;
+* the K_d / V_d specs map to ``(i, j, 0, 0)`` — per-batch decode blocks,
+  Eq. 3's ``einsum(bgpnk, bgm_dk)``.
+
+Inside the kernel the two logit halves are joined by concatenation, one
+joint (numerically-stable) softmax runs over the combined length, and the
+two weight–value products are joined by summation (Eq. 4) — so the result
+is bit-for-bit the same attention as the unsplit computation, with the
+same FLOPs, but with ``gk·(m_c + b·m_d)`` instead of ``gk·b·(m_c+m_d)``
+bytes of KV traffic (Eq. 5–6).
+
+TPU adaptation (DESIGN.md §3): on real TPU hardware the context length
+axis would additionally be tiled into VMEM-sized blocks with an online
+softmax; at the artifact shapes used here (m_c ≤ 96) a single block fits
+VMEM trivially, and we run under ``interpret=True`` because the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _bifurcated_kernel(len_ref, pos_ref, q_ref, kc_ref, vc_ref, kd_ref, vd_ref, o_ref, *, scale):
+    """One grid step: batch index i, group index j (folded into block maps).
+
+    Block shapes (leading 1s are the blocked grid axes):
+      q_ref  [1, 1, p, k]     kc_ref [1, mc, k]   vc_ref [1, mc, k]
+      kd_ref [1, 1, md, k]    vd_ref [1, 1, md, k]
+      o_ref  [1, 1, p, k]
+    """
+    q = q_ref[0, 0]            # [p, k]
+    kc = kc_ref[0]             # [mc, k]  (shared across batch — loaded once)
+    vc = vc_ref[0]
+    kd = kd_ref[0, 0]          # [md, k]
+    vd = vd_ref[0, 0]
+    p, k = q.shape
+    mc = kc.shape[0]
+    md = kd.shape[0]
+
+    m_c_len = len_ref[0]
+    d_pos = pos_ref[0]
+
+    # ⟨q, K_c⟩ and ⟨q, K_d⟩ — same FLOPs as the unsplit GEMM.
+    logits_c = jnp.dot(q, kc.T, preferred_element_type=jnp.float32) * scale  # [p, mc]
+    logits_d = jnp.dot(q, kd.T, preferred_element_type=jnp.float32) * scale  # [p, md]
+
+    mask_c = jax.lax.broadcasted_iota(jnp.int32, (p, mc), 1) < m_c_len
+    mask_d = jax.lax.broadcasted_iota(jnp.int32, (p, md), 1) <= d_pos
+    logits_c = jnp.where(mask_c, logits_c, NEG_INF)
+    logits_d = jnp.where(mask_d, logits_d, NEG_INF)
+
+    # Joint, numerically-stable softmax across the bifurcation boundary.
+    row_max = jnp.maximum(jnp.max(logits_c, axis=-1), jnp.max(logits_d, axis=-1))  # [p]
+    ec = jnp.exp(logits_c - row_max[:, None])
+    ed = jnp.exp(logits_d - row_max[:, None])
+    denom = jnp.sum(ec, axis=-1) + jnp.sum(ed, axis=-1)                            # [p]
+
+    # ⟨w_c, V_c⟩ + ⟨w_d, V_d⟩ — joined by sum (Eq. 4).
+    oc = jnp.dot(ec, vc, preferred_element_type=jnp.float32)   # [p, k]
+    od = jnp.dot(ed, vd, preferred_element_type=jnp.float32)   # [p, k]
+    o_ref[0, 0] = (oc + od) / denom[:, None]
+
+
+def bifurcated_decode(q, kc, vc, kd, vd, m_c_len, d_pos, *, interpret=True):
+    """Bifurcated decode attention via Pallas.
+
+    q:  [b, g, p, k]                         (single query token, n = 1)
+    kc: [g, mc, k], vc: [g, mc, k]           shared context KV — one copy
+    kd: [b, g, md, k], vd: [b, g, md, k]     per-sequence decode KV
+    m_c_len: int32[1] valid context length; d_pos: int32[1] decode index.
+    Returns o: [b, g, p, k].
+    """
+    b, g, p, k = q.shape
+    mc = kc.shape[1]
+    md = kd.shape[2]
+    scale = 1.0 / (k ** 0.5)
+    kernel = functools.partial(_bifurcated_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, g),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),            # m_c_len (scalar)
+            pl.BlockSpec(memory_space=pl.ANY),            # d_pos   (scalar)
+            pl.BlockSpec((1, 1, p, k), lambda i, j: (i, j, 0, 0)),
+            # Context KV block maps ignore the batch grid index i: the
+            # block is the same for every i — bifurcation as a schedule.
+            pl.BlockSpec((1, mc, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, mc, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, 1, md, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, md, k), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p, k), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, p, k), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(m_c_len, jnp.int32).reshape(1),
+      jnp.asarray(d_pos, jnp.int32).reshape(1),
+      q, kc, vc, kd, vd)
+
+
+def vmem_footprint_bytes(b, g, p, k, mc, md, dtype_bytes=4):
+    """Static VMEM working-set estimate for one grid step of the kernel
+    (used by the §Perf analysis; interpret-mode wallclock is not a TPU
+    proxy, the block structure is what we optimize)."""
+    q_blk = p * k
+    kv_c = 2 * mc * k
+    kv_d = 2 * md * k
+    logits = p * (mc + md)
+    out = p * k
+    return dtype_bytes * (q_blk + kv_c + kv_d + logits + out)
+
+
+def hbm_traffic_bytes(b, g, k, mc, md, dtype_bytes=4):
+    """KV bytes moved HBM->VMEM for the whole decode step under this
+    schedule: context once (per group), decode per batch. Eq. 6."""
+    return dtype_bytes * 2 * g * k * (mc + b * md)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused (baseline) decode attention.
+
+The paper's baseline (Sec. 4.1): the KV cache is laid out with the context
+replicated along the batch axis — ``K = K_c ⊕ K_d`` of shape
+``[b, g, mc+md, k]`` — and a single attention GEMM runs over it. The
+BlockSpec index map for K/V **depends on the batch index**, so every grid
+step re-fetches its own copy of the (identical) context block: memory
+traffic ``gk·b·(m_c+m_d)`` (Eq. 5). This is what "naively passing the
+whole tensor to the GEMM/BLAS operator" costs, and it is the comparator
+for every latency table in the paper.
+
+Layout convention: positions ``[0, mc)`` hold the context (valid where
+``j < m_c_len``), positions ``[mc, mc+md)`` hold decode KV (valid where
+``j - mc <= d_pos``). The engine materializes the broadcast on the host —
+deliberately, because that *is* the baseline's memory behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fused_kernel(len_ref, pos_ref, q_ref, kf_ref, vf_ref, o_ref, *, scale, mc):
+    """Block shapes: q [1,1,p,k], kf/vf [1,1,mt,k], o [1,1,p,k]."""
+    q = q_ref[0, 0]            # [p, k]
+    kf = kf_ref[0, 0]          # [mt, k] — includes this batch row's context copy
+    vf = vf_ref[0, 0]
+    p, k = q.shape
+    mt = kf.shape[0]
+
+    m_c_len = len_ref[0]
+    d_pos = pos_ref[0]
+
+    logits = jnp.dot(q, kf.T, preferred_element_type=jnp.float32) * scale  # [p, mt]
+    j = jax.lax.broadcasted_iota(jnp.int32, (p, mt), 1)
+    mask = jnp.where(j < mc, j < m_c_len, (j - mc) <= d_pos)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    row_max = jnp.max(logits, axis=-1)
+    e = jnp.exp(logits - row_max[:, None])
+    denom = jnp.sum(e, axis=-1)
+    o_ref[0, 0] = jnp.dot(e, vf, preferred_element_type=jnp.float32) / denom[:, None]
+
+
+def fused_decode(q, kfull, vfull, m_c_len, d_pos, mc, *, interpret=True):
+    """Baseline fused decode attention via Pallas.
+
+    q:     [b, g, p, k]
+    kfull: [b, g, mc+md, k]   context replicated per batch row + decode KV
+    vfull: [b, g, mc+md, k]
+    m_c_len, d_pos: int32[1] scalars; mc: static context capacity.
+    Returns o: [b, g, p, k].
+    """
+    b, g, p, k = q.shape
+    mt = kfull.shape[2]
+    scale = 1.0 / (k ** 0.5)
+    kernel = functools.partial(_fused_kernel, scale=scale, mc=mc)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, g),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, 1, p, k), lambda i, j: (i, j, 0, 0)),
+            # K/V maps depend on i: the context copy is re-fetched per
+            # batch row — the redundant IO the paper eliminates.
+            pl.BlockSpec((1, 1, mt, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, mt, k), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p, k), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, p, k), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(m_c_len, jnp.int32).reshape(1),
+      jnp.asarray(d_pos, jnp.int32).reshape(1),
+      q, kfull, vfull)
+
+
+def hbm_traffic_bytes(b, g, k, mc, md, dtype_bytes=4):
+    """KV bytes moved for the whole decode step under this schedule:
+    everything per batch row. Eq. 5."""
+    return dtype_bytes * 2 * g * k * b * (mc + md)

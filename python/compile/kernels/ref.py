@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for the attention kernels (L1 correctness reference).
+
+Three formulations, all mathematically identical on the single-context
+batch-sampling decode step (paper Appendix E.1 proof):
+
+* :func:`decode_attention_ref` — the "naive/fused" semantics: the context
+  KV is materialized per batch index (shape ``b g m k``) and a single
+  attention runs over the concatenated length. This is the memory-hungry
+  baseline (Eq. 1–2 with ``K = K_c ⊕ K_d``).
+* :func:`bifurcated_decode_ref` — the paper's Eq. 3–4: two einsums, the
+  context one with **no batch axis on K_c/V_c**, joined by concat (logits)
+  and sum (values), with one joint softmax.
+* :func:`attention_full` — full-sequence multi-group attention used by
+  prefill/training (n = m).
+
+Everything here is deliberately straightforward jnp; the Pallas kernels in
+``bifurcated.py`` / ``fused.py`` are tested against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _scale(k: int) -> float:
+    return 1.0 / (k ** 0.5)
+
+
+def attention_full(q, kt, vt, length):
+    """Full multi-group attention over a whole sequence (prefill/training).
+
+    q:  [B, g, p, n, k]   (n == m during context encoding)
+    kt: [B, g, m, k]
+    vt: [B, g, m, v]
+    length: int32 scalar — valid key positions are j < length.
+    Causal: query position i attends to keys j <= i.
+    Returns [B, g, p, n, v].
+    """
+    B, g, p, n, k = q.shape
+    m = kt.shape[2]
+    logits = jnp.einsum("bgpnk,bgmk->bgpnm", q, kt) * _scale(k)
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, m), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    mask = jnp.logical_and(j <= i, j < jnp.asarray(length, jnp.int32))
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bgpnm,bgmv->bgpnv", w, vt)
+
+
+def _decode_masks(mc, md, m_c_len, d_pos):
+    """Masks for the decode step: context keys valid for j < m_c_len,
+    decode keys valid for j <= d_pos (the current token attends to itself).
+    Shapes broadcastable against [b, g, p, m]."""
+    jc = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, mc), 3)
+    jd = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, md), 3)
+    mask_c = jc < jnp.asarray(m_c_len, jnp.int32)
+    mask_d = jd <= jnp.asarray(d_pos, jnp.int32)
+    return mask_c, mask_d
+
+
+def decode_attention_ref(q, kc, vc, kd, vd, m_c_len, d_pos):
+    """Fused-semantics oracle (the paper's baseline memory layout).
+
+    q:  [b, g, p, k]          single new token per sequence (n = 1)
+    kc: [g, mc, k], vc: [g, mc, v]       shared context KV (single copy)
+    kd: [b, g, md, k], vd: [b, g, md, v] per-sequence decode KV
+    m_c_len: valid context length; d_pos: index of the current decode step.
+    Returns o: [b, g, p, v].
+
+    The context KV is explicitly broadcast to the batch axis and a single
+    softmax-attention runs over the concatenated length — i.e. exactly what
+    a GEMM over ``K = K_c ⊕ K_d`` computes.
+    """
+    b, g, p, k = q.shape
+    mc = kc.shape[1]
+    kc_b = jnp.broadcast_to(kc[None], (b, g, mc, k))
+    vc_b = jnp.broadcast_to(vc[None], (b, g, mc, vc.shape[-1]))
+    kfull = jnp.concatenate([kc_b, kd], axis=2)
+    vfull = jnp.concatenate([vc_b, vd], axis=2)
+    return fused_full_ref(q, kfull, vfull, m_c_len, d_pos, mc)
+
+
+def bifurcated_decode_ref(q, kc, vc, kd, vd, m_c_len, d_pos):
+    """The paper's bifurcated formulation (Eq. 3–4), jnp oracle.
+
+    Identical inputs/outputs to :func:`decode_attention_ref`; the context
+    einsum carries **no batch axis on K_c** (``bgpk, gmk -> bgpm``) — the
+    memory-IO saving — and the value products are joined by summation.
+    """
+    b, g, p, k = q.shape
+    mc = kc.shape[1]
+    md = kd.shape[2]
+    scale = _scale(k)
+    # ⟨q, K_c⟩ : einsum(bgpnk, g m_c k) -> bgpn m_c      (n = 1, folded away)
+    logits_c = jnp.einsum("bgpk,gmk->bgpm", q, kc) * scale
+    # ⟨q, K_d⟩ : einsum(bgpnk, b g m_d k) -> bgpn m_d
+    logits_d = jnp.einsum("bgpk,bgmk->bgpm", q, kd) * scale
+    mask_c, mask_d = _decode_masks(mc, md, m_c_len, d_pos)
+    logits_c = jnp.where(mask_c, logits_c, NEG_INF)
+    logits_d = jnp.where(mask_d, logits_d, NEG_INF)
+    # Joint softmax over the concatenated length axis (⊕ on logits).
+    joint = jnp.concatenate([logits_c, logits_d], axis=-1)
+    w = jax.nn.softmax(joint, axis=-1)
+    wc, wd = w[..., :mc], w[..., mc:]
+    # ⟨w_c, V_c⟩ + ⟨w_d, V_d⟩ — joined by sum (Eq. 4).
+    oc = jnp.einsum("bgpm,gmv->bgpv", wc, vc)
+    od = jnp.einsum("bgpm,bgmv->bgpv", wd, vd)
+    return oc + od
+
+
+def fused_full_ref(q, kfull, vfull, m_c_len, d_pos, mc):
+    """Oracle for the fused kernel's *layout*: K laid out as
+    [b, g, mc + md, k] with context in [0, mc) and decode in [mc, ...).
+    """
+    b, g, p, k = q.shape
+    md = kfull.shape[2] - mc
+    logits = jnp.einsum("bgpk,bgmk->bgpm", q, kfull) * _scale(k)
+    mask_c, mask_d = _decode_masks(mc, md, m_c_len, d_pos)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(mask_c, (b, g, p, mc)), jnp.broadcast_to(mask_d, (b, g, p, md))],
+        axis=-1,
+    )
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bgpm,bgmv->bgpv", w, vfull)

@@ -1,0 +1,293 @@
+"""L2 — the multi-group transformer LM (JAX, build-time only).
+
+A GPT-style decoder with *generalized multi-group attention* (paper
+Sec. 3.3): ``g`` key/value groups shared across ``h`` query heads, so
+``g=h`` is multi-head, ``g=1`` multi-query, in-between multi-group. The
+attention layouts all use the paper's ``bgpnk`` einsum convention.
+
+Entry points (all pure functions over an ordered flat param list, so they
+AOT-lower to HLO with a stable signature the rust runtime can drive):
+
+* :func:`prefill`       — context encoding: full causal attention over the
+                          (padded) prompt; emits the shared K_c/V_c cache
+                          and the next-token logits.
+* :func:`decode_step`   — one incremental-decoding step; the attention
+                          hot-spot is the L1 Pallas kernel, either
+                          ``bifurcated`` (Eq. 3–4) or ``fused`` (baseline).
+* :func:`train_step`    — Adam training step with params/opt-state as
+                          explicit I/O (the rust scaling-law driver loops
+                          over this HLO).
+* :func:`eval_loss`     — held-out loss (scaling-law measurements).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import bifurcated_decode, fused_decode
+from .kernels.ref import attention_full
+
+Params = Dict[str, jax.Array]
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the flattening order used by every
+    AOT entry point and recorded in the artifact manifest."""
+    d, k, ff = cfg.d, cfg.k, cfg.ffn_mult * cfg.d
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("emb", (cfg.vocab, d)),
+        ("pos", (cfg.m_max, d)),
+    ]
+    for i in range(cfg.l):
+        spec += [
+            (f"L{i}.ln1_s", (d,)),
+            (f"L{i}.ln1_b", (d,)),
+            (f"L{i}.wq", (d, cfg.h * k)),
+            (f"L{i}.wk", (d, cfg.g * k)),
+            (f"L{i}.wv", (d, cfg.g * k)),
+            (f"L{i}.wo", (cfg.h * k, d)),
+            (f"L{i}.ln2_s", (d,)),
+            (f"L{i}.ln2_b", (d,)),
+            (f"L{i}.w1", (d, ff)),
+            (f"L{i}.b1", (ff,)),
+            (f"L{i}.w2", (ff, d)),
+            (f"L{i}.b2", (d,)),
+        ]
+    spec += [("lnf_s", (d,)), ("lnf_b", (d,)), ("head", (d, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """GPT-2-style init: normal(0, 0.02) matrices, residual projections
+    scaled by 1/sqrt(2l) (Shoeybi et al.), zero biases, unit LN scales."""
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    params: Params = {}
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.l)
+    for (name, shape), kk in zip(spec, keys):
+        base = name.split(".")[-1]
+        if base in ("ln1_s", "ln2_s", "lnf_s"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02 * (resid_scale if base in ("wo", "w2") else 1.0)
+            params[name] = jax.random.normal(kk, shape, jnp.float32) * std
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> List[jax.Array]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), f"{len(flat)} arrays vs spec {len(spec)}"
+    return {name: a for (name, _), a in zip(spec, flat)}
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def _ln(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s + b
+
+
+def _split_heads_q(q, cfg: ModelConfig):
+    """[..., h*k] -> [..., g, p, k]"""
+    new = q.shape[:-1] + (cfg.g, cfg.p, cfg.k)
+    return q.reshape(new)
+
+
+def _block_full(x, lp: Dict[str, jax.Array], cfg: ModelConfig, length):
+    """One transformer block over a full sequence. x: [B, S, d]."""
+    B, S, d = x.shape
+    h1 = _ln(x, lp["ln1_s"], lp["ln1_b"])
+    q = _split_heads_q(h1 @ lp["wq"], cfg)                  # [B,S,g,p,k]
+    q = q.transpose(0, 2, 3, 1, 4)                          # [B,g,p,S,k]
+    kt = (h1 @ lp["wk"]).reshape(B, S, cfg.g, cfg.k).transpose(0, 2, 1, 3)  # [B,g,S,k]
+    vt = (h1 @ lp["wv"]).reshape(B, S, cfg.g, cfg.k).transpose(0, 2, 1, 3)
+    o = attention_full(q, kt, vt, length)                   # [B,g,p,S,k]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, cfg.h * cfg.k)
+    x = x + o @ lp["wo"]
+    h2 = _ln(x, lp["ln2_s"], lp["ln2_b"])
+    x = x + (jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"])
+    return x, kt, vt
+
+
+def _layer_params(params: Params, i: int) -> Dict[str, jax.Array]:
+    pre = f"L{i}."
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def forward_full(params: Params, cfg: ModelConfig, tokens, length):
+    """Full forward: tokens [B, S] int32 -> logits [B, S, vocab].
+    Also returns per-layer K/V stacks [l, B, g, S, k] (the prefill cache)."""
+    B, S = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:S][None]
+    ks, vs = [], []
+    for i in range(cfg.l):
+        x, kt, vt = _block_full(x, _layer_params(params, i), cfg, length)
+        ks.append(kt)
+        vs.append(vt)
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# --------------------------------------------------------------------------
+# Prefill (context encoding)
+# --------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, length):
+    """Context encoding for a single prompt.
+
+    tokens: [1, m_c_max] int32 (right-padded); length: int32 scalar.
+    Returns (logits_last [1, vocab], kc [l, g, m_c_max, k], vc [...]).
+    """
+    logits, ks, vs = forward_full(params, cfg, tokens, length)
+    # Next-token logits live at the last *valid* position.
+    last = jax.lax.dynamic_slice_in_dim(
+        logits, jnp.asarray(length, jnp.int32) - 1, 1, axis=1
+    )[:, 0]                                   # [1, vocab]
+    kc = ks[:, 0]                             # [l, g, m_c_max, k]
+    vc = vs[:, 0]
+    return last, kc, vc
+
+
+# --------------------------------------------------------------------------
+# Incremental decode step
+# --------------------------------------------------------------------------
+
+
+def decode_step(params: Params, cfg: ModelConfig, mode: str, tokens, d_pos,
+                m_c_len, kc, vc, kd, vd, *, interpret=True):
+    """One incremental-decoding step over a batch of b samplers sharing one
+    context (single-context batch sampling, paper Fig. 1 right).
+
+    tokens: [b] int32 — the tokens sampled at the previous step.
+    d_pos:  int32 scalar — how many decode tokens precede this one.
+    m_c_len: int32 scalar — valid context length.
+    mode == "bifurcated": kc/vc are the *shared* caches [l, g, mc, k].
+    mode == "fused":      kc/vc are *replicated* caches [l, b, g, mc, k]
+                          (the engine materializes the broadcast — that is
+                          the baseline under measurement).
+    kd/vd: [l, b, g, md, k] decode caches (functional update returned).
+
+    Returns (logits [b, vocab], kd', vd').
+    """
+    assert mode in ("bifurcated", "fused"), mode
+    b = tokens.shape[0]
+    pos_idx = jnp.asarray(m_c_len, jnp.int32) + jnp.asarray(d_pos, jnp.int32)
+    pos_row = jax.lax.dynamic_slice_in_dim(params["pos"], pos_idx, 1, axis=0)
+    x = params["emb"][tokens] + pos_row                     # [b, d]
+
+    new_kd, new_vd = [], []
+    for i in range(cfg.l):
+        lp = _layer_params(params, i)
+        h1 = _ln(x, lp["ln1_s"], lp["ln1_b"])
+        q = _split_heads_q(h1 @ lp["wq"], cfg)              # [b, g, p, k]
+        knew = (h1 @ lp["wk"]).reshape(b, cfg.g, 1, cfg.k)  # [b, g, 1, k]
+        vnew = (h1 @ lp["wv"]).reshape(b, cfg.g, 1, cfg.k)
+        kd_i = jax.lax.dynamic_update_slice_in_dim(kd[i], knew, d_pos, axis=2)
+        vd_i = jax.lax.dynamic_update_slice_in_dim(vd[i], vnew, d_pos, axis=2)
+        new_kd.append(kd_i)
+        new_vd.append(vd_i)
+
+        if mode == "bifurcated":
+            o = bifurcated_decode(q, kc[i], vc[i], kd_i, vd_i, m_c_len, d_pos,
+                                  interpret=interpret)
+        else:
+            # Replicated layout [b, g, mc+md, k]: context copy then decode.
+            kfull = jnp.concatenate([kc[i], kd_i], axis=2)
+            vfull = jnp.concatenate([vc[i], vd_i], axis=2)
+            o = fused_decode(q, kfull, vfull, m_c_len, d_pos, cfg.m_c_max,
+                             interpret=interpret)
+        o = o.reshape(b, cfg.h * cfg.k)
+        x = x + o @ lp["wo"]
+        h2 = _ln(x, lp["ln2_s"], lp["ln2_b"])
+        x = x + (jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"])
+
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["head"]                             # [b, vocab]
+    return logits, jnp.stack(new_kd), jnp.stack(new_vd)
+
+
+# --------------------------------------------------------------------------
+# Training (scaling-law study, rust-driven)
+# --------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy. batch: [B, S] int32."""
+    logits, _, _ = forward_full(params, cfg, batch, batch.shape[1])
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = batch[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+GRAD_CLIP = 1.0
+
+
+def train_step(params: Params, m: Params, v: Params, step, batch, cfg: ModelConfig,
+               lr: float = 1e-3):
+    """One Adam step (beta2 = 0.95 per the paper's setup, global-norm clip
+    1.0; weight decay omitted at these scales).
+
+    ``step`` is a float32 scalar (1-based) used for bias correction —
+    explicit I/O so the rust driver owns the loop.
+    Returns (params', m', v', loss).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    for name, g in grads.items():
+        g = g * scale
+        m_ = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        v_ = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+        update = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + ADAM_EPS)
+        new_p[name] = params[name] - lr * update
+        new_m[name] = m_
+        new_v[name] = v_
+    return new_p, new_m, new_v, loss
+
+
+def eval_loss(params: Params, cfg: ModelConfig, batch):
+    return loss_fn(params, cfg, batch)
+
+
+def zeros_like_params(cfg: ModelConfig) -> Params:
+    return {name: jnp.zeros(shape, jnp.float32) for name, shape in param_spec(cfg)}
+
+
+# --------------------------------------------------------------------------
+# Build-time convenience: jitted pico training (python-side, for the
+# serving family whose weights ship in the artifacts).
+# --------------------------------------------------------------------------
+
+
+def make_jitted_train(cfg: ModelConfig, lr: float = 1e-3):
+    @jax.jit
+    def step_fn(params, m, v, step, batch):
+        return train_step(params, m, v, step, batch, cfg, lr=lr)
+
+    return step_fn

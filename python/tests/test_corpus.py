@@ -1,0 +1,73 @@
+"""Tokenizer/grammar tests — the contract shared with the rust eval harness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+
+
+def test_roundtrip():
+    s = "12+7=19;"
+    assert corpus.decode_ids(corpus.encode(s)) == s
+
+
+def test_vocab_ids_stable():
+    # The rust side hard-codes this table via the manifest; pin it here too.
+    assert corpus.PAD == 0 and corpus.BOS == 1
+    assert corpus.CHAR_TO_ID["0"] == 2
+    assert corpus.CHAR_TO_ID["9"] == 11
+    assert corpus.CHAR_TO_ID["+"] == 12
+    assert corpus.CHAR_TO_ID["="] == 13
+    assert corpus.CHAR_TO_ID[";"] == 14
+    assert corpus.VOCAB_SIZE == 16
+
+
+@given(st.integers(0, corpus.MAX_OPERAND), st.integers(0, corpus.MAX_OPERAND))
+def test_expression_checkable(a, b):
+    expr = corpus.expression(a, b)
+    prompt, completion = expr.split("=")
+    assert corpus.check_completion(a, b, completion)
+    assert not corpus.check_completion(a, b, f"{a + b + 1};")
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20)
+def test_stream_tokens_valid(seed):
+    rng = np.random.default_rng(seed)
+    toks = corpus.token_stream(rng, 100)
+    assert toks.shape == (100,)
+    assert toks.min() >= 2 and toks.max() < corpus.VOCAB_SIZE
+
+
+def test_training_batch_shape_and_bos():
+    rng = np.random.default_rng(0)
+    b = corpus.training_batch(rng, 5, 32)
+    assert b.shape == (5, 32)
+    assert (b[:, 0] == corpus.BOS).all()
+
+
+def test_training_batch_deterministic_by_seed():
+    a = corpus.training_batch(np.random.default_rng(42), 3, 16)
+    b = corpus.training_batch(np.random.default_rng(42), 3, 16)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_prompt_tokens_padding():
+    toks, ln = corpus.prompt_tokens("1+2=", 24)
+    assert toks.shape == (1, 24)
+    assert ln == 5  # BOS + 4 chars
+    assert (toks[0, ln:] == corpus.PAD).all()
+    assert toks[0, 0] == corpus.BOS
+
+
+def test_prompt_too_long_raises():
+    import pytest
+    with pytest.raises(ValueError):
+        corpus.prompt_tokens("1+2=" * 50, 24)
+
+
+def test_make_prompt_contains_question():
+    rng = np.random.default_rng(1)
+    p = corpus.make_prompt(rng, n_shots=3, a=7, b=8)
+    assert p.endswith("7+8=")
+    assert p.count(";") == 3

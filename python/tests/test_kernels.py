@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The core exactness claim of the paper (Appendix E.1) is that bifurcated
+attention computes the *identical* result to the fused baseline. We verify
+it three ways, sweeping shapes/g/masks with hypothesis:
+
+  oracle(fused) == oracle(bifurcated) == pallas(bifurcated) == pallas(fused)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bifurcated_decode, fused_decode
+from compile.kernels import ref
+from compile.kernels.bifurcated import hbm_traffic_bytes as bif_io
+from compile.kernels.fused import hbm_traffic_bytes as fus_io
+
+ATOL = 2e-5
+
+
+def _rand_inputs(seed, b, g, p, k, mc, md):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(keys[0], (b, g, p, k), jnp.float32)
+    kc = jax.random.normal(keys[1], (g, mc, k), jnp.float32)
+    vc = jax.random.normal(keys[2], (g, mc, k), jnp.float32)
+    kd = jax.random.normal(keys[3], (b, g, md, k), jnp.float32)
+    vd = jax.random.normal(keys[4], (b, g, md, k), jnp.float32)
+    return q, kc, vc, kd, vd
+
+
+# strategy: h = g * p with small factors; mc/md small for interpret speed
+shape_strategy = st.tuples(
+    st.integers(1, 5),        # b
+    st.integers(1, 4),        # g
+    st.integers(1, 4),        # p  (h = g*p)
+    st.sampled_from([4, 8, 16]),   # k
+    st.integers(2, 24),       # mc
+    st.integers(1, 8),        # md
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 10_000), st.data())
+def test_bifurcated_kernel_matches_oracle(shape, seed, data):
+    b, g, p, k, mc, md = shape
+    mlen = data.draw(st.integers(1, mc))
+    dpos = data.draw(st.integers(0, md - 1))
+    q, kc, vc, kd, vd = _rand_inputs(seed, b, g, p, k, mc, md)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, mlen, dpos)
+    got = bifurcated_decode(q, kc, vc, kd, vd, mlen, dpos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 10_000), st.data())
+def test_fused_kernel_matches_oracle(shape, seed, data):
+    b, g, p, k, mc, md = shape
+    mlen = data.draw(st.integers(1, mc))
+    dpos = data.draw(st.integers(0, md - 1))
+    q, kc, vc, kd, vd = _rand_inputs(seed, b, g, p, k, mc, md)
+    kcb = jnp.broadcast_to(kc[None], (b, g, mc, k))
+    vcb = jnp.broadcast_to(vc[None], (b, g, mc, k))
+    kfull = jnp.concatenate([kcb, kd], axis=2)
+    vfull = jnp.concatenate([vcb, vd], axis=2)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, mlen, dpos)
+    got = fused_decode(q, kfull, vfull, mlen, dpos, mc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy, st.integers(0, 10_000), st.data())
+def test_bifurcation_exactness_oracles(shape, seed, data):
+    """Paper Appendix E.1: Eq. 3-4 == Eq. 1-2 exactly (up to fp assoc)."""
+    b, g, p, k, mc, md = shape
+    mlen = data.draw(st.integers(1, mc))
+    dpos = data.draw(st.integers(0, md - 1))
+    q, kc, vc, kd, vd = _rand_inputs(seed, b, g, p, k, mc, md)
+    fused = ref.decode_attention_ref(q, kc, vc, kd, vd, mlen, dpos)
+    bif = ref.bifurcated_decode_ref(q, kc, vc, kd, vd, mlen, dpos)
+    np.testing.assert_allclose(np.asarray(bif), np.asarray(fused), atol=ATOL)
+
+
+def test_multi_query_special_case():
+    """g=1 (multi-query): all heads share one KV group."""
+    q, kc, vc, kd, vd = _rand_inputs(3, b=4, g=1, p=8, k=8, mc=16, md=4)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, 12, 2)
+    got = bifurcated_decode(q, kc, vc, kd, vd, 12, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_multi_head_special_case():
+    """g=h (multi-head): p=1."""
+    q, kc, vc, kd, vd = _rand_inputs(4, b=3, g=8, p=1, k=8, mc=16, md=4)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, 16, 3)
+    got = bifurcated_decode(q, kc, vc, kd, vd, 16, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_batch_one_degenerate():
+    """b=1: bifurcation is a no-op semantically."""
+    q, kc, vc, kd, vd = _rand_inputs(5, b=1, g=2, p=2, k=8, mc=8, md=2)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, 8, 1)
+    got = bifurcated_decode(q, kc, vc, kd, vd, 8, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_first_decode_step_mask():
+    """d_pos=0: only the just-written decode slot is visible."""
+    b, g, p, k, mc, md = 2, 2, 2, 8, 8, 4
+    q, kc, vc, kd, vd = _rand_inputs(6, b, g, p, k, mc, md)
+    # Poison invalid decode slots; they must not affect the result.
+    kd_poison = kd.at[:, :, 1:].set(1e4)
+    vd_poison = vd.at[:, :, 1:].set(1e4)
+    a = bifurcated_decode(q, kc, vc, kd, vd, mc, 0)
+    bp = bifurcated_decode(q, kc, vc, kd_poison, vd_poison, mc, 0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bp), atol=ATOL)
+
+
+def test_context_mask_respects_mlen():
+    """Positions >= m_c_len in the context cache must be ignored."""
+    b, g, p, k, mc, md = 2, 2, 2, 8, 12, 4
+    q, kc, vc, kd, vd = _rand_inputs(7, b, g, p, k, mc, md)
+    mlen = 7
+    kc_poison = kc.at[:, mlen:].set(-1e4)
+    vc_poison = vc.at[:, mlen:].set(-1e4)
+    a = bifurcated_decode(q, kc, vc, kd, vd, mlen, 1)
+    bp = bifurcated_decode(q, kc_poison, vc_poison, kd, vd, mlen, 1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bp), atol=ATOL)
+
+
+def test_jit_lowering_roundtrip():
+    """The kernels lower under jit (the AOT path) and agree with eager."""
+    q, kc, vc, kd, vd = _rand_inputs(8, b=2, g=2, p=2, k=8, mc=8, md=4)
+    f = jax.jit(lambda *a: bifurcated_decode(*a, 8, 1))
+    np.testing.assert_allclose(
+        np.asarray(f(q, kc, vc, kd, vd)),
+        np.asarray(bifurcated_decode(q, kc, vc, kd, vd, 8, 1)),
+        atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("b", [1, 2, 8, 32])
+def test_io_model_eq5_eq6(b):
+    """The kernels' static IO accounting reproduces Eq. 5-6, and the
+    bifurcated traffic is strictly smaller whenever b > 1."""
+    g, k, mc, md = 4, 16, 64, 8
+    fused = fus_io(b, g, k, mc, md)
+    bif = bif_io(b, g, k, mc, md)
+    assert fused == 4 * 2 * g * k * b * (mc + md)
+    assert bif == 4 * 2 * g * k * (mc + b * md)
+    if b == 1:
+        assert bif == fused
+    else:
+        assert bif < fused
+
+
+def test_bf16_inputs():
+    """bf16 KV (the paper's serving dtype) stays within loose tolerance."""
+    q, kc, vc, kd, vd = _rand_inputs(9, b=2, g=2, p=2, k=8, mc=8, md=4)
+    cast = lambda x: x.astype(jnp.bfloat16)
+    got = bifurcated_decode(cast(q), cast(kc), cast(vc), cast(kd), cast(vd), 8, 1)
+    want = ref.decode_attention_ref(q, kc, vc, kd, vd, 8, 1)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=0.05
+    )

@@ -1,0 +1,59 @@
+//! Ablation (DESIGN.md design-choice): the scheduler's FAQ-4 workload-based
+//! bifurcation switch vs always-fused vs always-bifurcated, across a grid
+//! of workloads. The switch should match the best column everywhere —
+//! "guaranteed better latency" (paper FAQ 4). Modeled H100, 7B MHA, eager.
+
+use bifurcated_attn::attention::{decode_latency, h100, paper_7b_mha, AttnImpl};
+use bifurcated_attn::bench::{bench_main, Cell, Table};
+
+fn main() {
+    bench_main("ablation_switch", |_quick| {
+        let m = paper_7b_mha();
+        let hw = h100();
+        let mut t = Table::new(
+            "Ablation — FAQ-4 workload switch policies vs fixed attention modes (ms/step)",
+            &["m_c", "b", "fused", "bifurcated", "naive switch", "naive ok?", "overhead-aware ok?"],
+        )
+        .with_note(
+            "naive: bifurcate iff (b-1)·m_c >= 8192 redundant tokens. overhead-aware:              bifurcate iff the IO saving exceeds the extra kernel-dispatch cost — the              policy this repo's scheduler threshold is derived from",
+        );
+        // overhead-aware threshold: redundant KV bytes / bw > extra launches
+        let extra_launch = (m.l * 3) as f64 * hw.eager_launch; // 3 extra ops/layer
+        // each redundant token re-read costs 2·l·g·k·bytes of KV traffic
+        let bytes_per_redundant_token = (2 * m.l * m.g * m.k() * m.bytes) as f64;
+        let redundant_tokens_needed =
+            (extra_launch * hw.mem_bw * hw.bw_efficiency / bytes_per_redundant_token) as usize;
+        let (mut naive_reg, mut aware_reg) = (0, 0);
+        for &m_c in &[128usize, 512, 2048, 8192, 32640] {
+            for &b in &[1usize, 2, 8, 32, 128] {
+                let fus = decode_latency(&m, &hw, AttnImpl::SdpaNc, false, b, m_c, 16).ms();
+                let bif = decode_latency(&m, &hw, AttnImpl::Bifurcated, false, b, m_c, 16).ms();
+                let redundant = b.saturating_sub(1) * m_c;
+                let naive = if redundant >= 8192 { bif } else { fus };
+                let aware = if redundant >= redundant_tokens_needed { bif } else { fus };
+                let best = fus.min(bif);
+                let naive_ok = naive <= best * 1.02;
+                let aware_ok = aware <= best * 1.02;
+                if !naive_ok {
+                    naive_reg += 1;
+                }
+                if !aware_ok {
+                    aware_reg += 1;
+                }
+                t.row(vec![
+                    Cell::Num(m_c as f64),
+                    Cell::Num(b as f64),
+                    Cell::Ms(fus),
+                    Cell::Ms(bif),
+                    Cell::Ms(naive),
+                    Cell::Str(if naive_ok { "yes".into() } else { "NO".into() }),
+                    Cell::Str(if aware_ok { "yes".into() } else { "NO".into() }),
+                ]);
+            }
+        }
+        eprintln!(
+            "[ablation] regressions vs oracle: naive {naive_reg}/25, overhead-aware {aware_reg}/25              (aware threshold = {redundant_tokens_needed} redundant tokens)"
+        );
+        vec![t]
+    });
+}

@@ -1,0 +1,30 @@
+//! Fig 5: per-step / context-encoding / total latency vs context length,
+//! capability-equivalent 1B MH vs MQ (F=1.1). Modeled A100, matching the
+//! paper's testbed. Also prints Appendix D.1's decode/prefill ratio.
+
+use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::simulator::sweep;
+
+fn main() {
+    bench_main("fig5_context_sweep", |quick| {
+        let hw = bifurcated_attn::attention::a100_40g();
+        let contexts: Vec<usize> = if quick {
+            vec![500, 5000, 10000]
+        } else {
+            vec![250, 500, 1000, 2000, 2500, 4000, 5000, 6000, 7500, 9000, 10000]
+        };
+        let series = sweep::fig5_series(&hw, &contexts);
+        let mut ratio = Table::new(
+            "Appendix D.1 — decode vs amortized-prefill per-token cost",
+            &["m_c", "ratio (x)"],
+        )
+        .with_note("paper quotes ~250x at m=10000");
+        for &m in &[2000usize, 5000, 10000] {
+            ratio.row(vec![
+                Cell::Num(m as f64),
+                Cell::Num(sweep::decode_vs_prefill_ratio(&hw, m).round()),
+            ]);
+        }
+        vec![series, ratio]
+    });
+}

@@ -1,0 +1,22 @@
+//! Fig 6a/6b: per-step decode latency vs context length for batch sizes
+//! up to 128 (MH) / 512 (MQ), fused vs bifurcated. Modeled A100.
+
+use bifurcated_attn::attention::{paper_1b_mq, paper_7b_mha};
+use bifurcated_attn::bench::bench_main;
+use bifurcated_attn::simulator::sweep;
+
+fn main() {
+    bench_main("fig6_bifurcated_sweep", |quick| {
+        let hw = bifurcated_attn::attention::a100_40g();
+        let contexts: Vec<usize> = if quick {
+            vec![1000, 5000, 10000]
+        } else {
+            vec![500, 1000, 2000, 3000, 4000, 5000, 6000, 7000, 8000, 9000, 10000]
+        };
+        let mut a = sweep::fig6_series(&paper_7b_mha(), &hw, &[1, 8, 32, 128], &contexts);
+        a.title = "Fig 6a — multi-head (7B): fused vs bifurcated (ms/step)".into();
+        let mut b = sweep::fig6_series(&paper_1b_mq(), &hw, &[8, 64, 256, 512], &contexts);
+        b.title = "Fig 6b — multi-query (1B): fused vs bifurcated (ms/step)".into();
+        vec![a, b]
+    });
+}

@@ -1,0 +1,20 @@
+//! Fig 7: capability-equivalent MH vs MQ, with and without bifurcated
+//! attention, across batch sizes. Modeled A100.
+
+use bifurcated_attn::bench::bench_main;
+use bifurcated_attn::simulator::sweep;
+
+fn main() {
+    bench_main("fig7_mh_vs_mq", |quick| {
+        let hw = bifurcated_attn::attention::a100_40g();
+        let batches: Vec<usize> = if quick {
+            vec![1, 16, 256]
+        } else {
+            vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+        };
+        vec![
+            sweep::fig7_series(&hw, 2048, &batches, 256),
+            sweep::fig7_series(&hw, 8192, &batches, 256),
+        ]
+    });
+}

@@ -1,0 +1,44 @@
+//! Fig 8 / Fig 10: pass@n and pass@top3 vs end-to-end latency on the real
+//! engine (pico models; measured CPU-PJRT latency) — more samples under a
+//! ~flat latency budget raise accuracy. Runs both the MH and MQ pico
+//! variants, mirroring the paper's CodeGen (MH) / StarCoder (MQ) panels.
+
+use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::coordinator::{Engine, EngineConfig};
+use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() {
+    bench_main("fig8_passk", |quick| {
+        let man = Manifest::load(&Manifest::default_root()).expect("run `make artifacts`");
+        let client = cpu_client().unwrap();
+        let n_tasks = if quick { 6 } else { 16 };
+        let ns: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
+        let mut tables = Vec::new();
+        for model in ["pico-mq", "pico-mh"] {
+            let rt = ModelRuntime::load(&man, &client, model).unwrap();
+            let engine = Engine::new(&man, rt, EngineConfig::default());
+            let mut t = Table::new(
+                &format!("Fig 8 — pass@n / pass@top3 vs latency, {model} (measured CPU)"),
+                &["n", "pass@1", "pass@n", "pass@top3", "latency ms", "prefill ms", "ms/step", "mode"],
+            )
+            .with_note("one request of n parallel samples per task; latency = prefill + batched decode");
+            for &n in ns {
+                let cfg = SuiteConfig { n_tasks, n_samples: n, seed: 7, ..Default::default() };
+                let res = run_suite(&engine, &cfg).expect("suite");
+                t.row(vec![
+                    Cell::Num(n as f64),
+                    Cell::Num((res.pass_at[0] * 1000.0).round() / 1000.0),
+                    Cell::Num((res.pass_at[n - 1] * 1000.0).round() / 1000.0),
+                    Cell::Num((res.pass_top3 * 1000.0).round() / 1000.0),
+                    Cell::Ms(res.mean_latency_ms),
+                    Cell::Ms(res.mean_prefill_ms),
+                    Cell::Ms(res.mean_per_step_ms),
+                    Cell::Str(res.mode_used.clone()),
+                ]);
+            }
+            tables.push(t);
+        }
+        tables
+    });
+}

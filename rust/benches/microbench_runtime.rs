@@ -1,0 +1,76 @@
+//! Measured CPU-PJRT micro-benchmarks: real per-step decode latency of the
+//! bifurcated vs fused executables across batch buckets (the end-to-end
+//! exactness + trend evidence on this testbed), plus prefill latency and
+//! the host->device upload volumes (Eq. 5 vs Eq. 6 made measurable).
+
+use bifurcated_attn::bench::{bench_main, Bencher, Cell, Table};
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() {
+    bench_main("microbench_runtime", |quick| {
+        let man = Manifest::load(&Manifest::default_root()).expect("run `make artifacts`");
+        let client = cpu_client().unwrap();
+        let buckets: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+        let mut tables = Vec::new();
+        for model in ["pico-mh", "pico-mq"] {
+            let rt = ModelRuntime::load(&man, &client, model).unwrap();
+            rt.warm(&[DecodeMode::Bifurcated, DecodeMode::Fused], buckets).unwrap();
+
+            let prompt: Vec<i32> = {
+                let mut ids = vec![man.tokenizer.bos];
+                ids.extend(man.tokenizer.encode("10+2=12;11+3=14;12+4=16;5+6=11;7+8=").unwrap());
+                ids
+            };
+            let pre = rt.prefill(&prompt).unwrap();
+
+            let mut t = Table::new(
+                &format!("Measured decode step latency, {model} (CPU PJRT, f32)"),
+                &["b", "fused ms/step", "bifurcated ms/step", "speedup", "fused ctx upload B", "bif ctx upload B"],
+            )
+            .with_note("real executables; pico-scale — trends, not paper magnitudes");
+            for &b in buckets {
+                let bench = if quick { Bencher::quick("step") } else { Bencher::new("step") };
+                // bifurcated: shared context resident once
+                let ctx_b = rt.upload_context(&pre.kc, &pre.vc, prompt.len()).unwrap();
+                let (kd, vd) = rt.zero_decode_cache(b);
+                let toks = vec![3i32; b];
+                let s_bif = bench.run(|| {
+                    rt.decode(DecodeMode::Bifurcated, b, &toks, 0, &ctx_b, &kd, &vd).unwrap();
+                });
+                // fused: replicated context
+                let kc_rep = pre.kc.broadcast_at(1, b);
+                let vc_rep = pre.vc.broadcast_at(1, b);
+                let ctx_f = rt.upload_context(&kc_rep, &vc_rep, prompt.len()).unwrap();
+                let s_fus = bench.run(|| {
+                    rt.decode(DecodeMode::Fused, b, &toks, 0, &ctx_f, &kd, &vd).unwrap();
+                });
+                t.row(vec![
+                    Cell::Num(b as f64),
+                    Cell::Ms(s_fus.p50),
+                    Cell::Ms(s_bif.p50),
+                    Cell::Num((s_fus.p50 / s_bif.p50 * 100.0).round() / 100.0),
+                    Cell::Num(ctx_f.bytes as f64),
+                    Cell::Num(ctx_b.bytes as f64),
+                ]);
+            }
+            tables.push(t);
+
+            let bench = if quick { Bencher::quick("prefill") } else { Bencher::new("prefill") };
+            let s = bench.run(|| {
+                rt.prefill(&prompt).unwrap();
+            });
+            let mut p = Table::new(
+                &format!("Measured prefill latency, {model}"),
+                &["m_c (padded)", "p50 ms", "p90 ms"],
+            );
+            p.row(vec![
+                Cell::Num(rt.cfg.m_c_max as f64),
+                Cell::Ms(s.p50),
+                Cell::Ms(s.p90),
+            ]);
+            tables.push(p);
+        }
+        tables
+    });
+}

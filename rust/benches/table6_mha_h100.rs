@@ -1,0 +1,26 @@
+//! Table 1 / Table 6: 7B multi-head per-token latency, SDPA vs bifurcated
+//! (± compile) across context {8k,16k,32k} and the batch ladder, with the
+//! paper's OOM protocol. Modeled H100 (see DESIGN.md §2).
+
+use bifurcated_attn::bench::bench_main;
+use bifurcated_attn::simulator::sweep;
+use bifurcated_attn::simulator::TABLE6_COLUMNS;
+
+fn main() {
+    bench_main("table6_mha_h100", |quick| {
+        let hw = bifurcated_attn::attention::h100();
+        let batches: Vec<usize> = if quick {
+            vec![1, 8, 64]
+        } else {
+            vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048]
+        };
+        vec![sweep::paper_latency_table(
+            "Table 6 — 7B MHA per-token latency (ms), modeled H100",
+            &sweep::table6_model(),
+            &hw,
+            &[8192, 16384, 32640],
+            TABLE6_COLUMNS,
+            &batches,
+        )]
+    });
+}

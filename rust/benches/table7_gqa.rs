@@ -1,0 +1,25 @@
+//! Table 7: 7B GQA-8 per-token latency, bifurcated (± compile) vs Flash2
+//! (± NC). Modeled H100.
+
+use bifurcated_attn::bench::bench_main;
+use bifurcated_attn::simulator::sweep;
+use bifurcated_attn::simulator::TABLE7_COLUMNS;
+
+fn main() {
+    bench_main("table7_gqa", |quick| {
+        let hw = bifurcated_attn::attention::h100();
+        let batches: Vec<usize> = if quick {
+            vec![1, 16, 256]
+        } else {
+            vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048]
+        };
+        vec![sweep::paper_latency_table(
+            "Table 7 — 7B GQA-8 per-token latency (ms), modeled H100",
+            &sweep::table7_model(),
+            &hw,
+            &[8192, 16384, 32640],
+            TABLE7_COLUMNS,
+            &batches,
+        )]
+    });
+}

@@ -1,0 +1,38 @@
+//! Table 8: Mistral-7B (GQA-8) under tensor parallelism TP=2 at 16k/32k —
+//! SDPA vs bifurcated vs Flash2. Modeled H100 pair.
+
+use bifurcated_attn::attention::AttnImpl;
+use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::simulator::latency_cell;
+use bifurcated_attn::simulator::sweep;
+
+fn main() {
+    bench_main("table8_tp", |_quick| {
+        let model = sweep::table8_model();
+        let hw = bifurcated_attn::attention::h100().tensor_parallel(2);
+        let mut t = Table::new(
+            "Table 8 — Mistral-7B per-token latency (ms), modeled 2x H100 (TP=2)",
+            &["Context", "BS", "SDPA", "Bifurcated", "Flash2"],
+        )
+        .with_note("modeled; paper rows: 16384/BS16 then 32640/BS 8..128");
+        let cases: &[(usize, usize)] = &[
+            (16384, 16),
+            (32640, 8),
+            (32640, 16),
+            (32640, 32),
+            (32640, 64),
+            (32640, 128),
+        ];
+        let mut prior = [false; 3];
+        for &(ctx, bs) in cases {
+            t.row(vec![
+                Cell::Num(ctx as f64),
+                Cell::Num(bs as f64),
+                latency_cell(&model, &hw, AttnImpl::SdpaContiguous, false, bs, ctx, 64, &mut prior[0]),
+                latency_cell(&model, &hw, AttnImpl::Bifurcated, true, bs, ctx, 64, &mut prior[1]),
+                latency_cell(&model, &hw, AttnImpl::Flash2Nc, false, bs, ctx, 64, &mut prior[2]),
+            ]);
+        }
+        vec![t]
+    });
+}

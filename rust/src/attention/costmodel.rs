@@ -1,0 +1,373 @@
+//! Memory-IO / FLOPs cost model for generalized multi-group attention —
+//! the paper's Table 5 and Eq. 5–6, as executable arithmetic.
+//!
+//! All quantities are *per incremental-decoding step* (query length n = 1)
+//! unless stated otherwise, in element counts; byte conversions use the
+//! model's serving dtype. This module is pure integer math — the GPU
+//! simulator (`crate::simulator`) layers hardware profiles and kernel
+//! overheads on top to produce latency tables.
+
+/// A paper-scale model description (not the pico serving models — those
+/// live in the artifact manifest; these are the 1B/7B/16B subjects of the
+/// paper's latency tables).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttnModel {
+    pub name: String,
+    pub d: usize,
+    pub h: usize,
+    pub g: usize,
+    pub l: usize,
+    pub ffn_mult: usize,
+    pub vocab: usize,
+    /// bytes per element of weights/KV at serving time (2 = fp16/bf16)
+    pub bytes: usize,
+}
+
+impl AttnModel {
+    pub fn k(&self) -> usize {
+        self.d / self.h
+    }
+
+    /// Non-embedding parameter count (Kaplan-style: FLOPs/token = 2N).
+    pub fn n_params(&self) -> usize {
+        let d = self.d;
+        let k = self.k();
+        let per_layer = d * self.h * k      // wq
+            + 2 * d * self.g * k            // wk, wv (multi-group compression)
+            + self.h * k * d                // wo
+            + 2 * d * self.ffn_mult * d     // ffn in+out
+            + 4 * d; // ln/bias
+        self.l * per_layer + self.vocab * self.d // + lm head
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        self.n_params() * self.bytes
+    }
+
+    /// KV-cache bytes per token position (K and V, all layers) — the
+    /// quantity `2·l·g·k·bytes` the paper's capacity arguments use.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.l * self.g * self.k() * self.bytes
+    }
+}
+
+/// Decode-step attention KV traffic in **elements** (one layer), Eq. 5/6.
+/// `m_c` context length, `m_d` decoded-so-far, `b` batch.
+pub fn kv_io_fused(b: usize, g: usize, k: usize, m_c: usize, m_d: usize) -> usize {
+    2 * g * k * b * (m_c + m_d)
+}
+
+pub fn kv_io_bifurcated(b: usize, g: usize, k: usize, m_c: usize, m_d: usize) -> usize {
+    2 * g * k * (m_c + b * m_d)
+}
+
+/// Which decode-attention implementation is being modeled. The variants
+/// correspond to the columns of the paper's Tables 1/6/7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnImpl {
+    /// torch SDPA over a *contiguous* cache: each step re-materializes
+    /// K = K_past ⊕ k_new (read+write the whole cache) and the context is
+    /// replicated per batch row.
+    SdpaContiguous,
+    /// SDPA with non-contiguous (pre-allocated) cache reusing the prompt
+    /// KV ("NC" in the paper): no per-step copy, but the kernel still
+    /// *reads* the shared prefix b times.
+    SdpaNc,
+    /// FlashAttention2 over a replicated/paged cache: same KV read
+    /// traffic as SdpaNc (the paper §H.1: paging dedups *storage*, not
+    /// *reads*), lower kernel overhead.
+    Flash2Nc,
+    /// FlashAttention2 with a contiguous cache (copies like SdpaContiguous).
+    Flash2,
+    /// The paper's context-aware bifurcated attention: prefix read once.
+    Bifurcated,
+}
+
+impl AttnImpl {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttnImpl::SdpaContiguous => "SDPA",
+            AttnImpl::SdpaNc => "SDPA (NC)",
+            AttnImpl::Flash2Nc => "Flash2 (NC)",
+            AttnImpl::Flash2 => "Flash2",
+            AttnImpl::Bifurcated => "Bifurcated",
+        }
+    }
+
+    /// Does this implementation copy the whole cache every step
+    /// (contiguous torch.cat-style growth)?
+    pub fn copies_cache(&self) -> bool {
+        matches!(self, AttnImpl::SdpaContiguous | AttnImpl::Flash2)
+    }
+
+    /// Does this implementation read the shared prefix once (context-aware)?
+    pub fn context_aware(&self) -> bool {
+        matches!(self, AttnImpl::Bifurcated)
+    }
+
+    /// Does it store one copy of the prefix (by-reference across the
+    /// batch) rather than b copies?
+    pub fn stores_prefix_once(&self) -> bool {
+        // NC variants reuse the prompt cache allocation by reference;
+        // bifurcated keeps the single shared copy by construction.
+        matches!(self, AttnImpl::Bifurcated | AttnImpl::SdpaNc | AttnImpl::Flash2Nc)
+    }
+}
+
+/// Full decode-step cost (whole model, all layers) in bytes/FLOPs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    /// HBM bytes read for model parameters.
+    pub param_bytes: usize,
+    /// HBM bytes moved for the KV cache (read, plus copy write if any).
+    pub kv_bytes: usize,
+    /// Other per-step activation traffic (q/logits/out), usually minor.
+    pub act_bytes: usize,
+    /// Total floating-point operations.
+    pub flops: usize,
+}
+
+impl StepCost {
+    pub fn total_bytes(&self) -> usize {
+        self.param_bytes + self.kv_bytes + self.act_bytes
+    }
+}
+
+/// Per-step cost of incremental decoding for batch `b` at context `m_c`
+/// with `m_d` tokens decoded so far.
+pub fn decode_step_cost(
+    model: &AttnModel,
+    imp: AttnImpl,
+    b: usize,
+    m_c: usize,
+    m_d: usize,
+) -> StepCost {
+    let (g, k, l, d) = (model.g, model.k(), model.l, model.d);
+    let m = m_c + m_d;
+    let by = model.bytes;
+
+    // KV read traffic per layer (elements)
+    let kv_read = if imp.context_aware() {
+        kv_io_bifurcated(b, g, k, m_c, m_d)
+    } else {
+        kv_io_fused(b, g, k, m_c, m_d)
+    };
+    // contiguous implementations also rewrite the cache each step
+    // (read old + write new ≈ 2x the fused read volume)
+    let kv_copy = if imp.copies_cache() { 2 * kv_io_fused(b, g, k, m_c, m_d) } else { 0 };
+    let kv_bytes = (kv_read + kv_copy) * l * by;
+
+    // activations: q (b·h·k), attention logits r/w (2·b·h·m), out (b·d),
+    // per layer — the bhm softmax term from Table 5.
+    let act_bytes = l * (b * model.h * k + 2 * b * model.h * m + b * d) * by;
+
+    // FLOPs: 2N per token (projections/FFN) + attention 2·(qk + wv)
+    // = 2 · b·h·m·k · 2 per layer — independent of g (paper Sec. 3.3).
+    let flops = 2 * model.n_params() * b + l * 4 * b * model.h * m * k;
+
+    StepCost { param_bytes: model.param_bytes(), kv_bytes, act_bytes, flops }
+}
+
+/// Context-encoding (prefill) cost for a single prompt of length `m_c`.
+/// Compute-bound: FLOPs = 2·N·m_c + attention ~ 2·l·h·m²·k·2.
+pub fn prefill_cost(model: &AttnModel, m_c: usize) -> StepCost {
+    let flops = 2 * model.n_params() * m_c + model.l * 4 * model.h * m_c * m_c * model.k();
+    StepCost {
+        param_bytes: model.param_bytes(),
+        kv_bytes: model.kv_bytes_per_token() * m_c, // write the cache once
+        act_bytes: model.bytes * model.l * m_c * model.d * 4,
+        flops,
+    }
+}
+
+/// Peak HBM residency of serving state for a single-context batch-sampling
+/// group (params + caches + transients), used for OOM prediction.
+pub fn resident_bytes(
+    model: &AttnModel,
+    imp: AttnImpl,
+    b: usize,
+    m_c: usize,
+    m_d_cap: usize,
+) -> usize {
+    let per_tok = model.kv_bytes_per_token();
+    let prefix = if imp.stores_prefix_once() { m_c } else { b * m_c };
+    let decode = b * m_d_cap;
+    let cache = per_tok * (prefix + decode);
+    // contiguous growth holds old+new copies transiently (torch.cat),
+    // one layer at a time -> 1/l of the cache footprint
+    let transient =
+        if imp.copies_cache() { per_tok * b * (m_c + m_d_cap) / model.l } else { 0 };
+    // activations & workspace: roughly b·d·l elements
+    let act = model.bytes * b * model.d * model.l * 8;
+    model.param_bytes() + cache + transient + act
+}
+
+// ---------------------------------------------------------------------------
+// Paper model presets
+// ---------------------------------------------------------------------------
+
+/// 7B multi-head model of Tables 1/6: 32 layers, 32 heads, d=4096, fp16.
+pub fn paper_7b_mha() -> AttnModel {
+    AttnModel { name: "7B-MHA".into(), d: 4096, h: 32, g: 32, l: 32, ffn_mult: 4, vocab: 32000, bytes: 2 }
+}
+
+/// 7B GQA model of Table 7: 8 KV heads.
+pub fn paper_7b_gqa() -> AttnModel {
+    AttnModel { name: "7B-GQA8".into(), d: 4096, h: 32, g: 8, l: 32, ffn_mult: 4, vocab: 32000, bytes: 2 }
+}
+
+/// Mistral-7B-like model of Table 8 (GQA-8).
+pub fn paper_mistral_7b() -> AttnModel {
+    AttnModel { name: "Mistral-7B".into(), d: 4096, h: 32, g: 8, l: 32, ffn_mult: 4, vocab: 32000, bytes: 2 }
+}
+
+/// ~1B multi-head model (paper Table 4: h=20, k=128, l=12).
+pub fn paper_1b_mh() -> AttnModel {
+    AttnModel { name: "1B-MH".into(), d: 2560, h: 20, g: 20, l: 12, ffn_mult: 4, vocab: 50000, bytes: 2 }
+}
+
+/// Capability-equivalent multi-query model (Table 4: g=1, l=16 — the
+/// F≈1.1 size compensation of Sec. 5.1).
+pub fn paper_1b_mq() -> AttnModel {
+    AttnModel { name: "1B-MQ".into(), d: 2560, h: 20, g: 1, l: 16, ffn_mult: 4, vocab: 50000, bytes: 2 }
+}
+
+/// CodeGen-16B-style multi-head model (Fig. 8 subject).
+pub fn paper_16b_mh() -> AttnModel {
+    AttnModel { name: "CodeGen-16B".into(), d: 6144, h: 24, g: 24, l: 34, ffn_mult: 4, vocab: 51200, bytes: 2 }
+}
+
+/// StarCoder-style 15.5B multi-query model (Fig. 8 subject).
+pub fn paper_15b_mq() -> AttnModel {
+    AttnModel { name: "StarCoder-15B".into(), d: 6144, h: 48, g: 1, l: 40, ffn_mult: 4, vocab: 49152, bytes: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_eq6_formulas() {
+        // paper Sec 4.3: fused = gk·b(m_c+m_d); bifurcated = gk·(m_c+b·m_d)
+        assert_eq!(kv_io_fused(8, 4, 128, 1000, 10), 2 * 4 * 128 * 8 * 1010);
+        assert_eq!(kv_io_bifurcated(8, 4, 128, 1000, 10), 2 * 4 * 128 * (1000 + 80));
+    }
+
+    #[test]
+    fn bifurcated_never_worse_equal_at_b1() {
+        for b in [1usize, 2, 16, 128] {
+            for mc in [0usize, 128, 8192] {
+                for md in [1usize, 64] {
+                    let f = kv_io_fused(b, 8, 128, mc, md);
+                    let bi = kv_io_bifurcated(b, 8, 128, mc, md);
+                    if b == 1 {
+                        assert_eq!(f, bi);
+                    } else {
+                        assert!(bi <= f, "b={b} mc={mc} md={md}");
+                        if mc > 0 {
+                            assert!(bi < f);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gain_approaches_b_when_context_dominates() {
+        // m_c >> m_d: fused/bifurcated -> b (paper Sec. 4.3)
+        let b = 64;
+        let f = kv_io_fused(b, 8, 128, 100_000, 1) as f64;
+        let bi = kv_io_bifurcated(b, 8, 128, 100_000, 1) as f64;
+        let ratio = f / bi;
+        assert!((ratio - b as f64).abs() / (b as f64) < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn multi_query_compresses_kv_by_h_over_g() {
+        let mh = paper_7b_mha();
+        let gqa = paper_7b_gqa();
+        assert_eq!(
+            mh.kv_bytes_per_token() / gqa.kv_bytes_per_token(),
+            mh.h / gqa.g / (mh.h / mh.h) // 32/8 = 4
+        );
+        let c_mh = decode_step_cost(&mh, AttnImpl::SdpaNc, 8, 8192, 64);
+        let c_gq = decode_step_cost(&gqa, AttnImpl::SdpaNc, 8, 8192, 64);
+        // KV traffic ratio == h/g
+        let r = c_mh.kv_bytes as f64 / c_gq.kv_bytes as f64;
+        assert!((r - 4.0).abs() < 1e-9, "r={r}");
+    }
+
+    #[test]
+    fn flops_independent_of_g() {
+        // paper Sec 3.3: attention FLOPs bdnm are independent of compression
+        let mh = paper_7b_mha();
+        let gq = paper_7b_gqa();
+        let b = 4usize;
+        let attn = |m: &AttnModel| {
+            decode_step_cost(m, AttnImpl::SdpaNc, b, 4096, 16).flops - 2 * m.n_params() * b
+        };
+        // the attention FLOPs term (2·b·h·m·k·2 per layer) is *identical*
+        // across compression levels; only the projection sizes differ
+        assert_eq!(attn(&mh), attn(&gq));
+    }
+
+    #[test]
+    fn bifurcated_flops_equal_fused_flops() {
+        let m = paper_7b_mha();
+        let a = decode_step_cost(&m, AttnImpl::Bifurcated, 16, 8192, 32).flops;
+        let b = decode_step_cost(&m, AttnImpl::SdpaNc, 16, 8192, 32).flops;
+        assert_eq!(a, b, "same FLOPs is the paper's headline invariant");
+    }
+
+    #[test]
+    fn paper_7b_param_count_plausible() {
+        let n = paper_7b_mha().n_params();
+        assert!((6.0e9..8.0e9).contains(&(n as f64)), "n={n}");
+        let n16 = paper_16b_mh().n_params();
+        assert!((14.0e9..18.0e9).contains(&(n16 as f64)), "n={n16}");
+    }
+
+    #[test]
+    fn mq_size_compensation_is_about_ten_percent() {
+        // Table 4: the capability-equivalent MQ model is ~1.1x the MH size
+        let mh = paper_1b_mh().n_params() as f64;
+        let mq = paper_1b_mq().n_params() as f64;
+        let f = mq / mh;
+        assert!((1.05..1.35).contains(&f), "F={f}");
+    }
+
+    #[test]
+    fn resident_bytes_prefix_sharing() {
+        let m = paper_7b_mha();
+        let shared = resident_bytes(&m, AttnImpl::Bifurcated, 16, 8192, 256);
+        let repl = resident_bytes(&m, AttnImpl::SdpaContiguous, 16, 8192, 256);
+        assert!(repl > 2 * shared, "replicated prefix should dominate");
+        // b=1: both park one prefix; contiguous still pays the transient copy
+        let s1 = resident_bytes(&m, AttnImpl::Bifurcated, 1, 8192, 256);
+        let r1 = resident_bytes(&m, AttnImpl::SdpaContiguous, 1, 8192, 256);
+        assert!(r1 > s1);
+    }
+
+    #[test]
+    fn step_cost_monotone_in_b_and_m() {
+        let m = paper_7b_mha();
+        let c1 = decode_step_cost(&m, AttnImpl::SdpaNc, 1, 4096, 8).total_bytes();
+        let c2 = decode_step_cost(&m, AttnImpl::SdpaNc, 8, 4096, 8).total_bytes();
+        let c3 = decode_step_cost(&m, AttnImpl::SdpaNc, 8, 16384, 8).total_bytes();
+        assert!(c1 < c2 && c2 < c3);
+        // bifurcated is nearly flat in b at fixed m_c (the Fig. 6 shape)
+        let b1 = decode_step_cost(&m, AttnImpl::Bifurcated, 1, 16384, 8).kv_bytes as f64;
+        let b16 = decode_step_cost(&m, AttnImpl::Bifurcated, 16, 16384, 8).kv_bytes as f64;
+        assert!(b16 / b1 < 1.05, "{}", b16 / b1);
+    }
+
+    #[test]
+    fn prefill_is_compute_dominated() {
+        let m = paper_7b_mha();
+        let c = prefill_cost(&m, 8192);
+        // arithmetic intensity >> 1 flop/byte
+        let intensity = c.flops as f64 / c.total_bytes() as f64;
+        assert!(intensity > 100.0, "intensity={intensity}");
+    }
+}

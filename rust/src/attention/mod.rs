@@ -1,0 +1,16 @@
+//! The paper's analytical core: memory-IO/FLOPs accounting for the
+//! generalized multi-group attention family (Table 5, Eq. 5-6) and the
+//! roofline latency model layered on hardware profiles.
+
+pub mod costmodel;
+pub mod roofline;
+
+pub use costmodel::{
+    decode_step_cost, kv_io_bifurcated, kv_io_fused, paper_15b_mq, paper_16b_mh,
+    paper_1b_mh, paper_1b_mq, paper_7b_gqa, paper_7b_mha, paper_mistral_7b,
+    prefill_cost, resident_bytes, AttnImpl, AttnModel, StepCost,
+};
+pub use roofline::{
+    a100_40g, a100_80g, avg_decode_latency, decode_latency, h100, is_oom,
+    prefill_latency, total_latency, Hardware, StepLatency,
+};

@@ -1,0 +1,318 @@
+//! Roofline latency model: hardware profiles + kernel-overhead accounting
+//! on top of the `costmodel` byte/FLOP counts.
+//!
+//! Latency of one decode step =
+//!     max(bytes / effective_bandwidth, flops / effective_flops)
+//!   + n_kernel_launches · per_launch_overhead
+//!   + fixed per-step framework overhead.
+//!
+//! The absolute constants are calibrated against the anchor cells of the
+//! paper's Table 6 (7B MHA on H100, b=1) and clearly labeled *modeled*;
+//! the claims under reproduction are ratios, crossovers and OOM
+//! boundaries, which depend on the IO arithmetic rather than the
+//! constants (paper FAQ 6).
+
+use super::costmodel::{
+    decode_step_cost, prefill_cost, resident_bytes, AttnImpl, AttnModel, StepCost,
+};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hardware {
+    pub name: String,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Peak dense fp16/bf16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM capacity, bytes.
+    pub capacity: f64,
+    /// Achievable fraction of peak bandwidth for attention-style GEMV.
+    pub bw_efficiency: f64,
+    /// Achievable fraction of peak FLOPs for large GEMMs (prefill).
+    pub flop_efficiency: f64,
+    /// Per-kernel-launch overhead, seconds (eager framework dispatch).
+    pub eager_launch: f64,
+    /// Per-kernel overhead under compilation (CUDA-graph-style).
+    pub compiled_launch: f64,
+    /// Fixed per-step overhead, seconds (token sampling, step loop).
+    pub step_overhead: f64,
+}
+
+pub fn h100() -> Hardware {
+    Hardware {
+        name: "H100-80G".into(),
+        mem_bw: 3.35e12,
+        peak_flops: 989e12,
+        capacity: 80e9,
+        bw_efficiency: 0.75,
+        flop_efficiency: 0.55,
+        eager_launch: 45e-6,
+        compiled_launch: 4e-6,
+        step_overhead: 1.5e-3,
+    }
+}
+
+pub fn a100_40g() -> Hardware {
+    Hardware {
+        name: "A100-40G".into(),
+        mem_bw: 1.555e12,
+        peak_flops: 312e12,
+        capacity: 40e9,
+        bw_efficiency: 0.75,
+        flop_efficiency: 0.55,
+        eager_launch: 45e-6,
+        compiled_launch: 4e-6,
+        step_overhead: 1.5e-3,
+    }
+}
+
+pub fn a100_80g() -> Hardware {
+    Hardware { name: "A100-80G".into(), mem_bw: 2.0e12, capacity: 80e9, ..a100_40g() }
+}
+
+impl Hardware {
+    /// Split across `tp` tensor-parallel ranks: per-rank bandwidth/compute
+    /// stay the same but each rank moves 1/tp of the weights and KV; an
+    /// all-reduce per layer adds latency. Capacity scales by tp.
+    pub fn tensor_parallel(&self, tp: usize) -> Hardware {
+        assert!(tp >= 1);
+        Hardware {
+            name: format!("{}xTP{tp}", self.name),
+            capacity: self.capacity * tp as f64,
+            // modeled as: IO divided by tp (weights/KV sharded), with an
+            // extra per-layer latency charged via step_overhead below.
+            mem_bw: self.mem_bw * tp as f64,
+            peak_flops: self.peak_flops * tp as f64,
+            step_overhead: self.step_overhead + if tp > 1 { 0.8e-3 } else { 0.0 },
+            ..self.clone()
+        }
+    }
+}
+
+/// Kernel-launch count for one decode step (whole model).
+fn decode_kernels(model: &AttnModel, imp: AttnImpl) -> usize {
+    // per layer: ln x2, qkv proj, out proj, ffn x2, residual x2 ~ 8 ops
+    let base = 8;
+    let attn = match imp {
+        AttnImpl::SdpaContiguous | AttnImpl::SdpaNc => 2,
+        AttnImpl::Flash2 | AttnImpl::Flash2Nc => 1,
+        // two GEMM pairs + concat/join (the paper FAQ 4 notes the extra
+        // kernels can hurt at *small* workloads — reproduced here)
+        AttnImpl::Bifurcated => 5,
+    };
+    let copy = if imp.copies_cache() { 2 } else { 0 };
+    model.l * (base + attn + copy) + 4 // head/embedding/sampling
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepLatency {
+    pub seconds: f64,
+    pub io_seconds: f64,
+    pub compute_seconds: f64,
+    pub overhead_seconds: f64,
+    pub cost: StepCost,
+}
+
+impl StepLatency {
+    pub fn ms(&self) -> f64 {
+        self.seconds * 1e3
+    }
+}
+
+/// Latency of one incremental-decoding step.
+pub fn decode_latency(
+    model: &AttnModel,
+    hw: &Hardware,
+    imp: AttnImpl,
+    compiled: bool,
+    b: usize,
+    m_c: usize,
+    m_d: usize,
+) -> StepLatency {
+    let cost = decode_step_cost(model, imp, b, m_c, m_d);
+    let io = cost.total_bytes() as f64 / (hw.mem_bw * hw.bw_efficiency);
+    let compute = cost.flops as f64 / (hw.peak_flops * hw.flop_efficiency);
+    let launch = if compiled { hw.compiled_launch } else { hw.eager_launch };
+    let overhead = decode_kernels(model, imp) as f64 * launch + hw.step_overhead;
+    StepLatency {
+        seconds: io.max(compute) + overhead,
+        io_seconds: io,
+        compute_seconds: compute,
+        overhead_seconds: overhead,
+        cost,
+    }
+}
+
+/// Context-encoding latency for one prompt of length `m_c` (compute-bound).
+pub fn prefill_latency(model: &AttnModel, hw: &Hardware, m_c: usize) -> StepLatency {
+    let cost = prefill_cost(model, m_c);
+    let io = cost.total_bytes() as f64 / (hw.mem_bw * hw.bw_efficiency);
+    let compute = cost.flops as f64 / (hw.peak_flops * hw.flop_efficiency);
+    let overhead = (model.l * 10) as f64 * hw.compiled_launch + hw.step_overhead;
+    StepLatency { seconds: io.max(compute) + overhead, io_seconds: io, compute_seconds: compute, overhead_seconds: overhead, cost }
+}
+
+/// Would this configuration exceed device memory? (paper's "OOM" cells)
+pub fn is_oom(model: &AttnModel, hw: &Hardware, imp: AttnImpl, b: usize, m_c: usize, m_d_cap: usize) -> bool {
+    resident_bytes(model, imp, b, m_c, m_d_cap) as f64 > hw.capacity
+}
+
+/// Average per-token decode latency over a generation of `steps` tokens
+/// (m_d grows 0..steps), matching how the paper reports "per-token ms".
+pub fn avg_decode_latency(
+    model: &AttnModel,
+    hw: &Hardware,
+    imp: AttnImpl,
+    compiled: bool,
+    b: usize,
+    m_c: usize,
+    steps: usize,
+) -> f64 {
+    assert!(steps > 0);
+    // latency is affine in m_d, so the midpoint is exact; evaluate both
+    // ends anyway to stay robust to future non-linear terms.
+    let first = decode_latency(model, hw, imp, compiled, b, m_c, 0).seconds;
+    let last = decode_latency(model, hw, imp, compiled, b, m_c, steps - 1).seconds;
+    (first + last) / 2.0
+}
+
+/// Total request latency: prefill + `steps` decode steps (paper Fig. 5).
+pub fn total_latency(
+    model: &AttnModel,
+    hw: &Hardware,
+    imp: AttnImpl,
+    compiled: bool,
+    b: usize,
+    m_c: usize,
+    steps: usize,
+) -> f64 {
+    prefill_latency(model, hw, m_c).seconds
+        + steps as f64 * avg_decode_latency(model, hw, imp, compiled, b, m_c, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::costmodel::{paper_1b_mh, paper_1b_mq, paper_7b_mha};
+
+    #[test]
+    fn table6_anchor_cells_roughly_match() {
+        // Paper Table 6 (7B MHA, H100): sanity-band checks on the model's
+        // absolute outputs at a few anchor cells. Bands are deliberately
+        // wide — the reproduction claim is about ratios, not milliseconds.
+        let m = paper_7b_mha();
+        let hw = h100();
+        // b=1, ctx 8k, uncompiled SDPA: paper 26.4 ms
+        let v = decode_latency(&m, &hw, AttnImpl::SdpaContiguous, false, 1, 8192, 8).ms();
+        assert!((13.0..55.0).contains(&v), "8k b1 eager sdpa: {v}");
+        // b=1, ctx 8k, compiled: paper 8.78 ms
+        let v = decode_latency(&m, &hw, AttnImpl::SdpaNc, true, 1, 8192, 8).ms();
+        assert!((4.0..18.0).contains(&v), "8k b1 compiled sdpa: {v}");
+        // b=16, ctx 16k compiled bifurcated: paper 18.46 ms
+        let v = decode_latency(&m, &hw, AttnImpl::Bifurcated, true, 16, 16384, 8).ms();
+        assert!((4.0..30.0).contains(&v), "16k b16 compiled bif: {v}");
+    }
+
+    #[test]
+    fn bifurcated_speedup_grows_with_batch() {
+        let m = paper_7b_mha();
+        let hw = h100();
+        let speedup = |b: usize| {
+            decode_latency(&m, &hw, AttnImpl::SdpaNc, true, b, 16384, 16).seconds
+                / decode_latency(&m, &hw, AttnImpl::Bifurcated, true, b, 16384, 16).seconds
+        };
+        assert!(speedup(1) < 1.2, "no real gain at b=1");
+        assert!(speedup(8) > 2.0);
+        assert!(speedup(16) > speedup(8));
+        // paper: 6.8x at b=16 ctx16k (251.47/36.78 eager); band check
+        let s16 = decode_latency(&m, &hw, AttnImpl::SdpaContiguous, false, 16, 16384, 16).seconds
+            / decode_latency(&m, &hw, AttnImpl::Bifurcated, false, 16, 16384, 16).seconds;
+        assert!((3.0..14.0).contains(&s16), "eager speedup b16: {s16}");
+    }
+
+    #[test]
+    fn bifurcated_latency_flat_in_context() {
+        // Fig. 6a: with bifurcation, per-step latency barely grows with m_c
+        let m = paper_7b_mha();
+        let hw = h100();
+        let l1 = decode_latency(&m, &hw, AttnImpl::Bifurcated, true, 8, 2000, 8).seconds;
+        let l2 = decode_latency(&m, &hw, AttnImpl::Bifurcated, true, 8, 10000, 8).seconds;
+        assert!(l2 / l1 < 1.6, "{}", l2 / l1);
+        // without: grows ~linearly once KV dominates
+        let f1 = decode_latency(&m, &hw, AttnImpl::SdpaNc, true, 8, 2000, 8).seconds;
+        let f2 = decode_latency(&m, &hw, AttnImpl::SdpaNc, true, 8, 10000, 8).seconds;
+        assert!(f2 / f1 > 2.0, "{}", f2 / f1);
+    }
+
+    #[test]
+    fn small_workload_bifurcation_overhead() {
+        // FAQ 4: at tiny workloads the extra kernel splits can make
+        // bifurcated slightly *slower* (eager) — the workload-based switch
+        // in the scheduler exists because of this.
+        let m = paper_7b_mha();
+        let hw = h100();
+        let bif = decode_latency(&m, &hw, AttnImpl::Bifurcated, false, 1, 512, 4).seconds;
+        let sdpa = decode_latency(&m, &hw, AttnImpl::SdpaNc, false, 1, 512, 4).seconds;
+        assert!(bif > sdpa, "bif={bif} sdpa={sdpa}");
+    }
+
+    #[test]
+    fn oom_boundaries_match_paper_shape() {
+        let m = paper_7b_mha();
+        let hw = h100();
+        // Table 6 @32k: SDPA (contiguous) handles b=2 (69.2 ms) but OOMs
+        // by b=4; bifurcated survives to b≈512 and OOMs ~1024.
+        assert!(!is_oom(&m, &hw, AttnImpl::SdpaContiguous, 2, 32640, 64));
+        assert!(is_oom(&m, &hw, AttnImpl::SdpaContiguous, 4, 32640, 64));
+        assert!(!is_oom(&m, &hw, AttnImpl::Bifurcated, 256, 32640, 64));
+        assert!(is_oom(&m, &hw, AttnImpl::Bifurcated, 4096, 32640, 64));
+    }
+
+    #[test]
+    fn mq_vs_mh_crossover_in_context_length() {
+        // Fig. 5: capability-equivalent MQ is slower at small m (bigger
+        // model) but wins at large m (KV compression) in single-batch.
+        let hw = a100_40g();
+        let mh = paper_1b_mh();
+        let mq = paper_1b_mq();
+        let lat = |m: &AttnModel, ctx: usize| {
+            decode_latency(m, &hw, AttnImpl::SdpaNc, false, 1, ctx, 128).seconds
+        };
+        assert!(lat(&mq, 256) > lat(&mh, 256), "low ctx: MQ pays size overhead");
+        assert!(lat(&mq, 60_000) < lat(&mh, 60_000), "high ctx: MQ wins");
+    }
+
+    #[test]
+    fn prefill_grows_with_context_and_model() {
+        let hw = h100();
+        let mh = paper_1b_mh();
+        let mq = paper_1b_mq();
+        let p1 = prefill_latency(&mh, &hw, 2000).seconds;
+        let p2 = prefill_latency(&mh, &hw, 10000).seconds;
+        assert!(p2 > 3.0 * p1);
+        // Fig. 5 second panel: the larger MQ model's prefill is steeper
+        assert!(prefill_latency(&mq, &hw, 10000).seconds > p2);
+    }
+
+    #[test]
+    fn decode_250x_slower_than_prefill_per_token() {
+        // Appendix D.1: per-token decode ≈ 250x the amortized prefill cost
+        let m = paper_1b_mh();
+        let hw = a100_40g();
+        let per_tok_prefill = prefill_latency(&m, &hw, 10_000).seconds / 10_000.0;
+        let per_tok_decode = decode_latency(&m, &hw, AttnImpl::SdpaNc, false, 1, 10_000, 8).seconds;
+        let ratio = per_tok_decode / per_tok_prefill;
+        assert!((50.0..2000.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn tensor_parallel_scales_capacity_and_io() {
+        let m = crate::attention::costmodel::paper_mistral_7b();
+        let hw = h100();
+        let tp2 = hw.tensor_parallel(2);
+        assert_eq!(tp2.capacity, 2.0 * hw.capacity);
+        let l1 = decode_latency(&m, &hw, AttnImpl::SdpaNc, true, 16, 32640, 16).seconds;
+        let l2 = decode_latency(&m, &tp2, AttnImpl::SdpaNc, true, 16, 32640, 16).seconds;
+        assert!(l2 < l1, "TP=2 should cut IO-bound latency");
+        assert!(l2 > 0.4 * l1, "but not below 2x + allreduce");
+    }
+}

@@ -1,0 +1,292 @@
+//! Criterion-lite benchmark harness (substrate — no `criterion` offline).
+//!
+//! Two kinds of benches coexist in this repo:
+//!
+//! * **measured** — wall-clock timing of real code (runtime execute, engine
+//!   steps, kernel micro-benches) with warmup + percentile reporting;
+//! * **modeled** — tables whose cells come from the GPU memory-IO simulator
+//!   (the paper's A100/H100 results cannot be *measured* on this CPU-only
+//!   box; see DESIGN.md §2). These are clearly labeled `modeled`.
+//!
+//! Every bench writes a JSON result file under `target/bench_results/` so
+//! EXPERIMENTS.md can quote exact numbers.
+
+use std::time::{Duration, Instant};
+
+use crate::util::histogram::{Histogram, Summary};
+use crate::util::json::Json;
+
+pub struct Bencher {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 2000,
+            target_time: Duration::from_millis(800),
+        }
+    }
+
+    pub fn quick(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            target_time: Duration::from_millis(200),
+        }
+    }
+
+    /// Time `f` repeatedly; returns a millisecond summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut hist = Histogram::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (start.elapsed() < self.target_time && iters < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            hist.record_duration(t.elapsed());
+            iters += 1;
+        }
+        hist.summary()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering — every bench prints the same row/series layout as the
+// paper's table or figure it regenerates.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Ms(f64),
+    Num(f64),
+    /// Out-of-memory under the capacity model — printed "OOM" like the paper.
+    Oom,
+    /// Not measured (the paper prints "-").
+    Dash,
+}
+
+impl Cell {
+    pub fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Ms(v) => {
+                if *v >= 100.0 {
+                    format!("{v:.1}")
+                } else {
+                    format!("{v:.2}")
+                }
+            }
+            Cell::Num(v) => {
+                if v.fract() == 0.0 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v:.3}")
+                }
+            }
+            Cell::Oom => "OOM".to_string(),
+            Cell::Dash => "-".to_string(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Str(s) => Json::Str(s.clone()),
+            Cell::Ms(v) | Cell::Num(v) => Json::Num(*v),
+            Cell::Oom => Json::Str("OOM".into()),
+            Cell::Dash => Json::Null,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub note: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            note: String::new(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_note(mut self, note: &str) -> Self {
+        self.note = note.to_string();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a github-markdown table (what goes into EXPERIMENTS.md).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.render()).collect())
+            .collect();
+        for row in &rendered {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("\n## {}\n", self.title);
+        if !self.note.is_empty() {
+            out.push_str(&format!("_{}_\n", self.note));
+        }
+        out.push('\n');
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &rendered {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("title", Json::Str(self.title.clone()))
+            .set("note", Json::Str(self.note.clone()))
+            .set(
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            )
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| c.to_json()).collect()))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+/// Write bench output under `target/bench_results/<name>.json`.
+pub fn save_results(name: &str, tables: &[Table]) {
+    let dir = std::path::Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let doc = Json::obj()
+        .set("bench", Json::Str(name.to_string()))
+        .set("tables", Json::Arr(tables.iter().map(|t| t.to_json()).collect()));
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        eprintln!("[bench] results -> {}", path.display());
+    }
+}
+
+/// Shared entry glue for `cargo bench` binaries: honors `--quick` and the
+/// standard libtest flags cargo passes (`--bench`).
+pub fn bench_main(name: &str, f: impl FnOnce(bool) -> Vec<Table>) {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok();
+    eprintln!("[bench] {name} (quick={quick})");
+    let t0 = Instant::now();
+    let tables = f(quick);
+    for t in &tables {
+        t.print();
+    }
+    save_results(name, &tables);
+    eprintln!("[bench] {name} done in {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_and_reports() {
+        let b = Bencher::quick("t");
+        let s = b.run(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.count >= 3);
+        assert!(s.mean >= 0.0);
+        assert!(s.p99 >= s.p50);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["ctx", "BS", "latency"]);
+        t.row(vec![Cell::Str("8k".into()), Cell::Num(16.0), Cell::Ms(31.7)]);
+        t.row(vec![Cell::Str("8k".into()), Cell::Num(32.0), Cell::Oom]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("8k |"));
+        assert!(r.contains("31.70"));
+        assert!(r.contains("OOM"));
+        // header separator present
+        assert!(r.contains("|----"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec![Cell::Num(1.0)]);
+    }
+
+    #[test]
+    fn table_json_roundtrips() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec![Cell::Ms(1.5)]);
+        t.row(vec![Cell::Dash]);
+        let j = t.to_json();
+        assert_eq!(j.str_of("title"), "T");
+        assert_eq!(j.req("rows").idx(0).unwrap().idx(0).unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.req("rows").idx(1).unwrap().idx(0).unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn cell_rendering_widths() {
+        assert_eq!(Cell::Ms(251.47).render(), "251.5");
+        assert_eq!(Cell::Ms(8.637).render(), "8.64");
+        assert_eq!(Cell::Num(128.0).render(), "128");
+    }
+}

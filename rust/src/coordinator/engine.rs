@@ -1,0 +1,197 @@
+//! The serving engine: prefill once, sample n completions in parallel
+//! waves over the shared context — the paper's single-context batch
+//! sampling (Fig. 1, right) with the bifurcated decode step as a
+//! first-class scheduling choice.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::kvcache::manager::KvManager;
+use crate::runtime::models::{ContextHandle, DecodeMode, ModelRuntime};
+use crate::runtime::Manifest;
+
+use super::request::{Completion, GenerationRequest, RequestResult, Timing};
+use super::sampler::SamplerBatch;
+use super::scheduler::{Scheduler, SchedulerConfig};
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub scheduler: SchedulerConfig,
+    /// KV storage budget for the capacity accounting (bytes).
+    pub kv_capacity_bytes: usize,
+    /// Paged-block granularity in tokens.
+    pub block_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            scheduler: SchedulerConfig::default(),
+            kv_capacity_bytes: 64 << 20,
+            block_tokens: 16,
+        }
+    }
+}
+
+pub struct Engine {
+    pub rt: ModelRuntime,
+    pub tokenizer: crate::runtime::TokenizerInfo,
+    pub scheduler: Scheduler,
+    pub kv: std::cell::RefCell<KvManager>,
+    pub metrics: super::metrics::Metrics,
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest, rt: ModelRuntime, cfg: EngineConfig) -> Engine {
+        let kv = KvManager::new(
+            cfg.kv_capacity_bytes,
+            rt.cfg.kv_bytes_per_token(),
+            cfg.block_tokens,
+        );
+        let scheduler = Scheduler::new(cfg.scheduler, manifest.batch_buckets.clone());
+        Engine {
+            rt,
+            tokenizer: manifest.tokenizer.clone(),
+            scheduler,
+            kv: std::cell::RefCell::new(kv),
+            metrics: super::metrics::Metrics::default(),
+        }
+    }
+
+    pub fn tokenize_prompt(&self, prompt: &str) -> Result<Vec<i32>> {
+        let mut ids = vec![self.tokenizer.bos];
+        ids.extend(self.tokenizer.encode(prompt)?);
+        anyhow::ensure!(
+            ids.len() <= self.rt.cfg.m_c_max,
+            "prompt of {} tokens exceeds context capacity {}",
+            ids.len(),
+            self.rt.cfg.m_c_max
+        );
+        Ok(ids)
+    }
+
+    /// Serve one request: prefill the shared context once, then decode all
+    /// n samplers (in waves if n exceeds the largest compiled bucket).
+    pub fn generate(&self, req: &GenerationRequest) -> Result<RequestResult> {
+        let params = &req.params;
+        anyhow::ensure!(params.n >= 1, "n must be >= 1");
+        let max_tokens = params.max_tokens.min(self.rt.cfg.m_d_max);
+        let prompt_ids = self.tokenize_prompt(&req.prompt)?;
+        let m_c_len = prompt_ids.len();
+
+        // ---- prefill (once, regardless of n: Fig. 1 single-context) ----
+        let t0 = Instant::now();
+        let pre = self.rt.prefill(&prompt_ids).context("prefill")?;
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mode = self.scheduler.pick_mode(params.n, m_c_len);
+        let waves = self.scheduler.plan_waves(params.n);
+
+        // capacity accounting: context registered once (bifurcated) or
+        // per-replica (fused), sequences leased per sampler
+        let ctx_id = self
+            .kv
+            .borrow_mut()
+            .register_context(m_c_len, mode, params.n)
+            .map_err(|e| anyhow::anyhow!("KV capacity: {e}"))?;
+
+        let upload_before = self.rt.upload_bytes.get();
+        let t1 = Instant::now();
+
+        // context upload: shared tensors once for bifurcated; the fused
+        // baseline re-materializes the broadcast per wave bucket size.
+        let shared_ctx: Option<ContextHandle> = if mode == DecodeMode::Bifurcated {
+            Some(self.rt.upload_context(&pre.kc, &pre.vc, m_c_len)?)
+        } else {
+            None
+        };
+
+        let mut completions: Vec<Completion> = Vec::with_capacity(params.n);
+        let mut decode_steps = 0usize;
+        for (wi, wave) in waves.iter().enumerate() {
+            let ctx_storage; // keep fused uploads alive through the wave
+            let ctx: &ContextHandle = match &shared_ctx {
+                Some(c) => c,
+                None => {
+                    let kc_rep = pre.kc.broadcast_at(1, wave.bucket);
+                    let vc_rep = pre.vc.broadcast_at(1, wave.bucket);
+                    ctx_storage = self.rt.upload_context(&kc_rep, &vc_rep, m_c_len)?;
+                    &ctx_storage
+                }
+            };
+
+            // lease sequences; on capacity exhaustion roll back cleanly
+            // (finish partial leases and release the context registration)
+            let mut seq_ids = Vec::with_capacity(wave.live);
+            for _ in 0..wave.live {
+                // bind before matching: the borrow guard must not live
+                // into the Err arm (which borrows again for cleanup)
+                let lease = self.kv.borrow_mut().start_sequence(ctx_id, max_tokens);
+                match lease {
+                    Ok(s) => seq_ids.push(s),
+                    Err(e) => {
+                        for s in seq_ids {
+                            self.kv.borrow_mut().finish_sequence(s);
+                        }
+                        self.kv.borrow_mut().release_context(ctx_id);
+                        return Err(anyhow::anyhow!("KV capacity: {e}"));
+                    }
+                }
+            }
+
+            let mut sampler = SamplerBatch::new(
+                wave.live,
+                super::request::SamplingParams { max_tokens, ..params.clone() },
+                self.rt.cfg.vocab,
+                req.id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64),
+            );
+            let mut tokens = sampler.first_tokens(&pre.logits);
+            let (mut kd, mut vd) = self.rt.zero_decode_cache(wave.bucket);
+            let mut d_pos = 0usize;
+            let wave_run = (|| -> Result<()> {
+                while !sampler.all_finished() && d_pos < max_tokens {
+                    let out = self
+                        .rt
+                        .decode(mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
+                        .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
+                    let live_logits = &out.logits.f32s()[..wave.live * self.rt.cfg.vocab];
+                    tokens = sampler.step(live_logits);
+                    kd = out.kd;
+                    vd = out.vd;
+                    d_pos += 1;
+                    decode_steps += 1;
+                }
+                Ok(())
+            })();
+            // KV leases are returned even on a failed wave
+            for s in seq_ids {
+                self.kv.borrow_mut().finish_sequence(s);
+            }
+            if let Err(e) = wave_run {
+                self.kv.borrow_mut().release_context(ctx_id);
+                return Err(e);
+            }
+            let tok = &self.tokenizer;
+            completions.extend(sampler.into_completions(|ids| tok.decode(ids)));
+        }
+        self.kv.borrow_mut().release_context(ctx_id);
+        debug_assert!(self.kv.borrow().check_invariants().is_ok());
+
+        let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let timing = Timing {
+            prefill_ms,
+            decode_ms,
+            decode_steps,
+            waves: waves.len(),
+            upload_bytes: self.rt.upload_bytes.get() - upload_before,
+        };
+        self.metrics.observe_request(&timing, completions.len());
+
+        Ok(RequestResult { id: req.id, completions, timing, mode_used: mode })
+    }
+}
+
+// Unit coverage for Engine requires PJRT + artifacts; see
+// tests/integration_engine.rs. The pure pieces (scheduler, sampler,
+// ranker, kv manager) are unit-tested in their own modules.

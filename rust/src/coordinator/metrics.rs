@@ -1,0 +1,85 @@
+//! Serving metrics: request counters + latency histograms.
+
+use std::cell::RefCell;
+
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: RefCell<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: usize,
+    completions: usize,
+    decode_steps: usize,
+    upload_bytes: usize,
+    prefill_ms: Histogram,
+    per_step_ms: Histogram,
+    total_ms: Histogram,
+}
+
+impl Metrics {
+    pub fn observe_request(&self, timing: &super::request::Timing, n_completions: usize) {
+        let mut m = self.inner.borrow_mut();
+        m.requests += 1;
+        m.completions += n_completions;
+        m.decode_steps += timing.decode_steps;
+        m.upload_bytes += timing.upload_bytes;
+        m.prefill_ms.record(timing.prefill_ms);
+        if timing.decode_steps > 0 {
+            m.per_step_ms.record(timing.per_step_ms());
+        }
+        m.total_ms.record(timing.total_ms());
+    }
+
+    pub fn requests(&self) -> usize {
+        self.inner.borrow().requests
+    }
+
+    pub fn report(&self) -> Json {
+        let mut m = self.inner.borrow_mut();
+        let mut j = Json::obj()
+            .set("requests", Json::Num(m.requests as f64))
+            .set("completions", Json::Num(m.completions as f64))
+            .set("decode_steps", Json::Num(m.decode_steps as f64))
+            .set("upload_bytes", Json::Num(m.upload_bytes as f64));
+        if !m.prefill_ms.is_empty() {
+            j = j.set("prefill_ms", m.prefill_ms.summary().to_json());
+        }
+        if !m.per_step_ms.is_empty() {
+            j = j.set("per_step_ms", m.per_step_ms.summary().to_json());
+        }
+        if !m.total_ms.is_empty() {
+            j = j.set("total_ms", m.total_ms.summary().to_json());
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Timing;
+
+    #[test]
+    fn aggregates_requests() {
+        let m = Metrics::default();
+        m.observe_request(
+            &Timing { prefill_ms: 5.0, decode_ms: 20.0, decode_steps: 10, waves: 1, upload_bytes: 100 },
+            4,
+        );
+        m.observe_request(
+            &Timing { prefill_ms: 7.0, decode_ms: 30.0, decode_steps: 10, waves: 1, upload_bytes: 50 },
+            8,
+        );
+        assert_eq!(m.requests(), 2);
+        let r = m.report();
+        assert_eq!(r.f64_of("completions"), 12.0);
+        assert_eq!(r.f64_of("upload_bytes"), 150.0);
+        assert_eq!(r.req("prefill_ms").f64_of("count"), 2.0);
+        assert!((r.req("per_step_ms").f64_of("mean") - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the serving-side contribution: request types, the
+//! single-context batch-sampling engine, the FAQ-4 workload-based
+//! bifurcation switch, temperature/top-p samplers with mean-log-p
+//! tracking, and the reranker.
+
+pub mod engine;
+pub mod metrics;
+pub mod ranker;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig};
+pub use ranker::rerank_top_k;
+pub use request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
+pub use sampler::SamplerBatch;
+pub use scheduler::{ModePolicy, Scheduler, SchedulerConfig, Wave};

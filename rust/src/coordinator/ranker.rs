@@ -1,0 +1,79 @@
+//! Mean-log-p reranking (paper Sec. 5.4): deduplicate the n sampled
+//! completions, rank by mean log-probability (Chen et al. 2021), return
+//! the top-k — the "pass@top3" selection policy of Fig. 8/10.
+
+use std::collections::BTreeMap;
+
+use super::request::Completion;
+
+/// Deduplicate by text, keeping the highest-mean-logp instance of each,
+/// then sort descending by mean logp and truncate to `k`.
+pub fn rerank_top_k(completions: &[Completion], k: usize) -> Vec<Completion> {
+    let mut best: BTreeMap<&str, &Completion> = BTreeMap::new();
+    for c in completions {
+        match best.get(c.text.as_str()) {
+            Some(prev) if prev.mean_logp() >= c.mean_logp() => {}
+            _ => {
+                best.insert(c.text.as_str(), c);
+            }
+        }
+    }
+    let mut unique: Vec<Completion> = best.into_values().cloned().collect();
+    unique.sort_by(|a, b| {
+        b.mean_logp()
+            .partial_cmp(&a.mean_logp())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    unique.truncate(k);
+    unique
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(text: &str, sum_logp: f64, len: usize) -> Completion {
+        Completion {
+            text: text.into(),
+            tokens: vec![2; len],
+            sum_logp,
+            finished_by_stop: true,
+        }
+    }
+
+    #[test]
+    fn dedups_and_sorts() {
+        let cs = vec![
+            comp("19;", -0.6, 3),
+            comp("18;", -0.3, 3),
+            comp("19;", -0.9, 3), // duplicate, worse
+            comp("21;", -1.5, 3),
+        ];
+        let top = rerank_top_k(&cs, 3);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].text, "18;");
+        assert_eq!(top[1].text, "19;");
+        assert!((top[1].sum_logp + 0.6).abs() < 1e-12, "kept the better duplicate");
+        assert_eq!(top[2].text, "21;");
+    }
+
+    #[test]
+    fn truncates_to_k() {
+        let cs: Vec<_> = (0..10).map(|i| comp(&format!("{i};"), -(i as f64), 2)).collect();
+        assert_eq!(rerank_top_k(&cs, 3).len(), 3);
+        assert_eq!(rerank_top_k(&cs, 20).len(), 10);
+    }
+
+    #[test]
+    fn length_normalization_matters() {
+        // shorter sequence with same total logp ranks higher (mean)
+        let cs = vec![comp("a;", -1.0, 2), comp("bbbb;", -1.0, 5)];
+        let top = rerank_top_k(&cs, 2);
+        assert_eq!(top[0].text, "bbbb;"); // -0.2 > -0.5
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(rerank_top_k(&[], 3).is_empty());
+    }
+}

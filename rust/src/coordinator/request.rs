@@ -1,0 +1,114 @@
+//! Request/response types for the serving API.
+
+/// Sampling controls (defaults follow the paper's Sec. 5.4 evaluation:
+/// nucleus p = 0.95, temperature 0.8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Number of parallel completions from the shared context.
+    pub n: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Hard cap on generated tokens (≤ the model's m_d_max).
+    pub max_tokens: usize,
+    /// Stop token (the grammar's ';'); None decodes to max_tokens.
+    pub stop_token: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            n: 1,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens: 16,
+            stop_token: None,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub id: u64,
+    /// Raw prompt text (tokenized by the engine via the manifest table).
+    pub prompt: String,
+    pub params: SamplingParams,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Sum of per-token log-probabilities under the base (T=1) model.
+    pub sum_logp: f64,
+    pub finished_by_stop: bool,
+}
+
+impl Completion {
+    /// Mean log-probability — the ranking score of Chen et al. (2021)
+    /// used for pass@top-k reranking (paper Sec. 5.4).
+    pub fn mean_logp(&self) -> f64 {
+        if self.tokens.is_empty() {
+            f64::NEG_INFINITY
+        } else {
+            self.sum_logp / self.tokens.len() as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub decode_steps: usize,
+    pub waves: usize,
+    pub upload_bytes: usize,
+}
+
+impl Timing {
+    pub fn total_ms(&self) -> f64 {
+        self.prefill_ms + self.decode_ms
+    }
+
+    pub fn per_step_ms(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_ms / self.decode_steps as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub completions: Vec<Completion>,
+    pub timing: Timing,
+    pub mode_used: crate::runtime::models::DecodeMode,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_logp_normalizes_by_length() {
+        let c = Completion {
+            text: "19;".into(),
+            tokens: vec![3, 11, 14],
+            sum_logp: -1.5,
+            finished_by_stop: true,
+        };
+        assert!((c.mean_logp() + 0.5).abs() < 1e-12);
+        let empty = Completion { text: String::new(), tokens: vec![], sum_logp: 0.0, finished_by_stop: false };
+        assert_eq!(empty.mean_logp(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn timing_aggregates() {
+        let t = Timing { prefill_ms: 10.0, decode_ms: 30.0, decode_steps: 15, waves: 1, upload_bytes: 0 };
+        assert_eq!(t.total_ms(), 40.0);
+        assert_eq!(t.per_step_ms(), 2.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Batched token sampling state for single-context batch sampling.
+//!
+//! One `SamplerBatch` tracks the b parallel samplers of a wave: each draws
+//! its next token from its logits row (temperature + nucleus), accumulates
+//! base-distribution log-probabilities for mean-log-p reranking, and stops
+//! on the stop token or the m_d capacity.
+
+use crate::util::prng::{sample_top_p, Pcg};
+
+use super::request::{Completion, SamplingParams};
+
+#[derive(Debug)]
+struct SeqState {
+    tokens: Vec<i32>,
+    sum_logp: f64,
+    finished: bool,
+    finished_by_stop: bool,
+    rng: Pcg,
+}
+
+#[derive(Debug)]
+pub struct SamplerBatch {
+    seqs: Vec<SeqState>,
+    params: SamplingParams,
+    vocab: usize,
+}
+
+impl SamplerBatch {
+    pub fn new(b: usize, params: SamplingParams, vocab: usize, base_seed: u64) -> Self {
+        let mut root = Pcg::new(base_seed ^ params.seed);
+        let seqs = (0..b)
+            .map(|i| SeqState {
+                tokens: Vec::new(),
+                sum_logp: 0.0,
+                finished: false,
+                finished_by_stop: false,
+                rng: root.fork(i as u64 + 1),
+            })
+            .collect();
+        SamplerBatch { seqs, params, vocab }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.seqs.iter().all(|s| s.finished)
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0)
+    }
+
+    /// Sample the first token for every sampler from the (single) prefill
+    /// logits row — all b samplers share it, diverging by randomness.
+    pub fn first_tokens(&mut self, prefill_logits: &[f32]) -> Vec<i32> {
+        assert_eq!(prefill_logits.len(), self.vocab);
+        let mut out = Vec::with_capacity(self.seqs.len());
+        for s in self.seqs.iter_mut() {
+            let (tok, lp) =
+                sample_top_p(&mut s.rng, prefill_logits, self.params.temperature, self.params.top_p);
+            s.tokens.push(tok as i32);
+            s.sum_logp += lp as f64;
+            if Some(tok as i32) == self.params.stop_token {
+                s.finished = true;
+                s.finished_by_stop = true;
+            } else if s.tokens.len() >= self.params.max_tokens {
+                s.finished = true;
+            }
+            out.push(tok as i32);
+        }
+        out
+    }
+
+    /// Advance every unfinished sampler given the step's logits
+    /// (row-major [b, vocab]; padding rows beyond live samplers ignored).
+    /// Returns the token vector to feed into the next decode step.
+    pub fn step(&mut self, logits: &[f32]) -> Vec<i32> {
+        assert!(logits.len() >= self.seqs.len() * self.vocab, "logits too small");
+        let mut next = Vec::with_capacity(self.seqs.len());
+        for (i, s) in self.seqs.iter_mut().enumerate() {
+            if s.finished {
+                // finished rows keep feeding their last token; the engine's
+                // KV write for them is masked out by never reading the row.
+                next.push(*s.tokens.last().unwrap_or(&0));
+                continue;
+            }
+            let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+            let (tok, lp) = sample_top_p(&mut s.rng, row, self.params.temperature, self.params.top_p);
+            s.tokens.push(tok as i32);
+            s.sum_logp += lp as f64;
+            if Some(tok as i32) == self.params.stop_token {
+                s.finished = true;
+                s.finished_by_stop = true;
+            } else if s.tokens.len() >= self.params.max_tokens {
+                s.finished = true;
+            }
+            next.push(tok as i32);
+        }
+        next
+    }
+
+    pub fn into_completions(self, decode_text: impl Fn(&[i32]) -> String) -> Vec<Completion> {
+        self.seqs
+            .into_iter()
+            .map(|s| Completion {
+                text: decode_text(&s.tokens),
+                tokens: s.tokens,
+                sum_logp: s.sum_logp,
+                finished_by_stop: s.finished_by_stop,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize) -> SamplingParams {
+        SamplingParams { n, temperature: 1.0, top_p: 1.0, max_tokens: 4, stop_token: Some(14), seed: 1 }
+    }
+
+    fn uniform_logits(vocab: usize, b: usize) -> Vec<f32> {
+        vec![0.0; vocab * b]
+    }
+
+    #[test]
+    fn stops_on_stop_token() {
+        let mut sb = SamplerBatch::new(2, params(2), 4, 0);
+        // force stop token by making it dominant
+        let mut logits = vec![-100.0f32; 4 * 2];
+        logits[14 % 4] = 0.0; // vocab=4 here; use stop token 2 instead
+        let mut sb2 = SamplerBatch::new(
+            2,
+            SamplingParams { stop_token: Some(2), ..params(2) },
+            4,
+            0,
+        );
+        let mut row = vec![-100.0f32; 4];
+        row[2] = 10.0;
+        sb2.first_tokens(&row);
+        assert!(sb2.all_finished());
+        let comps = sb2.into_completions(|t| format!("{t:?}"));
+        assert!(comps.iter().all(|c| c.finished_by_stop));
+        // keep the first batch alive path exercised
+        sb.first_tokens(&uniform_logits(4, 1)[..4]);
+        assert!(!sb.all_finished());
+    }
+
+    #[test]
+    fn max_tokens_caps_generation() {
+        let mut sb = SamplerBatch::new(3, SamplingParams { stop_token: None, ..params(3) }, 8, 0);
+        sb.first_tokens(&vec![0.0; 8]);
+        for _ in 0..10 {
+            if sb.all_finished() {
+                break;
+            }
+            sb.step(&uniform_logits(8, 3));
+        }
+        assert!(sb.all_finished());
+        let comps = sb.into_completions(|_| String::new());
+        assert!(comps.iter().all(|c| c.tokens.len() == 4));
+        assert!(comps.iter().all(|c| !c.finished_by_stop));
+    }
+
+    #[test]
+    fn samplers_diverge_with_temperature() {
+        let mut sb = SamplerBatch::new(16, SamplingParams { max_tokens: 1, stop_token: None, ..params(16) }, 32, 7);
+        let toks = sb.first_tokens(&vec![0.0; 32]);
+        let distinct: std::collections::BTreeSet<_> = toks.iter().collect();
+        assert!(distinct.len() > 3, "uniform sampling should diverge: {toks:?}");
+    }
+
+    #[test]
+    fn greedy_samplers_agree() {
+        let mut row = vec![0.0f32; 8];
+        row[5] = 10.0;
+        let p = SamplingParams { temperature: 0.0, max_tokens: 1, stop_token: None, ..params(4) };
+        let mut sb = SamplerBatch::new(4, p, 8, 9);
+        let toks = sb.first_tokens(&row);
+        assert_eq!(toks, vec![5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn logp_accumulates() {
+        let p = SamplingParams { temperature: 1.0, top_p: 1.0, max_tokens: 2, stop_token: None, seed: 3, n: 1 };
+        let mut sb = SamplerBatch::new(1, p, 2, 0);
+        sb.first_tokens(&[0.0, 0.0]);
+        sb.step(&[0.0, 0.0]);
+        let c = &sb.into_completions(|_| String::new())[0];
+        // two uniform draws over 2 tokens: logp = 2 * ln(1/2)
+        assert!((c.sum_logp - 2.0 * (0.5f64).ln()).abs() < 1e-5);
+        assert!((c.mean_logp() - (0.5f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let run = || {
+            let mut sb = SamplerBatch::new(4, params(4), 8, 42);
+            let mut all = sb.first_tokens(&vec![0.0; 8]);
+            all.extend(sb.step(&uniform_logits(8, 4)));
+            all
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,154 @@
+//! Scheduling policy for single-context batch sampling.
+//!
+//! Two decisions per request:
+//!
+//! * **attention mode** — the workload-based switch of paper FAQ 4:
+//!   bifurcated attention splits the GEMM in two, which costs extra kernel
+//!   dispatches at tiny workloads; the scheduler flips to it only when the
+//!   redundant-read volume `(b-1)·m_c` crosses a threshold, so "bifurcated
+//!   attention is guaranteed to provide better latency and efficiency";
+//! * **wave planning** — n samplers are packed into the compiled batch
+//!   buckets (largest-first), so n=48 with buckets ≤32 runs as waves of
+//!   32 + 16 sharing one prefill.
+
+use crate::runtime::models::DecodeMode;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModePolicy {
+    /// FAQ-4 workload switch (default).
+    Auto,
+    Force(DecodeMode),
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: ModePolicy,
+    /// Switch to bifurcated when (b-1)·m_c ≥ this many redundant tokens.
+    pub bifurcation_threshold_tokens: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { policy: ModePolicy::Auto, bifurcation_threshold_tokens: 64 }
+    }
+}
+
+/// One decode wave: `live` samplers in a compiled `bucket`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Wave {
+    pub bucket: usize,
+    pub live: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    buckets: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig, mut buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty(), "no batch buckets compiled");
+        buckets.sort_unstable();
+        Scheduler { cfg, buckets }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// FAQ-4 switch: redundant context reads are (b-1)·m_c tokens per
+    /// step; below threshold the split's extra dispatches aren't worth it.
+    pub fn pick_mode(&self, b: usize, m_c_len: usize) -> DecodeMode {
+        match self.cfg.policy {
+            ModePolicy::Force(m) => m,
+            ModePolicy::Auto => {
+                if b.saturating_sub(1) * m_c_len >= self.cfg.bifurcation_threshold_tokens {
+                    DecodeMode::Bifurcated
+                } else {
+                    DecodeMode::Fused
+                }
+            }
+        }
+    }
+
+    /// Pack `n` samplers into waves. Greedy largest-bucket-first, then the
+    /// tail goes into the smallest bucket that fits it.
+    pub fn plan_waves(&self, n: usize) -> Vec<Wave> {
+        assert!(n > 0);
+        let max = self.max_bucket();
+        let mut waves = Vec::new();
+        let mut remaining = n;
+        while remaining >= max {
+            waves.push(Wave { bucket: max, live: max });
+            remaining -= max;
+        }
+        if remaining > 0 {
+            let bucket = *self
+                .buckets
+                .iter()
+                .find(|&&b| b >= remaining)
+                .expect("smallest bucket >= 1 must exist");
+            waves.push(Wave { bucket, live: remaining });
+        }
+        waves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig::default(), vec![1, 2, 4, 8, 16, 32])
+    }
+
+    #[test]
+    fn waves_cover_n_exactly() {
+        let s = sched();
+        for n in 1..=100 {
+            let waves = s.plan_waves(n);
+            let live: usize = waves.iter().map(|w| w.live).sum();
+            assert_eq!(live, n, "n={n} waves={waves:?}");
+            for w in &waves {
+                assert!(w.live <= w.bucket);
+                assert!(s.buckets.contains(&w.bucket));
+            }
+        }
+    }
+
+    #[test]
+    fn wave_padding_is_minimal_for_tail() {
+        let s = sched();
+        let waves = s.plan_waves(48);
+        assert_eq!(waves, vec![Wave { bucket: 32, live: 32 }, Wave { bucket: 16, live: 16 }]);
+        let waves = s.plan_waves(35);
+        assert_eq!(waves, vec![Wave { bucket: 32, live: 32 }, Wave { bucket: 4, live: 3 }]);
+    }
+
+    #[test]
+    fn mode_switch_follows_workload() {
+        let s = sched();
+        // tiny workload: fused (FAQ 4 small-workload caveat)
+        assert_eq!(s.pick_mode(1, 1000), DecodeMode::Fused);
+        assert_eq!(s.pick_mode(2, 10), DecodeMode::Fused);
+        // real parallel sampling: bifurcated
+        assert_eq!(s.pick_mode(2, 96), DecodeMode::Bifurcated);
+        assert_eq!(s.pick_mode(32, 96), DecodeMode::Bifurcated);
+    }
+
+    #[test]
+    fn forced_modes_override() {
+        let mut cfg = SchedulerConfig::default();
+        cfg.policy = ModePolicy::Force(DecodeMode::Fused);
+        let s = Scheduler::new(cfg, vec![1, 4]);
+        assert_eq!(s.pick_mode(64, 4096), DecodeMode::Fused);
+    }
+
+    #[test]
+    fn threshold_boundary() {
+        let s = sched(); // threshold 64
+        assert_eq!(s.pick_mode(2, 63), DecodeMode::Fused); // 63 < 64
+        assert_eq!(s.pick_mode(2, 64), DecodeMode::Bifurcated); // 64 >= 64
+    }
+}

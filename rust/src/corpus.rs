@@ -1,0 +1,174 @@
+//! Rust port of the synthetic arithmetic grammar (`python/compile/corpus.py`).
+//!
+//! Same token ids (pinned by the manifest tokenizer table and by tests on
+//! both sides), same expression distribution — the scaling-law trainer
+//! generates training batches here, and the eval harness generates
+//! checkable tasks here. Distribution-equivalent, not bitwise-identical,
+//! to the python generator (different PRNG).
+
+use crate::util::prng::Pcg;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEMI: i32 = 14;
+pub const EQ: i32 = 13;
+pub const PLUS: i32 = 12;
+pub const VOCAB_SIZE: usize = 16;
+pub const MAX_OPERAND: u32 = 19;
+
+pub fn encode_char(c: char) -> Option<i32> {
+    match c {
+        '0'..='9' => Some(c as i32 - '0' as i32 + 2),
+        '+' => Some(PLUS),
+        '=' => Some(EQ),
+        ';' => Some(SEMI),
+        _ => None,
+    }
+}
+
+pub fn decode_id(id: i32) -> Option<char> {
+    match id {
+        2..=11 => Some((b'0' + (id - 2) as u8) as char),
+        12 => Some('+'),
+        13 => Some('='),
+        14 => Some(';'),
+        _ => None,
+    }
+}
+
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars().filter_map(encode_char).collect()
+}
+
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter().filter_map(|&i| decode_id(i)).collect()
+}
+
+pub fn expression(a: u32, b: u32) -> String {
+    format!("{a}+{b}={};", a + b)
+}
+
+pub fn sample_expression(rng: &mut Pcg) -> String {
+    let a = rng.below(MAX_OPERAND as usize + 1) as u32;
+    let b = rng.below(MAX_OPERAND as usize + 1) as u32;
+    expression(a, b)
+}
+
+/// Endless concatenation of random expressions, truncated to `n` tokens.
+pub fn token_stream(rng: &mut Pcg, n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n + 12);
+    while out.len() < n {
+        out.extend(encode(&sample_expression(rng)));
+    }
+    out.truncate(n);
+    out
+}
+
+/// `[batch * seq_len]` row-major training windows, each starting with BOS —
+/// the exact input layout of the AOT `train_step` artifacts.
+pub fn training_batch(rng: &mut Pcg, batch: usize, seq_len: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq_len);
+    for _ in 0..batch {
+        out.push(BOS);
+        out.extend(token_stream(rng, seq_len - 1));
+    }
+    out
+}
+
+/// A checkable task: prompt `shots;a+b=` whose unique answer is `{a+b};`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub a: u32,
+    pub b: u32,
+    pub prompt: String,
+}
+
+impl Task {
+    pub fn answer(&self) -> String {
+        format!("{};", self.a + self.b)
+    }
+
+    /// MBPP-style check: the completion passes iff it begins with the
+    /// correct answer terminated by ';'.
+    pub fn check(&self, completion: &str) -> bool {
+        completion.starts_with(&self.answer())
+    }
+}
+
+pub fn make_task(rng: &mut Pcg, n_shots: usize) -> Task {
+    let a = rng.below(MAX_OPERAND as usize + 1) as u32;
+    let b = rng.below(MAX_OPERAND as usize + 1) as u32;
+    let mut prompt = String::new();
+    for _ in 0..n_shots {
+        prompt.push_str(&sample_expression(rng));
+    }
+    prompt.push_str(&format!("{a}+{b}="));
+    Task { a, b, prompt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_table_matches_python() {
+        // pinned in python/tests/test_corpus.py::test_vocab_ids_stable
+        assert_eq!(encode_char('0'), Some(2));
+        assert_eq!(encode_char('9'), Some(11));
+        assert_eq!(encode_char('+'), Some(12));
+        assert_eq!(encode_char('='), Some(13));
+        assert_eq!(encode_char(';'), Some(14));
+        assert_eq!(encode_char('x'), None);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = "12+7=19;";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn expression_is_checkable() {
+        let t = Task { a: 7, b: 12, prompt: "7+12=".into() };
+        assert!(t.check("19;"));
+        assert!(t.check("19;junk"));
+        assert!(!t.check("18;"));
+        assert!(!t.check("19")); // must be terminated
+    }
+
+    #[test]
+    fn stream_tokens_in_vocab() {
+        let mut rng = Pcg::new(0);
+        let toks = token_stream(&mut rng, 500);
+        assert_eq!(toks.len(), 500);
+        assert!(toks.iter().all(|&t| (2..VOCAB_SIZE as i32).contains(&t)));
+    }
+
+    #[test]
+    fn training_batch_layout() {
+        let mut rng = Pcg::new(1);
+        let b = training_batch(&mut rng, 4, 32);
+        assert_eq!(b.len(), 4 * 32);
+        for row in 0..4 {
+            assert_eq!(b[row * 32], BOS);
+        }
+    }
+
+    #[test]
+    fn tasks_have_valid_operands_and_shots() {
+        let mut rng = Pcg::new(2);
+        for _ in 0..50 {
+            let t = make_task(&mut rng, 3);
+            assert!(t.a <= MAX_OPERAND && t.b <= MAX_OPERAND);
+            assert_eq!(t.prompt.matches(';').count(), 3);
+            assert!(t.prompt.ends_with(&format!("{}+{}=", t.a, t.b)));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = training_batch(&mut Pcg::new(7), 2, 16);
+        let b = training_batch(&mut Pcg::new(7), 2, 16);
+        assert_eq!(a, b);
+    }
+}

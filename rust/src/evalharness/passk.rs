@@ -1,0 +1,77 @@
+//! Unbiased pass@k estimator (Chen et al. 2021, Codex paper) — the metric
+//! of the paper's Fig. 8/10: `pass@k = E[1 - C(n-c, k) / C(n, k)]`,
+//! computed stably as `1 - Π_{i=n-c+1..n} (1 - k/i)`.
+
+/// Probability that at least one of k samples drawn (without replacement)
+/// from n with c correct is correct.
+pub fn pass_at_k(n: usize, c: usize, k: usize) -> f64 {
+    assert!(c <= n, "c={c} > n={n}");
+    assert!(k >= 1);
+    if n == 0 {
+        return 0.0;
+    }
+    if c == 0 {
+        return 0.0;
+    }
+    if n.saturating_sub(c) < k {
+        // fewer incorrect samples than draws: guaranteed hit
+        return 1.0;
+    }
+    let mut prod = 1.0f64;
+    for i in (n - c + 1)..=n {
+        prod *= 1.0 - k as f64 / i as f64;
+    }
+    1.0 - prod
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn binom(n: u128, k: u128) -> u128 {
+        if k > n {
+            return 0;
+        }
+        let mut r: u128 = 1;
+        for i in 0..k {
+            r = r * (n - i) / (i + 1);
+        }
+        r
+    }
+
+    #[test]
+    fn matches_combinatorial_definition() {
+        for n in [5usize, 10, 16] {
+            for c in 0..=n {
+                for k in 1..=n {
+                    let want = 1.0 - binom((n - c) as u128, k as u128) as f64 / binom(n as u128, k as u128) as f64;
+                    let got = pass_at_k(n, c, k);
+                    assert!((got - want).abs() < 1e-9, "n={n} c={c} k={k}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_cases() {
+        assert_eq!(pass_at_k(10, 0, 5), 0.0);
+        assert_eq!(pass_at_k(10, 10, 1), 1.0);
+        assert_eq!(pass_at_k(1, 1, 1), 1.0);
+        assert_eq!(pass_at_k(0, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_k_and_c() {
+        for c in 1..8 {
+            for k in 1..8 {
+                assert!(pass_at_k(8, c, k + 1) >= pass_at_k(8, c, k));
+                assert!(pass_at_k(8, c + 1, k) >= pass_at_k(8, c, k));
+            }
+        }
+    }
+
+    #[test]
+    fn pass_at_1_is_c_over_n() {
+        assert!((pass_at_k(20, 7, 1) - 0.35).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! Paged block allocator (PagedAttention-style substrate, Kwon et al. 2023).
+//!
+//! The paper's Sec. 2 positions bifurcated attention relative to paged KV
+//! management: paging dedups *storage* of the shared prompt; bifurcation
+//! dedups *reads*. This allocator provides the storage half for the
+//! engine's capacity accounting: fixed-size token blocks, a free list, and
+//! copy-free sharing via reference counts.
+
+use std::collections::BTreeMap;
+
+pub type BlockId = usize;
+
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    total: usize,
+    free: Vec<BlockId>,
+    refcounts: BTreeMap<BlockId, usize>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocError {
+    pub requested_blocks: usize,
+    pub free_blocks: usize,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "out of KV blocks: requested {}, free {}", self.requested_blocks, self.free_blocks)
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        BlockAllocator {
+            block_tokens,
+            total: total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            refcounts: BTreeMap::new(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Allocate blocks to cover `tokens` tokens (refcount 1 each).
+    pub fn alloc(&mut self, tokens: usize) -> Result<Vec<BlockId>, AllocError> {
+        let need = self.blocks_for_tokens(tokens);
+        if need > self.free.len() {
+            return Err(AllocError { requested_blocks: need, free_blocks: self.free.len() });
+        }
+        let mut out = Vec::with_capacity(need);
+        for _ in 0..need {
+            let id = self.free.pop().unwrap();
+            self.refcounts.insert(id, 1);
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    /// Share existing blocks (e.g. the prompt prefix across b samplers):
+    /// bumps refcounts, never copies.
+    pub fn share(&mut self, blocks: &[BlockId]) {
+        for id in blocks {
+            let rc = self
+                .refcounts
+                .get_mut(id)
+                .unwrap_or_else(|| panic!("share of unallocated block {id}"));
+            *rc += 1;
+        }
+    }
+
+    /// Drop one reference; the block returns to the free list at zero.
+    pub fn release(&mut self, blocks: &[BlockId]) {
+        for id in blocks {
+            let rc = self
+                .refcounts
+                .get_mut(id)
+                .unwrap_or_else(|| panic!("release of unallocated block {id}"));
+            assert!(*rc > 0, "refcount underflow on block {id}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.refcounts.remove(id);
+                self.free.push(*id);
+            }
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> usize {
+        self.refcounts.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Internal consistency: every block is either free or refcounted,
+    /// never both, never lost. (propcheck target)
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total];
+        for &id in &self.free {
+            if id >= self.total {
+                return Err(format!("free block {id} out of range"));
+            }
+            if seen[id] {
+                return Err(format!("block {id} duplicated in free list"));
+            }
+            seen[id] = true;
+        }
+        for (&id, &rc) in &self.refcounts {
+            if id >= self.total {
+                return Err(format!("allocated block {id} out of range"));
+            }
+            if rc == 0 {
+                return Err(format!("block {id} has zero refcount but is tracked"));
+            }
+            if seen[id] {
+                return Err(format!("block {id} both free and allocated"));
+            }
+            seen[id] = true;
+        }
+        if seen.iter().filter(|&&s| s).count() != self.total {
+            return Err("blocks lost".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = BlockAllocator::new(10, 16);
+        let blocks = a.alloc(33).unwrap(); // ceil(33/16) = 3
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(a.used_blocks(), 3);
+        a.release(&blocks);
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_prevents_early_free() {
+        let mut a = BlockAllocator::new(4, 16);
+        let ctx = a.alloc(16).unwrap();
+        a.share(&ctx); // 2 readers
+        a.release(&ctx);
+        assert_eq!(a.used_blocks(), 1, "still referenced");
+        a.release(&ctx);
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_is_explicit() {
+        let mut a = BlockAllocator::new(2, 16);
+        let _b = a.alloc(32).unwrap();
+        let err = a.alloc(1).unwrap_err();
+        assert_eq!(err.requested_blocks, 1);
+        assert_eq!(err.free_blocks, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of unallocated block")]
+    fn double_release_panics() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc(16).unwrap();
+        a.release(&b);
+        a.release(&b);
+    }
+
+    #[test]
+    fn zero_token_alloc_is_empty() {
+        let mut a = BlockAllocator::new(2, 16);
+        assert!(a.alloc(0).unwrap().is_empty());
+        a.check_invariants().unwrap();
+    }
+}

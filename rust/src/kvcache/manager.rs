@@ -1,0 +1,233 @@
+//! Shared-prefix KV-cache manager.
+//!
+//! Owns the capacity accounting for single-context batch sampling:
+//!
+//! * a **context** registration parks the prompt's K_c/V_c once and hands
+//!   out refcounted leases to samplers — under bifurcated serving there is
+//!   exactly one storage copy regardless of batch size;
+//! * the **fused baseline** is modeled faithfully too: each sampler
+//!   charges its own replica of the context (the engine physically
+//!   materializes that broadcast), so capacity exhausts ~b× earlier —
+//!   reproducing the paper's observation that bifurcation also delays OOM;
+//! * per-sampler decode slots are paged via the block allocator.
+
+use std::collections::BTreeMap;
+
+use super::block::{AllocError, BlockAllocator, BlockId};
+use crate::runtime::models::DecodeMode;
+
+pub type ContextId = u64;
+pub type SeqId = u64;
+
+#[derive(Debug)]
+struct ContextState {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+    leases: usize,
+    mode: DecodeMode,
+}
+
+#[derive(Debug)]
+struct SeqState {
+    blocks: Vec<BlockId>,
+    ctx: ContextId,
+}
+
+#[derive(Debug)]
+pub struct KvManager {
+    alloc: BlockAllocator,
+    kv_bytes_per_token: usize,
+    contexts: BTreeMap<ContextId, ContextState>,
+    seqs: BTreeMap<SeqId, SeqState>,
+    next_ctx: ContextId,
+    next_seq: SeqId,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvStats {
+    pub contexts: usize,
+    pub sequences: usize,
+    pub used_blocks: usize,
+    pub free_blocks: usize,
+    pub used_bytes: usize,
+}
+
+impl KvManager {
+    /// `capacity_bytes` of KV storage, paged into `block_tokens`-token
+    /// blocks of `kv_bytes_per_token` each.
+    pub fn new(capacity_bytes: usize, kv_bytes_per_token: usize, block_tokens: usize) -> Self {
+        let block_bytes = kv_bytes_per_token * block_tokens;
+        let total_blocks = capacity_bytes / block_bytes.max(1);
+        KvManager {
+            alloc: BlockAllocator::new(total_blocks, block_tokens),
+            kv_bytes_per_token,
+            contexts: BTreeMap::new(),
+            seqs: BTreeMap::new(),
+            next_ctx: 1,
+            next_seq: 1,
+        }
+    }
+
+    /// Register a prefilled context of `tokens` tokens. Under the fused
+    /// baseline, `b_planned` replicas are charged up front (the broadcast
+    /// the engine will materialize); under bifurcated, exactly one copy.
+    pub fn register_context(
+        &mut self,
+        tokens: usize,
+        mode: DecodeMode,
+        b_planned: usize,
+    ) -> Result<ContextId, AllocError> {
+        let copies = match mode {
+            DecodeMode::Bifurcated => 1,
+            DecodeMode::Fused => b_planned.max(1),
+        };
+        let blocks = self.alloc.alloc(tokens * copies)?;
+        let id = self.next_ctx;
+        self.next_ctx += 1;
+        self.contexts.insert(id, ContextState { blocks, tokens, leases: 0, mode });
+        Ok(id)
+    }
+
+    /// Lease the context for one sampler and allocate its decode slot.
+    pub fn start_sequence(&mut self, ctx: ContextId, m_d_cap: usize) -> Result<SeqId, AllocError> {
+        let blocks = self.alloc.alloc(m_d_cap)?;
+        let state = self.contexts.get_mut(&ctx).expect("unknown context");
+        state.leases += 1;
+        let id = self.next_seq;
+        self.next_seq += 1;
+        self.seqs.insert(id, SeqState { blocks, ctx });
+        Ok(id)
+    }
+
+    /// Finish a sampler: frees its decode slot and drops its context lease.
+    pub fn finish_sequence(&mut self, seq: SeqId) {
+        let state = self.seqs.remove(&seq).expect("unknown sequence");
+        self.alloc.release(&state.blocks);
+        let ctx = self.contexts.get_mut(&state.ctx).expect("context vanished");
+        assert!(ctx.leases > 0, "lease underflow");
+        ctx.leases -= 1;
+    }
+
+    /// Release a context registration. Panics if samplers still hold it —
+    /// the scheduler must drain first (surface bugs, don't leak).
+    pub fn release_context(&mut self, ctx: ContextId) {
+        let state = self.contexts.remove(&ctx).expect("unknown context");
+        assert_eq!(state.leases, 0, "context released with {} live leases", state.leases);
+        self.alloc.release(&state.blocks);
+    }
+
+    pub fn context_mode(&self, ctx: ContextId) -> DecodeMode {
+        self.contexts[&ctx].mode
+    }
+
+    pub fn context_tokens(&self, ctx: ContextId) -> usize {
+        self.contexts[&ctx].tokens
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            contexts: self.contexts.len(),
+            sequences: self.seqs.len(),
+            used_blocks: self.alloc.used_blocks(),
+            free_blocks: self.alloc.free_blocks(),
+            used_bytes: self.alloc.used_blocks() * self.alloc.block_tokens() * self.kv_bytes_per_token,
+        }
+    }
+
+    /// Whole-manager invariant (propcheck target): block accounting is
+    /// exact and leases match live sequences.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.alloc.check_invariants()?;
+        let mut expected_used = 0usize;
+        let mut leases: BTreeMap<ContextId, usize> = BTreeMap::new();
+        for st in self.contexts.values() {
+            expected_used += st.blocks.len();
+        }
+        for st in self.seqs.values() {
+            expected_used += st.blocks.len();
+            *leases.entry(st.ctx).or_insert(0) += 1;
+            if !self.contexts.contains_key(&st.ctx) {
+                return Err("sequence references dead context".into());
+            }
+        }
+        for (id, st) in &self.contexts {
+            if leases.get(id).copied().unwrap_or(0) != st.leases {
+                return Err(format!("context {id} lease count mismatch"));
+            }
+        }
+        if expected_used != self.alloc.used_blocks() {
+            return Err(format!(
+                "used blocks {} != sum of owners {}",
+                self.alloc.used_blocks(),
+                expected_used
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvManager {
+        // 1 MiB of KV, 64 B/token, 16-token blocks -> 1024 blocks
+        KvManager::new(1 << 20, 64, 16)
+    }
+
+    #[test]
+    fn bifurcated_context_is_single_copy() {
+        let mut m = mgr();
+        let ctx = m.register_context(96, DecodeMode::Bifurcated, 32).unwrap();
+        let used_one = m.stats().used_blocks;
+        // 32 samplers lease it without additional context storage
+        let seqs: Vec<_> = (0..32).map(|_| m.start_sequence(ctx, 32).unwrap()).collect();
+        let per_seq = 32usize.div_ceil(16);
+        assert_eq!(m.stats().used_blocks, used_one + 32 * per_seq);
+        for s in seqs {
+            m.finish_sequence(s);
+        }
+        m.release_context(ctx);
+        assert_eq!(m.stats().used_blocks, 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fused_context_charges_b_replicas() {
+        let mut m1 = mgr();
+        let c1 = m1.register_context(96, DecodeMode::Bifurcated, 8).unwrap();
+        let one = m1.stats().used_blocks;
+        let mut m2 = mgr();
+        let _c2 = m2.register_context(96, DecodeMode::Fused, 8).unwrap();
+        assert_eq!(m2.stats().used_blocks, 8 * one);
+        m1.release_context(c1);
+    }
+
+    #[test]
+    fn fused_ooms_much_earlier() {
+        // capacity for ~64 context copies of 96 tokens
+        let mut bif = KvManager::new(64 * 96 * 64, 64, 16);
+        let mut fus = KvManager::new(64 * 96 * 64, 64, 16);
+        assert!(bif.register_context(96, DecodeMode::Bifurcated, 128).is_ok());
+        assert!(fus.register_context(96, DecodeMode::Fused, 128).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "live leases")]
+    fn cannot_release_leased_context() {
+        let mut m = mgr();
+        let ctx = m.register_context(16, DecodeMode::Bifurcated, 1).unwrap();
+        let _s = m.start_sequence(ctx, 16).unwrap();
+        m.release_context(ctx);
+    }
+
+    #[test]
+    fn stats_bytes_track_usage() {
+        let mut m = mgr();
+        let ctx = m.register_context(32, DecodeMode::Bifurcated, 1).unwrap();
+        let st = m.stats();
+        assert_eq!(st.used_bytes, st.used_blocks * 16 * 64);
+        assert_eq!(st.contexts, 1);
+        m.release_context(ctx);
+    }
+}

@@ -1,0 +1,7 @@
+//! KV-cache substrates: paged block allocator + shared-prefix manager.
+
+pub mod block;
+pub mod manager;
+
+pub use block::{AllocError, BlockAllocator, BlockId};
+pub use manager::{ContextId, KvManager, KvStats, SeqId};

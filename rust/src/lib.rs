@@ -1,0 +1,20 @@
+//! `bifurcated-attn` — reproduction of "Bifurcated Attention: Accelerating
+//! Massively Parallel Decoding with Shared Prefixes in LLMs" (ICML 2024).
+//!
+//! Three-layer stack: Pallas kernels (L1) and a JAX multi-group transformer
+//! (L2) are AOT-lowered to HLO text at build time; this crate (L3) is the
+//! serving coordinator — it loads the artifacts via PJRT, schedules
+//! single-context batch sampling with a shared-prefix KV cache, and hosts
+//! the memory-IO simulator that regenerates the paper's tables and figures.
+
+pub mod attention;
+pub mod bench;
+pub mod coordinator;
+pub mod corpus;
+pub mod evalharness;
+pub mod kvcache;
+pub mod runtime;
+pub mod scaling;
+pub mod server;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,275 @@
+//! `repro` — the leader binary: serving, generation, simulation, and the
+//! paper's experiment drivers, all from the AOT artifacts (python never
+//! runs at request time).
+//!
+//! Subcommands:
+//!   serve          HTTP serving API (single-context batch sampling)
+//!   generate       one-shot generation from the CLI
+//!   simulate       one simulated decode cell (model x hardware x impl)
+//!   tables         regenerate all modeled paper tables to stdout
+//!   train-scaling  rust-driven scaling-law training runs (Fig 3/9)
+//!   eval-passk     pass@n / pass@top3 suite on the real engine (Fig 8)
+//!   info           artifact/manifest summary
+
+use anyhow::{Context, Result};
+
+use bifurcated_attn::attention::{a100_40g, a100_80g, h100, AttnImpl};
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+use bifurcated_attn::scaling::{analyze, train_all, TrainConfig};
+use bifurcated_attn::simulator::sweep;
+use bifurcated_attn::simulator::{TABLE6_COLUMNS, TABLE7_COLUMNS};
+use bifurcated_attn::util::cli::Args;
+use bifurcated_attn::{corpus, info};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("train-scaling") => cmd_train_scaling(&args),
+        Some("eval-passk") => cmd_eval_passk(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — bifurcated attention reproduction (ICML 2024)\n\n\
+         USAGE: repro <subcommand> [options]\n\n\
+         serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
+         generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
+         simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
+         tables         [--hw h100]            (all modeled paper tables)\n\
+         train-scaling  --out artifacts/scaling [--steps 300] [--filter s0]\n\
+         eval-passk     --model pico-mq --tasks 20 --n 8\n\
+         info\n\n\
+         Artifacts root: $ARTIFACTS_DIR or ./artifacts (run `make artifacts`)."
+    );
+}
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(&Manifest::default_root())
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    match args.str_or("mode", "auto").as_str() {
+        "bifurcated" => cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated),
+        "fused" => cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Fused),
+        _ => {}
+    }
+    cfg
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "pico-mq");
+    let addr = args.str_or("addr", "127.0.0.1:8077");
+    let client = bifurcated_attn::server::spawn_engine(
+        Manifest::default_root(),
+        model.clone(),
+        engine_config(args),
+    )?;
+    info!("serving {model} on http://{addr}  (POST /generate, GET /health, GET /metrics)");
+    bifurcated_attn::server::build_server(client)
+        .serve(&addr, args.usize_or("workers", 4), None)
+        .context("http serve")
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let man = manifest()?;
+    let client = cpu_client()?;
+    let model = args.str_or("model", "pico-mq");
+    let rt = ModelRuntime::load(&man, &client, &model)?;
+    let engine = Engine::new(&man, rt, engine_config(args));
+    let req = GenerationRequest {
+        id: 1,
+        prompt: args.str_or("prompt", "7+8="),
+        params: SamplingParams {
+            n: args.usize_or("n", 8),
+            temperature: args.f64_or("temperature", 0.8) as f32,
+            top_p: args.f64_or("top-p", 0.95) as f32,
+            max_tokens: args.usize_or("max-tokens", 8),
+            stop_token: Some(corpus::SEMI),
+            seed: args.usize_or("seed", 0) as u64,
+        },
+    };
+    let res = engine.generate(&req)?;
+    println!(
+        "mode={} prefill={:.1}ms decode={:.1}ms ({} steps, {} waves)",
+        res.mode_used,
+        res.timing.prefill_ms,
+        res.timing.decode_ms,
+        res.timing.decode_steps,
+        res.timing.waves
+    );
+    for (i, c) in res.completions.iter().enumerate() {
+        println!("  [{i:2}] {:12} mean_logp={:+.3}", c.text, c.mean_logp());
+    }
+    let top = bifurcated_attn::coordinator::rerank_top_k(&res.completions, 3);
+    println!("top-3 by mean log-p: {:?}", top.iter().map(|c| c.text.as_str()).collect::<Vec<_>>());
+    Ok(())
+}
+
+fn hw_by_name(name: &str) -> bifurcated_attn::attention::Hardware {
+    match name {
+        "a100" | "a100-40g" => a100_40g(),
+        "a100-80g" => a100_80g(),
+        _ => h100(),
+    }
+}
+
+fn impl_by_name(name: &str) -> AttnImpl {
+    match name {
+        "sdpa" => AttnImpl::SdpaContiguous,
+        "sdpa-nc" => AttnImpl::SdpaNc,
+        "flash2" => AttnImpl::Flash2,
+        "flash2-nc" => AttnImpl::Flash2Nc,
+        _ => AttnImpl::Bifurcated,
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let hw = hw_by_name(&args.str_or("hw", "h100"));
+    let model = bifurcated_attn::attention::paper_7b_mha();
+    let imp = impl_by_name(&args.str_or("impl", "bifurcated"));
+    let compiled = args.has_flag("compiled");
+    let b = args.usize_or("bs", 16);
+    let ctx = args.usize_or("ctx", 16384);
+    let steps = args.usize_or("steps", 64);
+    if bifurcated_attn::attention::is_oom(&model, &hw, imp, b, ctx, steps) {
+        println!("{} b={b} ctx={ctx}: OOM (modeled, {})", imp.label(), hw.name);
+        return Ok(());
+    }
+    let lat = bifurcated_attn::attention::decode_latency(&model, &hw, imp, compiled, b, ctx, steps / 2);
+    println!(
+        "{} b={b} ctx={ctx} compiled={compiled} on {}: {:.2} ms/token (io {:.2} compute {:.2} overhead {:.2})",
+        imp.label(),
+        hw.name,
+        lat.ms(),
+        lat.io_seconds * 1e3,
+        lat.compute_seconds * 1e3,
+        lat.overhead_seconds * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let hw = hw_by_name(&args.str_or("hw", "h100"));
+    let batches: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    sweep::paper_latency_table(
+        "Table 6 — 7B MHA per-token latency (ms)",
+        &sweep::table6_model(), &hw, &[8192, 16384, 32640], TABLE6_COLUMNS, &batches,
+    )
+    .print();
+    sweep::paper_latency_table(
+        "Table 7 — 7B GQA-8 per-token latency (ms)",
+        &sweep::table7_model(), &hw, &[8192, 16384, 32640], TABLE7_COLUMNS, &batches,
+    )
+    .print();
+    sweep::fig5_series(&hw, &[500, 1000, 2500, 5000, 7500, 10000]).print();
+    sweep::fig6_series(&sweep::table6_model(), &hw, &[1, 8, 32, 128], &[1000, 2500, 5000, 7500, 10000]).print();
+    sweep::fig7_series(&hw, 8192, &[1, 4, 16, 64, 256, 1024], 256).print();
+    println!(
+        "\nAppendix D.1 decode/prefill per-token cost ratio @10k ctx: {:.0}x",
+        sweep::decode_vs_prefill_ratio(&hw, 10_000)
+    );
+    Ok(())
+}
+
+fn cmd_train_scaling(args: &Args) -> Result<()> {
+    let man = manifest()?;
+    let client = cpu_client()?;
+    let cfg = TrainConfig {
+        steps: args.usize_or("steps", 300),
+        eval_every: args.usize_or("eval-every", 50),
+        eval_batches: args.usize_or("eval-batches", 4),
+        seed: args.usize_or("seed", 0) as u64,
+    };
+    let filter = args.get("filter");
+    let runs = train_all(&man, &client, &cfg, filter)?;
+    let out = std::path::PathBuf::from(args.str_or("out", "artifacts/scaling"));
+    bifurcated_attn::scaling::save_runs(&out.join("runs.json"), &runs)?;
+    info!("wrote {} runs to {}/runs.json", runs.len(), out.display());
+    let analysis = analyze(&runs);
+    println!("\nFig 3 analysis (loss = a + b·ln N):");
+    for (kind, fit) in [
+        ("multi_head", &analysis.fit_mh),
+        ("multi_group", &analysis.fit_mg),
+        ("multi_query", &analysis.fit_mq),
+    ] {
+        match fit {
+            Some(f) => println!("  {kind:12} a={:+.3} b={:+.4} ({} sizes)", f.a, f.b, f.n_points),
+            None => println!("  {kind:12} (not enough runs)"),
+        }
+    }
+    println!(
+        "  size compensation F(MQ)≈{:.3}  F(MG)≈{:.3}  (paper: 1.104, <1.1)",
+        analysis.f_mq, analysis.f_mg
+    );
+    Ok(())
+}
+
+fn cmd_eval_passk(args: &Args) -> Result<()> {
+    let man = manifest()?;
+    let client = cpu_client()?;
+    let model = args.str_or("model", "pico-mq");
+    let rt = ModelRuntime::load(&man, &client, &model)?;
+    let engine = Engine::new(&man, rt, engine_config(args));
+    let cfg = SuiteConfig {
+        n_tasks: args.usize_or("tasks", 20),
+        n_samples: args.usize_or("n", 8),
+        temperature: args.f64_or("temperature", 0.8) as f32,
+        ..Default::default()
+    };
+    let res = run_suite(&engine, &cfg)?;
+    println!(
+        "{model} ({}): {} tasks x {} samples, mean latency {:.1} ms (prefill {:.1}, {:.2}/step)",
+        res.mode_used, res.n_tasks, res.n_samples, res.mean_latency_ms, res.mean_prefill_ms, res.mean_per_step_ms
+    );
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        if k <= res.n_samples {
+            println!("  pass@{k:<3} = {:.3}", res.pass_at[k - 1]);
+        }
+    }
+    println!("  pass@top3 (mean-logp rerank) = {:.3}", res.pass_top3);
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let man = manifest()?;
+    println!("artifacts: {}", man.root.display());
+    println!("batch buckets: {:?}", man.batch_buckets);
+    println!("\nserving models:");
+    for e in &man.serving {
+        println!(
+            "  {:8} g={} l={} d={} params={:>7}  val_loss={:.3} greedy_acc={:.2}",
+            e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.param_count, e.val_loss, e.greedy_acc
+        );
+    }
+    println!("\nscaling models:");
+    for e in &man.scaling {
+        println!(
+            "  {:16} g={} l={} d={} ffn={}d params={:>7}",
+            e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.ffn_mult, e.cfg.param_count
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,306 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Everything the serving path needs is in
+//! `artifacts/manifest.json` — model configs, parameter layouts, HLO file
+//! paths per (entry, mode, batch-bucket), and the tokenizer table.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d: usize,
+    pub h: usize,
+    pub g: usize,
+    pub k: usize,
+    pub p: usize,
+    pub l: usize,
+    pub vocab: usize,
+    pub ffn_mult: usize,
+    pub m_c_max: usize,
+    pub m_d_max: usize,
+    pub m_max: usize,
+    pub seq_len: usize,
+    pub param_count: usize,
+    pub attention_kind: String,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: j.str_of("name"),
+            d: j.usize_of("d"),
+            h: j.usize_of("h"),
+            g: j.usize_of("g"),
+            k: j.usize_of("k"),
+            p: j.usize_of("p"),
+            l: j.usize_of("l"),
+            vocab: j.usize_of("vocab"),
+            ffn_mult: j.usize_of("ffn_mult"),
+            m_c_max: j.usize_of("m_c_max"),
+            m_d_max: j.usize_of("m_d_max"),
+            m_max: j.usize_of("m_max"),
+            seq_len: j.usize_of("seq_len"),
+            param_count: j.usize_of("param_count"),
+            attention_kind: j.str_of("attention_kind"),
+        })
+    }
+
+    /// KV-cache bytes per sequence position (both K and V, all layers): 2·l·g·k·4.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.l * self.g * self.k * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerInfo {
+    pub pad: i32,
+    pub bos: i32,
+    pub semicolon: i32,
+    pub equals: i32,
+    pub vocab_size: usize,
+    pub max_operand: u32,
+    pub char_to_id: BTreeMap<char, i32>,
+    pub id_to_char: BTreeMap<i32, char>,
+}
+
+impl TokenizerInfo {
+    fn from_json(j: &Json) -> Result<TokenizerInfo> {
+        let mut char_to_id = BTreeMap::new();
+        let mut id_to_char = BTreeMap::new();
+        for (ch, id) in j.req("chars").as_obj().context("tokenizer.chars")? {
+            let c = ch.chars().next().context("empty tokenizer char")?;
+            let id = id.as_i64().context("char id")? as i32;
+            char_to_id.insert(c, id);
+            id_to_char.insert(id, c);
+        }
+        Ok(TokenizerInfo {
+            pad: j.usize_of("pad") as i32,
+            bos: j.usize_of("bos") as i32,
+            semicolon: j.usize_of("semicolon") as i32,
+            equals: j.usize_of("equals") as i32,
+            vocab_size: j.usize_of("vocab_size"),
+            max_operand: j.usize_of("max_operand") as u32,
+            char_to_id,
+            id_to_char,
+        })
+    }
+
+    pub fn encode(&self, s: &str) -> Result<Vec<i32>> {
+        s.chars()
+            .map(|c| {
+                self.char_to_id
+                    .get(&c)
+                    .copied()
+                    .with_context(|| format!("character '{c}' not in vocabulary"))
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter().filter_map(|i| self.id_to_char.get(i)).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactDesc {
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingEntry {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub weights_bin: PathBuf,
+    pub param_spec: Vec<(String, Vec<usize>)>,
+    pub prefill: ArtifactDesc,
+    /// decode[mode][bucket] -> hlo file
+    pub decode: BTreeMap<String, BTreeMap<usize, ArtifactDesc>>,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub greedy_acc: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScalingEntry {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub init_bin: PathBuf,
+    pub param_spec: Vec<(String, Vec<usize>)>,
+    pub train_step: ArtifactDesc,
+    pub eval_loss: ArtifactDesc,
+    pub train_batch: usize,
+    pub n_param_tensors: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub tokenizer: TokenizerInfo,
+    pub batch_buckets: Vec<usize>,
+    pub serving: Vec<ServingEntry>,
+    pub scaling: Vec<ScalingEntry>,
+}
+
+fn parse_spec(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    j.as_arr()
+        .context("param_spec not an array")?
+        .iter()
+        .map(|e| {
+            let name = e.idx(0).and_then(|v| v.as_str()).context("spec name")?;
+            let shape = e
+                .idx(1)
+                .and_then(|v| v.as_arr())
+                .context("spec shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((name.to_string(), shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        if !path.exists() {
+            bail!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let doc = crate::util::json::parse_file(&path)?;
+        if doc.usize_of("version") != 1 {
+            bail!("unsupported manifest version");
+        }
+        let tokenizer = TokenizerInfo::from_json(doc.req("tokenizer"))?;
+        let batch_buckets = doc
+            .req("batch_buckets")
+            .as_arr()
+            .context("batch_buckets")?
+            .iter()
+            .map(|b| b.as_usize().context("bucket"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut serving = Vec::new();
+        for e in doc.req("serving").as_arr().context("serving")? {
+            let arts = e.req("artifacts");
+            let mut decode = BTreeMap::new();
+            for (mode, byb) in arts.req("decode").as_obj().context("decode")? {
+                let mut m = BTreeMap::new();
+                for (b, desc) in byb.as_obj().context("decode bucket map")? {
+                    m.insert(
+                        b.parse::<usize>().context("bucket key")?,
+                        ArtifactDesc { file: root.join(desc.str_of("file")) },
+                    );
+                }
+                decode.insert(mode.clone(), m);
+            }
+            let ti = e.req("train_info");
+            serving.push(ServingEntry {
+                name: e.str_of("name"),
+                cfg: ModelCfg::from_json(e.req("config"))?,
+                weights_bin: root.join(e.str_of("weights_bin")),
+                param_spec: parse_spec(e.req("param_spec"))?,
+                prefill: ArtifactDesc { file: root.join(arts.req("prefill").str_of("file")) },
+                decode,
+                train_loss: ti.f64_of("train_loss"),
+                val_loss: ti.f64_of("val_loss"),
+                greedy_acc: ti.f64_of("greedy_acc"),
+            });
+        }
+
+        let mut scaling = Vec::new();
+        for e in doc.req("scaling").as_arr().context("scaling")? {
+            scaling.push(ScalingEntry {
+                name: e.str_of("name"),
+                cfg: ModelCfg::from_json(e.req("config"))?,
+                init_bin: root.join(e.str_of("init_bin")),
+                param_spec: parse_spec(e.req("param_spec"))?,
+                train_step: ArtifactDesc { file: root.join(e.req("train_step").str_of("file")) },
+                eval_loss: ArtifactDesc { file: root.join(e.req("eval_loss").str_of("file")) },
+                train_batch: e.usize_of("train_batch"),
+                n_param_tensors: e.usize_of("n_param_tensors"),
+            });
+        }
+
+        Ok(Manifest { root: root.to_path_buf(), tokenizer, batch_buckets, serving, scaling })
+    }
+
+    pub fn serving_entry(&self, name: &str) -> Result<&ServingEntry> {
+        self.serving
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                let names: Vec<_> = self.serving.iter().map(|e| e.name.as_str()).collect();
+                format!("unknown serving model '{name}' (have: {names:?})")
+            })
+    }
+
+    pub fn scaling_entry(&self, name: &str) -> Result<&ScalingEntry> {
+        self.scaling
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("unknown scaling model '{name}'"))
+    }
+
+    /// Default artifacts root: $ARTIFACTS_DIR or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Pick the smallest compiled bucket that fits `b` samplers.
+pub fn select_bucket(buckets: &[usize], b: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&x| x >= b).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [1, 2, 4, 8, 16, 32];
+        assert_eq!(select_bucket(&buckets, 1), Some(1));
+        assert_eq!(select_bucket(&buckets, 3), Some(4));
+        assert_eq!(select_bucket(&buckets, 8), Some(8));
+        assert_eq!(select_bucket(&buckets, 17), Some(32));
+        assert_eq!(select_bucket(&buckets, 33), None);
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let cfg = ModelCfg {
+            name: "t".into(), d: 64, h: 8, g: 2, k: 8, p: 4, l: 3, vocab: 16,
+            ffn_mult: 4, m_c_max: 96, m_d_max: 32, m_max: 128, seq_len: 64,
+            param_count: 0, attention_kind: "multi_group".into(),
+        };
+        // 2 (K+V) * 3 layers * 2 groups * 8 head-dim * 4 bytes
+        assert_eq!(cfg.kv_bytes_per_token(), 384);
+    }
+
+    #[test]
+    fn tokenizer_from_json_roundtrip() {
+        let j = crate::util::json::parse(
+            r#"{"pad":0,"bos":1,"semicolon":14,"equals":13,"vocab_size":16,
+                "max_operand":19,
+                "chars":{"0":2,"1":3,"2":4,"3":5,"4":6,"5":7,"6":8,"7":9,
+                          "8":10,"9":11,"+":12,"=":13,";":14}}"#,
+        )
+        .unwrap();
+        let t = TokenizerInfo::from_json(&j).unwrap();
+        let ids = t.encode("12+7=19;").unwrap();
+        assert_eq!(t.decode(&ids), "12+7=19;");
+        assert!(t.encode("x").is_err());
+    }
+
+    // Full manifest loading is covered by tests/integration_runtime.rs
+    // against the real artifacts directory.
+}

@@ -1,0 +1,15 @@
+//! Runtime: PJRT client, artifact manifest, executables, tensors.
+//!
+//! `compile_hlo` loads `artifacts/hlo/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), `ModelRuntime` drives prefill/decode with
+//! device-resident weights. Python is never on this path.
+
+pub mod client;
+pub mod manifest;
+pub mod models;
+pub mod tensor;
+
+pub use client::{compile_hlo, cpu_client, run_buffers, run_tensors, upload};
+pub use manifest::{Manifest, ModelCfg, ServingEntry, TokenizerInfo};
+pub use models::{ContextHandle, DecodeMode, DecodeOut, ModelRuntime, PrefillOut};
+pub use tensor::HostTensor;

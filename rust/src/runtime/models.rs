@@ -1,0 +1,253 @@
+//! Per-variant model runtime: weights resident on device, executables
+//! memoized per (entry, mode, bucket), prefill/decode entry points.
+//!
+//! This is the boundary the coordinator drives. Python never appears here:
+//! the HLO artifacts are self-contained computations and the weights are a
+//! flat f32 bin.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::client::{compile_hlo, run_buffers, upload};
+use super::manifest::{select_bucket, Manifest, ModelCfg, ServingEntry};
+use super::tensor::{load_weights_bin, HostTensor};
+
+/// Attention implementation used for the decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DecodeMode {
+    /// Paper Eq. 3–4: shared context KV, loaded once.
+    Bifurcated,
+    /// Baseline: context KV replicated per batch row.
+    Fused,
+}
+
+impl DecodeMode {
+    pub fn key(&self) -> &'static str {
+        match self {
+            DecodeMode::Bifurcated => "bifurcated",
+            DecodeMode::Fused => "fused",
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+pub struct PrefillOut {
+    /// Next-token logits at the last valid prompt position. [vocab]
+    pub logits: Vec<f32>,
+    /// Shared context caches, [l, g, m_c_max, k].
+    pub kc: HostTensor,
+    pub vc: HostTensor,
+}
+
+pub struct DecodeOut {
+    /// [bucket, vocab] — rows beyond the live batch are padding.
+    pub logits: HostTensor,
+    pub kd: HostTensor,
+    pub vd: HostTensor,
+}
+
+/// Device-resident context KV for one request group (uploaded once after
+/// prefill; reused every decode step — this sharing is what bifurcated
+/// attention exploits).
+pub struct ContextHandle {
+    pub kc: xla::PjRtBuffer,
+    pub vc: xla::PjRtBuffer,
+    pub m_c_len: usize,
+    pub bytes: usize,
+}
+
+pub struct ModelRuntime {
+    pub cfg: ModelCfg,
+    pub entry: ServingEntry,
+    pub buckets: Vec<usize>,
+    client: xla::PjRtClient,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    prefill_exe: RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    decode_exes: RefCell<BTreeMap<(DecodeMode, usize), Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative host→device bytes moved by decode-step uploads (metrics).
+    pub upload_bytes: std::cell::Cell<usize>,
+}
+
+impl ModelRuntime {
+    pub fn load(manifest: &Manifest, client: &xla::PjRtClient, name: &str) -> Result<ModelRuntime> {
+        let entry = manifest.serving_entry(name)?.clone();
+        let weights = load_weights_bin(&entry.weights_bin, &entry.param_spec)?;
+        let weight_bufs = weights
+            .iter()
+            .map(|t| upload(client, t))
+            .collect::<Result<Vec<_>>>()
+            .context("uploading weights")?;
+        crate::info!(
+            "loaded {} ({} params, g={}, {} weight tensors resident)",
+            entry.name,
+            entry.cfg.param_count,
+            entry.cfg.g,
+            weight_bufs.len()
+        );
+        Ok(ModelRuntime {
+            cfg: entry.cfg.clone(),
+            buckets: manifest.batch_buckets.clone(),
+            entry,
+            client: client.clone(),
+            weight_bufs,
+            prefill_exe: RefCell::new(None),
+            decode_exes: RefCell::new(BTreeMap::new()),
+            upload_bytes: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Smallest compiled batch bucket that fits `b` samplers.
+    pub fn bucket_for(&self, b: usize) -> Result<usize> {
+        select_bucket(&self.buckets, b)
+            .with_context(|| format!("batch {b} exceeds the largest compiled bucket {:?}", self.buckets.last()))
+    }
+
+    fn prefill_exe(&self) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if self.prefill_exe.borrow().is_none() {
+            let exe = compile_hlo(&self.client, &self.entry.prefill.file)?;
+            *self.prefill_exe.borrow_mut() = Some(Rc::new(exe));
+        }
+        Ok(self.prefill_exe.borrow().as_ref().unwrap().clone())
+    }
+
+    pub fn decode_exe(&self, mode: DecodeMode, bucket: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.decode_exes.borrow().get(&(mode, bucket)) {
+            return Ok(exe.clone());
+        }
+        let desc = self
+            .entry
+            .decode
+            .get(mode.key())
+            .and_then(|m| m.get(&bucket))
+            .with_context(|| format!("no decode artifact for mode={mode} bucket={bucket}"))?;
+        let exe = Rc::new(compile_hlo(&self.client, &desc.file)?);
+        self.decode_exes.borrow_mut().insert((mode, bucket), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile all executables the engine will need (avoids first-hit
+    /// compile latency inside measured regions).
+    pub fn warm(&self, modes: &[DecodeMode], buckets: &[usize]) -> Result<()> {
+        self.prefill_exe()?;
+        for &m in modes {
+            for &b in buckets {
+                self.decode_exe(m, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Context encoding over a (BOS-prefixed, PAD-padded) prompt.
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let mc = self.cfg.m_c_max;
+        anyhow::ensure!(tokens.len() <= mc, "prompt {} > m_c_max {mc}", tokens.len());
+        let len = tokens.len();
+        let mut padded = tokens.to_vec();
+        padded.resize(mc, 0);
+        let toks = HostTensor::from_i32(padded, &[1, mc]);
+        let len_t = HostTensor::scalar_i32(len as i32);
+        let exe = self.prefill_exe()?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let tok_buf = upload(&self.client, &toks)?;
+        let len_buf = upload(&self.client, &len_t)?;
+        inputs.push(&tok_buf);
+        inputs.push(&len_buf);
+        let mut outs = run_buffers(&exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 3, "prefill returned {} outputs", outs.len());
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(PrefillOut { logits: logits.f32s().to_vec(), kc, vc })
+    }
+
+    /// Upload context KV for a request group. For the fused baseline the
+    /// caller passes the *replicated* tensors ([l, b, g, mc, k]); bifurcated
+    /// passes the shared ones ([l, g, mc, k]). The byte count difference is
+    /// the paper's Eq. 5 vs Eq. 6 made visible.
+    pub fn upload_context(&self, kc: &HostTensor, vc: &HostTensor, m_c_len: usize) -> Result<ContextHandle> {
+        let bytes = kc.byte_size() + vc.byte_size();
+        self.upload_bytes.set(self.upload_bytes.get() + bytes);
+        Ok(ContextHandle {
+            kc: upload(&self.client, kc)?,
+            vc: upload(&self.client, vc)?,
+            m_c_len,
+            bytes,
+        })
+    }
+
+    /// One incremental decode step for a group of `tokens.len() <= bucket`
+    /// samplers. `kd`/`vd` are the decode caches ([l, bucket, g, md, k]);
+    /// the updated caches come back in `DecodeOut`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        ctx: &ContextHandle,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        anyhow::ensure!(tokens.len() <= bucket, "batch {} > bucket {bucket}", tokens.len());
+        let exe = self.decode_exe(mode, bucket)?;
+        let mut toks = tokens.to_vec();
+        toks.resize(bucket, 0); // pad rows (proven inert in tests)
+        let tok_t = HostTensor::from_i32(toks, &[bucket]);
+        let pos_t = HostTensor::scalar_i32(d_pos as i32);
+        let len_t = HostTensor::scalar_i32(ctx.m_c_len as i32);
+
+        self.upload_bytes
+            .set(self.upload_bytes.get() + tok_t.byte_size() + 8 + kd.byte_size() + vd.byte_size());
+
+        let tok_buf = upload(&self.client, &tok_t)?;
+        let pos_buf = upload(&self.client, &pos_t)?;
+        let len_buf = upload(&self.client, &len_t)?;
+        let kd_buf = upload(&self.client, kd)?;
+        let vd_buf = upload(&self.client, vd)?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        inputs.extend([&tok_buf, &pos_buf, &len_buf, &ctx.kc, &ctx.vc, &kd_buf, &vd_buf]);
+        let mut outs = run_buffers(&exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 3, "decode returned {} outputs", outs.len());
+        let vd2 = outs.pop().unwrap();
+        let kd2 = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(DecodeOut { logits, kd: kd2, vd: vd2 })
+    }
+
+    /// Fresh zero decode caches for a bucket.
+    pub fn zero_decode_cache(&self, bucket: usize) -> (HostTensor, HostTensor) {
+        let c = &self.cfg;
+        let shape = [c.l, bucket, c.g, c.m_d_max, c.k];
+        (HostTensor::zeros_f32(&shape), HostTensor::zeros_f32(&shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_mode_keys() {
+        assert_eq!(DecodeMode::Bifurcated.key(), "bifurcated");
+        assert_eq!(DecodeMode::Fused.key(), "fused");
+        assert_eq!(format!("{}", DecodeMode::Fused), "fused");
+    }
+
+    // ModelRuntime round-trips require PJRT + artifacts: see
+    // tests/integration_runtime.rs and tests/integration_engine.rs.
+}

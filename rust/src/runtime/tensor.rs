@@ -1,0 +1,242 @@
+//! Host-side tensors + conversions to/from PJRT literals and buffers.
+//!
+//! The engine keeps KV caches and weights as `HostTensor`s (flat row-major
+//! storage) and moves them across the PJRT boundary explicitly — the
+//! per-step upload/download volume is exactly the memory-IO quantity the
+//! paper reasons about, so keeping it visible in the type system makes the
+//! measured benches interpretable.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        // AOT entry points take scalars as shape-[1] arrays.
+        HostTensor::from_i32(vec![v], &[1])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::from_f32(vec![v], &[1])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Broadcast along a new axis at position `axis` with size `n`
+    /// (used to materialize the fused baseline's replicated context KV).
+    pub fn broadcast_at(&self, axis: usize, n: usize) -> HostTensor {
+        assert!(axis <= self.shape.len());
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis..].iter().product();
+        let src = self.f32s();
+        let mut out = Vec::with_capacity(outer * n * inner);
+        for o in 0..outer {
+            let row = &src[o * inner..(o + 1) * inner];
+            for _ in 0..n {
+                out.extend_from_slice(row);
+            }
+        }
+        let mut shape = self.shape.clone();
+        shape.insert(axis, n);
+        HostTensor::from_f32(out, &shape)
+    }
+
+    // ------------------------------------------------------------------
+    // PJRT conversions
+    // ------------------------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Data::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match &self.data {
+            Data::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+            Data::I32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::from_f32(lit.to_vec::<f32>()?, &dims)),
+            xla::ElementType::S32 => Ok(HostTensor::from_i32(lit.to_vec::<i32>()?, &dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// Load a flat `<f4` weights bin and split it per the manifest param spec.
+pub fn load_weights_bin(path: &std::path::Path, spec: &[(String, Vec<usize>)]) -> Result<Vec<HostTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let total: usize = spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "weights bin {} has {} bytes, spec expects {}",
+            path.display(),
+            bytes.len(),
+            total * 4
+        );
+    }
+    let mut floats = vec![0f32; total];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        floats[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    let mut out = Vec::with_capacity(spec.len());
+    let mut off = 0;
+    for (_, shape) in spec {
+        let n: usize = shape.iter().product();
+        out.push(HostTensor::from_f32(floats[off..off + n].to_vec(), shape));
+        off += n;
+    }
+    debug_assert_eq!(off, total);
+    Ok(out)
+}
+
+/// Concatenate tensors back into a flat bin (round-trip for checkpoints).
+pub fn save_weights_bin(path: &std::path::Path, tensors: &[HostTensor]) -> Result<()> {
+    let mut bytes = Vec::new();
+    for t in tensors {
+        for &v in t.f32s() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.byte_size(), 96);
+        assert_eq!(t.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        HostTensor::from_f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn broadcast_at_replicates_rows() {
+        // [2, 2] -> broadcast axis 0 size 3 -> [3, 2, 2] with identical blocks
+        let t = HostTensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = t.broadcast_at(0, 3);
+        assert_eq!(b.shape, vec![3, 2, 2]);
+        assert_eq!(&b.f32s()[0..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&b.f32s()[8..12], &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn broadcast_at_inner_axis() {
+        // [2, 2] -> axis 1 size 2 -> [2, 2, 2]: each row duplicated
+        let t = HostTensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = t.broadcast_at(1, 2);
+        assert_eq!(b.shape, vec![2, 2, 2]);
+        assert_eq!(b.f32s(), &[1.0, 2.0, 1.0, 2.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn weights_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("bifattn-test-weights");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("w.bin");
+        let spec = vec![
+            ("a".to_string(), vec![2usize, 2]),
+            ("b".to_string(), vec![3usize]),
+        ];
+        let tensors = vec![
+            HostTensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]),
+            HostTensor::from_f32(vec![5.0, 6.0, 7.0], &[3]),
+        ];
+        save_weights_bin(&path, &tensors).unwrap();
+        let loaded = load_weights_bin(&path, &spec).unwrap();
+        assert_eq!(loaded, tensors);
+    }
+
+    #[test]
+    fn weights_bin_size_mismatch_errors() {
+        let dir = std::env::temp_dir().join("bifattn-test-weights");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 12]).unwrap();
+        let spec = vec![("a".to_string(), vec![2usize, 2])];
+        assert!(load_weights_bin(&path, &spec).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Scaling-law fits (paper Sec. 5.1): loss-vs-size curves per attention
+//! kind and the multi-query size-compensation factor F.
+//!
+//! The paper fits validation loss against log model size and reads the
+//! *horizontal* distance between the MQ and MH curves: how much bigger an
+//! MQ model must be to match MH capability (F ≈ 1.104 at paper scale).
+
+use super::trainer::TrainRun;
+
+/// Least-squares fit of `loss = a + b·ln(N)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogFit {
+    pub a: f64,
+    pub b: f64,
+    pub n_points: usize,
+}
+
+impl LogFit {
+    pub fn predict(&self, n_params: f64) -> f64 {
+        self.a + self.b * n_params.ln()
+    }
+
+    /// Invert: the model size achieving `loss` under this fit.
+    pub fn size_for_loss(&self, loss: f64) -> f64 {
+        ((loss - self.a) / self.b).exp()
+    }
+}
+
+pub fn fit_loss_vs_size(points: &[(usize, f64)]) -> Option<LogFit> {
+    if points.len() < 2 {
+        return None;
+    }
+    let n = points.len() as f64;
+    let xs: Vec<f64> = points.iter().map(|(p, _)| (*p as f64).ln()).collect();
+    let ys: Vec<f64> = points.iter().map(|(_, l)| *l).collect();
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    Some(LogFit { a, b, n_points: points.len() })
+}
+
+/// Points (param_count, final val loss) for one attention kind,
+/// excluding the 2d-FFN ablation models.
+pub fn points_for_kind(runs: &[TrainRun], kind: &str) -> Vec<(usize, f64)> {
+    runs.iter()
+        .filter(|r| r.attention_kind == kind && r.ffn_mult == 4)
+        .map(|r| (r.param_count, r.final_val_loss))
+        .collect()
+}
+
+/// Size-compensation factor between two fitted curves: the geometric-mean
+/// ratio N_low(L) / N_high(L) over the loss range both curves cover —
+/// "how much bigger must the compressed-attention model be".
+pub fn compensation_factor(high_expr: &LogFit, low_expr: &LogFit, losses: &[f64]) -> f64 {
+    let mut log_sum = 0.0;
+    let mut count = 0usize;
+    for &l in losses {
+        let n_low = low_expr.size_for_loss(l);
+        let n_high = high_expr.size_for_loss(l);
+        if n_low.is_finite() && n_high.is_finite() && n_high > 0.0 {
+            log_sum += (n_low / n_high).ln();
+            count += 1;
+        }
+    }
+    if count == 0 {
+        f64::NAN
+    } else {
+        (log_sum / count as f64).exp()
+    }
+}
+
+/// Loss grid covering the overlap of two point sets (for F evaluation).
+pub fn overlap_losses(a: &[(usize, f64)], b: &[(usize, f64)], n: usize) -> Vec<f64> {
+    let min = |pts: &[(usize, f64)]| pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let max = |pts: &[(usize, f64)]| pts.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let lo = min(a).max(min(b));
+    let hi = max(a).min(max(b));
+    if !(lo.is_finite() && hi.is_finite()) || lo >= hi {
+        // degenerate overlap: evaluate at the midpoint of the union
+        let mid = (min(a).min(min(b)) + max(a).max(max(b))) / 2.0;
+        return vec![mid];
+    }
+    (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1).max(1) as f64).collect()
+}
+
+/// Full Fig. 3 analysis over a set of training runs.
+#[derive(Debug, Clone)]
+pub struct ScalingAnalysis {
+    pub fit_mh: Option<LogFit>,
+    pub fit_mg: Option<LogFit>,
+    pub fit_mq: Option<LogFit>,
+    /// F for multi-query vs multi-head (paper: ≈ 1.104).
+    pub f_mq: f64,
+    /// F for multi-group vs multi-head (paper: < 1.1).
+    pub f_mg: f64,
+}
+
+pub fn analyze(runs: &[TrainRun]) -> ScalingAnalysis {
+    let mh = points_for_kind(runs, "multi_head");
+    let mg = points_for_kind(runs, "multi_group");
+    let mq = points_for_kind(runs, "multi_query");
+    let fit_mh = fit_loss_vs_size(&mh);
+    let fit_mg = fit_loss_vs_size(&mg);
+    let fit_mq = fit_loss_vs_size(&mq);
+    let f_of = |fit: &Option<LogFit>, pts: &[(usize, f64)]| match (&fit_mh, fit) {
+        (Some(h), Some(l)) => compensation_factor(h, l, &overlap_losses(&mh, pts, 9)),
+        _ => f64::NAN,
+    };
+    ScalingAnalysis {
+        f_mq: f_of(&fit_mq, &mq),
+        f_mg: f_of(&fit_mg, &mg),
+        fit_mh,
+        fit_mg,
+        fit_mq,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_synthetic_line() {
+        // loss = 5 - 0.3 ln N
+        let pts: Vec<(usize, f64)> = [1_000usize, 10_000, 100_000, 1_000_000]
+            .iter()
+            .map(|&n| (n, 5.0 - 0.3 * (n as f64).ln()))
+            .collect();
+        let fit = fit_loss_vs_size(&pts).unwrap();
+        assert!((fit.a - 5.0).abs() < 1e-9);
+        assert!((fit.b + 0.3).abs() < 1e-9);
+        assert!((fit.predict(50_000.0) - (5.0 - 0.3 * (50_000f64).ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn size_for_loss_inverts_predict() {
+        let fit = LogFit { a: 5.0, b: -0.3, n_points: 4 };
+        let n = 123_456.0;
+        let l = fit.predict(n);
+        assert!((fit.size_for_loss(l) - n).abs() / n < 1e-9);
+    }
+
+    #[test]
+    fn compensation_factor_on_shifted_curves() {
+        // identical slope, MQ shifted up by delta => N ratio = exp(delta/|b|)
+        let mh = LogFit { a: 5.0, b: -0.3, n_points: 4 };
+        let mq = LogFit { a: 5.0 + 0.3 * (1.10f64).ln(), b: -0.3, n_points: 4 };
+        let f = compensation_factor(&mh, &mq, &[1.0, 1.5, 2.0]);
+        assert!((f - 1.10).abs() < 1e-9, "F={f}");
+    }
+
+    #[test]
+    fn fit_requires_two_points() {
+        assert!(fit_loss_vs_size(&[(100, 2.0)]).is_none());
+        assert!(fit_loss_vs_size(&[]).is_none());
+    }
+
+    #[test]
+    fn overlap_losses_degenerate_ok() {
+        let a = vec![(10usize, 2.0)];
+        let b = vec![(20usize, 3.0)];
+        let g = overlap_losses(&a, &b, 5);
+        assert!(!g.is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Scaling-law study (paper Fig. 3 / Fig. 9): rust-driven training of the
+//! MH/MG/MQ model grid over AOT train_step HLOs, plus the loss-vs-size
+//! fits and the multi-query size-compensation factor.
+
+pub mod laws;
+pub mod trainer;
+
+pub use laws::{analyze, compensation_factor, fit_loss_vs_size, LogFit, ScalingAnalysis};
+pub use trainer::{load_runs, save_runs, train_all, train_one, TrainConfig, TrainRun};

@@ -1,0 +1,268 @@
+//! Rust-driven training for the scaling-law study (paper Fig. 3 / Fig. 9).
+//!
+//! The coordinator owns the training loop: it loads the AOT `train_step`
+//! HLO (params/Adam state as explicit I/O), generates corpus batches with
+//! the rust grammar, and threads the state through PJRT executions. Python
+//! is only the lowering tool — this is the "distributed-training driver"
+//! shape of an L3 coordinator, scaled to one device.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::corpus;
+use crate::runtime::client::{compile_hlo, run_tensors};
+use crate::runtime::manifest::{Manifest, ScalingEntry};
+use crate::runtime::tensor::{load_weights_bin, HostTensor};
+use crate::util::json::Json;
+use crate::util::prng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, eval_every: 50, eval_batches: 4, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainRun {
+    pub name: String,
+    pub attention_kind: String,
+    pub g: usize,
+    pub param_count: usize,
+    pub ffn_mult: usize,
+    /// (step, training loss)
+    pub train_curve: Vec<(usize, f64)>,
+    /// (step, held-out loss)
+    pub val_curve: Vec<(usize, f64)>,
+    pub final_val_loss: f64,
+    pub seconds: f64,
+}
+
+/// Train one scaling-family model from its AOT artifacts.
+pub fn train_one(
+    _manifest: &Manifest,
+    client: &xla::PjRtClient,
+    entry: &ScalingEntry,
+    cfg: &TrainConfig,
+) -> Result<TrainRun> {
+    let t0 = Instant::now();
+    let p = entry.n_param_tensors;
+    let seq_len = entry.cfg.seq_len;
+    let batch = entry.train_batch;
+
+    let train_exe = compile_hlo(client, &entry.train_step.file).context("compile train_step")?;
+    let eval_exe = compile_hlo(client, &entry.eval_loss.file).context("compile eval_loss")?;
+
+    let mut params = load_weights_bin(&entry.init_bin, &entry.param_spec)?;
+    let mut m: Vec<HostTensor> = entry
+        .param_spec
+        .iter()
+        .map(|(_, s)| HostTensor::zeros_f32(s))
+        .collect();
+    let mut v = m.clone();
+
+    let mut data_rng = Pcg::new(cfg.seed ^ 0xDA7A);
+    // fixed held-out batches, disjoint seed stream
+    let mut val_rng = Pcg::new(cfg.seed ^ 0x7E57_0000);
+    let val_batches: Vec<HostTensor> = (0..cfg.eval_batches)
+        .map(|_| {
+            HostTensor::from_i32(corpus::training_batch(&mut val_rng, batch, seq_len), &[batch, seq_len])
+        })
+        .collect();
+
+    let eval = |params: &[HostTensor], vb: &[HostTensor]| -> Result<f64> {
+        let mut total = 0.0;
+        for b in vb {
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.push(b);
+            let out = run_tensors(&eval_exe, &inputs)?;
+            total += out[0].f32s()[0] as f64;
+        }
+        Ok(total / vb.len() as f64)
+    };
+
+    let mut train_curve = Vec::new();
+    let mut val_curve = Vec::new();
+    val_curve.push((0, eval(&params, &val_batches)?));
+
+    for step in 1..=cfg.steps {
+        let batch_t = HostTensor::from_i32(
+            corpus::training_batch(&mut data_rng, batch, seq_len),
+            &[batch, seq_len],
+        );
+        let step_t = HostTensor::scalar_f32(step as f32);
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(3 * p + 2);
+        inputs.extend(params.iter());
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&step_t);
+        inputs.push(&batch_t);
+        let mut out = run_tensors(&train_exe, &inputs)
+            .with_context(|| format!("train step {step} of {}", entry.name))?;
+        anyhow::ensure!(out.len() == 3 * p + 1, "train_step returned {} outputs", out.len());
+        let loss = out.pop().unwrap().f32s()[0] as f64;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        v = out.split_off(2 * p);
+        m = out.split_off(p);
+        params = out;
+        if step % cfg.eval_every == 0 || step == cfg.steps {
+            train_curve.push((step, loss));
+            val_curve.push((step, eval(&params, &val_batches)?));
+        }
+    }
+
+    let final_val_loss = val_curve.last().unwrap().1;
+    crate::info!(
+        "trained {} ({} params, g={}): val {:.4} -> {:.4} in {:.0}s",
+        entry.name,
+        entry.cfg.param_count,
+        entry.cfg.g,
+        val_curve[0].1,
+        final_val_loss,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(TrainRun {
+        name: entry.name.clone(),
+        attention_kind: entry.cfg.attention_kind.clone(),
+        g: entry.cfg.g,
+        param_count: entry.cfg.param_count,
+        ffn_mult: entry.cfg.ffn_mult,
+        train_curve,
+        val_curve,
+        final_val_loss,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Train every scaling-family model (filtered by `name_filter` substring).
+pub fn train_all(
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    cfg: &TrainConfig,
+    name_filter: Option<&str>,
+) -> Result<Vec<TrainRun>> {
+    let mut out = Vec::new();
+    for entry in &manifest.scaling {
+        if let Some(f) = name_filter {
+            if !entry.name.contains(f) {
+                continue;
+            }
+        }
+        out.push(train_one(manifest, client, entry, cfg)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Results persistence
+// ---------------------------------------------------------------------------
+
+pub fn runs_to_json(runs: &[TrainRun]) -> Json {
+    Json::Arr(
+        runs.iter()
+            .map(|r| {
+                Json::obj()
+                    .set("name", Json::Str(r.name.clone()))
+                    .set("attention_kind", Json::Str(r.attention_kind.clone()))
+                    .set("g", Json::Num(r.g as f64))
+                    .set("param_count", Json::Num(r.param_count as f64))
+                    .set("ffn_mult", Json::Num(r.ffn_mult as f64))
+                    .set("final_val_loss", Json::Num(r.final_val_loss))
+                    .set("seconds", Json::Num(r.seconds))
+                    .set(
+                        "train_curve",
+                        Json::Arr(r.train_curve.iter().map(|(s, l)| {
+                            Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)])
+                        }).collect()),
+                    )
+                    .set(
+                        "val_curve",
+                        Json::Arr(r.val_curve.iter().map(|(s, l)| {
+                            Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)])
+                        }).collect()),
+                    )
+            })
+            .collect(),
+    )
+}
+
+pub fn save_runs(path: &Path, runs: &[TrainRun]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, runs_to_json(runs).to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load_runs(path: &Path) -> Result<Vec<TrainRun>> {
+    let doc = crate::util::json::parse_file(path)?;
+    let mut out = Vec::new();
+    for r in doc.as_arr().context("runs json not an array")? {
+        let curve = |key: &str| -> Vec<(usize, f64)> {
+            r.req(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    (
+                        p.idx(0).and_then(|v| v.as_usize()).unwrap_or(0),
+                        p.idx(1).and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                    )
+                })
+                .collect()
+        };
+        out.push(TrainRun {
+            name: r.str_of("name"),
+            attention_kind: r.str_of("attention_kind"),
+            g: r.usize_of("g"),
+            param_count: r.usize_of("param_count"),
+            ffn_mult: r.usize_of("ffn_mult"),
+            train_curve: curve("train_curve"),
+            val_curve: curve("val_curve"),
+            final_val_loss: r.f64_of("final_val_loss"),
+            seconds: r.f64_of("seconds"),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_run(name: &str, kind: &str, n: usize, loss: f64) -> TrainRun {
+        TrainRun {
+            name: name.into(),
+            attention_kind: kind.into(),
+            g: 1,
+            param_count: n,
+            ffn_mult: 4,
+            train_curve: vec![(50, loss + 0.1), (100, loss)],
+            val_curve: vec![(0, 2.8), (100, loss)],
+            final_val_loss: loss,
+            seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let runs = vec![fake_run("a", "multi_head", 1000, 1.5), fake_run("b", "multi_query", 900, 1.7)];
+        let dir = std::env::temp_dir().join("bifattn-scaling-test");
+        let path = dir.join("runs.json");
+        save_runs(&path, &runs).unwrap();
+        let loaded = load_runs(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].name, "a");
+        assert_eq!(loaded[0].val_curve, runs[0].val_curve);
+        assert!((loaded[1].final_val_loss - 1.7).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,202 @@
+//! JSON serving API over the engine.
+//!
+//! The `ModelRuntime` is deliberately single-threaded (PJRT wrappers are
+//! !Send), so the engine runs on a dedicated thread that owns it — the
+//! classic leader/event-loop shape — and HTTP workers talk to it over an
+//! mpsc channel. This is the "rust owns the event loop / process
+//! topology" half of the L3 contract.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::coordinator::{rerank_top_k, Engine, EngineConfig, GenerationRequest, SamplingParams};
+use crate::runtime::{cpu_client, Manifest, ModelRuntime};
+use crate::util::json::{parse as parse_json, Json};
+
+use super::http::{HttpResponse, HttpServer};
+
+enum Job {
+    Generate(GenerationRequest, usize, Sender<Result<Json, String>>),
+    Metrics(Sender<Json>),
+}
+
+/// Cloneable handle HTTP workers use to reach the engine thread.
+pub struct EngineClient {
+    tx: Mutex<Sender<Job>>,
+}
+
+impl EngineClient {
+    fn send(&self, job: Job) {
+        self.tx.lock().unwrap().send(job).expect("engine thread died");
+    }
+
+    pub fn generate(&self, req: GenerationRequest, rerank_k: usize) -> Result<Json, String> {
+        let (tx, rx) = channel();
+        self.send(Job::Generate(req, rerank_k, tx));
+        rx.recv().map_err(|_| "engine thread died".to_string())?
+    }
+
+    pub fn metrics(&self) -> Json {
+        let (tx, rx) = channel();
+        self.send(Job::Metrics(tx));
+        rx.recv().unwrap_or_else(|_| Json::obj())
+    }
+}
+
+/// Spawn the engine event loop; returns the client handle.
+pub fn spawn_engine(
+    artifacts: std::path::PathBuf,
+    model: String,
+    cfg: EngineConfig,
+) -> anyhow::Result<std::sync::Arc<EngineClient>> {
+    let (tx, rx) = channel::<Job>();
+    let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+    std::thread::Builder::new()
+        .name("engine".into())
+        .spawn(move || {
+            let init = (|| -> anyhow::Result<Engine> {
+                let manifest = Manifest::load(&artifacts)?;
+                let client = cpu_client()?;
+                let rt = ModelRuntime::load(&manifest, &client, &model)?;
+                Ok(Engine::new(&manifest, rt, cfg))
+            })();
+            let engine = match init {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Generate(req, rerank_k, reply) => {
+                        let res = engine
+                            .generate(&req)
+                            .map(|r| result_to_json(&r, rerank_k))
+                            .map_err(|e| format!("{e:#}"));
+                        let _ = reply.send(res);
+                    }
+                    Job::Metrics(reply) => {
+                        let _ = reply.send(engine.metrics.report());
+                    }
+                }
+            }
+        })?;
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("engine thread exited during init"))?
+        .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
+    Ok(std::sync::Arc::new(EngineClient { tx: Mutex::new(tx) }))
+}
+
+fn result_to_json(r: &crate::coordinator::RequestResult, rerank_k: usize) -> Json {
+    let comp_json = |c: &crate::coordinator::Completion| {
+        Json::obj()
+            .set("text", Json::Str(c.text.clone()))
+            .set("mean_logp", Json::Num(c.mean_logp()))
+            .set("finished_by_stop", Json::Bool(c.finished_by_stop))
+    };
+    let mut j = Json::obj()
+        .set("id", Json::Num(r.id as f64))
+        .set("mode", Json::Str(r.mode_used.key().to_string()))
+        .set(
+            "completions",
+            Json::Arr(r.completions.iter().map(comp_json).collect()),
+        )
+        .set(
+            "timing",
+            Json::obj()
+                .set("prefill_ms", Json::Num(r.timing.prefill_ms))
+                .set("decode_ms", Json::Num(r.timing.decode_ms))
+                .set("decode_steps", Json::Num(r.timing.decode_steps as f64))
+                .set("waves", Json::Num(r.timing.waves as f64))
+                .set("upload_bytes", Json::Num(r.timing.upload_bytes as f64)),
+        );
+    if rerank_k > 0 {
+        let top = rerank_top_k(&r.completions, rerank_k);
+        j = j.set("reranked", Json::Arr(top.iter().map(comp_json).collect()));
+    }
+    j
+}
+
+/// Parse the POST /generate body into a request.
+pub fn parse_generate_body(body: &str, next_id: u64) -> Result<(GenerationRequest, usize), String> {
+    let doc = parse_json(body).map_err(|e| format!("bad json: {e}"))?;
+    let prompt = doc
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or("missing 'prompt'")?
+        .to_string();
+    let d = SamplingParams::default();
+    let params = SamplingParams {
+        n: doc.get("n").and_then(|v| v.as_usize()).unwrap_or(1),
+        temperature: doc.get("temperature").and_then(|v| v.as_f64()).unwrap_or(d.temperature as f64) as f32,
+        top_p: doc.get("top_p").and_then(|v| v.as_f64()).unwrap_or(d.top_p as f64) as f32,
+        max_tokens: doc.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(d.max_tokens),
+        stop_token: Some(crate::corpus::SEMI),
+        seed: doc.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+    };
+    if params.n == 0 {
+        return Err("n must be >= 1".into());
+    }
+    let rerank_k = doc.get("rerank_top_k").and_then(|v| v.as_usize()).unwrap_or(0);
+    Ok((GenerationRequest { id: next_id, prompt, params }, rerank_k))
+}
+
+/// Build the HTTP routing table over an engine client.
+pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
+    let next_id = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(1));
+    let gen_client = std::sync::Arc::clone(&client);
+    let met_client = std::sync::Arc::clone(&client);
+    HttpServer::new()
+        .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
+        .route("GET", "/metrics", move |_| {
+            HttpResponse::json(200, met_client.metrics().to_string())
+        })
+        .route("POST", "/generate", move |req| {
+            let id = next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            match parse_generate_body(&req.body, id) {
+                Err(e) => HttpResponse::error(400, &e),
+                Ok((greq, rerank_k)) => match gen_client.generate(greq, rerank_k) {
+                    Ok(j) => HttpResponse::json(200, j.to_string()),
+                    Err(e) => HttpResponse::error(500, &e),
+                },
+            }
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_body_defaults() {
+        let (req, rk) = parse_generate_body(r#"{"prompt":"1+2="}"#, 7).unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.prompt, "1+2=");
+        assert_eq!(req.params.n, 1);
+        assert_eq!(req.params.stop_token, Some(crate::corpus::SEMI));
+        assert_eq!(rk, 0);
+    }
+
+    #[test]
+    fn parse_generate_body_full() {
+        let body = r#"{"prompt":"3+4=","n":16,"temperature":0.6,"top_p":0.9,
+                       "max_tokens":8,"seed":5,"rerank_top_k":3}"#;
+        let (req, rk) = parse_generate_body(body, 1).unwrap();
+        assert_eq!(req.params.n, 16);
+        assert!((req.params.temperature - 0.6).abs() < 1e-6);
+        assert_eq!(req.params.max_tokens, 8);
+        assert_eq!(rk, 3);
+    }
+
+    #[test]
+    fn parse_generate_body_errors() {
+        assert!(parse_generate_body("{}", 1).is_err());
+        assert!(parse_generate_body("not json", 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","n":0}"#, 1).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Minimal HTTP/1.1 server (substrate — no hyper/axum offline).
+//!
+//! Just enough for a JSON serving API: request-line + headers parsing,
+//! Content-Length bodies, keep-alive off (Connection: close), and a
+//! routing table of `(method, path) -> handler`. Connections are handled
+//! on a small thread pool; handlers must be `Send + Sync`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::util::threadpool::ThreadPool;
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> Self {
+        HttpResponse { status, content_type: "application/json".into(), body }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Self {
+        let body = crate::util::json::Json::obj()
+            .set("error", crate::util::json::Json::Str(msg.to_string()))
+            .to_string();
+        Self::json(status, body)
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len(),
+            self.body
+        )
+    }
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn parse_request(stream: &mut impl Read) -> std::io::Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad request line"));
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut hl = String::new();
+        reader.read_line(&mut hl)?;
+        let hl = hl.trim_end();
+        if hl.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = hl.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        headers,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+pub struct HttpServer {
+    routes: BTreeMap<(String, String), Handler>,
+}
+
+impl Default for HttpServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HttpServer {
+    pub fn new() -> Self {
+        HttpServer { routes: BTreeMap::new() }
+    }
+
+    pub fn route(
+        mut self,
+        method: &str,
+        path: &str,
+        handler: impl Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    ) -> Self {
+        self.routes
+            .insert((method.to_string(), path.to_string()), Arc::new(handler));
+        self
+    }
+
+    pub fn dispatch(&self, req: &HttpRequest) -> HttpResponse {
+        match self.routes.get(&(req.method.clone(), req.path.clone())) {
+            Some(h) => h(req),
+            None => {
+                if self.routes.keys().any(|(_, p)| p == &req.path) {
+                    HttpResponse::error(405, "method not allowed")
+                } else {
+                    HttpResponse::error(404, "not found")
+                }
+            }
+        }
+    }
+
+    /// Serve forever on `addr` with `workers` connection threads.
+    /// `shutdown` lets tests stop the loop: checked between accepts.
+    pub fn serve(
+        self,
+        addr: &str,
+        workers: usize,
+        shutdown: Option<Arc<std::sync::atomic::AtomicBool>>,
+    ) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(false)?;
+        crate::info!("http server listening on {addr}");
+        let pool = ThreadPool::new(workers);
+        let routes = Arc::new(self);
+        if let Some(flag) = &shutdown {
+            // polling accept so the shutdown flag is honored
+            listener.set_nonblocking(true)?;
+            while !flag.load(std::sync::atomic::Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let routes = Arc::clone(&routes);
+                        pool.execute(move || handle_conn(stream, &routes));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            pool.wait_idle();
+            return Ok(());
+        }
+        for stream in listener.incoming() {
+            match stream {
+                Ok(stream) => {
+                    let routes = Arc::clone(&routes);
+                    pool.execute(move || handle_conn(stream, &routes));
+                }
+                Err(e) => crate::warn_!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
+    let resp = match parse_request(&mut stream) {
+        Ok(req) => server.dispatch(&req),
+        Err(e) => HttpResponse::error(400, &format!("parse error: {e}")),
+    };
+    let _ = resp.write_to(&mut stream);
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn parse_post_with_body() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"\"}";
+        let req = parse_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.body, "{\"prompt\":\"\"}");
+        assert_eq!(req.headers["host"], "x");
+    }
+
+    #[test]
+    fn parse_get_without_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n";
+        let req = parse_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn dispatch_routes_and_404() {
+        let s = HttpServer::new()
+            .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
+            .route("POST", "/gen", |r| HttpResponse::json(200, format!("{}", r.body.len())));
+        let mk = |m: &str, p: &str| HttpRequest {
+            method: m.into(),
+            path: p.into(),
+            headers: BTreeMap::new(),
+            body: "abc".into(),
+        };
+        assert_eq!(s.dispatch(&mk("GET", "/health")).status, 200);
+        assert_eq!(s.dispatch(&mk("GET", "/nope")).status, 404);
+        assert_eq!(s.dispatch(&mk("GET", "/gen")).status, 405);
+        assert_eq!(s.dispatch(&mk("POST", "/gen")).body, "3");
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let port = 34517;
+        let t = std::thread::spawn(move || {
+            HttpServer::new()
+                .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
+                .serve(&format!("127.0.0.1:{port}"), 2, Some(flag))
+                .unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream
+            .write_all(b"GET /health HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+        assert!(buf.ends_with("{\"ok\":true}"), "{buf}");
+        shutdown.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn response_includes_content_length() {
+        let r = HttpResponse::json(200, "hello".into());
+        let mut out = Vec::new();
+        r.write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Content-Length: 5"));
+    }
+}

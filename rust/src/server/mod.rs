@@ -1,0 +1,8 @@
+//! Serving front-end: minimal HTTP/1.1 substrate + the JSON generate API
+//! over the engine event-loop thread.
+
+pub mod api;
+pub mod http;
+
+pub use api::{build_server, parse_generate_body, spawn_engine, EngineClient};
+pub use http::{HttpRequest, HttpResponse, HttpServer};

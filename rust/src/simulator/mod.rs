@@ -1,0 +1,117 @@
+//! GPU memory-IO simulator: turns the roofline model into the paper's
+//! tables and figures (modeled A100/H100 numbers — this box is CPU-only;
+//! see DESIGN.md §2 for why shape/crossover/OOM claims survive the
+//! substitution).
+
+pub mod sweep;
+
+use crate::attention::{
+    avg_decode_latency, is_oom, AttnImpl, AttnModel, Hardware,
+};
+use crate::bench::Cell;
+
+/// One simulated cell of a per-token-latency table: `Ms`, `OOM`, or `-`
+/// (not reachable because a smaller batch already OOM'd — the paper's
+/// convention for cells below an OOM row).
+pub fn latency_cell(
+    model: &AttnModel,
+    hw: &Hardware,
+    imp: AttnImpl,
+    compiled: bool,
+    b: usize,
+    m_c: usize,
+    steps: usize,
+    prior_oom: &mut bool,
+) -> Cell {
+    if *prior_oom {
+        return Cell::Dash;
+    }
+    if is_oom(model, hw, imp, b, m_c, steps) {
+        *prior_oom = true;
+        return Cell::Oom;
+    }
+    Cell::Ms(avg_decode_latency(model, hw, imp, compiled, b, m_c, steps) * 1e3)
+}
+
+/// A (implementation, compiled) column of a paper table.
+#[derive(Debug, Clone, Copy)]
+pub struct Column {
+    pub imp: AttnImpl,
+    pub compiled: bool,
+    pub label: &'static str,
+}
+
+pub const TABLE6_COLUMNS: &[Column] = &[
+    Column { imp: AttnImpl::Bifurcated, compiled: false, label: "Bifurcated" },
+    Column { imp: AttnImpl::Flash2, compiled: false, label: "Flash2" },
+    Column { imp: AttnImpl::SdpaContiguous, compiled: false, label: "SDPA Math" },
+    Column { imp: AttnImpl::Flash2Nc, compiled: false, label: "Flash2 (NC)" },
+    Column { imp: AttnImpl::SdpaNc, compiled: false, label: "SDPA Math (NC)" },
+    Column { imp: AttnImpl::Bifurcated, compiled: true, label: "Bifurcated+Compile" },
+    Column { imp: AttnImpl::SdpaNc, compiled: true, label: "SDPA Math+Compile" },
+];
+
+pub const TABLE7_COLUMNS: &[Column] = &[
+    Column { imp: AttnImpl::Bifurcated, compiled: true, label: "Bifurcated+Compile" },
+    Column { imp: AttnImpl::Bifurcated, compiled: false, label: "Bifurcated" },
+    Column { imp: AttnImpl::Flash2, compiled: false, label: "Flash2" },
+    Column { imp: AttnImpl::Flash2Nc, compiled: false, label: "Flash2 (NC)" },
+];
+
+/// Paper batch-size ladder used by Tables 6/7.
+pub const BATCH_LADDER: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+
+/// Decode-steps horizon used when the paper measures per-token latency.
+pub const MEASURE_STEPS: usize = 64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{h100, paper_7b_mha};
+
+    #[test]
+    fn cells_follow_oom_protocol() {
+        let m = paper_7b_mha();
+        let hw = h100();
+        let mut prior = false;
+        // walk the batch ladder at 32k with the contiguous baseline:
+        // Ms, Ms, then OOM exactly once, then dashes
+        let mut kinds = Vec::new();
+        for &b in BATCH_LADDER {
+            let c = latency_cell(&m, &hw, AttnImpl::SdpaContiguous, false, b, 32640, MEASURE_STEPS, &mut prior);
+            kinds.push(match c {
+                Cell::Ms(_) => 'm',
+                Cell::Oom => 'o',
+                Cell::Dash => '-',
+                _ => '?',
+            });
+        }
+        let s: String = kinds.into_iter().collect();
+        assert!(s.starts_with("mm"), "{s}");
+        assert_eq!(s.matches('o').count(), 1, "{s}");
+        assert!(s.ends_with('-'), "{s}");
+        // OOM must come before any dash
+        assert!(s.find('o').unwrap() < s.find('-').unwrap(), "{s}");
+    }
+
+    #[test]
+    fn bifurcated_column_survives_much_deeper() {
+        let m = paper_7b_mha();
+        let hw = h100();
+        let deepest = |imp: AttnImpl| {
+            let mut prior = false;
+            let mut best = 0;
+            for &b in BATCH_LADDER {
+                if let Cell::Ms(_) =
+                    latency_cell(&m, &hw, imp, true, b, 16384, MEASURE_STEPS, &mut prior)
+                {
+                    best = b;
+                }
+            }
+            best
+        };
+        let d_bif = deepest(AttnImpl::Bifurcated);
+        let d_sdpa = deepest(AttnImpl::SdpaContiguous);
+        assert!(d_bif >= 16 * d_sdpa, "bif {d_bif} vs sdpa {d_sdpa}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (substrate — no `clap` offline).
+//!
+//! Grammar: `repro <subcommand> [--key value | --flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --model pico-mh --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.str_or("model", "x"), "pico-mh");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("simulate --ctx=8192 --bs=16");
+        assert_eq!(a.usize_or("ctx", 0), 8192);
+        assert_eq!(a.usize_or("bs", 0), 16);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.has_flag("quick"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("generate prompt1 prompt2 --n 4");
+        assert_eq!(a.subcommand.as_deref(), Some("generate"));
+        assert_eq!(a.positional, vec!["prompt1", "prompt2"]);
+        assert_eq!(a.usize_or("n", 0), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,161 @@
+//! Latency statistics: percentile summaries over recorded samples.
+//!
+//! Used by the bench harness and the engine's per-request metrics. Keeps
+//! raw samples (bench scales here are thousands of points, not millions).
+
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_secs_f64() * 1e3); // milliseconds
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile via nearest-rank (q in [0, 1]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty histogram");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        self.samples[rank - 1]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn summary(&mut self) -> Summary {
+        assert!(!self.samples.is_empty(), "summary of empty histogram");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let mean = self.mean();
+        let var = self.samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        Summary {
+            count: n,
+            mean,
+            min: self.samples[0],
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+            max: self.samples[n - 1],
+            std: var.sqrt(),
+        }
+    }
+}
+
+impl Summary {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("count", Json::Num(self.count as f64))
+            .set("mean", Json::Num(self.mean))
+            .set("min", Json::Num(self.min))
+            .set("p50", Json::Num(self.p50))
+            .set("p90", Json::Num(self.p90))
+            .set("p99", Json::Num(self.p99))
+            .set("max", Json::Num(self.max))
+            .set("std", Json::Num(self.std))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_data() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(0.50), 50.0);
+        assert_eq!(h.percentile(0.90), 90.0);
+        assert_eq!(h.percentile(0.99), 99.0);
+        assert_eq!(h.percentile(1.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut h = Histogram::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        a.record(1.0);
+        let mut b = Histogram::new();
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_then_sorted_interleaving() {
+        let mut h = Histogram::new();
+        h.record(5.0);
+        h.record(1.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        h.record(0.5); // invalidates sort
+        assert_eq!(h.percentile(0.0), 0.5);
+    }
+}

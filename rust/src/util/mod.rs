@@ -1,0 +1,11 @@
+//! Hand-rolled substrates (the offline registry only carries the `xla`
+//! crate's dependency closure — no serde/tokio/clap/criterion/proptest/rand;
+//! see DESIGN.md §2).
+
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod propcheck;
+pub mod threadpool;

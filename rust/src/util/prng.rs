@@ -1,0 +1,306 @@
+//! Deterministic PRNG + sampling primitives (substrate — no `rand` crate
+//! in the offline registry).
+//!
+//! PCG-XSH-RR 64/32 core (O'Neill 2014) with SplitMix64 seeding, plus the
+//! distributions the coordinator needs: uniform, normal (Box–Muller),
+//! Gumbel, and categorical sampling from logits with temperature/top-p —
+//! the sampler hot path of single-context batch sampling.
+
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let state = splitmix64(&mut s);
+        let inc = splitmix64(&mut s) | 1;
+        let mut rng = Pcg { state: 0, inc };
+        rng.state = state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (request-id -> per-request sampler).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        Pcg::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire's multiply-shift with rejection for unbiasedness.
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let wide = (x as u128) * (n as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple over fast).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard Gumbel (for Gumbel-max categorical sampling).
+    pub fn gumbel(&mut self) -> f64 {
+        let u = self.f64().max(1e-300);
+        -(-u.ln()).ln()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Categorical sampling from logits — the sampler hot path.
+// ---------------------------------------------------------------------------
+
+/// log-softmax over a logits row. Returns (logprobs, logsumexp).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let sum: f64 = logits.iter().map(|&x| ((x - max) as f64).exp()).sum();
+    let lse = max as f64 + sum.ln();
+    logits.iter().map(|&x| (x as f64 - lse) as f32).collect()
+}
+
+/// Temperature + nucleus (top-p) sampling from a logits row.
+///
+/// Returns `(token, logprob_of_token)` where the logprob is measured under
+/// the *untruncated* temperature-1 distribution — that is what mean-log-p
+/// reranking (Chen et al. 2021) scores with.
+pub fn sample_top_p(
+    rng: &mut Pcg,
+    logits: &[f32],
+    temperature: f32,
+    top_p: f32,
+) -> (usize, f32) {
+    assert!(!logits.is_empty());
+    let base_logp = log_softmax(logits);
+    if temperature <= 0.0 {
+        // argmax (greedy)
+        let (tok, _) = argmax(logits);
+        return (tok, base_logp[tok]);
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| x / temperature).collect();
+    let lp = log_softmax(&scaled);
+    // sort indices by probability descending
+    let mut idx: Vec<usize> = (0..lp.len()).collect();
+    idx.sort_by(|&a, &b| lp[b].partial_cmp(&lp[a]).unwrap_or(std::cmp::Ordering::Equal));
+    // nucleus: smallest prefix with cumulative prob >= top_p
+    let mut cum = 0.0f64;
+    let mut cut = idx.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        cum += (lp[i] as f64).exp();
+        if cum >= top_p as f64 {
+            cut = rank + 1;
+            break;
+        }
+    }
+    let kept = &idx[..cut];
+    let total: f64 = kept.iter().map(|&i| (lp[i] as f64).exp()).sum();
+    let mut r = rng.f64() * total;
+    for &i in kept {
+        r -= (lp[i] as f64).exp();
+        if r <= 0.0 {
+            return (i, base_logp[i]);
+        }
+    }
+    let last = *kept.last().unwrap();
+    (last, base_logp[last])
+}
+
+pub fn argmax(xs: &[f32]) -> (usize, f32) {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    (best, bv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::new(8);
+        assert_ne!(Pcg::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg::new(2);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f64 = lp.iter().map(|&x| (x as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(lp[2] > lp[1] && lp[1] > lp[0]);
+    }
+
+    #[test]
+    fn greedy_at_zero_temperature() {
+        let mut rng = Pcg::new(4);
+        let logits = [0.1, 5.0, -2.0, 4.9];
+        for _ in 0..10 {
+            let (tok, _) = sample_top_p(&mut rng, &logits, 0.0, 0.95);
+            assert_eq!(tok, 1);
+        }
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        let mut rng = Pcg::new(5);
+        // one dominant token (p ~= 0.95), rest tiny: with top_p=0.5 only it survives
+        let logits = [10.0, 0.0, 0.0, 0.0];
+        for _ in 0..50 {
+            let (tok, _) = sample_top_p(&mut rng, &logits, 1.0, 0.5);
+            assert_eq!(tok, 0);
+        }
+    }
+
+    #[test]
+    fn sampling_frequencies_track_probs() {
+        let mut rng = Pcg::new(6);
+        let logits = [0.0f32, (2.0f32).ln(), (4.0f32).ln()]; // probs 1/7, 2/7, 4/7
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            let (tok, _) = sample_top_p(&mut rng, &logits, 1.0, 1.0);
+            counts[tok] += 1;
+        }
+        let f = |i: usize| counts[i] as f64 / n as f64;
+        assert!((f(0) - 1.0 / 7.0).abs() < 0.02, "{counts:?}");
+        assert!((f(2) - 4.0 / 7.0).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn logprob_reported_under_base_distribution() {
+        let mut rng = Pcg::new(7);
+        let logits = [1.0f32, 2.0, 3.0];
+        let base = log_softmax(&logits);
+        let (tok, lp) = sample_top_p(&mut rng, &logits, 0.7, 0.9);
+        assert!((lp - base[tok]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut root = Pcg::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(av, bv);
+    }
+}

@@ -1,0 +1,168 @@
+//! Fixed-size worker pool over std threads + channels (substrate — no
+//! `tokio` offline; the coordinator's event loop is thread-based).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            let executed = Arc::clone(&executed);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                executed.fetch_add(1, Ordering::SeqCst);
+                                let (lock, cv) = &*inflight;
+                                let mut cnt = lock.lock().unwrap();
+                                *cnt -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break, // sender dropped
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, inflight, executed }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.inflight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+
+    pub fn jobs_executed(&self) -> usize {
+        self.executed.load(Ordering::SeqCst)
+    }
+
+    /// Map `f` over `items` on the pool, preserving order.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("results still shared")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job dropped"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.jobs_executed(), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.par_map((0..50).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must join, not abandon
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration over the simulator: the qualitative claims of every paper
+//! table/figure, checked as assertions (who wins, by what factor, where
+//! the crossovers and OOM boundaries fall).
+
+use bifurcated_attn::attention::{
+    avg_decode_latency, decode_latency, h100, is_oom, paper_16b_mh, paper_7b_gqa,
+    paper_7b_mha, AttnImpl,
+};
+use bifurcated_attn::bench::Cell;
+use bifurcated_attn::simulator::sweep;
+use bifurcated_attn::simulator::{TABLE6_COLUMNS, TABLE7_COLUMNS};
+
+#[test]
+fn abstract_headline_speedups() {
+    // Abstract: ">2.1x speedup at 16 sequences, >6.2x at 32 sequences for
+    // context >= 8k on a 7B MH model". Check the simulator reproduces at
+    // least those factors (eager SDPA vs bifurcated).
+    let m = paper_7b_mha();
+    let hw = h100();
+    let speedup = |b: usize, ctx: usize| {
+        decode_latency(&m, &hw, AttnImpl::SdpaContiguous, false, b, ctx, 16).seconds
+            / decode_latency(&m, &hw, AttnImpl::Bifurcated, false, b, ctx, 16).seconds
+    };
+    assert!(speedup(16, 8192) > 2.1, "b=16: {}", speedup(16, 8192));
+    assert!(speedup(32, 8192) > 4.0, "b=32: {}", speedup(32, 8192));
+    assert!(speedup(32, 16384) > 6.2, "b=32 @16k: {}", speedup(32, 16384));
+}
+
+#[test]
+fn table6_shape_matches_paper() {
+    let m = paper_7b_mha();
+    let hw = h100();
+    let t = sweep::paper_latency_table(
+        "t6", &m, &hw, &[8192, 16384, 32640], TABLE6_COLUMNS,
+        &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048],
+    );
+    let col = |label: &str| {
+        2 + TABLE6_COLUMNS.iter().position(|c| c.label == label).unwrap()
+    };
+    let ms = |cell: &Cell| match cell {
+        Cell::Ms(v) => Some(*v),
+        _ => None,
+    };
+    // paper: at 8k, eager bifurcated stays ~flat from b=1 to b=64 while
+    // SDPA Math grows several-fold before hitting OOM
+    let rows8k: Vec<_> = t.rows.iter().take(12).collect();
+    let bif = col("Bifurcated");
+    let sdpa = col("SDPA Math");
+    let bif_b1 = ms(&rows8k[0][bif]).unwrap();
+    let bif_b64 = ms(&rows8k[6][bif]).unwrap();
+    assert!(bif_b64 / bif_b1 < 1.6, "bifurcated growth {}", bif_b64 / bif_b1);
+    let sdpa_b1 = ms(&rows8k[0][sdpa]).unwrap();
+    // largest batch where the SDPA column still measures
+    let (sdpa_last_b, sdpa_last) = rows8k
+        .iter()
+        .filter_map(|r| match (&r[1], ms(&r[sdpa])) {
+            (Cell::Num(b), Some(v)) => Some((*b as usize, v)),
+            _ => None,
+        })
+        .last()
+        .unwrap();
+    assert!(sdpa_last_b >= 8, "SDPA should survive to at least b=8 at 8k");
+    assert!(sdpa_last / sdpa_b1 > 2.0, "sdpa growth {}", sdpa_last / sdpa_b1);
+    // SDPA must OOM somewhere at 8k within the ladder; bifurcated
+    // survives orders of magnitude deeper (paper: compiled bif OOMs only
+    // at b=2048 @8k)
+    assert!(rows8k.iter().any(|r| matches!(r[sdpa], Cell::Oom)));
+    let first_oom = |c: usize| rows8k.iter().position(|r| matches!(r[c], Cell::Oom));
+    let bif_oom = first_oom(bif).unwrap_or(12);
+    let sdpa_oom = first_oom(sdpa).unwrap();
+    assert!(bif_oom >= sdpa_oom + 5, "bif OOM idx {bif_oom} vs sdpa {sdpa_oom}");
+    assert!(rows8k[9].iter().skip(2).take(1).all(|_| true)); // b=512 row exists
+    assert!(matches!(rows8k[9][bif], Cell::Ms(_)), "bifurcated must survive b=512 @8k");
+    // paper: at b=1 bifurcated (eager) is slightly *slower* than SDPA —
+    // the FAQ-4 small-workload overhead
+    assert!(bif_b1 > sdpa_b1 * 0.9, "b=1: bif {bif_b1} vs sdpa {sdpa_b1}");
+    // compiled columns are much faster than eager at small b
+    let cbif = col("Bifurcated+Compile");
+    let cbif_b1 = ms(&rows8k[0][cbif]).unwrap();
+    assert!(cbif_b1 < 0.6 * bif_b1, "compile speedup at b=1: {cbif_b1} vs {bif_b1}");
+}
+
+#[test]
+fn table7_gqa_shape() {
+    // GQA (g=8): KV IO is 4x smaller, so fused survives deeper but
+    // bifurcated still wins at scale and survives to b >= 512 at 8k.
+    let m = paper_7b_gqa();
+    let hw = h100();
+    let t = sweep::paper_latency_table(
+        "t7", &m, &hw, &[8192, 16384, 32640], TABLE7_COLUMNS,
+        &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
+    );
+    assert_eq!(t.headers.len(), 2 + TABLE7_COLUMNS.len());
+    // bifurcated+compile at 8k b=256 must still be "fast" (paper: 24.4 ms)
+    let row_256_8k = t.rows.iter().find(|r| {
+        matches!(&r[0], Cell::Str(s) if s == "8k") && matches!(r[1], Cell::Num(n) if n == 256.0)
+    }).unwrap();
+    match &row_256_8k[2] {
+        Cell::Ms(v) => assert!(*v < 60.0, "b=256 8k bif+compile: {v}"),
+        other => panic!("expected Ms, got {other:?}"),
+    }
+}
+
+#[test]
+fn table8_tp2_shape() {
+    // TP=2: capacity doubles (survives 32k b=32 where TP=1 OOMs) and
+    // per-token latency drops vs TP=1.
+    let m = sweep::table8_model();
+    let hw = h100();
+    let tp2 = hw.tensor_parallel(2);
+    // the replicating SDPA baseline OOMs at 32k b=32 on one GPU; TP=2
+    // doubles capacity and pushes the boundary out (paper Table 8 shows
+    // SDPA OOM at b=32 even at TP=2; our capacity model puts it within
+    // one ladder step of that).
+    assert!(is_oom(&m, &hw, AttnImpl::SdpaContiguous, 32, 32640, 64));
+    assert!(!is_oom(&m, &tp2, AttnImpl::SdpaContiguous, 16, 32640, 64));
+    assert!(is_oom(&m, &tp2, AttnImpl::SdpaContiguous, 64, 32640, 64));
+    let l1 = avg_decode_latency(&m, &hw, AttnImpl::SdpaNc, true, 16, 32640, 64);
+    let l2 = avg_decode_latency(&m, &tp2, AttnImpl::SdpaNc, true, 16, 32640, 64);
+    assert!(l2 < l1);
+    // bifurcated under TP stays nearly flat across b (paper Table 8:
+    // 55-68 ms from b=8 to 128)
+    let b8 = avg_decode_latency(&m, &tp2, AttnImpl::Bifurcated, true, 8, 32640, 64);
+    let b128 = avg_decode_latency(&m, &tp2, AttnImpl::Bifurcated, true, 128, 32640, 64);
+    assert!(b128 / b8 < 1.5, "{}", b128 / b8);
+}
+
+#[test]
+fn fig8_batch_size_comparison_codegen() {
+    // Paper Sec. 1: CodeGen-16B at 2k context — bifurcation lifts the
+    // feasible batch from ~5 to >= 128 within a fixed latency budget.
+    let hw = h100();
+    let budget = 2.0 * sweep::fig8_latency_axis(&hw, 1, 2048, 128, false);
+    let max_n = |bif: bool| {
+        let mut best = 0;
+        for n in [1, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let t = sweep::fig8_latency_axis(&hw, n, 2048, 128, bif);
+            if t.is_finite() && t <= budget {
+                best = n;
+            }
+        }
+        best
+    };
+    let without = max_n(false);
+    let with = max_n(true);
+    assert!(without <= 16, "baseline feasible n: {without}");
+    assert!(with >= 128, "bifurcated feasible n: {with}");
+}
+
+#[test]
+fn fig10_star_coder_mq_also_benefits() {
+    // Fig 8c/d & 10: StarCoder (MQ) also gains from bifurcation at high n,
+    // though less than MH (its KV is already h-times compressed).
+    let m = bifurcated_attn::attention::paper_15b_mq();
+    let hw = h100();
+    let gain = |n: usize| {
+        avg_decode_latency(&m, &hw, AttnImpl::SdpaContiguous, false, n, 2048, 128)
+            / avg_decode_latency(&m, &hw, AttnImpl::Bifurcated, false, n, 2048, 128)
+    };
+    assert!(gain(256) > 1.1, "MQ gain at n=256: {}", gain(256));
+    let mh_gain = {
+        let mh = paper_16b_mh();
+        avg_decode_latency(&mh, &hw, AttnImpl::SdpaContiguous, false, 256, 2048, 128)
+            / avg_decode_latency(&mh, &hw, AttnImpl::Bifurcated, false, 256, 2048, 128)
+    };
+    assert!(mh_gain > gain(256), "MH should gain more than MQ");
+}

@@ -1,0 +1,319 @@
+//! Property-based tests (propcheck-lite) on coordinator invariants:
+//! KV manager accounting, block allocator, scheduler wave planning,
+//! sampler bounds, pass@k estimator, reranker, and the cost model's
+//! ordering guarantees (DESIGN.md §7).
+
+use bifurcated_attn::attention::{kv_io_bifurcated, kv_io_fused};
+use bifurcated_attn::coordinator::request::{Completion, SamplingParams};
+use bifurcated_attn::coordinator::{rerank_top_k, SamplerBatch, Scheduler, SchedulerConfig};
+use bifurcated_attn::evalharness::pass_at_k;
+use bifurcated_attn::kvcache::manager::KvManager;
+use bifurcated_attn::kvcache::BlockAllocator;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::util::propcheck::forall;
+use bifurcated_attn::util::prng::Pcg;
+
+#[test]
+fn prop_block_allocator_never_leaks_or_double_frees() {
+    forall(
+        "block-allocator-invariants",
+        150,
+        |rng| {
+            // a random sequence of alloc/share/release ops
+            let ops: Vec<(u8, usize)> = (0..rng.below(40) + 5)
+                .map(|_| (rng.below(3) as u8, rng.below(64) + 1))
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut a = BlockAllocator::new(64, 4);
+            let mut live: Vec<Vec<usize>> = Vec::new();
+            for &(op, arg) in ops {
+                match op {
+                    0 => {
+                        if let Ok(blocks) = a.alloc(arg) {
+                            live.push(blocks);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = arg % live.len();
+                            a.share(&live[i].clone());
+                            live.push(live[i].clone());
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = arg % live.len();
+                            let blocks = live.swap_remove(i);
+                            a.release(&blocks);
+                        }
+                    }
+                }
+                a.check_invariants()?;
+            }
+            // drain: everything must come back
+            for blocks in live.drain(..) {
+                a.release(&blocks);
+            }
+            a.check_invariants()?;
+            if a.used_blocks() != 0 {
+                return Err(format!("{} blocks leaked", a.used_blocks()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_manager_accounting_exact() {
+    forall(
+        "kv-manager-invariants",
+        100,
+        |rng| {
+            let n_groups = rng.below(4) + 1;
+            let per_group: Vec<(usize, usize, bool)> = (0..n_groups)
+                .map(|_| (rng.below(80) + 1, rng.below(16) + 1, rng.below(2) == 0))
+                .collect();
+            per_group
+        },
+        |groups| {
+            let mut m = KvManager::new(1 << 20, 48, 8);
+            let mut handles = Vec::new();
+            for &(tokens, b, bifurcated) in groups {
+                let mode = if bifurcated { DecodeMode::Bifurcated } else { DecodeMode::Fused };
+                let ctx = match m.register_context(tokens, mode, b) {
+                    Ok(c) => c,
+                    Err(_) => continue, // explicit OOM is fine
+                };
+                let mut seqs = Vec::new();
+                for _ in 0..b {
+                    match m.start_sequence(ctx, 16) {
+                        Ok(s) => seqs.push(s),
+                        Err(_) => break,
+                    }
+                }
+                m.check_invariants()?;
+                handles.push((ctx, seqs));
+            }
+            // interleaved teardown: finish sequences in reverse group order
+            for (ctx, seqs) in handles.into_iter().rev() {
+                for s in seqs {
+                    m.finish_sequence(s);
+                }
+                m.release_context(ctx);
+                m.check_invariants()?;
+            }
+            let st = m.stats();
+            if st.used_blocks != 0 || st.contexts != 0 || st.sequences != 0 {
+                return Err(format!("leaked state: {st:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_waves_partition_any_n() {
+    let s = Scheduler::new(SchedulerConfig::default(), vec![1, 2, 4, 8, 16, 32]);
+    forall(
+        "waves-partition",
+        300,
+        |rng| rng.below(500) + 1,
+        |&n| {
+            let waves = s.plan_waves(n);
+            let total: usize = waves.iter().map(|w| w.live).sum();
+            if total != n {
+                return Err(format!("waves cover {total} != n {n}"));
+            }
+            for w in &waves {
+                if w.live > w.bucket {
+                    return Err(format!("overfull wave {w:?}"));
+                }
+            }
+            // padding waste bounded: only the final wave may be padded
+            let padded = waves.iter().filter(|w| w.live < w.bucket).count();
+            if padded > 1 {
+                return Err(format!("{padded} padded waves"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sampler_respects_max_tokens_and_stop() {
+    forall(
+        "sampler-bounds",
+        80,
+        |rng| {
+            (
+                rng.below(8) + 1,          // b
+                rng.below(6) + 1,          // max_tokens
+                rng.next_u64(),            // seed
+                rng.below(2) == 0,         // with stop token
+            )
+        },
+        |&(b, max_tokens, seed, with_stop)| {
+            let vocab = 16;
+            let params = SamplingParams {
+                n: b,
+                temperature: 1.0,
+                top_p: 1.0,
+                max_tokens,
+                stop_token: if with_stop { Some(3) } else { None },
+                seed,
+            };
+            let mut sb = SamplerBatch::new(b, params, vocab, seed);
+            let mut rng = Pcg::new(seed);
+            let logits: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
+            sb.first_tokens(&logits);
+            let mut guard = 0;
+            while !sb.all_finished() {
+                let step_logits: Vec<f32> = (0..vocab * b).map(|_| rng.f32()).collect();
+                sb.step(&step_logits);
+                guard += 1;
+                if guard > max_tokens + 2 {
+                    return Err("sampler failed to terminate".into());
+                }
+            }
+            let comps = sb.into_completions(|_| String::new());
+            for c in &comps {
+                if c.tokens.len() > max_tokens {
+                    return Err(format!("{} tokens > max {max_tokens}", c.tokens.len()));
+                }
+                if c.finished_by_stop && *c.tokens.last().unwrap() != 3 {
+                    return Err("stop-flag without stop token".into());
+                }
+                if !c.mean_logp().is_finite() {
+                    return Err("non-finite logp".into());
+                }
+                if c.mean_logp() > 0.0 {
+                    return Err(format!("positive mean logp {}", c.mean_logp()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pass_at_k_bounds_and_monotonicity() {
+    forall(
+        "pass@k-bounds",
+        500,
+        |rng| {
+            let n = rng.below(40) + 1;
+            let c = rng.below(n + 1);
+            let k = rng.below(n) + 1;
+            (n, c, k)
+        },
+        |&(n, c, k)| {
+            let p = pass_at_k(n, c, k);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("p={p} out of range"));
+            }
+            if c > 0 && k < n {
+                let p2 = pass_at_k(n, c, k + 1);
+                if p2 + 1e-12 < p {
+                    return Err(format!("not monotone in k: {p} -> {p2}"));
+                }
+            }
+            if c < n {
+                let p3 = pass_at_k(n, c + 1, k);
+                if p3 + 1e-12 < p {
+                    return Err(format!("not monotone in c: {p} -> {p3}"));
+                }
+            }
+            // pass@n with any correct == 1
+            if c > 0 && (pass_at_k(n, c, n) - 1.0).abs() > 1e-12 {
+                return Err("pass@n != 1 with c>0".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reranker_output_sorted_unique_bounded() {
+    forall(
+        "reranker-invariants",
+        200,
+        |rng| {
+            let n = rng.below(30) + 1;
+            let comps: Vec<(usize, f64, usize)> = (0..n)
+                .map(|_| (rng.below(8), -(rng.f64() * 5.0), rng.below(6) + 1))
+                .collect();
+            let k = rng.below(6) + 1;
+            (comps, k)
+        },
+        |(comps, k)| {
+            let completions: Vec<Completion> = comps
+                .iter()
+                .map(|&(text_id, logp, len)| Completion {
+                    text: format!("t{text_id};"),
+                    tokens: vec![2; len],
+                    sum_logp: logp * len as f64,
+                    finished_by_stop: true,
+                })
+                .collect();
+            let top = rerank_top_k(&completions, *k);
+            if top.len() > *k {
+                return Err("more than k results".into());
+            }
+            let texts: std::collections::BTreeSet<_> = top.iter().map(|c| &c.text).collect();
+            if texts.len() != top.len() {
+                return Err("duplicates in output".into());
+            }
+            for w in top.windows(2) {
+                if w[0].mean_logp() < w[1].mean_logp() - 1e-12 {
+                    return Err("not sorted by mean_logp desc".into());
+                }
+            }
+            // best item is the global max over the deduped set
+            if let Some(first) = top.first() {
+                let global = completions
+                    .iter()
+                    .map(|c| c.mean_logp())
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if first.mean_logp() + 1e-12 < global {
+                    return Err("top-1 is not the argmax".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bifurcated_io_dominates_fused() {
+    // Eq. 5 >= Eq. 6 for every shape; equality iff b == 1 or m_c == 0.
+    forall(
+        "eq5-dominates-eq6",
+        500,
+        |rng| {
+            (
+                rng.below(256) + 1,
+                rng.below(16) + 1,
+                [8, 16, 32, 64, 128][rng.below(5)],
+                rng.below(20_000),
+                rng.below(512),
+            )
+        },
+        |&(b, g, k, mc, md)| {
+            let fused = kv_io_fused(b, g, k, mc, md);
+            let bif = kv_io_bifurcated(b, g, k, mc, md);
+            if bif > fused {
+                return Err(format!("bifurcated {bif} > fused {fused}"));
+            }
+            let expect_equal = b == 1 || mc == 0;
+            if expect_equal && bif != fused {
+                return Err("should be equal at b=1 or mc=0".into());
+            }
+            if !expect_equal && md > 0 && bif == fused && mc > 0 {
+                return Err("strict improvement expected".into());
+            }
+            Ok(())
+        },
+    );
+}
