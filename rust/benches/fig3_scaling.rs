@@ -1,11 +1,40 @@
 //! Fig 3 / Fig 9: validation loss vs model size for MH / MG / MQ (plus the
 //! 2d-FFN ablation), from the rust-driven training runs.
 //!
-//! Reads artifacts/scaling/runs.json (produced by `repro train-scaling`);
-//! if missing, trains a reduced grid inline (slow on one core).
+//! Reads artifacts/scaling/runs.json (produced by `repro train-scaling`
+//! on a `--features pjrt` build); on pjrt builds a missing file trains a
+//! reduced grid inline (slow on one core). Default builds report the
+//! cached runs only — training requires the AOT train_step artifacts.
 
 use bifurcated_attn::bench::{bench_main, Cell, Table};
-use bifurcated_attn::scaling::{analyze, load_runs, train_all, TrainConfig};
+use bifurcated_attn::scaling::{analyze, load_runs, TrainRun};
+
+#[cfg(feature = "pjrt")]
+fn train_inline(quick: bool) -> Vec<TrainRun> {
+    use bifurcated_attn::scaling::{train_all, TrainConfig};
+    eprintln!("[fig3] no cached runs — training a reduced grid inline");
+    let man = bifurcated_attn::runtime::Manifest::load(
+        &bifurcated_attn::runtime::Manifest::default_root(),
+    )
+    .expect("run `make artifacts`");
+    let client = bifurcated_attn::runtime::cpu_client().unwrap();
+    let cfg = TrainConfig {
+        steps: if quick { 60 } else { 200 },
+        eval_every: 50,
+        ..Default::default()
+    };
+    let filter = if quick { Some("s0") } else { None };
+    train_all(&man, &client, &cfg, filter).expect("training")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn train_inline(_quick: bool) -> Vec<TrainRun> {
+    eprintln!(
+        "[fig3] no cached runs.json and no pjrt feature — emitting empty tables \
+         (run `repro train-scaling` on a --features pjrt build first)"
+    );
+    Vec::new()
+}
 
 fn main() {
     bench_main("fig3_scaling", |quick| {
@@ -13,26 +42,17 @@ fn main() {
         let runs = if path.exists() {
             load_runs(&path).expect("parse runs.json")
         } else {
-            eprintln!("[fig3] no cached runs — training a reduced grid inline");
-            let man = bifurcated_attn::runtime::Manifest::load(
-                &bifurcated_attn::runtime::Manifest::default_root(),
-            )
-            .expect("run `make artifacts`");
-            let client = bifurcated_attn::runtime::cpu_client().unwrap();
-            let cfg = TrainConfig {
-                steps: if quick { 60 } else { 200 },
-                eval_every: 50,
-                ..Default::default()
-            };
-            let filter = if quick { Some("s0") } else { None };
-            train_all(&man, &client, &cfg, filter).expect("training")
+            train_inline(quick)
         };
 
         let mut t = Table::new(
             "Fig 3 — validation loss vs model size (synthetic corpus, rust-driven)",
             &["model", "attention", "g", "params", "ffn", "val loss"],
         )
-        .with_note("measured (CPU PJRT training); ordering/fit shape is the claim");
+        .with_note(
+            "from rust-driven training runs (runs.json, or inline on pjrt builds); \
+             ordering/fit shape is the claim — empty if no runs are available",
+        );
         let mut sorted = runs.clone();
         sorted.sort_by_key(|r| (r.param_count, r.g));
         for r in &sorted {

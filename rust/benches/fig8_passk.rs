@@ -1,28 +1,32 @@
-//! Fig 8 / Fig 10: pass@n and pass@top3 vs end-to-end latency on the real
-//! engine (pico models; measured CPU-PJRT latency) — more samples under a
-//! ~flat latency budget raise accuracy. Runs both the MH and MQ pico
-//! variants, mirroring the paper's CodeGen (MH) / StarCoder (MQ) panels.
+//! Fig 8 / Fig 10 harness shape: pass@n and pass@top3 vs end-to-end
+//! latency on the real engine — more samples under a ~flat latency budget.
+//! Runs both the MH and MQ pico variants, mirroring the paper's CodeGen
+//! (MH) / StarCoder (MQ) panels.
+//!
+//! Default builds use the native backend, whose weights are untrained:
+//! the *latency* columns are real measurements, the *accuracy* columns
+//! reflect chance and only become meaningful with trained pjrt artifacts
+//! (see tests/integration_engine.rs on a `--features pjrt` build).
 
 use bifurcated_attn::bench::{bench_main, Cell, Table};
 use bifurcated_attn::coordinator::{Engine, EngineConfig};
 use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
-use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
 
 fn main() {
     bench_main("fig8_passk", |quick| {
-        let man = Manifest::load(&Manifest::default_root()).expect("run `make artifacts`");
-        let client = cpu_client().unwrap();
         let n_tasks = if quick { 6 } else { 16 };
         let ns: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
         let mut tables = Vec::new();
         for model in ["pico-mq", "pico-mh"] {
-            let rt = ModelRuntime::load(&man, &client, model).unwrap();
-            let engine = Engine::new(&man, rt, EngineConfig::default());
+            let engine = Engine::native(model, 0, EngineConfig::default()).unwrap();
             let mut t = Table::new(
-                &format!("Fig 8 — pass@n / pass@top3 vs latency, {model} (measured CPU)"),
+                &format!("Fig 8 — pass@n / pass@top3 vs latency, {model} (native CPU)"),
                 &["n", "pass@1", "pass@n", "pass@top3", "latency ms", "prefill ms", "ms/step", "mode"],
             )
-            .with_note("one request of n parallel samples per task; latency = prefill + batched decode");
+            .with_note(
+                "one request of n parallel samples per task; latency = prefill + batched decode. \
+                 native weights are untrained: latency columns are real, accuracy is chance-level",
+            );
             for &n in ns {
                 let cfg = SuiteConfig { n_tasks, n_samples: n, seed: 7, ..Default::default() };
                 let res = run_suite(&engine, &cfg).expect("suite");

@@ -1,34 +1,34 @@
-//! Measured CPU-PJRT micro-benchmarks: real per-step decode latency of the
-//! bifurcated vs fused executables across batch buckets (the end-to-end
-//! exactness + trend evidence on this testbed), plus prefill latency and
-//! the host->device upload volumes (Eq. 5 vs Eq. 6 made measurable).
+//! Measured CPU micro-benchmarks on the native backend: real per-step
+//! decode latency of the bifurcated vs fused implementations across batch
+//! buckets (the end-to-end exactness + trend evidence on this testbed),
+//! plus prefill latency and the context upload volumes (Eq. 5 vs Eq. 6
+//! made measurable). Runs with no artifacts; a `--features pjrt` build
+//! measures the PJRT executables via tests/integration_* instead.
 
 use bifurcated_attn::bench::{bench_main, Bencher, Cell, Table};
-use bifurcated_attn::runtime::models::DecodeMode;
-use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::{Backend, ContextView, DecodeMode, NativeBackend};
 
 fn main() {
     bench_main("microbench_runtime", |quick| {
-        let man = Manifest::load(&Manifest::default_root()).expect("run `make artifacts`");
-        let client = cpu_client().unwrap();
         let buckets: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
         let mut tables = Vec::new();
         for model in ["pico-mh", "pico-mq"] {
-            let rt = ModelRuntime::load(&man, &client, model).unwrap();
+            let rt = NativeBackend::preset(model, 0).unwrap();
             rt.warm(&[DecodeMode::Bifurcated, DecodeMode::Fused], buckets).unwrap();
 
             let prompt: Vec<i32> = {
-                let mut ids = vec![man.tokenizer.bos];
-                ids.extend(man.tokenizer.encode("10+2=12;11+3=14;12+4=16;5+6=11;7+8=").unwrap());
+                let mut ids = vec![corpus::BOS];
+                ids.extend(corpus::encode("10+2=12;11+3=14;12+4=16;5+6=11;7+8="));
                 ids
             };
             let pre = rt.prefill(&prompt).unwrap();
 
             let mut t = Table::new(
-                &format!("Measured decode step latency, {model} (CPU PJRT, f32)"),
+                &format!("Measured decode step latency, {model} (native CPU, f32)"),
                 &["b", "fused ms/step", "bifurcated ms/step", "speedup", "fused ctx upload B", "bif ctx upload B"],
             )
-            .with_note("real executables; pico-scale — trends, not paper magnitudes");
+            .with_note("real forward passes; pico-scale — trends, not paper magnitudes");
             for &b in buckets {
                 let bench = if quick { Bencher::quick("step") } else { Bencher::new("step") };
                 // bifurcated: shared context resident once
@@ -50,8 +50,8 @@ fn main() {
                     Cell::Ms(s_fus.p50),
                     Cell::Ms(s_bif.p50),
                     Cell::Num((s_fus.p50 / s_bif.p50 * 100.0).round() / 100.0),
-                    Cell::Num(ctx_f.bytes as f64),
-                    Cell::Num(ctx_b.bytes as f64),
+                    Cell::Num(ctx_f.bytes() as f64),
+                    Cell::Num(ctx_b.bytes() as f64),
                 ]);
             }
             tables.push(t);
@@ -61,11 +61,11 @@ fn main() {
                 rt.prefill(&prompt).unwrap();
             });
             let mut p = Table::new(
-                &format!("Measured prefill latency, {model}"),
+                &format!("Measured prefill latency, {model} (native CPU)"),
                 &["m_c (padded)", "p50 ms", "p90 ms"],
             );
             p.row(vec![
-                Cell::Num(rt.cfg.m_c_max as f64),
+                Cell::Num(rt.cfg().m_c_max as f64),
                 Cell::Ms(s.p50),
                 Cell::Ms(s.p90),
             ]);

@@ -2,14 +2,20 @@
 //! waves over the shared context — the paper's single-context batch
 //! sampling (Fig. 1, right) with the bifurcated decode step as a
 //! first-class scheduling choice.
+//!
+//! The engine is generic over [`Backend`], so the same scheduling, KV
+//! accounting, and sampling logic drives both the native CPU backend and
+//! the PJRT artifact runtime.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::kvcache::manager::KvManager;
-use crate::runtime::models::{ContextHandle, DecodeMode, ModelRuntime};
-use crate::runtime::Manifest;
+use crate::runtime::backend::Backend;
+use crate::runtime::models::DecodeMode;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::TokenizerInfo;
 
 use super::request::{Completion, GenerationRequest, RequestResult, Timing};
 use super::sampler::SamplerBatch;
@@ -34,25 +40,34 @@ impl Default for EngineConfig {
     }
 }
 
-pub struct Engine {
-    pub rt: ModelRuntime,
-    pub tokenizer: crate::runtime::TokenizerInfo,
+pub struct Engine<B: Backend> {
+    pub rt: B,
+    pub tokenizer: TokenizerInfo,
     pub scheduler: Scheduler,
     pub kv: std::cell::RefCell<KvManager>,
     pub metrics: super::metrics::Metrics,
 }
 
-impl Engine {
-    pub fn new(manifest: &Manifest, rt: ModelRuntime, cfg: EngineConfig) -> Engine {
+impl Engine<NativeBackend> {
+    /// Build a native-backend engine for a preset model (`pico-mh`,
+    /// `pico-mg`, `pico-mq`) — no artifacts, no Python, no XLA.
+    pub fn native(model: &str, weight_seed: u64, cfg: EngineConfig) -> Result<Engine<NativeBackend>> {
+        let be = NativeBackend::preset(model, weight_seed)?;
+        Ok(Engine::new(TokenizerInfo::builtin(), be, cfg))
+    }
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(tokenizer: TokenizerInfo, rt: B, cfg: EngineConfig) -> Engine<B> {
         let kv = KvManager::new(
             cfg.kv_capacity_bytes,
-            rt.cfg.kv_bytes_per_token(),
+            rt.cfg().kv_bytes_per_token(),
             cfg.block_tokens,
         );
-        let scheduler = Scheduler::new(cfg.scheduler, manifest.batch_buckets.clone());
+        let scheduler = Scheduler::new(cfg.scheduler, rt.buckets().to_vec());
         Engine {
             rt,
-            tokenizer: manifest.tokenizer.clone(),
+            tokenizer,
             scheduler,
             kv: std::cell::RefCell::new(kv),
             metrics: super::metrics::Metrics::default(),
@@ -63,10 +78,10 @@ impl Engine {
         let mut ids = vec![self.tokenizer.bos];
         ids.extend(self.tokenizer.encode(prompt)?);
         anyhow::ensure!(
-            ids.len() <= self.rt.cfg.m_c_max,
+            ids.len() <= self.rt.cfg().m_c_max,
             "prompt of {} tokens exceeds context capacity {}",
             ids.len(),
-            self.rt.cfg.m_c_max
+            self.rt.cfg().m_c_max
         );
         Ok(ids)
     }
@@ -76,7 +91,8 @@ impl Engine {
     pub fn generate(&self, req: &GenerationRequest) -> Result<RequestResult> {
         let params = &req.params;
         anyhow::ensure!(params.n >= 1, "n must be >= 1");
-        let max_tokens = params.max_tokens.min(self.rt.cfg.m_d_max);
+        let vocab = self.rt.cfg().vocab;
+        let max_tokens = params.max_tokens.min(self.rt.cfg().m_d_max);
         let prompt_ids = self.tokenize_prompt(&req.prompt)?;
         let m_c_len = prompt_ids.len();
 
@@ -96,13 +112,21 @@ impl Engine {
             .register_context(m_c_len, mode, params.n)
             .map_err(|e| anyhow::anyhow!("KV capacity: {e}"))?;
 
-        let upload_before = self.rt.upload_bytes.get();
+        let upload_before = self.rt.upload_bytes();
         let t1 = Instant::now();
 
         // context upload: shared tensors once for bifurcated; the fused
         // baseline re-materializes the broadcast per wave bucket size.
-        let shared_ctx: Option<ContextHandle> = if mode == DecodeMode::Bifurcated {
-            Some(self.rt.upload_context(&pre.kc, &pre.vc, m_c_len)?)
+        // A failed upload must release the registration like every other
+        // error exit below — the capacity accounting can't leak.
+        let shared_ctx: Option<B::Ctx> = if mode == DecodeMode::Bifurcated {
+            match self.rt.upload_context(&pre.kc, &pre.vc, m_c_len) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    self.kv.borrow_mut().release_context(ctx_id);
+                    return Err(e);
+                }
+            }
         } else {
             None
         };
@@ -111,12 +135,18 @@ impl Engine {
         let mut decode_steps = 0usize;
         for (wi, wave) in waves.iter().enumerate() {
             let ctx_storage; // keep fused uploads alive through the wave
-            let ctx: &ContextHandle = match &shared_ctx {
+            let ctx: &B::Ctx = match &shared_ctx {
                 Some(c) => c,
                 None => {
                     let kc_rep = pre.kc.broadcast_at(1, wave.bucket);
                     let vc_rep = pre.vc.broadcast_at(1, wave.bucket);
-                    ctx_storage = self.rt.upload_context(&kc_rep, &vc_rep, m_c_len)?;
+                    ctx_storage = match self.rt.upload_context(&kc_rep, &vc_rep, m_c_len) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            self.kv.borrow_mut().release_context(ctx_id);
+                            return Err(e);
+                        }
+                    };
                     &ctx_storage
                 }
             };
@@ -143,7 +173,7 @@ impl Engine {
             let mut sampler = SamplerBatch::new(
                 wave.live,
                 super::request::SamplingParams { max_tokens, ..params.clone() },
-                self.rt.cfg.vocab,
+                vocab,
                 req.id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64),
             );
             let mut tokens = sampler.first_tokens(&pre.logits);
@@ -155,7 +185,7 @@ impl Engine {
                         .rt
                         .decode(mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
                         .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
-                    let live_logits = &out.logits.f32s()[..wave.live * self.rt.cfg.vocab];
+                    let live_logits = &out.logits.f32s()[..wave.live * vocab];
                     tokens = sampler.step(live_logits);
                     kd = out.kd;
                     vd = out.vd;
@@ -184,7 +214,7 @@ impl Engine {
             decode_ms,
             decode_steps,
             waves: waves.len(),
-            upload_bytes: self.rt.upload_bytes.get() - upload_before,
+            upload_bytes: self.rt.upload_bytes() - upload_before,
         };
         self.metrics.observe_request(&timing, completions.len());
 
@@ -192,6 +222,7 @@ impl Engine {
     }
 }
 
-// Unit coverage for Engine requires PJRT + artifacts; see
-// tests/integration_engine.rs. The pure pieces (scheduler, sampler,
-// ranker, kv manager) are unit-tested in their own modules.
+// Engine-over-native coverage lives in tests/parity_native.rs; the PJRT
+// path is exercised by tests/integration_engine.rs (pjrt feature). The
+// pure pieces (scheduler, sampler, ranker, kv manager) are unit-tested in
+// their own modules.

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::coordinator::{rerank_top_k, Engine, GenerationRequest, SamplingParams};
 use crate::corpus::{self, Task};
+use crate::runtime::Backend;
 use crate::util::prng::Pcg;
 
 pub use passk::pass_at_k;
@@ -61,7 +62,7 @@ pub fn make_suite(cfg: &SuiteConfig) -> Vec<Task> {
 
 /// Run the suite through the engine: one request of n parallel samples per
 /// task (the single-context batch-sampling scenario).
-pub fn run_suite(engine: &Engine, cfg: &SuiteConfig) -> Result<SuiteResult> {
+pub fn run_suite<B: Backend>(engine: &Engine<B>, cfg: &SuiteConfig) -> Result<SuiteResult> {
     let tasks = make_suite(cfg);
     let n = cfg.n_samples;
     let mut correct_counts = Vec::with_capacity(tasks.len());
@@ -130,5 +131,6 @@ mod tests {
         }
     }
 
-    // run_suite needs PJRT + artifacts: tests/integration_engine.rs.
+    // run_suite over the native backend: tests/parity_native.rs; over
+    // PJRT + artifacts: tests/integration_engine.rs (pjrt feature).
 }

@@ -1,11 +1,22 @@
 //! `bifurcated-attn` — reproduction of "Bifurcated Attention: Accelerating
 //! Massively Parallel Decoding with Shared Prefixes in LLMs" (ICML 2024).
 //!
-//! Three-layer stack: Pallas kernels (L1) and a JAX multi-group transformer
-//! (L2) are AOT-lowered to HLO text at build time; this crate (L3) is the
-//! serving coordinator — it loads the artifacts via PJRT, schedules
-//! single-context batch sampling with a shared-prefix KV cache, and hosts
-//! the memory-IO simulator that regenerates the paper's tables and figures.
+//! The serving coordinator schedules single-context batch sampling with a
+//! shared-prefix KV cache, and hosts the memory-IO simulator that
+//! regenerates the paper's tables and figures. It is generic over
+//! [`runtime::Backend`], with two implementations:
+//!
+//! * **native** (default) — a pure-Rust CPU multi-group transformer
+//!   ([`runtime::native`]) with deterministic weight init; builds and
+//!   tests with no Python, XLA, PJRT, or artifacts. Both decode
+//!   formulations (bifurcated, Eq. 3–4, and the fused baseline) are
+//!   implemented as separate code paths and proven numerically identical
+//!   in `tests/parity_native.rs` — the paper's exactness claim as a test.
+//! * **pjrt** (`--features pjrt`) — the original three-layer stack:
+//!   Pallas kernels (L1) and a JAX multi-group transformer (L2) are
+//!   AOT-lowered to HLO text at build time (`make artifacts`), and this
+//!   crate executes them via PJRT with device-resident weights. Requires
+//!   a vendored `xla` crate.
 
 pub mod attention;
 pub mod bench;

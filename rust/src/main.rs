@@ -1,15 +1,18 @@
 //! `repro` — the leader binary: serving, generation, simulation, and the
-//! paper's experiment drivers, all from the AOT artifacts (python never
-//! runs at request time).
+//! paper's experiment drivers.
+//!
+//! The default build runs everything on the pure-Rust native backend (no
+//! Python, no XLA, no artifacts). Building with `--features pjrt` adds
+//! `--backend pjrt`, which loads the AOT artifacts via PJRT instead.
 //!
 //! Subcommands:
 //!   serve          HTTP serving API (single-context batch sampling)
 //!   generate       one-shot generation from the CLI
 //!   simulate       one simulated decode cell (model x hardware x impl)
 //!   tables         regenerate all modeled paper tables to stdout
-//!   train-scaling  rust-driven scaling-law training runs (Fig 3/9)
+//!   train-scaling  rust-driven scaling-law training runs (pjrt builds)
 //!   eval-passk     pass@n / pass@top3 suite on the real engine (Fig 8)
-//!   info           artifact/manifest summary
+//!   info           backend/model summary
 
 use anyhow::{Context, Result};
 
@@ -19,8 +22,7 @@ use bifurcated_attn::coordinator::{
 };
 use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
 use bifurcated_attn::runtime::models::DecodeMode;
-use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
-use bifurcated_attn::scaling::{analyze, train_all, TrainConfig};
+use bifurcated_attn::runtime::{Backend, NativeBackend};
 use bifurcated_attn::simulator::sweep;
 use bifurcated_attn::simulator::{TABLE6_COLUMNS, TABLE7_COLUMNS};
 use bifurcated_attn::util::cli::Args;
@@ -54,19 +56,44 @@ fn print_usage() {
     println!(
         "repro — bifurcated attention reproduction (ICML 2024)\n\n\
          USAGE: repro <subcommand> [options]\n\n\
-         serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
-         generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
+         serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused] [--backend native|pjrt]\n\
+         generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
          tables         [--hw h100]            (all modeled paper tables)\n\
-         train-scaling  --out artifacts/scaling [--steps 300] [--filter s0]\n\
-         eval-passk     --model pico-mq --tasks 20 --n 8\n\
+         train-scaling  --out artifacts/scaling [--steps 300] [--filter s0]   (pjrt builds)\n\
+         eval-passk     --model pico-mq --tasks 20 --n 8 [--backend ...]\n\
          info\n\n\
-         Artifacts root: $ARTIFACTS_DIR or ./artifacts (run `make artifacts`)."
+         Backend: native (default; pure Rust, no artifacts) or pjrt\n\
+         (`--features pjrt` build + `make artifacts`, root $ARTIFACTS_DIR or ./artifacts)."
     );
 }
 
-fn manifest() -> Result<Manifest> {
-    Manifest::load(&Manifest::default_root())
+enum BackendKind {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.str_or("backend", "native").as_str() {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" => pjrt_kind(),
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_kind() -> Result<BackendKind> {
+    Ok(BackendKind::Pjrt)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_kind() -> Result<BackendKind> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature; add a vendored `xla` \
+         dependency to rust/Cargo.toml, run `make artifacts`, then rebuild with \
+         `--features pjrt` (see README.md)"
+    )
 }
 
 fn engine_config(args: &Args) -> EngineConfig {
@@ -79,26 +106,45 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg
 }
 
+fn native_engine(args: &Args, model: &str) -> Result<Engine<NativeBackend>> {
+    Engine::native(model, args.usize_or("weight-seed", 0) as u64, engine_config(args))
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(
+    args: &Args,
+    model: &str,
+) -> Result<Engine<bifurcated_attn::runtime::ModelRuntime>> {
+    use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
+    let man = Manifest::load(&Manifest::default_root())?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&man, &client, model)?;
+    Ok(Engine::new(man.tokenizer.clone(), rt, engine_config(args)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "pico-mq");
     let addr = args.str_or("addr", "127.0.0.1:8077");
-    let client = bifurcated_attn::server::spawn_engine(
-        Manifest::default_root(),
-        model.clone(),
-        engine_config(args),
-    )?;
+    let client = match backend_kind(args)? {
+        BackendKind::Native => bifurcated_attn::server::spawn_native_engine(
+            model.clone(),
+            args.usize_or("weight-seed", 0) as u64,
+            engine_config(args),
+        )?,
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => bifurcated_attn::server::spawn_engine(
+            bifurcated_attn::runtime::Manifest::default_root(),
+            model.clone(),
+            engine_config(args),
+        )?,
+    };
     info!("serving {model} on http://{addr}  (POST /generate, GET /health, GET /metrics)");
     bifurcated_attn::server::build_server(client)
         .serve(&addr, args.usize_or("workers", 4), None)
         .context("http serve")
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let man = manifest()?;
-    let client = cpu_client()?;
-    let model = args.str_or("model", "pico-mq");
-    let rt = ModelRuntime::load(&man, &client, &model)?;
-    let engine = Engine::new(&man, rt, engine_config(args));
+fn run_generate<B: Backend>(engine: &Engine<B>, args: &Args) -> Result<()> {
     let req = GenerationRequest {
         id: 1,
         prompt: args.str_or("prompt", "7+8="),
@@ -113,7 +159,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     };
     let res = engine.generate(&req)?;
     println!(
-        "mode={} prefill={:.1}ms decode={:.1}ms ({} steps, {} waves)",
+        "backend={} mode={} prefill={:.1}ms decode={:.1}ms ({} steps, {} waves)",
+        engine.rt.name(),
         res.mode_used,
         res.timing.prefill_ms,
         res.timing.decode_ms,
@@ -126,6 +173,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let top = bifurcated_attn::coordinator::rerank_top_k(&res.completions, 3);
     println!("top-3 by mean log-p: {:?}", top.iter().map(|c| c.text.as_str()).collect::<Vec<_>>());
     Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "pico-mq");
+    match backend_kind(args)? {
+        BackendKind::Native => run_generate(&native_engine(args, &model)?, args),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => run_generate(&pjrt_engine(args, &model)?, args),
+    }
 }
 
 fn hw_by_name(name: &str) -> bifurcated_attn::attention::Hardware {
@@ -194,8 +250,11 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train_scaling(args: &Args) -> Result<()> {
-    let man = manifest()?;
+    use bifurcated_attn::runtime::{cpu_client, Manifest};
+    use bifurcated_attn::scaling::{analyze, train_all, TrainConfig};
+    let man = Manifest::load(&Manifest::default_root())?;
     let client = cpu_client()?;
     let cfg = TrainConfig {
         steps: args.usize_or("steps", 300),
@@ -227,21 +286,26 @@ fn cmd_train_scaling(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval_passk(args: &Args) -> Result<()> {
-    let man = manifest()?;
-    let client = cpu_client()?;
-    let model = args.str_or("model", "pico-mq");
-    let rt = ModelRuntime::load(&man, &client, &model)?;
-    let engine = Engine::new(&man, rt, engine_config(args));
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_scaling(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "train-scaling drives the AOT train_step artifacts and needs a pjrt build: \
+         add a vendored `xla` dependency to rust/Cargo.toml, run `make artifacts`, \
+         then rebuild with `--features pjrt` (see README.md)"
+    )
+}
+
+fn run_eval_passk<B: Backend>(engine: &Engine<B>, args: &Args, model: &str) -> Result<()> {
     let cfg = SuiteConfig {
         n_tasks: args.usize_or("tasks", 20),
         n_samples: args.usize_or("n", 8),
         temperature: args.f64_or("temperature", 0.8) as f32,
         ..Default::default()
     };
-    let res = run_suite(&engine, &cfg)?;
+    let res = run_suite(engine, &cfg)?;
     println!(
-        "{model} ({}): {} tasks x {} samples, mean latency {:.1} ms (prefill {:.1}, {:.2}/step)",
+        "{model} [{}] ({}): {} tasks x {} samples, mean latency {:.1} ms (prefill {:.1}, {:.2}/step)",
+        engine.rt.name(),
         res.mode_used, res.n_tasks, res.n_samples, res.mean_latency_ms, res.mean_prefill_ms, res.mean_per_step_ms
     );
     for k in [1usize, 2, 4, 8, 16, 32] {
@@ -250,26 +314,65 @@ fn cmd_eval_passk(args: &Args) -> Result<()> {
         }
     }
     println!("  pass@top3 (mean-logp rerank) = {:.3}", res.pass_top3);
+    if engine.rt.name() == "native" {
+        println!("  (native weights are untrained; accuracies reflect chance, not the paper)");
+    }
     Ok(())
 }
 
+fn cmd_eval_passk(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "pico-mq");
+    match backend_kind(args)? {
+        BackendKind::Native => run_eval_passk(&native_engine(args, &model)?, args, &model),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => run_eval_passk(&pjrt_engine(args, &model)?, args, &model),
+    }
+}
+
 fn cmd_info(_args: &Args) -> Result<()> {
-    let man = manifest()?;
-    println!("artifacts: {}", man.root.display());
-    println!("batch buckets: {:?}", man.batch_buckets);
-    println!("\nserving models:");
-    for e in &man.serving {
+    println!("native models (default backend; deterministic untrained weights):");
+    for name in ["pico-mh", "pico-mg", "pico-mq"] {
+        let be = NativeBackend::preset(name, 0)?;
+        let c = be.cfg();
         println!(
-            "  {:8} g={} l={} d={} params={:>7}  val_loss={:.3} greedy_acc={:.2}",
-            e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.param_count, e.val_loss, e.greedy_acc
+            "  {:8} {:12} g={} l={} d={} params={:>7}  buckets={:?}",
+            c.name, c.attention_kind, c.g, c.l, c.d, c.param_count, be.buckets()
         );
     }
-    println!("\nscaling models:");
-    for e in &man.scaling {
-        println!(
-            "  {:16} g={} l={} d={} ffn={}d params={:>7}",
-            e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.ffn_mult, e.cfg.param_count
-        );
-    }
+    print_artifacts_info();
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_artifacts_info() {
+    use bifurcated_attn::runtime::Manifest;
+    match Manifest::load(&Manifest::default_root()) {
+        Err(e) => println!("\npjrt artifacts: unavailable ({e:#})"),
+        Ok(man) => {
+            println!("\npjrt artifacts: {}", man.root.display());
+            println!("batch buckets: {:?}", man.batch_buckets);
+            println!("\nserving models:");
+            for e in &man.serving {
+                println!(
+                    "  {:8} g={} l={} d={} params={:>7}  val_loss={:.3} greedy_acc={:.2}",
+                    e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.param_count, e.val_loss, e.greedy_acc
+                );
+            }
+            println!("\nscaling models:");
+            for e in &man.scaling {
+                println!(
+                    "  {:16} g={} l={} d={} ffn={}d params={:>7}",
+                    e.name, e.cfg.g, e.cfg.l, e.cfg.d, e.cfg.ffn_mult, e.cfg.param_count
+                );
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_artifacts_info() {
+    println!(
+        "\npjrt backend: not compiled in (vendor `xla` + `make artifacts` + \
+         `--features pjrt`; see README.md)"
+    );
 }

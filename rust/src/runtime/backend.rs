@@ -1,0 +1,91 @@
+//! The execution-backend abstraction the serving stack is generic over.
+//!
+//! A `Backend` owns a model's weights and implements the three entry points
+//! the coordinator drives: context prefill, context upload, and the
+//! incremental decode step (in either `DecodeMode`). Two implementations
+//! exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure-Rust CPU transformer
+//!   (the default; no Python, no XLA, no artifacts);
+//! * `crate::runtime::models::ModelRuntime` — PJRT execution of AOT-lowered
+//!   HLO artifacts (behind the non-default `pjrt` cargo feature).
+//!
+//! Everything above this trait (engine, scheduler, KV manager, server,
+//! eval harness) is backend-agnostic, so the paper's exactness and
+//! memory-IO claims can be tested without any accelerator runtime.
+
+use anyhow::{Context, Result};
+
+use super::manifest::{select_bucket, ModelCfg};
+use super::models::{DecodeMode, DecodeOut, PrefillOut};
+use super::tensor::HostTensor;
+
+/// What the engine needs to know about an uploaded context: its valid
+/// length and how many bytes the upload charged (Eq. 5 vs Eq. 6 visible).
+pub trait ContextView {
+    fn m_c_len(&self) -> usize;
+    fn bytes(&self) -> usize;
+}
+
+pub trait Backend {
+    /// Backend-resident context KV for one request group (uploaded once
+    /// after prefill, reused every decode step).
+    type Ctx: ContextView;
+
+    /// Short backend identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    fn cfg(&self) -> &ModelCfg;
+
+    /// Batch buckets the decode step supports.
+    fn buckets(&self) -> &[usize];
+
+    /// Smallest supported batch bucket that fits `b` samplers.
+    fn bucket_for(&self, b: usize) -> Result<usize> {
+        select_bucket(self.buckets(), b).with_context(|| {
+            format!("batch {b} exceeds the largest bucket {:?}", self.buckets().last())
+        })
+    }
+
+    /// Context encoding over a (BOS-prefixed) prompt. Returns next-token
+    /// logits at the last valid position plus shared K_c/V_c caches
+    /// shaped `[l, g, m_c_max, k]`.
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut>;
+
+    /// Make context KV resident for a request group. Bifurcated serving
+    /// passes the shared tensors (`[l, g, mc, k]`); the fused baseline
+    /// passes per-row replicas (`[l, b, g, mc, k]`).
+    fn upload_context(&self, kc: &HostTensor, vc: &HostTensor, m_c_len: usize) -> Result<Self::Ctx>;
+
+    /// One incremental decode step for `tokens.len() <= bucket` samplers.
+    /// `kd`/`vd` are the decode caches `[l, bucket, g, m_d_max, k]`; the
+    /// updated caches come back in `DecodeOut`.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        ctx: &Self::Ctx,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut>;
+
+    /// Fresh zero decode caches for a bucket.
+    fn zero_decode_cache(&self, bucket: usize) -> (HostTensor, HostTensor) {
+        let c = self.cfg();
+        let shape = [c.l, bucket, c.g, c.m_d_max, c.k];
+        (HostTensor::zeros_f32(&shape), HostTensor::zeros_f32(&shape))
+    }
+
+    /// Pre-build anything the engine will need (compiled executables for
+    /// PJRT; a no-op for the native backend).
+    fn warm(&self, _modes: &[DecodeMode], _buckets: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Cumulative host→device bytes moved so far — the memory-IO quantity
+    /// the paper reasons about, kept visible for metrics on every backend.
+    fn upload_bytes(&self) -> usize;
+}

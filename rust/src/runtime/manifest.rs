@@ -90,6 +90,30 @@ impl TokenizerInfo {
         })
     }
 
+    /// The built-in arithmetic-grammar tokenizer — identical to the table
+    /// `python/compile/aot.py` writes into `manifest.json` (both sides are
+    /// pinned against `crate::corpus`). Lets the native backend run with
+    /// no artifacts at all.
+    pub fn builtin() -> TokenizerInfo {
+        let mut char_to_id = BTreeMap::new();
+        let mut id_to_char = BTreeMap::new();
+        for c in "0123456789+=;".chars() {
+            let id = crate::corpus::encode_char(c).expect("builtin vocab char");
+            char_to_id.insert(c, id);
+            id_to_char.insert(id, c);
+        }
+        TokenizerInfo {
+            pad: crate::corpus::PAD,
+            bos: crate::corpus::BOS,
+            semicolon: crate::corpus::SEMI,
+            equals: crate::corpus::EQ,
+            vocab_size: crate::corpus::VOCAB_SIZE,
+            max_operand: crate::corpus::MAX_OPERAND,
+            char_to_id,
+            id_to_char,
+        }
+    }
+
     pub fn encode(&self, s: &str) -> Result<Vec<i32>> {
         s.chars()
             .map(|c| {
@@ -299,6 +323,17 @@ mod tests {
         let ids = t.encode("12+7=19;").unwrap();
         assert_eq!(t.decode(&ids), "12+7=19;");
         assert!(t.encode("x").is_err());
+    }
+
+    #[test]
+    fn builtin_tokenizer_matches_corpus() {
+        let t = TokenizerInfo::builtin();
+        assert_eq!(t.vocab_size, crate::corpus::VOCAB_SIZE);
+        let ids = t.encode("12+7=19;").unwrap();
+        assert_eq!(ids, crate::corpus::encode("12+7=19;"));
+        assert_eq!(t.decode(&ids), "12+7=19;");
+        assert!(t.encode("x").is_err());
+        assert_eq!(t.semicolon, crate::corpus::SEMI);
     }
 
     // Full manifest loading is covered by tests/integration_runtime.rs

@@ -1,15 +1,26 @@
-//! Runtime: PJRT client, artifact manifest, executables, tensors.
+//! Runtime: execution backends, host tensors, artifact manifest.
 //!
-//! `compile_hlo` loads `artifacts/hlo/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`), `ModelRuntime` drives prefill/decode with
-//! device-resident weights. Python is never on this path.
+//! The serving stack is generic over [`backend::Backend`]. The default
+//! build ships the pure-Rust [`native::NativeBackend`] (no Python, no XLA,
+//! no artifacts); the PJRT path (`client`, `models::ModelRuntime`) — which
+//! loads `artifacts/hlo/*.hlo.txt` AOT-lowered by `python/compile/aot.py`
+//! and needs a vendored `xla` crate — lives behind the non-default `pjrt`
+//! cargo feature.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod models;
+pub mod native;
 pub mod tensor;
 
+pub use backend::{Backend, ContextView};
+#[cfg(feature = "pjrt")]
 pub use client::{compile_hlo, cpu_client, run_buffers, run_tensors, upload};
 pub use manifest::{Manifest, ModelCfg, ServingEntry, TokenizerInfo};
-pub use models::{ContextHandle, DecodeMode, DecodeOut, ModelRuntime, PrefillOut};
+#[cfg(feature = "pjrt")]
+pub use models::{ContextHandle, ModelRuntime};
+pub use models::{DecodeMode, DecodeOut, PrefillOut};
+pub use native::{NativeBackend, NativeContext};
 pub use tensor::HostTensor;

@@ -1,19 +1,25 @@
-//! Per-variant model runtime: weights resident on device, executables
-//! memoized per (entry, mode, bucket), prefill/decode entry points.
-//!
-//! This is the boundary the coordinator drives. Python never appears here:
-//! the HLO artifacts are self-contained computations and the weights are a
-//! flat f32 bin.
+//! Decode-mode and prefill/decode I/O types (backend-agnostic), plus the
+//! PJRT `ModelRuntime` — weights resident on device, executables memoized
+//! per (entry, mode, bucket) — behind the `pjrt` feature.
 
+use super::tensor::HostTensor;
+
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use super::client::{compile_hlo, run_buffers, upload};
+#[cfg(feature = "pjrt")]
 use super::manifest::{select_bucket, Manifest, ModelCfg, ServingEntry};
-use super::tensor::{load_weights_bin, HostTensor};
+#[cfg(feature = "pjrt")]
+use super::tensor::load_weights_bin;
 
 /// Attention implementation used for the decode step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -57,6 +63,7 @@ pub struct DecodeOut {
 /// Device-resident context KV for one request group (uploaded once after
 /// prefill; reused every decode step — this sharing is what bifurcated
 /// attention exploits).
+#[cfg(feature = "pjrt")]
 pub struct ContextHandle {
     pub kc: xla::PjRtBuffer,
     pub vc: xla::PjRtBuffer,
@@ -64,6 +71,18 @@ pub struct ContextHandle {
     pub bytes: usize,
 }
 
+#[cfg(feature = "pjrt")]
+impl super::backend::ContextView for ContextHandle {
+    fn m_c_len(&self) -> usize {
+        self.m_c_len
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     pub cfg: ModelCfg,
     pub entry: ServingEntry,
@@ -76,6 +95,7 @@ pub struct ModelRuntime {
     pub upload_bytes: std::cell::Cell<usize>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     pub fn load(manifest: &Manifest, client: &xla::PjRtClient, name: &str) -> Result<ModelRuntime> {
         let entry = manifest.serving_entry(name)?.clone();
@@ -237,6 +257,61 @@ impl ModelRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
+impl super::backend::Backend for ModelRuntime {
+    type Ctx = ContextHandle;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn bucket_for(&self, b: usize) -> Result<usize> {
+        ModelRuntime::bucket_for(self, b)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        ModelRuntime::prefill(self, tokens)
+    }
+
+    fn upload_context(&self, kc: &HostTensor, vc: &HostTensor, m_c_len: usize) -> Result<ContextHandle> {
+        ModelRuntime::upload_context(self, kc, vc, m_c_len)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        ctx: &ContextHandle,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        ModelRuntime::decode(self, mode, bucket, tokens, d_pos, ctx, kd, vd)
+    }
+
+    fn zero_decode_cache(&self, bucket: usize) -> (HostTensor, HostTensor) {
+        ModelRuntime::zero_decode_cache(self, bucket)
+    }
+
+    fn warm(&self, modes: &[DecodeMode], buckets: &[usize]) -> Result<()> {
+        ModelRuntime::warm(self, modes, buckets)
+    }
+
+    fn upload_bytes(&self) -> usize {
+        self.upload_bytes.get()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,5 +324,6 @@ mod tests {
     }
 
     // ModelRuntime round-trips require PJRT + artifacts: see
-    // tests/integration_runtime.rs and tests/integration_engine.rs.
+    // tests/integration_runtime.rs and tests/integration_engine.rs
+    // (both behind the `pjrt` feature).
 }

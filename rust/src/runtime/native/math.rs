@@ -1,0 +1,148 @@
+//! Dense math primitives for the native CPU backend (substrate — no BLAS
+//! in the offline registry). Row-major f32 throughout; shapes are passed
+//! explicitly and asserted so shape bugs fail loudly at the call site.
+
+/// `y[m, n] = x[m, kk] @ w[kk, n]` (row-major). The k-inner loop is written
+/// as an axpy over output rows so the compiler can vectorize the `n` axis.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * kk, "matmul lhs shape");
+    assert_eq!(w.len(), kk * n, "matmul rhs shape");
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xrow = &x[i * kk..(i + 1) * kk];
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for (c, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[c * n..(c + 1) * n];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// Add a bias row `b[n]` to every row of `y[m, n]`.
+pub fn add_bias(y: &mut [f32], b: &[f32]) {
+    let n = b.len();
+    assert!(n > 0 && y.len() % n == 0, "bias shape");
+    for row in y.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+}
+
+/// LayerNorm over the last axis: rows of width `d`, learned scale/bias.
+/// Matches the JAX reference: biased variance, eps inside the rsqrt.
+pub fn layer_norm(x: &[f32], s: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    const EPS: f32 = 1e-5;
+    assert_eq!(s.len(), d);
+    assert_eq!(b.len(), d);
+    assert!(x.len() % d == 0, "layer_norm shape");
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for ((o, &v), (&sv, &bv)) in orow.iter_mut().zip(row).zip(s.iter().zip(b)) {
+            *o = (v - mean) * inv * sv + bv;
+        }
+    }
+    out
+}
+
+/// GELU, tanh approximation (`jax.nn.gelu` default).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_inplace(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = gelu(*x);
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `acc += w * row` (the weighted value accumulation of attention).
+pub fn axpy(acc: &mut [f32], w: f32, row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    for (a, &r) in acc.iter_mut().zip(row) {
+        *a += w * r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known_values() {
+        // [2x3] @ [3x2]
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let y = matmul(&x, &w, 2, 3, 2);
+        assert_eq!(y, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = [1.5, -2.0, 0.25, 3.0];
+        let id = [1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&x, &id, 2, 2, 2), x.to_vec());
+    }
+
+    #[test]
+    fn bias_broadcasts_per_row() {
+        let mut y = vec![0.0, 0.0, 1.0, 1.0];
+        add_bias(&mut y, &[10.0, 20.0]);
+        assert_eq!(y, vec![10.0, 20.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let d = 8;
+        let x: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let s = vec![1.0; d];
+        let b = vec![0.0; d];
+        let y = layer_norm(&x, &s, &b, d);
+        let mean = y.iter().sum::<f32>() / d as f32;
+        let var = y.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        assert!(mean.abs() < 1e-5, "mean={mean}");
+        assert!((var - 1.0).abs() < 1e-3, "var={var}");
+    }
+
+    #[test]
+    fn layer_norm_applies_scale_and_bias() {
+        let x = [2.0, 4.0];
+        let y = layer_norm(&x, &[3.0, 3.0], &[1.0, 1.0], 2);
+        // normalized row is [-1, 1] (up to eps), scaled to [-3, 3], shifted
+        assert!((y[0] + 2.0).abs() < 1e-2, "{y:?}");
+        assert!((y[1] - 4.0).abs() < 1e-2, "{y:?}");
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // large |x|: identity / zero asymptotes
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        let mut acc = vec![1.0, 1.0];
+        axpy(&mut acc, 2.0, &[3.0, 4.0]);
+        assert_eq!(acc, vec![7.0, 9.0]);
+    }
+}

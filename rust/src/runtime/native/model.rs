@@ -1,0 +1,618 @@
+//! The native multi-group transformer: deterministic weight init plus the
+//! prefill and incremental-decode forward passes.
+//!
+//! Mirrors `python/compile/model.py` exactly in architecture and layout
+//! (GPT-style blocks, generalized multi-group attention with `g` KV groups
+//! shared across `h = g·p` query heads, `bgpnk` head ordering, tanh-GELU
+//! MLP, learned positions) so the HLO artifacts and the native backend are
+//! two implementations of the same model family. Weights are initialized
+//! GPT-2-style (normal σ=0.02, residual projections scaled by 1/√(2l))
+//! from [`crate::util::prng::Pcg`], so no Python artifacts are needed.
+//!
+//! The decode step implements both attention formulations under test:
+//!
+//! * [`DecodeMode::Bifurcated`] — paper Eq. 3–4: one dot-product sweep over
+//!   the *shared* context K_c/V_c, one over the per-sampler decode K_d/V_d,
+//!   and a softmax recombined across the two partitions (max joined by
+//!   `max`, numerators/denominators joined by `+`);
+//! * [`DecodeMode::Fused`] — the baseline: context replicated per batch
+//!   row, one softmax over the concatenated `[m_c | m_d]` axis.
+//!
+//! Both are mathematically identical (paper Appendix E.1); the parity
+//! suite in `tests/parity_native.rs` asserts it numerically.
+
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::models::DecodeMode;
+use crate::util::prng::Pcg;
+
+use super::math::{add_bias, axpy, dot, gelu_inplace, layer_norm, matmul};
+
+pub const NEG_INF: f32 = -1e30;
+
+pub struct LayerWeights {
+    pub ln1_s: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    /// [d, h·k]
+    pub wq: Vec<f32>,
+    /// [d, g·k]
+    pub wk: Vec<f32>,
+    /// [d, g·k]
+    pub wv: Vec<f32>,
+    /// [h·k, d]
+    pub wo: Vec<f32>,
+    pub ln2_s: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    /// [d, ff]
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// [ff, d]
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+pub struct NativeWeights {
+    /// [vocab, d]
+    pub emb: Vec<f32>,
+    /// [m_max, d]
+    pub pos: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_s: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    /// [d, vocab]
+    pub head: Vec<f32>,
+}
+
+fn normal_mat(rng: &mut Pcg, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * std).collect()
+}
+
+impl NativeWeights {
+    /// GPT-2-style init, deterministic in `seed` (matches the python
+    /// `init_params` scheme: σ=0.02 matrices, `wo`/`w2` scaled by
+    /// 1/√(2l), unit LN scales, zero biases).
+    pub fn init(cfg: &ModelCfg, seed: u64) -> NativeWeights {
+        let (d, k, ff) = (cfg.d, cfg.k, cfg.ffn_mult * cfg.d);
+        let mut rng = Pcg::new(seed ^ 0x4E17_1A1B_5EED_0001);
+        let resid = 0.02 / (2.0 * cfg.l as f32).sqrt();
+        let layers = (0..cfg.l)
+            .map(|_| LayerWeights {
+                ln1_s: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: normal_mat(&mut rng, d * cfg.h * k, 0.02),
+                wk: normal_mat(&mut rng, d * cfg.g * k, 0.02),
+                wv: normal_mat(&mut rng, d * cfg.g * k, 0.02),
+                wo: normal_mat(&mut rng, cfg.h * k * d, resid),
+                ln2_s: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w1: normal_mat(&mut rng, d * ff, 0.02),
+                b1: vec![0.0; ff],
+                w2: normal_mat(&mut rng, ff * d, resid),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        NativeWeights {
+            emb: normal_mat(&mut rng, cfg.vocab * d, 0.02),
+            pos: normal_mat(&mut rng, cfg.m_max * d, 0.02),
+            layers,
+            lnf_s: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head: normal_mat(&mut rng, d * cfg.vocab, 0.02),
+        }
+    }
+
+    /// Exact parameter count (mirrors `ModelConfig.param_count` in python).
+    pub fn param_count(cfg: &ModelCfg) -> usize {
+        let (d, k, v) = (cfg.d, cfg.k, cfg.vocab);
+        let ff = cfg.ffn_mult * d;
+        let per_layer = 2 * d                  // ln1
+            + d * cfg.h * k                    // wq
+            + 2 * d * cfg.g * k                // wk, wv
+            + cfg.h * k * d                    // wo
+            + 2 * d                            // ln2
+            + d * ff + ff                      // w1, b1
+            + ff * d + d; // w2, b2
+        v * d + cfg.m_max * d + cfg.l * per_layer + 2 * d + d * v
+    }
+}
+
+/// Embedding + position row for one token: `out[d] = emb[tok] + pos[p]`.
+fn embed(cfg: &ModelCfg, w: &NativeWeights, tok: i32, p: usize, out: &mut [f32]) {
+    let d = cfg.d;
+    let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+    let e = &w.emb[t * d..(t + 1) * d];
+    let pr = &w.pos[p * d..(p + 1) * d];
+    for ((o, &ev), &pv) in out.iter_mut().zip(e).zip(pr) {
+        *o = ev + pv;
+    }
+}
+
+/// MLP half-block: `x += gelu(ln(x) @ w1 + b1) @ w2 + b2` over `rows` rows.
+fn mlp_block(cfg: &ModelCfg, lw: &LayerWeights, x: &mut [f32], rows: usize) {
+    let d = cfg.d;
+    let ff = cfg.ffn_mult * d;
+    let h2 = layer_norm(x, &lw.ln2_s, &lw.ln2_b, d);
+    let mut t = matmul(&h2, &lw.w1, rows, d, ff);
+    add_bias(&mut t, &lw.b1);
+    gelu_inplace(&mut t);
+    let mut o = matmul(&t, &lw.w2, rows, ff, d);
+    add_bias(&mut o, &lw.b2);
+    for (xv, &ov) in x.iter_mut().zip(&o) {
+        *xv += ov;
+    }
+}
+
+/// Full-context prefill over a right-padded prompt of `len` valid tokens.
+///
+/// Returns the next-token logits at position `len - 1` (`[vocab]`) and the
+/// per-layer context caches `kc`/`vc`, each flat `[l, g, m_c_max, k]`.
+pub fn prefill_forward(
+    cfg: &ModelCfg,
+    w: &NativeWeights,
+    tokens_padded: &[i32],
+    len: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+    let s_max = cfg.m_c_max;
+    assert_eq!(tokens_padded.len(), s_max, "prompt must be padded to m_c_max");
+    assert!(len >= 1 && len <= s_max, "valid length out of range");
+    let scale = 1.0 / (kk as f32).sqrt();
+
+    let mut x = vec![0.0f32; s_max * d];
+    for s in 0..s_max {
+        embed(cfg, w, tokens_padded[s], s, &mut x[s * d..(s + 1) * d]);
+    }
+
+    let mut kc_all = vec![0.0f32; cfg.l * g * s_max * kk];
+    let mut vc_all = vec![0.0f32; cfg.l * g * s_max * kk];
+
+    for (li, lw) in w.layers.iter().enumerate() {
+        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
+        let q = matmul(&h1, &lw.wq, s_max, d, h * kk); // [S, h·k]
+        let kt = matmul(&h1, &lw.wk, s_max, d, g * kk); // [S, g·k]
+        let vt = matmul(&h1, &lw.wv, s_max, d, g * kk);
+
+        // Stash this layer's cache in [g, S, k] order (the shared-context
+        // layout the decode step consumes).
+        for gi in 0..g {
+            for s in 0..s_max {
+                let src = &kt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
+                let dst = ((li * g + gi) * s_max + s) * kk;
+                kc_all[dst..dst + kk].copy_from_slice(src);
+                let src = &vt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
+                vc_all[dst..dst + kk].copy_from_slice(src);
+            }
+        }
+
+        // Causal multi-group attention: query position i attends to key
+        // positions j <= i that are also < len.
+        let mut o = vec![0.0f32; s_max * h * kk];
+        let mut logits = vec![0.0f32; s_max]; // scratch, truncated per row
+        for i in 0..s_max {
+            // Valid keys: j <= i AND j < len. For i < len that is 0..=i;
+            // for padded queries (i >= len) it is 0..len. Either way the
+            // set is non-empty because len >= 1.
+            let j_end = if i < len { i + 1 } else { len };
+            for hh in 0..h {
+                let gi = hh / p;
+                let qv = &q[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
+                let kbase = (li * g + gi) * s_max * kk;
+                let mut mx = NEG_INF;
+                for (j, lj) in logits[..j_end].iter_mut().enumerate() {
+                    let krow = kt_at(&kc_all, kbase, j, kk);
+                    *lj = dot(qv, krow) * scale;
+                    if *lj > mx {
+                        mx = *lj;
+                    }
+                }
+                let mut denom = 0.0f32;
+                let orow = &mut o[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
+                for (j, &lj) in logits[..j_end].iter().enumerate() {
+                    let e = (lj - mx).exp();
+                    denom += e;
+                    axpy(orow, e, kt_at(&vc_all, kbase, j, kk));
+                }
+                for v in orow.iter_mut() {
+                    *v /= denom;
+                }
+            }
+        }
+
+        let proj = matmul(&o, &lw.wo, s_max, h * kk, d);
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+        mlp_block(cfg, lw, &mut x, s_max);
+    }
+
+    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+    let last = &xf[(len - 1) * d..len * d];
+    let logits = matmul(last, &w.head, 1, d, cfg.vocab);
+    (logits, kc_all, vc_all)
+}
+
+#[inline]
+fn kt_at(buf: &[f32], base: usize, j: usize, kk: usize) -> &[f32] {
+    &buf[base + j * kk..base + (j + 1) * kk]
+}
+
+/// Reused per-head scratch buffers for the decode attention inner loop.
+/// Hoisted out of the (layer × row × head) loop so neither mode pays
+/// allocator overhead — the microbench's bifurcated-vs-fused latency
+/// comparison must measure the memory-access pattern, not malloc.
+#[derive(Default)]
+struct Scratch {
+    logits_c: Vec<f32>,
+    logits_d: Vec<f32>,
+    acc_c: Vec<f32>,
+    acc_d: Vec<f32>,
+}
+
+impl Scratch {
+    /// Zero-fill `buf` to exactly `n` elements without shrinking capacity.
+    fn fill(buf: &mut Vec<f32>, n: usize) {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
+/// Context-KV addressing for the decode step's two layouts.
+struct CtxIndex<'a> {
+    kc: &'a [f32],
+    vc: &'a [f32],
+    /// true: `[l, b, g, mc, k]` (fused replicas); false: `[l, g, mc, k]`.
+    per_row: bool,
+    b: usize,
+    g: usize,
+    mc: usize,
+    kk: usize,
+}
+
+impl<'a> CtxIndex<'a> {
+    fn base(&self, li: usize, bi: usize, gi: usize) -> usize {
+        if self.per_row {
+            (((li * self.b + bi) * self.g) + gi) * self.mc * self.kk
+        } else {
+            (li * self.g + gi) * self.mc * self.kk
+        }
+    }
+
+    fn k_row(&self, base: usize, j: usize) -> &'a [f32] {
+        &self.kc[base + j * self.kk..base + (j + 1) * self.kk]
+    }
+
+    fn v_row(&self, base: usize, j: usize) -> &'a [f32] {
+        &self.vc[base + j * self.kk..base + (j + 1) * self.kk]
+    }
+}
+
+/// One incremental decode step over `bucket` samplers sharing one context.
+///
+/// `tokens` must already be padded to `bucket` entries. `kd`/`vd` are the
+/// flat `[l, bucket, g, m_d_max, k]` decode caches, updated in place with
+/// this step's K/V at `d_pos`. Context tensors come pre-flattened with
+/// their layout described by `ctx_per_row` (`true` for the fused replicas
+/// `[l, b, g, mc, k]`, `false` for the shared `[l, g, mc, k]`).
+///
+/// Returns the logits, flat `[bucket, vocab]`.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_forward(
+    cfg: &ModelCfg,
+    w: &NativeWeights,
+    mode: DecodeMode,
+    bucket: usize,
+    tokens: &[i32],
+    d_pos: usize,
+    m_c_len: usize,
+    kc: &[f32],
+    vc: &[f32],
+    ctx_per_row: bool,
+    kd: &mut [f32],
+    vd: &mut [f32],
+) -> Vec<f32> {
+    let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+    let (mc, md) = (cfg.m_c_max, cfg.m_d_max);
+    let b = bucket;
+    assert_eq!(tokens.len(), b, "tokens must be padded to the bucket");
+    assert!(d_pos < md, "decode position {d_pos} >= m_d_max {md}");
+    assert!(m_c_len >= 1 && m_c_len <= mc, "context length out of range");
+    assert_eq!(kd.len(), cfg.l * b * g * md * kk, "kd cache shape");
+    assert_eq!(vd.len(), kd.len(), "vd cache shape");
+    let expect_ctx = if ctx_per_row { cfg.l * b * g * mc * kk } else { cfg.l * g * mc * kk };
+    assert_eq!(kc.len(), expect_ctx, "context cache shape");
+    assert_eq!(vc.len(), expect_ctx, "context cache shape");
+    let scale = 1.0 / (kk as f32).sqrt();
+    let ctx = CtxIndex { kc, vc, per_row: ctx_per_row, b, g, mc, kk };
+
+    let mut x = vec![0.0f32; b * d];
+    for bi in 0..b {
+        embed(cfg, w, tokens[bi], m_c_len + d_pos, &mut x[bi * d..(bi + 1) * d]);
+    }
+
+    let mut scratch = Scratch::default();
+    for (li, lw) in w.layers.iter().enumerate() {
+        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
+        let q = matmul(&h1, &lw.wq, b, d, h * kk); // [b, h·k]
+        let knew = matmul(&h1, &lw.wk, b, d, g * kk); // [b, g·k]
+        let vnew = matmul(&h1, &lw.wv, b, d, g * kk);
+
+        // Functional cache update: write this step's K/V at d_pos.
+        for bi in 0..b {
+            for gi in 0..g {
+                let dst = (((li * b + bi) * g + gi) * md + d_pos) * kk;
+                let src = bi * g * kk + gi * kk;
+                kd[dst..dst + kk].copy_from_slice(&knew[src..src + kk]);
+                vd[dst..dst + kk].copy_from_slice(&vnew[src..src + kk]);
+            }
+        }
+
+        let mut o = vec![0.0f32; b * h * kk];
+        for bi in 0..b {
+            for hh in 0..h {
+                let gi = hh / p;
+                let qv = &q[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
+                let dbase = ((li * b + bi) * g + gi) * md * kk;
+                let orow = &mut o[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
+                match mode {
+                    DecodeMode::Bifurcated => attend_bifurcated(
+                        qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
+                        &mut scratch,
+                    ),
+                    DecodeMode::Fused => attend_fused(
+                        qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
+                        &mut scratch,
+                    ),
+                }
+            }
+        }
+
+        let proj = matmul(&o, &lw.wo, b, h * kk, d);
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+        mlp_block(cfg, lw, &mut x, b);
+    }
+
+    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+    matmul(&xf, &w.head, b, d, cfg.vocab)
+}
+
+/// Paper Eq. 3–4: separate context and decode sweeps, one softmax
+/// recombined across the partition boundary. The context rows are
+/// addressed through the *shared* (batch-independent) layout — the
+/// memory-schedule statement of the bifurcation.
+#[allow(clippy::too_many_arguments)]
+fn attend_bifurcated(
+    qv: &[f32],
+    scale: f32,
+    ctx: &CtxIndex<'_>,
+    li: usize,
+    bi: usize,
+    gi: usize,
+    m_c_len: usize,
+    kd: &[f32],
+    vd: &[f32],
+    dbase: usize,
+    d_pos: usize,
+    kk: usize,
+    orow: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let cbase = ctx.base(li, bi, gi);
+    // ⟨q, K_c⟩ over the valid context prefix.
+    Scratch::fill(&mut scratch.logits_c, m_c_len);
+    let mut mx = NEG_INF;
+    for (j, l) in scratch.logits_c.iter_mut().enumerate() {
+        *l = dot(qv, ctx.k_row(cbase, j)) * scale;
+        if *l > mx {
+            mx = *l;
+        }
+    }
+    // ⟨q, K_d⟩ over this sampler's decode prefix (j <= d_pos).
+    Scratch::fill(&mut scratch.logits_d, d_pos + 1);
+    for (j, l) in scratch.logits_d.iter_mut().enumerate() {
+        *l = dot(qv, &kd[dbase + j * kk..dbase + (j + 1) * kk]) * scale;
+        if *l > mx {
+            mx = *l;
+        }
+    }
+    // Joint softmax: numerators and denominators joined by summation.
+    Scratch::fill(&mut scratch.acc_c, kk);
+    let mut denom_c = 0.0f32;
+    for (j, &l) in scratch.logits_c.iter().enumerate() {
+        let e = (l - mx).exp();
+        denom_c += e;
+        axpy(&mut scratch.acc_c, e, ctx.v_row(cbase, j));
+    }
+    Scratch::fill(&mut scratch.acc_d, kk);
+    let mut denom_d = 0.0f32;
+    for (j, &l) in scratch.logits_d.iter().enumerate() {
+        let e = (l - mx).exp();
+        denom_d += e;
+        axpy(&mut scratch.acc_d, e, &vd[dbase + j * kk..dbase + (j + 1) * kk]);
+    }
+    let denom = denom_c + denom_d;
+    for ((o, &c), &dv) in orow.iter_mut().zip(&scratch.acc_c).zip(&scratch.acc_d) {
+        *o = (c + dv) / denom;
+    }
+}
+
+/// Baseline fused semantics: this batch row's *own* context replica and
+/// its decode rows form one concatenated `[m_c | m_d]` axis with a single
+/// softmax — exactly what a GEMM over `K = K_c ⊕ K_d` computes.
+#[allow(clippy::too_many_arguments)]
+fn attend_fused(
+    qv: &[f32],
+    scale: f32,
+    ctx: &CtxIndex<'_>,
+    li: usize,
+    bi: usize,
+    gi: usize,
+    m_c_len: usize,
+    kd: &[f32],
+    vd: &[f32],
+    dbase: usize,
+    d_pos: usize,
+    kk: usize,
+    orow: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let cbase = ctx.base(li, bi, gi);
+    let total = m_c_len + d_pos + 1;
+    Scratch::fill(&mut scratch.logits_c, total);
+    let mut mx = NEG_INF;
+    for (j, l) in scratch.logits_c.iter_mut().enumerate() {
+        let krow = if j < m_c_len {
+            ctx.k_row(cbase, j)
+        } else {
+            let jd = j - m_c_len;
+            &kd[dbase + jd * kk..dbase + (jd + 1) * kk]
+        };
+        *l = dot(qv, krow) * scale;
+        if *l > mx {
+            mx = *l;
+        }
+    }
+    Scratch::fill(&mut scratch.acc_c, kk);
+    let mut denom = 0.0f32;
+    for (j, &l) in scratch.logits_c.iter().enumerate() {
+        let e = (l - mx).exp();
+        denom += e;
+        let vrow = if j < m_c_len {
+            ctx.v_row(cbase, j)
+        } else {
+            let jd = j - m_c_len;
+            &vd[dbase + jd * kk..dbase + (jd + 1) * kk]
+        };
+        axpy(&mut scratch.acc_c, e, vrow);
+    }
+    for (o, &a) in orow.iter_mut().zip(&scratch.acc_c) {
+        *o = a / denom;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "tiny".into(),
+            d: 16,
+            h: 4,
+            g: 2,
+            k: 4,
+            p: 2,
+            l: 2,
+            vocab: 16,
+            ffn_mult: 2,
+            m_c_max: 8,
+            m_d_max: 4,
+            m_max: 12,
+            seq_len: 8,
+            param_count: 0,
+            attention_kind: "multi_group".into(),
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_in_seed() {
+        let cfg = tiny_cfg();
+        let a = NativeWeights::init(&cfg, 7);
+        let b = NativeWeights::init(&cfg, 7);
+        let c = NativeWeights::init(&cfg, 8);
+        assert_eq!(a.emb, b.emb);
+        assert_eq!(a.layers[1].wq, b.layers[1].wq);
+        assert_ne!(a.emb, c.emb);
+        assert!(a.layers[0].ln1_s.iter().all(|&v| v == 1.0));
+        assert!(a.layers[0].b1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn param_count_matches_python_formula() {
+        // pico-mh: d=64 h=8 g=8 l=3 vocab=16 ffn=4 m_max=128 -> 457,536
+        let cfg = ModelCfg {
+            name: "pico-mh".into(),
+            d: 64,
+            h: 8,
+            g: 8,
+            k: 8,
+            p: 1,
+            l: 3,
+            vocab: 16,
+            ffn_mult: 4,
+            m_c_max: 96,
+            m_d_max: 32,
+            m_max: 128,
+            seq_len: 64,
+            param_count: 0,
+            attention_kind: "multi_head".into(),
+        };
+        let per_layer = 128 + 64 * 64 + 2 * 64 * 64 + 64 * 64 + 128 + 64 * 256 + 256 + 256 * 64 + 64;
+        let expect = 16 * 64 + 128 * 64 + 3 * per_layer + 128 + 64 * 16;
+        assert_eq!(NativeWeights::param_count(&cfg), expect);
+    }
+
+    #[test]
+    fn prefill_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 1);
+        let mut toks = vec![1, 2, 12, 3, 13];
+        toks.resize(cfg.m_c_max, 0);
+        let (logits, kc, vc) = prefill_forward(&cfg, &w, &toks, 5);
+        assert_eq!(logits.len(), cfg.vocab);
+        assert_eq!(kc.len(), cfg.l * cfg.g * cfg.m_c_max * cfg.k);
+        assert_eq!(vc.len(), kc.len());
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(kc.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prefill_padding_is_inert() {
+        // Same prompt, two different pad contents: identical logits + the
+        // valid cache prefix, because masking keeps pads out of reach.
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 2);
+        let len = 4usize;
+        let mut a = vec![1, 5, 12, 6];
+        a.resize(cfg.m_c_max, 0);
+        let mut b = vec![1, 5, 12, 6];
+        b.resize(cfg.m_c_max, 9);
+        let (la, kca, _) = prefill_forward(&cfg, &w, &a, len);
+        let (lb, kcb, _) = prefill_forward(&cfg, &w, &b, len);
+        assert_eq!(la, lb);
+        for gi in 0..cfg.g {
+            for li in 0..cfg.l {
+                for j in 0..len {
+                    let base = ((li * cfg.g + gi) * cfg.m_c_max + j) * cfg.k;
+                    assert_eq!(&kca[base..base + cfg.k], &kcb[base..base + cfg.k]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_updates_cache_at_position() {
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 3);
+        let mut toks = vec![1, 2];
+        toks.resize(cfg.m_c_max, 0);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 2);
+        let n = cfg.l * 2 * cfg.g * cfg.m_d_max * cfg.k;
+        let (mut kd, mut vd) = (vec![0.0; n], vec![0.0; n]);
+        let logits =
+            decode_forward(&cfg, &w, DecodeMode::Bifurcated, 2, &[3, 4], 0, 2, &kc, &vc, false, &mut kd, &mut vd);
+        assert_eq!(logits.len(), 2 * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // position 0 of every (layer, row, group) slot was written
+        for li in 0..cfg.l {
+            for bi in 0..2 {
+                for gi in 0..cfg.g {
+                    let base = (((li * 2 + bi) * cfg.g + gi) * cfg.m_d_max) * cfg.k;
+                    assert!(kd[base..base + cfg.k].iter().any(|&v| v != 0.0));
+                    // later positions untouched
+                    assert!(kd[base + cfg.k..base + 2 * cfg.k].iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
+}

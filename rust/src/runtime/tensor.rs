@@ -106,9 +106,10 @@ impl HostTensor {
     }
 
     // ------------------------------------------------------------------
-    // PJRT conversions
+    // PJRT conversions (pjrt feature only)
     // ------------------------------------------------------------------
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -118,6 +119,7 @@ impl HostTensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
         let buf = match &self.data {
             Data::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
@@ -126,6 +128,7 @@ impl HostTensor {
         Ok(buf)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

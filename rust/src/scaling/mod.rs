@@ -6,4 +6,6 @@ pub mod laws;
 pub mod trainer;
 
 pub use laws::{analyze, compensation_factor, fit_loss_vs_size, LogFit, ScalingAnalysis};
-pub use trainer::{load_runs, save_runs, train_all, train_one, TrainConfig, TrainRun};
+pub use trainer::{load_runs, save_runs, TrainConfig, TrainRun};
+#[cfg(feature = "pjrt")]
+pub use trainer::{train_all, train_one};

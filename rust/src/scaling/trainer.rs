@@ -7,15 +7,21 @@
 //! shape of an L3 coordinator, scaled to one device.
 
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::corpus;
+#[cfg(feature = "pjrt")]
 use crate::runtime::client::{compile_hlo, run_tensors};
+#[cfg(feature = "pjrt")]
 use crate::runtime::manifest::{Manifest, ScalingEntry};
+#[cfg(feature = "pjrt")]
 use crate::runtime::tensor::{load_weights_bin, HostTensor};
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use crate::util::prng::Pcg;
 
 #[derive(Debug, Clone)]
@@ -48,6 +54,7 @@ pub struct TrainRun {
 }
 
 /// Train one scaling-family model from its AOT artifacts.
+#[cfg(feature = "pjrt")]
 pub fn train_one(
     _manifest: &Manifest,
     client: &xla::PjRtClient,
@@ -144,6 +151,7 @@ pub fn train_one(
 }
 
 /// Train every scaling-family model (filtered by `name_filter` substring).
+#[cfg(feature = "pjrt")]
 pub fn train_all(
     manifest: &Manifest,
     client: &xla::PjRtClient,

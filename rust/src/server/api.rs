@@ -1,16 +1,16 @@
 //! JSON serving API over the engine.
 //!
-//! The `ModelRuntime` is deliberately single-threaded (PJRT wrappers are
-//! !Send), so the engine runs on a dedicated thread that owns it — the
-//! classic leader/event-loop shape — and HTTP workers talk to it over an
-//! mpsc channel. This is the "rust owns the event loop / process
-//! topology" half of the L3 contract.
+//! Backends are deliberately single-threaded (the PJRT wrappers are !Send,
+//! and the native backend shares the same discipline), so the engine runs
+//! on a dedicated thread that owns it — the classic leader/event-loop
+//! shape — and HTTP workers talk to it over an mpsc channel. This is the
+//! "rust owns the event loop / process topology" half of the L3 contract.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
 use crate::coordinator::{rerank_top_k, Engine, EngineConfig, GenerationRequest, SamplingParams};
-use crate::runtime::{cpu_client, Manifest, ModelRuntime};
+use crate::runtime::Backend;
 use crate::util::json::{parse as parse_json, Json};
 
 use super::http::{HttpResponse, HttpServer};
@@ -43,24 +43,20 @@ impl EngineClient {
     }
 }
 
-/// Spawn the engine event loop; returns the client handle.
-pub fn spawn_engine(
-    artifacts: std::path::PathBuf,
-    model: String,
-    cfg: EngineConfig,
-) -> anyhow::Result<std::sync::Arc<EngineClient>> {
+/// Spawn an engine event loop from a backend-specific constructor run on
+/// the engine thread itself (backends need not be `Send`); returns the
+/// client handle once initialization succeeds.
+pub fn spawn_engine_with<B, F>(init: F) -> anyhow::Result<std::sync::Arc<EngineClient>>
+where
+    B: Backend + 'static,
+    F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+{
     let (tx, rx) = channel::<Job>();
     let (ready_tx, ready_rx) = channel::<Result<(), String>>();
     std::thread::Builder::new()
         .name("engine".into())
         .spawn(move || {
-            let init = (|| -> anyhow::Result<Engine> {
-                let manifest = Manifest::load(&artifacts)?;
-                let client = cpu_client()?;
-                let rt = ModelRuntime::load(&manifest, &client, &model)?;
-                Ok(Engine::new(&manifest, rt, cfg))
-            })();
-            let engine = match init {
+            let engine = match init() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e
@@ -90,6 +86,31 @@ pub fn spawn_engine(
         .map_err(|_| anyhow::anyhow!("engine thread exited during init"))?
         .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
     Ok(std::sync::Arc::new(EngineClient { tx: Mutex::new(tx) }))
+}
+
+/// Spawn a native-backend engine (the default: no artifacts required).
+pub fn spawn_native_engine(
+    model: String,
+    weight_seed: u64,
+    cfg: EngineConfig,
+) -> anyhow::Result<std::sync::Arc<EngineClient>> {
+    spawn_engine_with(move || Engine::native(&model, weight_seed, cfg))
+}
+
+/// Spawn a PJRT-backed engine from the AOT artifacts.
+#[cfg(feature = "pjrt")]
+pub fn spawn_engine(
+    artifacts: std::path::PathBuf,
+    model: String,
+    cfg: EngineConfig,
+) -> anyhow::Result<std::sync::Arc<EngineClient>> {
+    use crate::runtime::{cpu_client, Manifest, ModelRuntime};
+    spawn_engine_with(move || {
+        let manifest = Manifest::load(&artifacts)?;
+        let client = cpu_client()?;
+        let rt = ModelRuntime::load(&manifest, &client, &model)?;
+        Ok(Engine::new(manifest.tokenizer.clone(), rt, cfg))
+    })
 }
 
 fn result_to_json(r: &crate::coordinator::RequestResult, rerank_k: usize) -> Json {
@@ -198,5 +219,17 @@ mod tests {
         assert!(parse_generate_body("{}", 1).is_err());
         assert!(parse_generate_body("not json", 1).is_err());
         assert!(parse_generate_body(r#"{"prompt":"x","n":0}"#, 1).is_err());
+    }
+
+    #[test]
+    fn native_engine_thread_serves_generate_and_metrics() {
+        let client =
+            spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let (req, rk) =
+            parse_generate_body(r#"{"prompt":"1+2=","n":2,"max_tokens":3,"seed":1}"#, 1).unwrap();
+        let res = client.generate(req, rk).unwrap();
+        assert_eq!(res.req("completions").as_arr().unwrap().len(), 2);
+        let met = client.metrics();
+        assert_eq!(met.f64_of("requests"), 1.0);
     }
 }

@@ -4,5 +4,7 @@
 pub mod api;
 pub mod http;
 
-pub use api::{build_server, parse_generate_body, spawn_engine, EngineClient};
+#[cfg(feature = "pjrt")]
+pub use api::spawn_engine;
+pub use api::{build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, EngineClient};
 pub use http::{HttpRequest, HttpResponse, HttpServer};

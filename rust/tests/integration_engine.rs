@@ -1,5 +1,8 @@
 //! Integration: the full serving engine over real artifacts — scheduler,
 //! KV accounting, sampler, waves, reranking, eval harness, HTTP API.
+//! Requires a `--features pjrt` build plus `make artifacts`.
+
+#![cfg(feature = "pjrt")]
 
 use bifurcated_attn::coordinator::{
     rerank_top_k, Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
@@ -9,11 +12,11 @@ use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
 use bifurcated_attn::runtime::models::DecodeMode;
 use bifurcated_attn::runtime::{cpu_client, Manifest, ModelRuntime};
 
-fn engine(model: &str, cfg: EngineConfig) -> Engine {
+fn engine(model: &str, cfg: EngineConfig) -> Engine<ModelRuntime> {
     let man = Manifest::load(&Manifest::default_root()).expect("run `make artifacts`");
     let client = cpu_client().unwrap();
     let rt = ModelRuntime::load(&man, &client, model).unwrap();
-    Engine::new(&man, rt, cfg)
+    Engine::new(man.tokenizer.clone(), rt, cfg)
 }
 
 fn req(prompt: &str, n: usize, seed: u64) -> GenerationRequest {

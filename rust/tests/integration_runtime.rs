@@ -1,9 +1,13 @@
 //! Integration: artifacts -> PJRT compile -> prefill/decode round-trips.
 //!
-//! Requires `make artifacts`. These tests exercise the full AOT bridge:
-//! manifest parsing, weight loading, HLO-text compilation, execution, and
-//! the paper's exactness claim measured *end-to-end across the language
-//! boundary* (bifurcated vs fused decode executables agree bitwise-ish).
+//! Requires a `--features pjrt` build plus `make artifacts`. These tests
+//! exercise the full AOT bridge: manifest parsing, weight loading,
+//! HLO-text compilation, execution, and the paper's exactness claim
+//! measured *end-to-end across the language boundary* (bifurcated vs
+//! fused decode executables agree bitwise-ish). The artifact-free
+//! equivalent on the native backend is tests/parity_native.rs.
+
+#![cfg(feature = "pjrt")]
 
 use bifurcated_attn::runtime::{
     cpu_client, DecodeMode, Manifest, ModelRuntime,

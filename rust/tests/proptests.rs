@@ -114,6 +114,141 @@ fn prop_kv_manager_accounting_exact() {
 }
 
 #[test]
+fn prop_kv_manager_random_lease_release_oom_sequences() {
+    // Arbitrary interleavings of register/lease/release/free — including
+    // the fused b×-replica charging path and explicit OOM returns — must
+    // keep the block accounting exact after every single operation.
+    forall(
+        "kv-random-op-sequences",
+        120,
+        |rng| {
+            let n_ops = rng.below(60) + 10;
+            (0..n_ops)
+                .map(|_| (rng.below(4) as u8, rng.next_u64(), rng.below(64) + 1))
+                .collect::<Vec<(u8, u64, usize)>>()
+        },
+        |ops| {
+            // tiny capacity (32 blocks) so allocation failures are common
+            let mut m = KvManager::new(16 * 1024, 64, 8);
+            let mut ctxs: Vec<(u64, Vec<u64>)> = Vec::new();
+            for &(op, r, amount) in ops {
+                match op {
+                    0 => {
+                        // register: alternates modes; fused charges b× up front
+                        let mode = if r % 2 == 0 { DecodeMode::Bifurcated } else { DecodeMode::Fused };
+                        let b_planned = (r >> 1) as usize % 8 + 1;
+                        if let Ok(c) = m.register_context(amount, mode, b_planned) {
+                            ctxs.push((c, Vec::new()));
+                        }
+                    }
+                    1 => {
+                        // lease a sequence on a random live context
+                        if !ctxs.is_empty() {
+                            let i = r as usize % ctxs.len();
+                            if let Ok(s) = m.start_sequence(ctxs[i].0, amount % 16 + 1) {
+                                ctxs[i].1.push(s);
+                            }
+                        }
+                    }
+                    2 => {
+                        // finish the newest sequence of a random context
+                        if !ctxs.is_empty() {
+                            let i = r as usize % ctxs.len();
+                            if let Some(s) = ctxs[i].1.pop() {
+                                m.finish_sequence(s);
+                            }
+                        }
+                    }
+                    _ => {
+                        // release some fully-drained context, if one exists
+                        if let Some(i) = ctxs.iter().position(|(_, seqs)| seqs.is_empty()) {
+                            let (c, _) = ctxs.remove(i);
+                            m.release_context(c);
+                        }
+                    }
+                }
+                m.check_invariants()?;
+            }
+            // full teardown must return the manager to exactly zero
+            for (c, seqs) in ctxs {
+                for s in seqs {
+                    m.finish_sequence(s);
+                }
+                m.release_context(c);
+                m.check_invariants()?;
+            }
+            let st = m.stats();
+            if st.used_blocks != 0 || st.contexts != 0 || st.sequences != 0 {
+                return Err(format!("leaked state after teardown: {st:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_registration_charges_exactly_b_replicas() {
+    // Direct property on the fused charging path: for any (tokens, b) that
+    // fits, fused uses exactly b× the blocks of bifurcated — and leasing
+    // never changes context storage (a lease round-trip returns usage to
+    // the post-register level).
+    forall(
+        "fused-bx-charging",
+        200,
+        |rng| (rng.below(60) + 1, rng.below(12) + 1),
+        |&(tokens, b)| {
+            let mut bif = KvManager::new(1 << 20, 64, 8);
+            let mut fus = KvManager::new(1 << 20, 64, 8);
+            let cb = bif
+                .register_context(tokens, DecodeMode::Bifurcated, b)
+                .map_err(|e| format!("bifurcated register: {e:?}"))?;
+            let one = bif.stats().used_blocks;
+            let cf = fus
+                .register_context(tokens, DecodeMode::Fused, b)
+                .map_err(|e| format!("fused register: {e:?}"))?;
+            // fused charged for b copies of the context token span
+            let expect = (tokens * b).div_ceil(8);
+            if fus.stats().used_blocks != expect {
+                return Err(format!(
+                    "fused blocks {} != ceil({tokens}*{b}/8) = {expect}",
+                    fus.stats().used_blocks
+                ));
+            }
+            if b == 1 && fus.stats().used_blocks != one {
+                return Err("b=1 fused should equal bifurcated".into());
+            }
+            // lease round-trip: decode slots are extra, context storage is
+            // untouched, and finishing returns exactly to post-register
+            let seqs: Vec<_> = (0..b)
+                .map(|_| bif.start_sequence(cb, 16))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("lease: {e:?}"))?;
+            let per_seq = 16usize.div_ceil(8);
+            if bif.stats().used_blocks != one + b * per_seq {
+                return Err(format!(
+                    "leases changed context storage: {} != {one} + {b}*{per_seq}",
+                    bif.stats().used_blocks
+                ));
+            }
+            for s in seqs {
+                bif.finish_sequence(s);
+            }
+            if bif.stats().used_blocks != one {
+                return Err("finishing leases did not restore post-register usage".into());
+            }
+            bif.check_invariants()?;
+            fus.check_invariants()?;
+            bif.release_context(cb);
+            fus.release_context(cf);
+            if bif.stats().used_blocks != 0 || fus.stats().used_blocks != 0 {
+                return Err("release leaked blocks".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_scheduler_waves_partition_any_n() {
     let s = Scheduler::new(SchedulerConfig::default(), vec![1, 2, 4, 8, 16, 32]);
     forall(
