@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
             max_tokens: 6,
             stop_token: Some(corpus::SEMI),
             seed: 0,
+            mode: None,
         },
     };
     let result = engine.generate(&request)?;

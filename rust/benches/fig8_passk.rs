@@ -18,7 +18,13 @@ fn main() {
         let ns: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
         let mut tables = Vec::new();
         for model in ["pico-mq", "pico-mh"] {
-            let engine = Engine::native(model, 0, EngineConfig::default()).unwrap();
+            // prefix cache off: one engine serves every n, and the per-n
+            // latency comparison must stay cold (warm hits would skip
+            // prefill for every row after the first — see prefix_cache.rs
+            // for the bench that measures exactly that effect)
+            let mut ecfg = EngineConfig::default();
+            ecfg.prefix_cache_entries = 0;
+            let engine = Engine::native(model, 0, ecfg).unwrap();
             let mut t = Table::new(
                 &format!("Fig 8 — pass@n / pass@top3 vs latency, {model} (native CPU)"),
                 &["n", "pass@1", "pass@n", "pass@top3", "latency ms", "prefill ms", "ms/step", "mode"],

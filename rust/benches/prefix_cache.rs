@@ -1,0 +1,187 @@
+//! Measured cold-vs-warm TTFT with the cross-request prefix cache: many
+//! requests sharing one long prompt prefix (the paper's production
+//! motivation — a system prompt / few-shot preamble reused across calls).
+//!
+//! Three paths over the same shared prefix:
+//!  * cold   — fresh cache: full prefill + context upload;
+//!  * warm   — full hit: prefill and upload both skipped;
+//!  * extend — partial hit: only the uncached suffix is prefilled.
+//!
+//! Real forward passes on the native CPU backend (pico-scale — trends,
+//! not paper magnitudes). `--quick` runs the CI smoke configuration:
+//! tiny prefix, 2 timed iterations.
+
+use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::manifest::ModelCfg;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::NativeBackend;
+use bifurcated_attn::util::histogram::Histogram;
+use bifurcated_attn::util::prng::Pcg;
+
+/// A model sized to hold a `prefix_tokens`-token shared context.
+fn bench_cfg(prefix_tokens: usize) -> ModelCfg {
+    let (d, h, g, l) = (32usize, 4usize, 1usize, 2usize);
+    let m_c_max = prefix_tokens + 16;
+    let m_d_max = 8;
+    ModelCfg {
+        name: format!("bench-mq-{prefix_tokens}"),
+        d,
+        h,
+        g,
+        k: d / h,
+        p: h / g,
+        l,
+        vocab: 16,
+        ffn_mult: 2,
+        m_c_max,
+        m_d_max,
+        m_max: m_c_max + m_d_max,
+        seq_len: 16,
+        param_count: 0,
+        attention_kind: String::new(),
+    }
+}
+
+/// Arithmetic-grammar text that tokenizes (with BOS) to exactly `tokens`.
+fn shared_prefix(tokens: usize) -> String {
+    let mut rng = Pcg::new(42);
+    let mut s = String::new();
+    while s.len() < tokens - 1 {
+        s.push_str(&corpus::sample_expression(&mut rng));
+    }
+    s.truncate(tokens - 1);
+    s
+}
+
+fn engine(prefix_tokens: usize) -> Engine<NativeBackend> {
+    let be = NativeBackend::new(bench_cfg(prefix_tokens), 0).unwrap();
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    cfg.prefix_cache_entries = 8;
+    Engine::new(bifurcated_attn::runtime::TokenizerInfo::builtin(), be, cfg)
+}
+
+fn req(id: u64, prompt: &str) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n: 1,
+            temperature: 0.8,
+            top_p: 0.95,
+            // TTFT: prefill + a single decode step
+            max_tokens: 1,
+            stop_token: None,
+            seed: id,
+            mode: None,
+        },
+    }
+}
+
+fn main() {
+    bench_main("prefix_cache", |quick| {
+        let prefix_tokens = if quick { 64 } else { 256 };
+        let iters = if quick { 2 } else { 10 };
+        let prompt = shared_prefix(prefix_tokens);
+        // a short request-specific suffix on top of the shared prefix
+        let extended = format!("{prompt}7+8=");
+
+        let mut cold_prefill = Histogram::new();
+        let mut cold_ttft = Histogram::new();
+        let mut cold_upload = 0usize;
+        for i in 0..iters {
+            let e = engine(prefix_tokens); // fresh engine: empty cache
+            let r = e.generate(&req(i as u64 + 1, &prompt)).unwrap();
+            assert_eq!(r.timing.cache_hit_tokens, 0);
+            cold_prefill.record(r.timing.prefill_ms);
+            cold_ttft.record(r.timing.total_ms());
+            cold_upload = r.timing.upload_bytes;
+        }
+
+        let e = engine(prefix_tokens);
+        e.generate(&req(1000, &prompt)).unwrap(); // prime the cache
+        let mut warm_prefill = Histogram::new();
+        let mut warm_ttft = Histogram::new();
+        let mut warm_upload = 0usize;
+        let mut warm_hit = 0usize;
+        for i in 0..iters {
+            let r = e.generate(&req(2000 + i as u64, &prompt)).unwrap();
+            assert_eq!(r.timing.cache_hit_tokens, prefix_tokens);
+            warm_prefill.record(r.timing.prefill_ms);
+            warm_ttft.record(r.timing.total_ms());
+            warm_upload = r.timing.upload_bytes;
+            warm_hit = r.timing.cache_hit_tokens;
+        }
+        assert_eq!(warm_upload, 0, "warm full hits must not re-upload the context");
+
+        // partial hit: shared prefix cached, per-request suffix prefilled.
+        // A fresh engine per iteration, since the first extension inserts
+        // its own node and later runs would be full hits.
+        let mut ext_prefill = Histogram::new();
+        let mut ext_ttft = Histogram::new();
+        let mut ext_hit = 0usize;
+        let mut ext_upload = 0usize;
+        for i in 0..iters {
+            let e = engine(prefix_tokens);
+            e.generate(&req(1, &prompt)).unwrap(); // cache the shared prefix
+            let r = e.generate(&req(3000 + i as u64, &extended)).unwrap();
+            assert!(r.timing.cache_hit_tokens >= prefix_tokens);
+            ext_prefill.record(r.timing.prefill_ms);
+            ext_ttft.record(r.timing.total_ms());
+            ext_hit = r.timing.cache_hit_tokens;
+            ext_upload = r.timing.upload_bytes;
+        }
+
+        let mut t = Table::new(
+            &format!(
+                "Prefix cache — cold vs warm TTFT, {prefix_tokens}-token shared prefix (native CPU)"
+            ),
+            &["path", "prefill ms p50", "ttft ms p50", "cache hit tok", "ctx upload B"],
+        )
+        .with_note(
+            "cold = empty cache (full prefill + upload); warm = full hit (both skipped); \
+             extend = shared prefix cached, suffix prefilled incrementally",
+        );
+        t.row(vec![
+            Cell::Str("cold".into()),
+            Cell::Ms(cold_prefill.summary().p50),
+            Cell::Ms(cold_ttft.summary().p50),
+            Cell::Num(0.0),
+            Cell::Num(cold_upload as f64),
+        ]);
+        t.row(vec![
+            Cell::Str("warm".into()),
+            Cell::Ms(warm_prefill.summary().p50),
+            Cell::Ms(warm_ttft.summary().p50),
+            Cell::Num(warm_hit as f64),
+            Cell::Num(warm_upload as f64),
+        ]);
+        t.row(vec![
+            Cell::Str("extend".into()),
+            Cell::Ms(ext_prefill.summary().p50),
+            Cell::Ms(ext_ttft.summary().p50),
+            Cell::Num(ext_hit as f64),
+            Cell::Num(ext_upload as f64),
+        ]);
+
+        let cold_p50 = cold_prefill.summary().p50.max(1e-9);
+        let warm_p50 = warm_prefill.summary().p50;
+        let mut s = Table::new(
+            "Prefix cache — prefill-time savings",
+            &["metric", "value"],
+        );
+        s.row(vec![
+            Cell::Str("warm/cold prefill ratio".into()),
+            Cell::Num(((warm_p50 / cold_p50) * 1000.0).round() / 1000.0),
+        ]);
+        s.row(vec![
+            Cell::Str("cold prefill ms saved on warm hit".into()),
+            Cell::Ms(cold_p50 - warm_p50),
+        ]);
+        vec![t, s]
+    });
+}

@@ -3,19 +3,31 @@
 //! sampling (Fig. 1, right) with the bifurcated decode step as a
 //! first-class scheduling choice.
 //!
+//! On top of the per-request sharing, the engine consults the
+//! cross-request [`PrefixCache`]: a warm request whose prompt is fully
+//! cached skips prefill *and* the context upload entirely (decoding
+//! bifurcated against the cached resident context), and a partial hit
+//! prefills only the uncached suffix via [`Backend::prefill_extend`].
+//! Cold bifurcated requests populate the cache, whose nodes are pinned
+//! while in use and LRU-evicted under KV-capacity pressure.
+//!
 //! The engine is generic over [`Backend`], so the same scheduling, KV
 //! accounting, and sampling logic drives both the native CPU backend and
 //! the PJRT artifact runtime.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::kvcache::manager::KvManager;
-use crate::runtime::backend::Backend;
+use crate::kvcache::block::AllocError;
+use crate::kvcache::manager::{ContextId, KvManager, SeqId};
+use crate::prefixcache::PrefixCache;
+use crate::runtime::backend::{Backend, ContextView};
 use crate::runtime::models::DecodeMode;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::TokenizerInfo;
+use crate::util::json::Json;
 
 use super::request::{Completion, GenerationRequest, RequestResult, Timing};
 use super::sampler::SamplerBatch;
@@ -28,6 +40,8 @@ pub struct EngineConfig {
     pub kv_capacity_bytes: usize,
     /// Paged-block granularity in tokens.
     pub block_tokens: usize,
+    /// Cross-request prefix-cache entry budget; 0 disables the cache.
+    pub prefix_cache_entries: usize,
 }
 
 impl Default for EngineConfig {
@@ -36,6 +50,7 @@ impl Default for EngineConfig {
             scheduler: SchedulerConfig::default(),
             kv_capacity_bytes: 64 << 20,
             block_tokens: 16,
+            prefix_cache_entries: 16,
         }
     }
 }
@@ -45,6 +60,7 @@ pub struct Engine<B: Backend> {
     pub tokenizer: TokenizerInfo,
     pub scheduler: Scheduler,
     pub kv: std::cell::RefCell<KvManager>,
+    pub cache: std::cell::RefCell<PrefixCache<B>>,
     pub metrics: super::metrics::Metrics,
 }
 
@@ -70,6 +86,7 @@ impl<B: Backend> Engine<B> {
             tokenizer,
             scheduler,
             kv: std::cell::RefCell::new(kv),
+            cache: std::cell::RefCell::new(PrefixCache::new(cfg.prefix_cache_entries)),
             metrics: super::metrics::Metrics::default(),
         }
     }
@@ -86,9 +103,117 @@ impl<B: Backend> Engine<B> {
         Ok(ids)
     }
 
-    /// Serve one request: prefill the shared context once, then decode all
-    /// n samplers (in waves if n exceeds the largest compiled bucket).
+    /// Request timings plus the KV-capacity and prefix-cache gauges —
+    /// what `/metrics` serves.
+    pub fn metrics_report(&self) -> Json {
+        let kv = self.kv.borrow().stats();
+        let kv_json = Json::obj()
+            .set("contexts", Json::Num(kv.contexts as f64))
+            .set("cached_contexts", Json::Num(kv.cached_contexts as f64))
+            .set("sequences", Json::Num(kv.sequences as f64))
+            .set("used_blocks", Json::Num(kv.used_blocks as f64))
+            .set("free_blocks", Json::Num(kv.free_blocks as f64))
+            .set("used_bytes", Json::Num(kv.used_bytes as f64));
+        self.metrics
+            .report()
+            .set("kv", kv_json)
+            .set("prefix_cache", self.cache.borrow().stats_json())
+    }
+
+    /// Evict one LRU unpinned prefix-cache node to relieve KV pressure.
+    fn evict_one(&self) -> bool {
+        let mut kv = self.kv.borrow_mut();
+        self.cache.borrow_mut().evict_lru(&mut kv)
+    }
+
+    /// Register an active (request-owned) context, evicting cache nodes
+    /// until it fits or nothing more can be evicted.
+    fn register_active_evicting(
+        &self,
+        tokens: usize,
+        mode: DecodeMode,
+        b_planned: usize,
+    ) -> Result<ContextId> {
+        loop {
+            let res = self.kv.borrow_mut().register_context(tokens, mode, b_planned);
+            match res {
+                Ok(id) => return Ok(id),
+                Err(e) => {
+                    if !self.evict_one() {
+                        return Err(anyhow::anyhow!("KV capacity: {e}"));
+                    }
+                }
+            }
+        }
+    }
+
+    fn start_sequence_evicting(&self, ctx: ContextId, m_d_cap: usize) -> Result<SeqId, AllocError> {
+        loop {
+            let res = self.kv.borrow_mut().start_sequence(ctx, m_d_cap);
+            match res {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if !self.evict_one() {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reserve a prefix-cache slot + `Cached`-class registration for a new
+    /// node. None means caching is skipped for this request (disabled,
+    /// budget full of pinned nodes, or no KV room even after eviction) —
+    /// the request then falls back to a request-owned context.
+    fn try_register_cached(&self, tokens: usize) -> Option<ContextId> {
+        if !self.cache.borrow().enabled() {
+            return None;
+        }
+        {
+            let mut kv = self.kv.borrow_mut();
+            if !self.cache.borrow_mut().make_room(&mut kv) {
+                return None;
+            }
+        }
+        loop {
+            let res = self.kv.borrow_mut().register_cached_context(tokens);
+            match res {
+                Ok(id) => return Some(id),
+                Err(_) => {
+                    if !self.evict_one() {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve one request: reuse or prefill the shared context, then decode
+    /// all n samplers (in waves if n exceeds the largest compiled bucket).
     pub fn generate(&self, req: &GenerationRequest) -> Result<RequestResult> {
+        let mut pins: Vec<usize> = Vec::new();
+        let result = self.generate_pinned(req, &mut pins);
+        {
+            let mut cache = self.cache.borrow_mut();
+            for id in pins {
+                cache.unpin(id);
+            }
+        }
+        if let Ok(r) = &result {
+            self.metrics.observe_request(&r.timing, r.completions.len());
+        }
+        debug_assert!(self.kv.borrow().check_invariants().is_ok());
+        result
+    }
+
+    /// The request body; any cache node pushed onto `pins` stays pinned
+    /// (eviction-proof) until the caller unpins after this returns —
+    /// including on every error path.
+    fn generate_pinned(
+        &self,
+        req: &GenerationRequest,
+        pins: &mut Vec<usize>,
+    ) -> Result<RequestResult> {
         let params = &req.params;
         anyhow::ensure!(params.n >= 1, "n must be >= 1");
         let vocab = self.rt.cfg().vocab;
@@ -96,41 +221,123 @@ impl<B: Backend> Engine<B> {
         let prompt_ids = self.tokenize_prompt(&req.prompt)?;
         let m_c_len = prompt_ids.len();
 
-        // ---- prefill (once, regardless of n: Fig. 1 single-context) ----
-        let t0 = Instant::now();
-        let pre = self.rt.prefill(&prompt_ids).context("prefill")?;
-        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // ---- cross-request prefix-cache lookup ----
+        let hit = self.cache.borrow_mut().lookup(&prompt_ids);
+        if let Some(h) = &hit {
+            self.cache.borrow_mut().pin(h.node);
+            pins.push(h.node);
+        }
+        let hit_len = hit.as_ref().map_or(0, |h| h.matched);
+        let full_hit = hit_len == m_c_len;
 
-        let mode = self.scheduler.pick_mode(params.n, m_c_len);
+        let mode = self
+            .scheduler
+            .pick_mode_with(params.mode, params.n, m_c_len, hit_len);
         let waves = self.scheduler.plan_waves(params.n);
 
-        // capacity accounting: context registered once (bifurcated) or
-        // per-replica (fused), sequences leased per sampler
-        let ctx_id = self
-            .kv
-            .borrow_mut()
-            .register_context(m_c_len, mode, params.n)
-            .map_err(|e| anyhow::anyhow!("KV capacity: {e}"))?;
-
         let upload_before = self.rt.upload_bytes();
-        let t1 = Instant::now();
+        let mut ctx_upload_bytes = 0usize;
 
-        // context upload: shared tensors once for bifurcated; the fused
-        // baseline re-materializes the broadcast per wave bucket size.
-        // A failed upload must release the registration like every other
-        // error exit below — the capacity accounting can't leak.
-        let shared_ctx: Option<B::Ctx> = if mode == DecodeMode::Bifurcated {
-            match self.rt.upload_context(&pre.kc, &pre.vc, m_c_len) {
-                Ok(c) => Some(c),
-                Err(e) => {
-                    self.kv.borrow_mut().release_context(ctx_id);
-                    return Err(e);
-                }
+        // ---- context phase: reuse, extend, or prefill from scratch ----
+        let t0 = Instant::now();
+        let pre_logits: Vec<f32>;
+        let kc: Rc<crate::runtime::HostTensor>;
+        let vc: Rc<crate::runtime::HostTensor>;
+        let mut shared_ctx: Option<Rc<B::Ctx>> = None;
+        let mut cached_lease: Option<ContextId> = None;
+
+        if full_hit {
+            // warm: no prefill, and (bifurcated) no upload either
+            let cache = self.cache.borrow();
+            let e = cache.payload(hit.as_ref().unwrap().node);
+            pre_logits = e.logits.clone();
+            kc = Rc::clone(&e.kc);
+            vc = Rc::clone(&e.vc);
+            if mode == DecodeMode::Bifurcated {
+                shared_ctx = Some(Rc::clone(&e.ctx));
+                cached_lease = Some(e.ctx_id);
             }
         } else {
-            None
+            let pre = if hit_len > 0 {
+                // partial hit: prefill only the uncached suffix
+                let (ckc, cvc) = {
+                    let cache = self.cache.borrow();
+                    let e = cache.payload(hit.as_ref().unwrap().node);
+                    (Rc::clone(&e.kc), Rc::clone(&e.vc))
+                };
+                self.rt
+                    .prefill_extend(&ckc, &cvc, hit_len, &prompt_ids)
+                    .context("prefill-extend")?
+            } else {
+                self.rt.prefill(&prompt_ids).context("prefill")?
+            };
+            pre_logits = pre.logits;
+            kc = Rc::new(pre.kc);
+            vc = Rc::new(pre.vc);
+
+            // Populate the cache from bifurcated requests (whose shared
+            // upload the cache can directly reuse); fused requests only
+            // consume cached tensors, they never pay an extra shared copy.
+            if mode == DecodeMode::Bifurcated {
+                if let Some(ctx_id) = self.try_register_cached(m_c_len) {
+                    let ctx = match self.rt.upload_context(&kc, &vc, m_c_len) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            self.kv.borrow_mut().release_context(ctx_id);
+                            return Err(e);
+                        }
+                    };
+                    ctx_upload_bytes += ctx.bytes();
+                    let ctx = Rc::new(ctx);
+                    let node = self.cache.borrow_mut().insert(
+                        &prompt_ids,
+                        pre_logits.clone(),
+                        Rc::clone(&kc),
+                        Rc::clone(&vc),
+                        Rc::clone(&ctx),
+                        ctx_id,
+                    );
+                    self.cache.borrow_mut().pin(node);
+                    pins.push(node);
+                    shared_ctx = Some(ctx);
+                    cached_lease = Some(ctx_id);
+                }
+            }
+        }
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // capacity accounting for requests not backed by a cache node:
+        // context registered once (bifurcated) or per-replica (fused)
+        let mut owned_active: Option<ContextId> = None;
+        let lease_ctx = match cached_lease {
+            Some(id) => id,
+            None => {
+                let id = self.register_active_evicting(m_c_len, mode, params.n)?;
+                if mode == DecodeMode::Bifurcated {
+                    match self.rt.upload_context(&kc, &vc, m_c_len) {
+                        Ok(c) => {
+                            ctx_upload_bytes += c.bytes();
+                            shared_ctx = Some(Rc::new(c));
+                        }
+                        Err(e) => {
+                            self.kv.borrow_mut().release_context(id);
+                            return Err(e);
+                        }
+                    }
+                }
+                owned_active = Some(id);
+                id
+            }
+        };
+        // Any error exit below must release the active registration (cache
+        // nodes stay — they are owned by the cache, not the request).
+        let release_owned = || {
+            if let Some(id) = owned_active {
+                self.kv.borrow_mut().release_context(id);
+            }
         };
 
+        let t1 = Instant::now();
         let mut completions: Vec<Completion> = Vec::with_capacity(params.n);
         let mut decode_steps = 0usize;
         for (wi, wave) in waves.iter().enumerate() {
@@ -138,33 +345,34 @@ impl<B: Backend> Engine<B> {
             let ctx: &B::Ctx = match &shared_ctx {
                 Some(c) => c,
                 None => {
-                    let kc_rep = pre.kc.broadcast_at(1, wave.bucket);
-                    let vc_rep = pre.vc.broadcast_at(1, wave.bucket);
-                    ctx_storage = match self.rt.upload_context(&kc_rep, &vc_rep, m_c_len) {
-                        Ok(c) => c,
+                    // fused baseline: re-materialize the broadcast per wave
+                    let kc_rep = kc.broadcast_at(1, wave.bucket);
+                    let vc_rep = vc.broadcast_at(1, wave.bucket);
+                    match self.rt.upload_context(&kc_rep, &vc_rep, m_c_len) {
+                        Ok(c) => {
+                            ctx_upload_bytes += c.bytes();
+                            ctx_storage = c;
+                            &ctx_storage
+                        }
                         Err(e) => {
-                            self.kv.borrow_mut().release_context(ctx_id);
+                            release_owned();
                             return Err(e);
                         }
-                    };
-                    &ctx_storage
+                    }
                 }
             };
 
-            // lease sequences; on capacity exhaustion roll back cleanly
-            // (finish partial leases and release the context registration)
+            // lease sequences; on capacity exhaustion (after eviction has
+            // been tried) roll back cleanly
             let mut seq_ids = Vec::with_capacity(wave.live);
             for _ in 0..wave.live {
-                // bind before matching: the borrow guard must not live
-                // into the Err arm (which borrows again for cleanup)
-                let lease = self.kv.borrow_mut().start_sequence(ctx_id, max_tokens);
-                match lease {
+                match self.start_sequence_evicting(lease_ctx, max_tokens) {
                     Ok(s) => seq_ids.push(s),
                     Err(e) => {
                         for s in seq_ids {
                             self.kv.borrow_mut().finish_sequence(s);
                         }
-                        self.kv.borrow_mut().release_context(ctx_id);
+                        release_owned();
                         return Err(anyhow::anyhow!("KV capacity: {e}"));
                     }
                 }
@@ -176,7 +384,7 @@ impl<B: Backend> Engine<B> {
                 vocab,
                 req.id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64),
             );
-            let mut tokens = sampler.first_tokens(&pre.logits);
+            let mut tokens = sampler.first_tokens(&pre_logits);
             let (mut kd, mut vd) = self.rt.zero_decode_cache(wave.bucket);
             let mut d_pos = 0usize;
             let wave_run = (|| -> Result<()> {
@@ -199,14 +407,13 @@ impl<B: Backend> Engine<B> {
                 self.kv.borrow_mut().finish_sequence(s);
             }
             if let Err(e) = wave_run {
-                self.kv.borrow_mut().release_context(ctx_id);
+                release_owned();
                 return Err(e);
             }
             let tok = &self.tokenizer;
             completions.extend(sampler.into_completions(|ids| tok.decode(ids)));
         }
-        self.kv.borrow_mut().release_context(ctx_id);
-        debug_assert!(self.kv.borrow().check_invariants().is_ok());
+        release_owned();
 
         let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
         let timing = Timing {
@@ -214,15 +421,19 @@ impl<B: Backend> Engine<B> {
             decode_ms,
             decode_steps,
             waves: waves.len(),
-            upload_bytes: self.rt.upload_bytes() - upload_before,
+            upload_bytes: ctx_upload_bytes,
+            step_upload_bytes: (self.rt.upload_bytes() - upload_before)
+                .saturating_sub(ctx_upload_bytes),
+            cache_hit_tokens: hit_len,
         };
-        self.metrics.observe_request(&timing, completions.len());
 
         Ok(RequestResult { id: req.id, completions, timing, mode_used: mode })
     }
 }
 
-// Engine-over-native coverage lives in tests/parity_native.rs; the PJRT
-// path is exercised by tests/integration_engine.rs (pjrt feature). The
-// pure pieces (scheduler, sampler, ranker, kv manager) are unit-tested in
-// their own modules.
+// Engine-over-native coverage lives in tests/parity_native.rs and
+// tests/prefix_cache.rs (warm-vs-cold parity, eviction); error-path
+// rollback is exercised by tests/engine_errors.rs. The PJRT path is
+// exercised by tests/integration_engine.rs (pjrt feature). The pure
+// pieces (scheduler, sampler, ranker, kv manager, prefix cache) are
+// unit-tested in their own modules.

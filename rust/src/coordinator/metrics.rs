@@ -16,6 +16,8 @@ struct Inner {
     completions: usize,
     decode_steps: usize,
     upload_bytes: usize,
+    ctx_upload_bytes: usize,
+    cache_hit_tokens: usize,
     prefill_ms: Histogram,
     per_step_ms: Histogram,
     total_ms: Histogram,
@@ -27,7 +29,9 @@ impl Metrics {
         m.requests += 1;
         m.completions += n_completions;
         m.decode_steps += timing.decode_steps;
-        m.upload_bytes += timing.upload_bytes;
+        m.upload_bytes += timing.upload_bytes + timing.step_upload_bytes;
+        m.ctx_upload_bytes += timing.upload_bytes;
+        m.cache_hit_tokens += timing.cache_hit_tokens;
         m.prefill_ms.record(timing.prefill_ms);
         if timing.decode_steps > 0 {
             m.per_step_ms.record(timing.per_step_ms());
@@ -45,7 +49,9 @@ impl Metrics {
             .set("requests", Json::Num(m.requests as f64))
             .set("completions", Json::Num(m.completions as f64))
             .set("decode_steps", Json::Num(m.decode_steps as f64))
-            .set("upload_bytes", Json::Num(m.upload_bytes as f64));
+            .set("upload_bytes", Json::Num(m.upload_bytes as f64))
+            .set("ctx_upload_bytes", Json::Num(m.ctx_upload_bytes as f64))
+            .set("cache_hit_tokens", Json::Num(m.cache_hit_tokens as f64));
         if !m.prefill_ms.is_empty() {
             j = j.set("prefill_ms", m.prefill_ms.summary().to_json());
         }
@@ -68,17 +74,35 @@ mod tests {
     fn aggregates_requests() {
         let m = Metrics::default();
         m.observe_request(
-            &Timing { prefill_ms: 5.0, decode_ms: 20.0, decode_steps: 10, waves: 1, upload_bytes: 100 },
+            &Timing {
+                prefill_ms: 5.0,
+                decode_ms: 20.0,
+                decode_steps: 10,
+                waves: 1,
+                upload_bytes: 100,
+                step_upload_bytes: 40,
+                cache_hit_tokens: 0,
+            },
             4,
         );
         m.observe_request(
-            &Timing { prefill_ms: 7.0, decode_ms: 30.0, decode_steps: 10, waves: 1, upload_bytes: 50 },
+            &Timing {
+                prefill_ms: 7.0,
+                decode_ms: 30.0,
+                decode_steps: 10,
+                waves: 1,
+                upload_bytes: 50,
+                step_upload_bytes: 10,
+                cache_hit_tokens: 12,
+            },
             8,
         );
         assert_eq!(m.requests(), 2);
         let r = m.report();
         assert_eq!(r.f64_of("completions"), 12.0);
-        assert_eq!(r.f64_of("upload_bytes"), 150.0);
+        assert_eq!(r.f64_of("upload_bytes"), 200.0);
+        assert_eq!(r.f64_of("ctx_upload_bytes"), 150.0);
+        assert_eq!(r.f64_of("cache_hit_tokens"), 12.0);
         assert_eq!(r.req("prefill_ms").f64_of("count"), 2.0);
         assert!((r.req("per_step_ms").f64_of("mean") - 2.5).abs() < 1e-9);
     }

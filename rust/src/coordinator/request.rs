@@ -13,6 +13,8 @@ pub struct SamplingParams {
     /// Stop token (the grammar's ';'); None decodes to max_tokens.
     pub stop_token: Option<i32>,
     pub seed: u64,
+    /// Per-request decode-mode override; None inherits the engine policy.
+    pub mode: Option<super::scheduler::ModePolicy>,
 }
 
 impl Default for SamplingParams {
@@ -24,6 +26,7 @@ impl Default for SamplingParams {
             max_tokens: 16,
             stop_token: None,
             seed: 0,
+            mode: None,
         }
     }
 }
@@ -63,7 +66,16 @@ pub struct Timing {
     pub decode_ms: f64,
     pub decode_steps: usize,
     pub waves: usize,
+    /// Context (K_c/V_c) bytes uploaded for this request — the Eq. 5 vs
+    /// Eq. 6 quantity. 0 on a warm bifurcated prefix-cache hit, whose
+    /// shared context is already resident.
     pub upload_bytes: usize,
+    /// Per-step streaming bytes (tokens + decode caches), identical across
+    /// modes; kept separate so context-upload savings stay visible.
+    pub step_upload_bytes: usize,
+    /// Prompt tokens served from the cross-request prefix cache
+    /// (== prompt length on a full hit: prefill was skipped entirely).
+    pub cache_hit_tokens: usize,
 }
 
 impl Timing {
@@ -107,7 +119,13 @@ mod tests {
 
     #[test]
     fn timing_aggregates() {
-        let t = Timing { prefill_ms: 10.0, decode_ms: 30.0, decode_steps: 15, waves: 1, upload_bytes: 0 };
+        let t = Timing {
+            prefill_ms: 10.0,
+            decode_ms: 30.0,
+            decode_steps: 15,
+            waves: 1,
+            ..Timing::default()
+        };
         assert_eq!(t.total_ms(), 40.0);
         assert_eq!(t.per_step_ms(), 2.0);
     }

@@ -123,7 +123,15 @@ mod tests {
     use super::*;
 
     fn params(n: usize) -> SamplingParams {
-        SamplingParams { n, temperature: 1.0, top_p: 1.0, max_tokens: 4, stop_token: Some(14), seed: 1 }
+        SamplingParams {
+            n,
+            temperature: 1.0,
+            top_p: 1.0,
+            max_tokens: 4,
+            stop_token: Some(14),
+            seed: 1,
+            mode: None,
+        }
     }
 
     fn uniform_logits(vocab: usize, b: usize) -> Vec<f32> {
@@ -189,7 +197,15 @@ mod tests {
 
     #[test]
     fn logp_accumulates() {
-        let p = SamplingParams { temperature: 1.0, top_p: 1.0, max_tokens: 2, stop_token: None, seed: 3, n: 1 };
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_p: 1.0,
+            max_tokens: 2,
+            stop_token: None,
+            seed: 3,
+            n: 1,
+            mode: None,
+        };
         let mut sb = SamplerBatch::new(1, p, 2, 0);
         sb.first_tokens(&[0.0, 0.0]);
         sb.step(&[0.0, 0.0]);

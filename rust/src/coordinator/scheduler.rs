@@ -60,10 +60,29 @@ impl Scheduler {
     /// FAQ-4 switch: redundant context reads are (b-1)·m_c tokens per
     /// step; below threshold the split's extra dispatches aren't worth it.
     pub fn pick_mode(&self, b: usize, m_c_len: usize) -> DecodeMode {
-        match self.cfg.policy {
+        self.pick_mode_with(None, b, m_c_len, 0)
+    }
+
+    /// Mode choice seeing the cross-request prefix cache: `cached_len` is
+    /// the prompt prefix already resident (0 on a miss). A *full* hit
+    /// tips `Auto` to bifurcated regardless of workload — the shared
+    /// context is already uploaded in shared layout, so bifurcated decode
+    /// starts with zero context-upload bytes while fused would have to
+    /// re-materialize b replicas first. `override_policy` is the
+    /// per-request `"mode"` field; None inherits the engine policy.
+    pub fn pick_mode_with(
+        &self,
+        override_policy: Option<ModePolicy>,
+        b: usize,
+        m_c_len: usize,
+        cached_len: usize,
+    ) -> DecodeMode {
+        match override_policy.unwrap_or(self.cfg.policy) {
             ModePolicy::Force(m) => m,
             ModePolicy::Auto => {
-                if b.saturating_sub(1) * m_c_len >= self.cfg.bifurcation_threshold_tokens {
+                if cached_len > 0 && cached_len == m_c_len {
+                    DecodeMode::Bifurcated
+                } else if b.saturating_sub(1) * m_c_len >= self.cfg.bifurcation_threshold_tokens {
                     DecodeMode::Bifurcated
                 } else {
                     DecodeMode::Fused
@@ -143,6 +162,31 @@ mod tests {
         cfg.policy = ModePolicy::Force(DecodeMode::Fused);
         let s = Scheduler::new(cfg, vec![1, 4]);
         assert_eq!(s.pick_mode(64, 4096), DecodeMode::Fused);
+    }
+
+    #[test]
+    fn warm_full_hit_tips_auto_to_bifurcated() {
+        let s = sched(); // threshold 64
+        // below threshold, cold: fused
+        assert_eq!(s.pick_mode_with(None, 1, 10, 0), DecodeMode::Fused);
+        // same workload but fully cached: bifurcated (context already
+        // resident in shared layout)
+        assert_eq!(s.pick_mode_with(None, 1, 10, 10), DecodeMode::Bifurcated);
+        // a partial hit does not tip the switch
+        assert_eq!(s.pick_mode_with(None, 1, 10, 4), DecodeMode::Fused);
+        // forced modes always win, warm or not
+        assert_eq!(
+            s.pick_mode_with(Some(ModePolicy::Force(DecodeMode::Fused)), 8, 96, 96),
+            DecodeMode::Fused
+        );
+        // per-request Auto overrides an engine-forced policy
+        let mut cfg = SchedulerConfig::default();
+        cfg.policy = ModePolicy::Force(DecodeMode::Fused);
+        let forced = Scheduler::new(cfg, vec![1, 4]);
+        assert_eq!(
+            forced.pick_mode_with(Some(ModePolicy::Auto), 32, 96, 0),
+            DecodeMode::Bifurcated
+        );
     }
 
     #[test]

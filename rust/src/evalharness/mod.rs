@@ -82,6 +82,7 @@ pub fn run_suite<B: Backend>(engine: &Engine<B>, cfg: &SuiteConfig) -> Result<Su
                 max_tokens: cfg.max_tokens,
                 stop_token: Some(corpus::SEMI),
                 seed: cfg.seed.wrapping_add(i as u64),
+                mode: None,
             },
         };
         let res = engine.generate(&req)?;

@@ -9,7 +9,12 @@
 //!   charges its own replica of the context (the engine physically
 //!   materializes that broadcast), so capacity exhausts ~b× earlier —
 //!   reproducing the paper's observation that bifurcation also delays OOM;
-//! * per-sampler decode slots are paged via the block allocator.
+//! * per-sampler decode slots are paged via the block allocator;
+//! * **cached** contexts are a second lease class: prefix-cache nodes that
+//!   outlive their request and stay resident until the cache evicts them
+//!   under capacity pressure ([`crate::prefixcache`]). They share the same
+//!   lease/refcount discipline as active contexts, so the invariant
+//!   checker covers both.
 
 use std::collections::BTreeMap;
 
@@ -19,12 +24,23 @@ use crate::runtime::models::DecodeMode;
 pub type ContextId = u64;
 pub type SeqId = u64;
 
+/// Lifetime class of a context registration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContextClass {
+    /// Owned by one in-flight request; released when the request drains.
+    Active,
+    /// Owned by the cross-request prefix cache; stays resident after the
+    /// request finishes and is released only by cache eviction.
+    Cached,
+}
+
 #[derive(Debug)]
 struct ContextState {
     blocks: Vec<BlockId>,
     tokens: usize,
     leases: usize,
     mode: DecodeMode,
+    class: ContextClass,
 }
 
 #[derive(Debug)]
@@ -45,7 +61,10 @@ pub struct KvManager {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvStats {
+    /// All live context registrations (active + cached).
     pub contexts: usize,
+    /// The subset owned by the prefix cache.
+    pub cached_contexts: usize,
     pub sequences: usize,
     pub used_blocks: usize,
     pub free_blocks: usize,
@@ -84,7 +103,28 @@ impl KvManager {
         let blocks = self.alloc.alloc(tokens * copies)?;
         let id = self.next_ctx;
         self.next_ctx += 1;
-        self.contexts.insert(id, ContextState { blocks, tokens, leases: 0, mode });
+        self.contexts
+            .insert(id, ContextState { blocks, tokens, leases: 0, mode, class: ContextClass::Active });
+        Ok(id)
+    }
+
+    /// Register a prefix-cache context: one shared (bifurcated-layout) copy
+    /// that outlives the registering request. The prefix cache releases it
+    /// on eviction via [`Self::release_context`].
+    pub fn register_cached_context(&mut self, tokens: usize) -> Result<ContextId, AllocError> {
+        let blocks = self.alloc.alloc(tokens)?;
+        let id = self.next_ctx;
+        self.next_ctx += 1;
+        self.contexts.insert(
+            id,
+            ContextState {
+                blocks,
+                tokens,
+                leases: 0,
+                mode: DecodeMode::Bifurcated,
+                class: ContextClass::Cached,
+            },
+        );
         Ok(id)
     }
 
@@ -124,9 +164,27 @@ impl KvManager {
         self.contexts[&ctx].tokens
     }
 
+    pub fn context_class(&self, ctx: ContextId) -> ContextClass {
+        self.contexts[&ctx].class
+    }
+
+    /// Live sampler leases on a context (eviction safety check).
+    pub fn context_leases(&self, ctx: ContextId) -> usize {
+        self.contexts[&ctx].leases
+    }
+
+    pub fn contains_context(&self, ctx: ContextId) -> bool {
+        self.contexts.contains_key(&ctx)
+    }
+
     pub fn stats(&self) -> KvStats {
         KvStats {
             contexts: self.contexts.len(),
+            cached_contexts: self
+                .contexts
+                .values()
+                .filter(|c| c.class == ContextClass::Cached)
+                .count(),
             sequences: self.seqs.len(),
             used_blocks: self.alloc.used_blocks(),
             free_blocks: self.alloc.free_blocks(),
@@ -219,6 +277,27 @@ mod tests {
         let ctx = m.register_context(16, DecodeMode::Bifurcated, 1).unwrap();
         let _s = m.start_sequence(ctx, 16).unwrap();
         m.release_context(ctx);
+    }
+
+    #[test]
+    fn cached_class_is_tracked_and_leasable() {
+        let mut m = mgr();
+        let active = m.register_context(32, DecodeMode::Bifurcated, 1).unwrap();
+        let cached = m.register_cached_context(32).unwrap();
+        assert_eq!(m.context_class(cached), ContextClass::Cached);
+        assert_eq!(m.context_class(active), ContextClass::Active);
+        let st = m.stats();
+        assert_eq!((st.contexts, st.cached_contexts), (2, 1));
+        // cached contexts hand out the same sequence leases as active ones
+        let s = m.start_sequence(cached, 16).unwrap();
+        assert_eq!(m.context_leases(cached), 1);
+        m.check_invariants().unwrap();
+        m.finish_sequence(s);
+        assert_eq!(m.context_leases(cached), 0);
+        m.release_context(cached);
+        m.release_context(active);
+        assert_eq!(m.stats().used_blocks, 0);
+        assert!(!m.contains_context(cached));
     }
 
     #[test]

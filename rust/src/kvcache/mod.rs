@@ -4,4 +4,4 @@ pub mod block;
 pub mod manager;
 
 pub use block::{AllocError, BlockAllocator, BlockId};
-pub use manager::{ContextId, KvManager, KvStats, SeqId};
+pub use manager::{ContextClass, ContextId, KvManager, KvStats, SeqId};

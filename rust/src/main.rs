@@ -56,15 +56,19 @@ fn print_usage() {
     println!(
         "repro — bifurcated attention reproduction (ICML 2024)\n\n\
          USAGE: repro <subcommand> [options]\n\n\
-         serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused] [--backend native|pjrt]\n\
-         generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...] [--backend ...]\n\
+         serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
+         \x20              [--prefix-cache N] [--backend native|pjrt]\n\
+         generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
+         \x20              [--prefix-cache N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
          tables         [--hw h100]            (all modeled paper tables)\n\
          train-scaling  --out artifacts/scaling [--steps 300] [--filter s0]   (pjrt builds)\n\
          eval-passk     --model pico-mq --tasks 20 --n 8 [--backend ...]\n\
          info\n\n\
          Backend: native (default; pure Rust, no artifacts) or pjrt\n\
-         (`--features pjrt` build + `make artifacts`, root $ARTIFACTS_DIR or ./artifacts)."
+         (`--features pjrt` build + `make artifacts`, root $ARTIFACTS_DIR or ./artifacts).\n\
+         --prefix-cache N caps the cross-request prefix cache at N prefilled\n\
+         contexts (default 16; 0 disables). Warm prompts skip prefill + upload."
     );
 }
 
@@ -103,6 +107,7 @@ fn engine_config(args: &Args) -> EngineConfig {
         "fused" => cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Fused),
         _ => {}
     }
+    cfg.prefix_cache_entries = args.usize_or("prefix-cache", cfg.prefix_cache_entries);
     cfg
 }
 
@@ -155,17 +160,19 @@ fn run_generate<B: Backend>(engine: &Engine<B>, args: &Args) -> Result<()> {
             max_tokens: args.usize_or("max-tokens", 8),
             stop_token: Some(corpus::SEMI),
             seed: args.usize_or("seed", 0) as u64,
+            mode: None,
         },
     };
     let res = engine.generate(&req)?;
     println!(
-        "backend={} mode={} prefill={:.1}ms decode={:.1}ms ({} steps, {} waves)",
+        "backend={} mode={} prefill={:.1}ms decode={:.1}ms ({} steps, {} waves, {} cached tok)",
         engine.rt.name(),
         res.mode_used,
         res.timing.prefill_ms,
         res.timing.decode_ms,
         res.timing.decode_steps,
-        res.timing.waves
+        res.timing.waves,
+        res.timing.cache_hit_tokens
     );
     for (i, c) in res.completions.iter().enumerate() {
         println!("  [{i:2}] {:12} mean_logp={:+.3}", c.text, c.mean_logp());

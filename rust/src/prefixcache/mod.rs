@@ -1,0 +1,419 @@
+//! Cross-request prefix cache: radix-indexed, refcount-pinned, LRU-evicted
+//! prefilled contexts.
+//!
+//! The paper's bifurcated decode already stores the shared-context KV once
+//! *within* a request; this subsystem extends that sharing *across*
+//! requests (Hydragen-style inter-request prefix reuse). A compressed
+//! radix tree over token ids ([`radix`]) indexes payload nodes that own:
+//!
+//! * the prefilled `K_c`/`V_c` host tensors (`[l, g, m_c_max, k]`, valid
+//!   to the node's depth) and the next-token logits at the prefix end —
+//!   enough to *skip prefill entirely* on a full hit;
+//! * the uploaded [`Backend::Ctx`] (shared layout), so a warm bifurcated
+//!   request also skips the context upload: `timing.upload_bytes == 0`;
+//! * a [`KvManager`] registration in the `Cached` lease class, so cache
+//!   residency shows up in the same capacity accounting (and invariant
+//!   checker) as in-flight requests.
+//!
+//! Nodes are **pinned** (refcounted) while a request decodes against them
+//! and while an extension reads their tensors; eviction takes the
+//! least-recently-used *unpinned* node and is triggered both by the entry
+//! budget (`max_entries`) and by KV-capacity pressure (the engine retries
+//! failed allocations after evicting). Partial hits prefill only the
+//! uncached suffix via [`Backend::prefill_extend`] and insert the longer
+//! prefix as a new node.
+
+pub mod radix;
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::kvcache::manager::{ContextId, KvManager};
+use crate::runtime::backend::Backend;
+use crate::runtime::tensor::HostTensor;
+use crate::util::json::Json;
+
+use radix::RadixTree;
+
+/// One cached prefix: everything a warm request needs from the context
+/// phase. Tensors and the uploaded context are `Rc`-shared so the engine
+/// can decode against them without holding a borrow of the cache (and so
+/// eviction of *other* nodes mid-request stays safe).
+pub struct CacheEntry<B: Backend> {
+    pub logits: Vec<f32>,
+    pub kc: Rc<HostTensor>,
+    pub vc: Rc<HostTensor>,
+    pub ctx: Rc<B::Ctx>,
+    /// The `Cached`-class registration charging this node's storage.
+    pub ctx_id: ContextId,
+    pins: usize,
+    last_used: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheHit {
+    /// Radix node id (pass to `pin`/`unpin`/`payload`).
+    pub node: usize,
+    /// Prefix tokens covered by the cached entry.
+    pub matched: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub cached_tokens: usize,
+    pub full_hits: u64,
+    pub partial_hits: u64,
+    pub misses: u64,
+    pub hit_tokens: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+pub struct PrefixCache<B: Backend> {
+    tree: RadixTree,
+    entries: BTreeMap<usize, CacheEntry<B>>,
+    /// Entry budget; 0 disables the cache entirely.
+    max_entries: usize,
+    clock: u64,
+    full_hits: u64,
+    partial_hits: u64,
+    misses: u64,
+    hit_tokens: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl<B: Backend> PrefixCache<B> {
+    pub fn new(max_entries: usize) -> PrefixCache<B> {
+        PrefixCache {
+            tree: RadixTree::new(),
+            entries: BTreeMap::new(),
+            max_entries,
+            clock: 0,
+            full_hits: 0,
+            partial_hits: 0,
+            misses: 0,
+            hit_tokens: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_entries > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, node: usize) -> bool {
+        self.entries.contains_key(&node)
+    }
+
+    pub fn entry_ids(&self) -> Vec<usize> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Longest cached prefix of `tokens`, bumping its LRU recency and the
+    /// hit/miss accounting. Returns `None` on a miss (or when disabled).
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<CacheHit> {
+        if !self.enabled() {
+            return None;
+        }
+        match self.tree.longest_prefix(tokens) {
+            Some((node, matched)) => {
+                self.clock += 1;
+                let e = self.entries.get_mut(&node).expect("payload without entry");
+                e.last_used = self.clock;
+                if matched == tokens.len() {
+                    self.full_hits += 1;
+                } else {
+                    self.partial_hits += 1;
+                }
+                self.hit_tokens += matched as u64;
+                Some(CacheHit { node, matched })
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn payload(&self, node: usize) -> &CacheEntry<B> {
+        &self.entries[&node]
+    }
+
+    /// Pin a node for the duration of a request: pinned nodes are never
+    /// eviction victims, so the tensors/context a decode is reading stay
+    /// resident even while that same request's allocations apply pressure.
+    pub fn pin(&mut self, node: usize) {
+        self.entries.get_mut(&node).expect("pin of dead node").pins += 1;
+    }
+
+    pub fn unpin(&mut self, node: usize) {
+        let e = self.entries.get_mut(&node).expect("unpin of dead node");
+        assert!(e.pins > 0, "pin underflow on node {node}");
+        e.pins -= 1;
+    }
+
+    /// Evict unpinned entries until a new one fits the entry budget.
+    /// `false` means every resident entry is pinned (caller skips caching).
+    pub fn make_room(&mut self, kv: &mut KvManager) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        while self.entries.len() >= self.max_entries {
+            if !self.evict_lru(kv) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Insert a freshly prefilled prefix. The caller must have verified no
+    /// full hit exists for `tokens` (a full hit never reaches insertion)
+    /// and must hold a `Cached`-class `ctx_id` charging `tokens.len()`.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        logits: Vec<f32>,
+        kc: Rc<HostTensor>,
+        vc: Rc<HostTensor>,
+        ctx: Rc<B::Ctx>,
+        ctx_id: ContextId,
+    ) -> usize {
+        let node = self.tree.insert(tokens);
+        assert!(!self.entries.contains_key(&node), "insert over a live entry");
+        self.clock += 1;
+        self.entries.insert(
+            node,
+            CacheEntry { logits, kc, vc, ctx, ctx_id, pins: 0, last_used: self.clock },
+        );
+        self.insertions += 1;
+        node
+    }
+
+    /// Evict the least-recently-used unpinned entry, releasing its KV
+    /// registration. `false` when nothing is evictable.
+    pub fn evict_lru(&mut self, kv: &mut KvManager) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pins == 0 && kv.context_leases(e.ctx_id) == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&id, _)| id);
+        let Some(id) = victim else { return false };
+        let e = self.entries.remove(&id).expect("victim vanished");
+        kv.release_context(e.ctx_id);
+        self.tree.remove_payload(id);
+        self.evictions += 1;
+        true
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.entries.len(),
+            cached_tokens: self.entries.keys().map(|&n| self.tree.depth(n)).sum(),
+            full_hits: self.full_hits,
+            partial_hits: self.partial_hits,
+            misses: self.misses,
+            hit_tokens: self.hit_tokens,
+            insertions: self.insertions,
+            evictions: self.evictions,
+        }
+    }
+
+    /// `/metrics` payload: counters plus the derived hit rate.
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats();
+        let lookups = s.full_hits + s.partial_hits + s.misses;
+        let hit_rate = if lookups == 0 {
+            0.0
+        } else {
+            (s.full_hits + s.partial_hits) as f64 / lookups as f64
+        };
+        Json::obj()
+            .set("enabled", Json::Bool(self.enabled()))
+            .set("entries", Json::Num(s.entries as f64))
+            .set("max_entries", Json::Num(self.max_entries as f64))
+            .set("cached_tokens", Json::Num(s.cached_tokens as f64))
+            .set("full_hits", Json::Num(s.full_hits as f64))
+            .set("partial_hits", Json::Num(s.partial_hits as f64))
+            .set("misses", Json::Num(s.misses as f64))
+            .set("hit_rate", Json::Num(hit_rate))
+            .set("hit_tokens", Json::Num(s.hit_tokens as f64))
+            .set("insertions", Json::Num(s.insertions as f64))
+            .set("evictions", Json::Num(s.evictions as f64))
+    }
+
+    /// Cache-level invariants on top of the tree's structural ones: every
+    /// payload entry is registered in `kv` as a `Cached` context charging
+    /// exactly the node's depth, and the entry budget holds.
+    pub fn check_invariants(&self, kv: &KvManager) -> Result<(), String> {
+        self.tree.check_invariants()?;
+        if self.enabled() && self.entries.len() > self.max_entries {
+            return Err(format!(
+                "{} entries exceed budget {}",
+                self.entries.len(),
+                self.max_entries
+            ));
+        }
+        for (&node, e) in &self.entries {
+            if !kv.contains_context(e.ctx_id) {
+                return Err(format!("entry {node} references dead context {}", e.ctx_id));
+            }
+            if kv.context_class(e.ctx_id) != crate::kvcache::manager::ContextClass::Cached {
+                return Err(format!("entry {node} context is not Cached-class"));
+            }
+            if kv.context_tokens(e.ctx_id) != self.tree.depth(node) {
+                return Err(format!(
+                    "entry {node} charges {} tokens but sits at depth {}",
+                    kv.context_tokens(e.ctx_id),
+                    self.tree.depth(node)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::KvManager;
+    use crate::runtime::backend::Backend;
+    use crate::runtime::native::NativeBackend;
+
+    fn tiny_backend() -> NativeBackend {
+        NativeBackend::preset("pico-mq", 0).unwrap()
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn mk_entry(
+        be: &NativeBackend,
+        kv: &mut KvManager,
+        tokens: &[i32],
+    ) -> (Vec<f32>, Rc<HostTensor>, Rc<HostTensor>, Rc<<NativeBackend as Backend>::Ctx>, ContextId)
+    {
+        let c = be.cfg();
+        let kc = Rc::new(HostTensor::zeros_f32(&[c.l, c.g, c.m_c_max, c.k]));
+        let vc = Rc::new(HostTensor::zeros_f32(&[c.l, c.g, c.m_c_max, c.k]));
+        let ctx = Rc::new(be.upload_context(&kc, &vc, tokens.len()).unwrap());
+        let id = kv.register_cached_context(tokens.len()).unwrap();
+        (vec![0.0; c.vocab], kc, vc, ctx, id)
+    }
+
+    fn insert(
+        cache: &mut PrefixCache<NativeBackend>,
+        be: &NativeBackend,
+        kv: &mut KvManager,
+        tokens: &[i32],
+    ) -> usize {
+        let (l, kc, vc, ctx, id) = mk_entry(be, kv, tokens);
+        cache.insert(tokens, l, kc, vc, ctx, id)
+    }
+
+    fn mgr() -> KvManager {
+        KvManager::new(1 << 20, 64, 16)
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let mut c: PrefixCache<NativeBackend> = PrefixCache::new(0);
+        assert!(!c.enabled());
+        assert!(c.lookup(&[1, 2, 3]).is_none());
+        assert_eq!(c.stats().misses, 0, "disabled lookups are not misses");
+    }
+
+    #[test]
+    fn lookup_hits_longest_prefix_and_counts() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(8);
+        let short = insert(&mut c, &be, &mut kv, &[1, 2]);
+        let long = insert(&mut c, &be, &mut kv, &[1, 2, 3, 4]);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), Some(CacheHit { node: long, matched: 4 }));
+        assert_eq!(c.lookup(&[1, 2, 3]), Some(CacheHit { node: short, matched: 2 }));
+        assert!(c.lookup(&[9, 9]).is_none());
+        let s = c.stats();
+        assert_eq!((s.full_hits, s.partial_hits, s.misses), (1, 1, 1));
+        assert_eq!(s.hit_tokens, 6);
+        assert_eq!(s.cached_tokens, 6);
+        c.check_invariants(&kv).unwrap();
+    }
+
+    #[test]
+    fn entry_budget_evicts_lru() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(2);
+        let a = insert(&mut c, &be, &mut kv, &[1, 1]);
+        let b = insert(&mut c, &be, &mut kv, &[2, 2]);
+        // touch `a` so `b` becomes LRU
+        assert!(c.lookup(&[1, 1]).is_some());
+        assert!(c.make_room(&mut kv));
+        let _d = insert(&mut c, &be, &mut kv, &[3, 3]);
+        assert!(c.contains(a));
+        assert!(!c.contains(b), "LRU entry should be the victim");
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(kv.stats().cached_contexts, 2);
+        c.check_invariants(&kv).unwrap();
+    }
+
+    #[test]
+    fn pinned_entries_are_never_victims() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(8);
+        let a = insert(&mut c, &be, &mut kv, &[1, 1]);
+        let b = insert(&mut c, &be, &mut kv, &[2, 2]);
+        c.pin(a);
+        c.pin(b);
+        assert!(!c.evict_lru(&mut kv), "all pinned: nothing evictable");
+        c.unpin(b);
+        assert!(c.evict_lru(&mut kv));
+        assert!(c.contains(a) && !c.contains(b));
+        c.unpin(a);
+        assert!(c.evict_lru(&mut kv));
+        assert!(c.is_empty());
+        assert_eq!(kv.stats().used_blocks, 0, "eviction returns all KV blocks");
+        c.check_invariants(&kv).unwrap();
+    }
+
+    #[test]
+    fn leased_contexts_are_not_evictable() {
+        // Defense in depth: even an unpinned entry is skipped while
+        // samplers still lease its context.
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(8);
+        let a = insert(&mut c, &be, &mut kv, &[1, 1]);
+        let seq = kv.start_sequence(c.payload(a).ctx_id, 16).unwrap();
+        assert!(!c.evict_lru(&mut kv));
+        kv.finish_sequence(seq);
+        assert!(c.evict_lru(&mut kv));
+        c.check_invariants(&kv).unwrap();
+    }
+
+    #[test]
+    fn stats_json_reports_hit_rate() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(4);
+        insert(&mut c, &be, &mut kv, &[1, 2, 3]);
+        assert!(c.lookup(&[1, 2, 3]).is_some());
+        assert!(c.lookup(&[7]).is_none());
+        let j = c.stats_json();
+        assert_eq!(j.f64_of("entries"), 1.0);
+        assert_eq!(j.f64_of("full_hits"), 1.0);
+        assert_eq!(j.f64_of("misses"), 1.0);
+        assert!((j.f64_of("hit_rate") - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,332 @@
+//! Compressed radix tree over token ids — the index structure of the
+//! cross-request prefix cache.
+//!
+//! Pure structure: nodes carry a `has_payload` flag and the cache layer
+//! ([`super::PrefixCache`]) keeps the actual prefilled tensors keyed by
+//! node id, so this file stays independently testable. Edges hold token
+//! runs (path compression); inserting a prompt that diverges mid-edge
+//! splits the edge, and removing a payload prunes and re-merges so the
+//! tree never accumulates useless chain nodes.
+
+use std::collections::BTreeMap;
+
+pub const ROOT: usize = 0;
+
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// Token run on the edge from `parent` (empty only for the root).
+    edge: Vec<i32>,
+    /// Total tokens from the root through this node's edge.
+    depth: usize,
+    /// First-edge-token -> child node id.
+    children: BTreeMap<i32, usize>,
+    has_payload: bool,
+}
+
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+}
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixTree {
+    pub fn new() -> RadixTree {
+        RadixTree {
+            nodes: vec![Some(Node {
+                parent: usize::MAX,
+                edge: Vec::new(),
+                depth: 0,
+                children: BTreeMap::new(),
+                has_payload: false,
+            })],
+            free: Vec::new(),
+        }
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dead node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dead node")
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn dealloc(&mut self, id: usize) {
+        assert_ne!(id, ROOT, "cannot free the root");
+        self.nodes[id] = None;
+        self.free.push(id);
+    }
+
+    pub fn depth(&self, id: usize) -> usize {
+        self.node(id).depth
+    }
+
+    /// Deepest payload-bearing node whose root path is a prefix of
+    /// `tokens`, with the matched token count. Payloads only exist at node
+    /// boundaries, so a walk that dies mid-edge credits the last payload
+    /// node passed on the way down.
+    pub fn longest_prefix(&self, tokens: &[i32]) -> Option<(usize, usize)> {
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        let mut best = None;
+        loop {
+            if self.node(cur).has_payload {
+                best = Some((cur, pos));
+            }
+            if pos == tokens.len() {
+                break;
+            }
+            let Some(&child) = self.node(cur).children.get(&tokens[pos]) else { break };
+            let edge = &self.node(child).edge;
+            if pos + edge.len() <= tokens.len() && tokens[pos..pos + edge.len()] == edge[..] {
+                pos += edge.len();
+                cur = child;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Ensure a payload node exists exactly at `tokens` (splitting edges as
+    /// needed) and return its id. `tokens` must be non-empty.
+    pub fn insert(&mut self, tokens: &[i32]) -> usize {
+        assert!(!tokens.is_empty(), "cannot cache the empty prefix");
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            match self.node(cur).children.get(&tokens[pos]).copied() {
+                None => {
+                    let leaf = self.alloc(Node {
+                        parent: cur,
+                        edge: tokens[pos..].to_vec(),
+                        depth: tokens.len(),
+                        children: BTreeMap::new(),
+                        has_payload: false,
+                    });
+                    self.node_mut(cur).children.insert(tokens[pos], leaf);
+                    cur = leaf;
+                    pos = tokens.len();
+                }
+                Some(child) => {
+                    let edge = self.node(child).edge.clone();
+                    let rest = &tokens[pos..];
+                    let common = edge
+                        .iter()
+                        .zip(rest)
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    debug_assert!(common >= 1, "child key must match first token");
+                    if common == edge.len() {
+                        cur = child;
+                        pos += common;
+                    } else {
+                        // Split `child`'s edge: cur -> mid -> child, with
+                        // the diverging tail staying on `child`.
+                        let mid = self.alloc(Node {
+                            parent: cur,
+                            edge: edge[..common].to_vec(),
+                            depth: self.node(cur).depth + common,
+                            children: BTreeMap::new(),
+                            has_payload: false,
+                        });
+                        self.node_mut(cur).children.insert(edge[0], mid);
+                        let tail = edge[common..].to_vec();
+                        {
+                            let c = self.node_mut(child);
+                            c.parent = mid;
+                            c.edge = tail.clone();
+                        }
+                        self.node_mut(mid).children.insert(tail[0], child);
+                        cur = mid;
+                        pos += common;
+                    }
+                }
+            }
+        }
+        self.node_mut(cur).has_payload = true;
+        cur
+    }
+
+    /// Drop a node's payload, pruning empty leaves and re-merging
+    /// single-child chain nodes so the structure stays compressed.
+    /// Surviving node ids are stable (merges always free the payload-less
+    /// node, never re-number a payload-bearing one).
+    pub fn remove_payload(&mut self, id: usize) {
+        assert!(self.node(id).has_payload, "node {id} has no payload");
+        self.node_mut(id).has_payload = false;
+        let mut cur = id;
+        while cur != ROOT && !self.node(cur).has_payload && self.node(cur).children.is_empty() {
+            let parent = self.node(cur).parent;
+            let first = self.node(cur).edge[0];
+            self.node_mut(parent).children.remove(&first);
+            self.dealloc(cur);
+            cur = parent;
+        }
+        if cur != ROOT && !self.node(cur).has_payload && self.node(cur).children.len() == 1 {
+            // merge the lone child up into cur's slot in the parent
+            let child = *self.node(cur).children.values().next().unwrap();
+            let parent = self.node(cur).parent;
+            let cur_edge = self.node(cur).edge.clone();
+            let mut merged = cur_edge.clone();
+            merged.extend_from_slice(&self.node(child).edge);
+            {
+                let c = self.node_mut(child);
+                c.parent = parent;
+                c.edge = merged;
+            }
+            self.node_mut(parent).children.insert(cur_edge[0], child);
+            self.dealloc(cur);
+        }
+    }
+
+    /// Number of live nodes (root included).
+    pub fn len(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 1
+    }
+
+    /// Structural invariants (propcheck target): reachability matches the
+    /// live-slot count, edges are non-empty and keyed by their first
+    /// token, depths telescope, and no payload-less leaf survives.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = 0usize;
+        let mut stack = vec![ROOT];
+        while let Some(id) = stack.pop() {
+            seen += 1;
+            let n = self.node(id);
+            if id == ROOT {
+                if !n.edge.is_empty() || n.depth != 0 {
+                    return Err("malformed root".into());
+                }
+            } else {
+                if n.edge.is_empty() {
+                    return Err(format!("node {id} has an empty edge"));
+                }
+                let p = self.node(n.parent);
+                if n.depth != p.depth + n.edge.len() {
+                    return Err(format!("node {id} depth mismatch"));
+                }
+                if p.children.get(&n.edge[0]) != Some(&id) {
+                    return Err(format!("node {id} not indexed under its first token"));
+                }
+                if !n.has_payload && n.children.is_empty() {
+                    return Err(format!("payload-less leaf {id}"));
+                }
+            }
+            stack.extend(n.children.values().copied());
+        }
+        if seen != self.len() {
+            return Err(format!("{seen} reachable nodes != {} live slots", self.len()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_lookup_exact_and_prefix() {
+        let mut t = RadixTree::new();
+        let a = t.insert(&[1, 2, 3, 4]);
+        assert_eq!(t.depth(a), 4);
+        // exact hit
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4]), Some((a, 4)));
+        // longer query still matches the stored prefix
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4, 9, 9]), Some((a, 4)));
+        // shorter query cannot use a deeper payload
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), None);
+        assert_eq!(t.longest_prefix(&[7]), None);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn edge_split_preserves_both_entries() {
+        let mut t = RadixTree::new();
+        let ab = t.insert(&[1, 2, 3, 4]);
+        let ac = t.insert(&[1, 2, 5]);
+        t.check_invariants().unwrap();
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4, 0]), Some((ab, 4)));
+        assert_eq!(t.longest_prefix(&[1, 2, 5, 0]), Some((ac, 3)));
+        // payload exactly at the split point
+        let mid = t.insert(&[1, 2]);
+        assert_eq!(t.longest_prefix(&[1, 2, 9]), Some((mid, 2)));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn nested_payloads_prefer_deepest() {
+        let mut t = RadixTree::new();
+        let short = t.insert(&[1, 2]);
+        let long = t.insert(&[1, 2, 3, 4]);
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4]), Some((long, 4)));
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((short, 2)));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_prunes_and_merges() {
+        let mut t = RadixTree::new();
+        let ab = t.insert(&[1, 2, 3, 4]);
+        let ac = t.insert(&[1, 2, 5]);
+        t.remove_payload(ab);
+        t.check_invariants().unwrap();
+        // the split node re-merged: ac still resolvable, ab gone
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4]), None);
+        assert_eq!(t.longest_prefix(&[1, 2, 5, 9]), Some((ac, 3)));
+        t.remove_payload(ac);
+        t.check_invariants().unwrap();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn reinsert_after_remove_reuses_slots() {
+        let mut t = RadixTree::new();
+        let a = t.insert(&[1, 2, 3]);
+        t.remove_payload(a);
+        let b = t.insert(&[1, 2, 3]);
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((b, 3)));
+        assert_eq!(t.len(), 2); // root + one leaf
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn interior_payload_survives_leaf_removal() {
+        let mut t = RadixTree::new();
+        let short = t.insert(&[1, 2]);
+        let long = t.insert(&[1, 2, 3]);
+        t.remove_payload(long);
+        t.check_invariants().unwrap();
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((short, 2)));
+        // removing an interior payload with a live child keeps the chain
+        let long2 = t.insert(&[1, 2, 3]);
+        t.remove_payload(short);
+        t.check_invariants().unwrap();
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4]), Some((long2, 3)));
+    }
+}

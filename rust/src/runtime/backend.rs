@@ -52,6 +52,23 @@ pub trait Backend {
     /// shaped `[l, g, m_c_max, k]`.
     fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut>;
 
+    /// Incremental prefill for cross-request prefix reuse: `kc`/`vc` are a
+    /// previous prefill's context caches (`[l, g, m_c_max, k]`), valid for
+    /// the first `cached_len` tokens of `tokens`; only the remaining
+    /// suffix needs encoding. Must produce exactly what `prefill(tokens)`
+    /// would. The default falls back to a full prefill, so backends
+    /// without incremental support (PJRT artifacts compile fixed prefill
+    /// graphs) stay correct and merely forgo the savings.
+    fn prefill_extend(
+        &self,
+        _kc: &HostTensor,
+        _vc: &HostTensor,
+        _cached_len: usize,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        self.prefill(tokens)
+    }
+
     /// Make context KV resident for a request group. Bifurcated serving
     /// passes the shared tensors (`[l, g, mc, k]`); the fused baseline
     /// passes per-row replicas (`[l, b, g, mc, k]`).

@@ -173,6 +173,47 @@ impl Backend for NativeBackend {
         })
     }
 
+    fn prefill_extend(
+        &self,
+        kc: &HostTensor,
+        vc: &HostTensor,
+        cached_len: usize,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        let c = &self.cfg;
+        let shared = vec![c.l, c.g, c.m_c_max, c.k];
+        ensure!(kc.shape == shared, "cached kc shape {:?} != {shared:?}", kc.shape);
+        ensure!(vc.shape == shared, "cached vc shape {:?} != {shared:?}", vc.shape);
+        ensure!(
+            cached_len >= 1 && cached_len <= tokens.len(),
+            "cached_len {cached_len} out of range for a {}-token prompt",
+            tokens.len()
+        );
+        ensure!(tokens.len() <= c.m_c_max, "prompt {} > m_c_max {}", tokens.len(), c.m_c_max);
+        if cached_len == tokens.len() {
+            // Nothing to extend; the caller normally short-circuits this
+            // (full hits reuse the cached logits), but stay correct.
+            return self.prefill(tokens);
+        }
+        let len = tokens.len();
+        let mut padded = tokens.to_vec();
+        padded.resize(c.m_c_max, 0);
+        let (logits, kc2, vc2) = model::prefill_extend_forward(
+            c,
+            &self.weights,
+            kc.f32s(),
+            vc.f32s(),
+            cached_len,
+            &padded,
+            len,
+        );
+        Ok(PrefillOut {
+            logits,
+            kc: HostTensor::from_f32(kc2, &[c.l, c.g, c.m_c_max, c.k]),
+            vc: HostTensor::from_f32(vc2, &[c.l, c.g, c.m_c_max, c.k]),
+        })
+    }
+
     fn upload_context(&self, kc: &HostTensor, vc: &HostTensor, m_c_len: usize) -> Result<NativeContext> {
         ensure!(kc.shape == vc.shape, "kc/vc shape mismatch");
         let bytes = kc.byte_size() + vc.byte_size();
@@ -290,6 +331,25 @@ mod tests {
         let out = be.decode(DecodeMode::Bifurcated, 2, &[5, 6], 0, &ctx, &kd, &vd).unwrap();
         assert_eq!(out.logits.shape, vec![2, 16]);
         assert!(out.logits.f32s().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prefill_extend_matches_full_prefill_at_backend_level() {
+        let be = NativeBackend::preset("pico-mg", 4).unwrap();
+        let full: Vec<i32> = vec![1, 3, 12, 4, 13, 9, 14, 5, 12, 6, 13];
+        let prefix = &full[..6];
+        let pre_prefix = be.prefill(prefix).unwrap();
+        let pre_full = be.prefill(&full).unwrap();
+        let ext = be
+            .prefill_extend(&pre_prefix.kc, &pre_prefix.vc, prefix.len(), &full)
+            .unwrap();
+        assert_eq!(ext.logits, pre_full.logits);
+        assert_eq!(ext.kc, pre_full.kc);
+        assert_eq!(ext.vc, pre_full.vc);
+        // degenerate shapes are rejected loudly
+        assert!(be.prefill_extend(&pre_prefix.kc, &pre_prefix.vc, 0, &full).is_err());
+        let bad = HostTensor::zeros_f32(&[1, 1, 1, 1]);
+        assert!(be.prefill_extend(&bad, &bad, 2, &full).is_err());
     }
 
     #[test]

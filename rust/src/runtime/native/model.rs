@@ -235,6 +235,104 @@ fn kt_at(buf: &[f32], base: usize, j: usize, kk: usize) -> &[f32] {
     &buf[base + j * kk..base + (j + 1) * kk]
 }
 
+/// Incremental prefill: extend a previous prefill's caches (valid for the
+/// first `cached_len` tokens) over the full `len`-token prompt, computing
+/// only rows `cached_len..m_c_max` of the residual stream.
+///
+/// Bitwise-identical to [`prefill_forward`] over the same prompt: cached
+/// rows `j < cached_len` are exactly what a full prefill computes for them
+/// (causality — row `j` sees only tokens `<= j`), and the recomputed rows
+/// run the same per-row ops in the same accumulation order against the
+/// same per-layer K/V buffer. `tests` pins this with `assert_eq`.
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_extend_forward(
+    cfg: &ModelCfg,
+    w: &NativeWeights,
+    cached_kc: &[f32],
+    cached_vc: &[f32],
+    cached_len: usize,
+    tokens_padded: &[i32],
+    len: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+    let s_max = cfg.m_c_max;
+    assert_eq!(tokens_padded.len(), s_max, "prompt must be padded to m_c_max");
+    assert!(cached_len >= 1 && cached_len < len && len <= s_max, "extension range out of order");
+    assert_eq!(cached_kc.len(), cfg.l * g * s_max * kk, "cached kc shape");
+    assert_eq!(cached_vc.len(), cached_kc.len(), "cached vc shape");
+    let scale = 1.0 / (kk as f32).sqrt();
+    let rows = s_max - cached_len;
+
+    let mut x = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        embed(cfg, w, tokens_padded[cached_len + r], cached_len + r, &mut x[r * d..(r + 1) * d]);
+    }
+
+    let mut kc_all = cached_kc.to_vec();
+    let mut vc_all = cached_vc.to_vec();
+
+    for (li, lw) in w.layers.iter().enumerate() {
+        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
+        let q = matmul(&h1, &lw.wq, rows, d, h * kk);
+        let kt = matmul(&h1, &lw.wk, rows, d, g * kk);
+        let vt = matmul(&h1, &lw.wv, rows, d, g * kk);
+
+        // Overwrite the suffix rows of this layer's cache; the cached
+        // prefix rows stay untouched and feed the attention below.
+        for gi in 0..g {
+            for r in 0..rows {
+                let src = &kt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
+                let dst = ((li * g + gi) * s_max + cached_len + r) * kk;
+                kc_all[dst..dst + kk].copy_from_slice(src);
+                let src = &vt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
+                vc_all[dst..dst + kk].copy_from_slice(src);
+            }
+        }
+
+        let mut o = vec![0.0f32; rows * h * kk];
+        let mut logits = vec![0.0f32; s_max];
+        for r in 0..rows {
+            let i = cached_len + r;
+            let j_end = if i < len { i + 1 } else { len };
+            for hh in 0..h {
+                let gi = hh / p;
+                let qv = &q[r * h * kk + hh * kk..r * h * kk + (hh + 1) * kk];
+                let kbase = (li * g + gi) * s_max * kk;
+                let mut mx = NEG_INF;
+                for (j, lj) in logits[..j_end].iter_mut().enumerate() {
+                    let krow = kt_at(&kc_all, kbase, j, kk);
+                    *lj = dot(qv, krow) * scale;
+                    if *lj > mx {
+                        mx = *lj;
+                    }
+                }
+                let mut denom = 0.0f32;
+                let orow = &mut o[r * h * kk + hh * kk..r * h * kk + (hh + 1) * kk];
+                for (j, &lj) in logits[..j_end].iter().enumerate() {
+                    let e = (lj - mx).exp();
+                    denom += e;
+                    axpy(orow, e, kt_at(&vc_all, kbase, j, kk));
+                }
+                for v in orow.iter_mut() {
+                    *v /= denom;
+                }
+            }
+        }
+
+        let proj = matmul(&o, &lw.wo, rows, h * kk, d);
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+        mlp_block(cfg, lw, &mut x, rows);
+    }
+
+    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+    let last_row = len - 1 - cached_len;
+    let last = &xf[last_row * d..(last_row + 1) * d];
+    let logits = matmul(last, &w.head, 1, d, cfg.vocab);
+    (logits, kc_all, vc_all)
+}
+
 /// Reused per-head scratch buffers for the decode attention inner loop.
 /// Hoisted out of the (layer × row × head) loop so neither mode pays
 /// allocator overhead — the microbench's bifurcated-vs-fused latency
@@ -587,6 +685,30 @@ mod tests {
                     assert_eq!(&kca[base..base + cfg.k], &kcb[base..base + cfg.k]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn prefill_extend_is_bitwise_identical_to_full_prefill() {
+        // Prefill a prefix, then extend it with the remaining tokens: the
+        // logits and both caches must equal a from-scratch prefill exactly
+        // (this is what makes warm-cache completions reproduce cold ones).
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 5);
+        let full: Vec<i32> = vec![1, 5, 12, 6, 13, 2, 3];
+        let len = full.len();
+        for cached_len in 1..len {
+            let mut prefix = full[..cached_len].to_vec();
+            prefix.resize(cfg.m_c_max, 0);
+            let (_, kc_p, vc_p) = prefill_forward(&cfg, &w, &prefix, cached_len);
+            let mut padded = full.clone();
+            padded.resize(cfg.m_c_max, 0);
+            let (l_ref, kc_ref, vc_ref) = prefill_forward(&cfg, &w, &padded, len);
+            let (l_ext, kc_ext, vc_ext) =
+                prefill_extend_forward(&cfg, &w, &kc_p, &vc_p, cached_len, &padded, len);
+            assert_eq!(l_ext, l_ref, "logits diverge at cached_len={cached_len}");
+            assert_eq!(kc_ext, kc_ref, "kc diverges at cached_len={cached_len}");
+            assert_eq!(vc_ext, vc_ref, "vc diverges at cached_len={cached_len}");
         }
     }
 

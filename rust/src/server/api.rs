@@ -9,7 +9,10 @@
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
-use crate::coordinator::{rerank_top_k, Engine, EngineConfig, GenerationRequest, SamplingParams};
+use crate::coordinator::{
+    rerank_top_k, Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use crate::runtime::models::DecodeMode;
 use crate::runtime::Backend;
 use crate::util::json::{parse as parse_json, Json};
 
@@ -76,7 +79,7 @@ where
                         let _ = reply.send(res);
                     }
                     Job::Metrics(reply) => {
-                        let _ = reply.send(engine.metrics.report());
+                        let _ = reply.send(engine.metrics_report());
                     }
                 }
             }
@@ -134,7 +137,9 @@ fn result_to_json(r: &crate::coordinator::RequestResult, rerank_k: usize) -> Jso
                 .set("decode_ms", Json::Num(r.timing.decode_ms))
                 .set("decode_steps", Json::Num(r.timing.decode_steps as f64))
                 .set("waves", Json::Num(r.timing.waves as f64))
-                .set("upload_bytes", Json::Num(r.timing.upload_bytes as f64)),
+                .set("upload_bytes", Json::Num(r.timing.upload_bytes as f64))
+                .set("step_upload_bytes", Json::Num(r.timing.step_upload_bytes as f64))
+                .set("cache_hit_tokens", Json::Num(r.timing.cache_hit_tokens as f64)),
         );
     if rerank_k > 0 {
         let top = rerank_top_k(&r.completions, rerank_k);
@@ -151,14 +156,40 @@ pub fn parse_generate_body(body: &str, next_id: u64) -> Result<(GenerationReques
         .and_then(|p| p.as_str())
         .ok_or("missing 'prompt'")?
         .to_string();
+    // optional "stop": a token id, or JSON null to decode to max_tokens;
+    // absent keeps the grammar's ';' default
+    let stop_token = match doc.get("stop") {
+        None => Some(crate::corpus::SEMI),
+        Some(Json::Null) => None,
+        // as_i64 would silently truncate 9.7 or saturate 1e20; insist on
+        // an exact non-negative token id that fits i32
+        Some(v) => match v.as_f64() {
+            Some(f) if f.fract() == 0.0 && (0.0..=i32::MAX as f64).contains(&f) => {
+                Some(f as i32)
+            }
+            _ => return Err("'stop' must be an integer token id or null".into()),
+        },
+    };
+    // optional "mode": per-request ModePolicy override
+    let mode = match doc.get("mode") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some("auto") => Some(ModePolicy::Auto),
+            Some("bifurcated") => Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+            Some("fused") => Some(ModePolicy::Force(DecodeMode::Fused)),
+            Some(other) => return Err(format!("unknown mode '{other}' (auto|bifurcated|fused)")),
+            None => return Err("'mode' must be a string (auto|bifurcated|fused)".into()),
+        },
+    };
     let d = SamplingParams::default();
     let params = SamplingParams {
         n: doc.get("n").and_then(|v| v.as_usize()).unwrap_or(1),
         temperature: doc.get("temperature").and_then(|v| v.as_f64()).unwrap_or(d.temperature as f64) as f32,
         top_p: doc.get("top_p").and_then(|v| v.as_f64()).unwrap_or(d.top_p as f64) as f32,
         max_tokens: doc.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(d.max_tokens),
-        stop_token: Some(crate::corpus::SEMI),
+        stop_token,
         seed: doc.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+        mode,
     };
     if params.n == 0 {
         return Err("n must be >= 1".into());
@@ -219,6 +250,26 @@ mod tests {
         assert!(parse_generate_body("{}", 1).is_err());
         assert!(parse_generate_body("not json", 1).is_err());
         assert!(parse_generate_body(r#"{"prompt":"x","n":0}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","mode":"turbo"}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","mode":3}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","stop":"y"}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","stop":9.7}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","stop":-3}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","stop":1e20}"#, 1).is_err());
+    }
+
+    #[test]
+    fn parse_generate_body_stop_and_mode() {
+        let (req, _) =
+            parse_generate_body(r#"{"prompt":"x","stop":9,"mode":"bifurcated"}"#, 1).unwrap();
+        assert_eq!(req.params.stop_token, Some(9));
+        assert_eq!(req.params.mode, Some(ModePolicy::Force(DecodeMode::Bifurcated)));
+        let (req, _) = parse_generate_body(r#"{"prompt":"x","stop":null,"mode":"auto"}"#, 1).unwrap();
+        assert_eq!(req.params.stop_token, None);
+        assert_eq!(req.params.mode, Some(ModePolicy::Auto));
+        let (req, _) = parse_generate_body(r#"{"prompt":"x","mode":"fused"}"#, 1).unwrap();
+        assert_eq!(req.params.mode, Some(ModePolicy::Force(DecodeMode::Fused)));
+        assert_eq!(req.params.stop_token, Some(crate::corpus::SEMI));
     }
 
     #[test]
@@ -231,5 +282,25 @@ mod tests {
         assert_eq!(res.req("completions").as_arr().unwrap().len(), 2);
         let met = client.metrics();
         assert_eq!(met.f64_of("requests"), 1.0);
+        // /metrics now carries the KV-capacity and prefix-cache gauges
+        assert!(met.req("kv").f64_of("free_blocks") > 0.0);
+        assert_eq!(met.req("prefix_cache").f64_of("misses"), 1.0);
+    }
+
+    #[test]
+    fn per_request_mode_is_honored_end_to_end() {
+        let client =
+            spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let body = r#"{"prompt":"1+2=","n":8,"max_tokens":2,"mode":"bifurcated"}"#;
+        let (req, rk) = parse_generate_body(body, 1).unwrap();
+        let res = client.generate(req, rk).unwrap();
+        assert_eq!(res.str_of("mode"), "bifurcated");
+        // a warm request can still force the fused baseline; it reuses the
+        // cached prefill (hit tokens > 0) but re-replicates the context
+        let body = r#"{"prompt":"1+2=","n":8,"max_tokens":2,"mode":"fused"}"#;
+        let (req, rk) = parse_generate_body(body, 2).unwrap();
+        let res = client.generate(req, rk).unwrap();
+        assert_eq!(res.str_of("mode"), "fused");
+        assert!(res.req("timing").f64_of("cache_hit_tokens") > 0.0, "second request is warm");
     }
 }

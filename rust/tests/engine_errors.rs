@@ -1,0 +1,183 @@
+//! Engine error paths on the native backend: a mid-wave decode failure
+//! and KV lease exhaustion must both roll back cleanly — no leaked
+//! sequences, no leaked active contexts, `check_invariants()` green —
+//! and the engine must keep serving afterwards.
+
+use std::cell::Cell;
+
+use anyhow::Result;
+
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use bifurcated_attn::runtime::manifest::ModelCfg;
+use bifurcated_attn::runtime::models::{DecodeMode, DecodeOut, PrefillOut};
+use bifurcated_attn::runtime::{Backend, HostTensor, NativeBackend, NativeContext, TokenizerInfo};
+
+/// Delegates to the real native backend but fails the Nth decode call —
+/// the injection point for mid-wave faults.
+struct FailingBackend {
+    inner: NativeBackend,
+    decode_calls: Cell<usize>,
+    fail_at: Cell<usize>,
+}
+
+impl FailingBackend {
+    fn new(model: &str, fail_at: usize) -> FailingBackend {
+        FailingBackend {
+            inner: NativeBackend::preset(model, 0).unwrap(),
+            decode_calls: Cell::new(0),
+            fail_at: Cell::new(fail_at),
+        }
+    }
+}
+
+impl Backend for FailingBackend {
+    type Ctx = NativeContext;
+
+    fn name(&self) -> &'static str {
+        "failing-native"
+    }
+
+    fn cfg(&self) -> &ModelCfg {
+        self.inner.cfg()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        self.inner.prefill(tokens)
+    }
+
+    fn upload_context(
+        &self,
+        kc: &HostTensor,
+        vc: &HostTensor,
+        m_c_len: usize,
+    ) -> Result<NativeContext> {
+        self.inner.upload_context(kc, vc, m_c_len)
+    }
+
+    fn decode(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        ctx: &NativeContext,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        let n = self.decode_calls.get() + 1;
+        self.decode_calls.set(n);
+        if n >= self.fail_at.get() {
+            anyhow::bail!("injected decode fault at call {n}");
+        }
+        self.inner.decode(mode, bucket, tokens, d_pos, ctx, kd, vd)
+    }
+
+    fn upload_bytes(&self) -> usize {
+        self.inner.upload_bytes()
+    }
+}
+
+fn req(id: u64, n: usize, max_tokens: usize) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: "10+2=12;11+3=14;12+4=".into(),
+        params: SamplingParams {
+            n,
+            temperature: 1.0,
+            top_p: 1.0,
+            max_tokens,
+            stop_token: None,
+            seed: id,
+            mode: None,
+        },
+    }
+}
+
+#[test]
+fn mid_wave_decode_failure_rolls_back_bifurcated() {
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::new(TokenizerInfo::builtin(), FailingBackend::new("pico-mq", 2), cfg);
+
+    let err = engine.generate(&req(1, 2, 4)).unwrap_err();
+    assert!(format!("{err:#}").contains("injected decode fault"), "{err:#}");
+
+    engine.kv.borrow().check_invariants().unwrap();
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+    let st = engine.kv.borrow().stats();
+    assert_eq!(st.sequences, 0, "leases must be returned on failure");
+    assert_eq!(
+        st.contexts, st.cached_contexts,
+        "no active context may leak; only the cache node persists"
+    );
+
+    // the cache node survives the failed request: recovery is warm
+    engine.rt.fail_at.set(usize::MAX);
+    let ok = engine.generate(&req(2, 2, 4)).unwrap();
+    assert_eq!(ok.completions.len(), 2);
+    assert!(ok.timing.cache_hit_tokens > 0, "retry should hit the cached prefix");
+    assert_eq!(ok.timing.upload_bytes, 0);
+}
+
+#[test]
+fn mid_wave_decode_failure_rolls_back_fused() {
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Fused);
+    let engine = Engine::new(TokenizerInfo::builtin(), FailingBackend::new("pico-mq", 3), cfg);
+
+    engine.generate(&req(1, 4, 4)).unwrap_err();
+    engine.kv.borrow().check_invariants().unwrap();
+    let st = engine.kv.borrow().stats();
+    // fused requests own their (replicated) registration and never cache
+    assert_eq!((st.contexts, st.sequences, st.used_blocks), (0, 0, 0));
+
+    engine.rt.fail_at.set(usize::MAX);
+    assert_eq!(engine.generate(&req(2, 4, 4)).unwrap().completions.len(), 4);
+}
+
+#[test]
+fn failure_in_a_later_wave_returns_earlier_leases_too() {
+    // n=40 runs as waves of 32 + 8; fail deep enough that wave 0 finished
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::new(TokenizerInfo::builtin(), FailingBackend::new("pico-mq", 6), cfg);
+    engine.generate(&req(1, 40, 4)).unwrap_err();
+    engine.kv.borrow().check_invariants().unwrap();
+    let st = engine.kv.borrow().stats();
+    assert_eq!(st.sequences, 0);
+    assert_eq!(st.contexts, st.cached_contexts);
+}
+
+#[test]
+fn lease_exhaustion_rolls_back_and_recovers() {
+    // Room for the cached context (2 blocks) plus 4 decode slots; n=8
+    // needs 8 slots, so the 5th lease exhausts capacity with nothing
+    // evictable (the request's own node is pinned).
+    let be = NativeBackend::preset("pico-mq", 0).unwrap();
+    let bpt = be.cfg().kv_bytes_per_token();
+    let mut cfg = EngineConfig::default();
+    cfg.block_tokens = 16;
+    cfg.kv_capacity_bytes = 6 * 16 * bpt;
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+
+    let err = engine.generate(&req(1, 8, 8)).unwrap_err();
+    assert!(format!("{err:#}").contains("KV capacity"), "{err:#}");
+    engine.kv.borrow().check_invariants().unwrap();
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+    let st = engine.kv.borrow().stats();
+    assert_eq!(st.sequences, 0, "partial leases must be rolled back");
+    assert_eq!(st.contexts, st.cached_contexts, "no active context leaked");
+
+    // a smaller batch fits — and is warm, since the prefill was cached
+    let ok = engine.generate(&req(2, 4, 8)).unwrap();
+    assert_eq!(ok.completions.len(), 4);
+    assert!(ok.timing.cache_hit_tokens > 0);
+    engine.kv.borrow().check_invariants().unwrap();
+}

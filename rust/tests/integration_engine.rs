@@ -30,6 +30,7 @@ fn req(prompt: &str, n: usize, seed: u64) -> GenerationRequest {
             max_tokens: 6,
             stop_token: Some(corpus::SEMI),
             seed,
+            mode: None,
         },
     }
 }

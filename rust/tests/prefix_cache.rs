@@ -1,0 +1,192 @@
+//! Cross-request prefix cache, end-to-end on the native backend: warm
+//! requests must reproduce cold completions exactly while skipping
+//! prefill and context upload; partial hits must extend incrementally;
+//! eviction must respect pins and the KV accounting.
+
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::NativeBackend;
+
+fn req(id: u64, prompt: &str, n: usize, seed: u64) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens: 6,
+            stop_token: Some(corpus::SEMI),
+            seed,
+            mode: None,
+        },
+    }
+}
+
+fn texts(r: &bifurcated_attn::coordinator::RequestResult) -> Vec<String> {
+    r.completions.iter().map(|c| c.text.clone()).collect()
+}
+
+#[test]
+fn warm_hit_reproduces_cold_with_zero_upload() {
+    let prompt = "10+2=12;11+3=14;12+4=";
+    let engine = Engine::native("pico-mq", 0, EngineConfig::default()).unwrap();
+    let prompt_len = engine.tokenize_prompt(prompt).unwrap().len();
+
+    let cold = engine.generate(&req(7, prompt, 8, 5)).unwrap();
+    assert_eq!(cold.mode_used, DecodeMode::Bifurcated);
+    assert_eq!(cold.timing.cache_hit_tokens, 0);
+    assert!(cold.timing.upload_bytes > 0, "cold request uploads the context");
+
+    // identical request again: full hit — no prefill, no context upload
+    let warm = engine.generate(&req(7, prompt, 8, 5)).unwrap();
+    assert_eq!(texts(&warm), texts(&cold), "warm completions must match cold exactly");
+    assert_eq!(warm.timing.cache_hit_tokens, prompt_len);
+    assert_eq!(warm.timing.upload_bytes, 0, "warm bifurcated hit skips the upload");
+    assert_eq!(warm.mode_used, DecodeMode::Bifurcated);
+
+    // a fresh engine (cold cache) also produces the same completions
+    let fresh = Engine::native("pico-mq", 0, EngineConfig::default()).unwrap();
+    let cold2 = fresh.generate(&req(7, prompt, 8, 5)).unwrap();
+    assert_eq!(texts(&cold2), texts(&warm));
+
+    let stats = engine.cache.borrow().stats();
+    assert_eq!(stats.full_hits, 1);
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.entries, 1);
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+}
+
+#[test]
+fn partial_hit_prefills_only_the_suffix() {
+    let short = "10+2=12;11+3=";
+    let long = "10+2=12;11+3=14;12+4=";
+    let engine = Engine::native("pico-mg", 1, EngineConfig::default()).unwrap();
+    let short_len = engine.tokenize_prompt(short).unwrap().len();
+    let long_len = engine.tokenize_prompt(long).unwrap().len();
+
+    engine.generate(&req(1, short, 8, 3)).unwrap();
+    let ext = engine.generate(&req(2, long, 8, 9)).unwrap();
+    assert_eq!(
+        ext.timing.cache_hit_tokens, short_len,
+        "the cached short prompt should cover the prefix"
+    );
+    assert!(ext.timing.cache_hit_tokens < long_len);
+
+    // incremental prefill is exact: a cold engine agrees completion-for-
+    // completion with the extended warm path
+    let fresh = Engine::native("pico-mg", 1, EngineConfig::default()).unwrap();
+    let cold = fresh.generate(&req(2, long, 8, 9)).unwrap();
+    assert_eq!(texts(&ext), texts(&cold));
+
+    // the extension became its own node: re-serving `long` is a full hit
+    let warm = engine.generate(&req(3, long, 8, 11)).unwrap();
+    assert_eq!(warm.timing.cache_hit_tokens, long_len);
+    assert_eq!(warm.timing.upload_bytes, 0);
+    assert_eq!(engine.cache.borrow().stats().entries, 2);
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+}
+
+#[test]
+fn warm_full_hit_tips_auto_mode_to_bifurcated() {
+    // n=1 on a short prompt is below the FAQ-4 threshold: cold runs
+    // fused. Warm, the shared context is already resident, so auto picks
+    // bifurcated and uploads nothing. But fused requests don't populate
+    // the cache, so prime it with a bifurcated request first.
+    let engine = Engine::native("pico-mq", 2, EngineConfig::default()).unwrap();
+    let prompt = "7+8=";
+    let greedy = |id: u64, n: usize, mode: Option<ModePolicy>| GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.0,
+            top_p: 0.95,
+            max_tokens: 4,
+            stop_token: Some(corpus::SEMI),
+            seed: 1,
+            mode,
+        },
+    };
+    let cold = engine
+        .generate(&greedy(1, 1, Some(ModePolicy::Force(DecodeMode::Bifurcated))))
+        .unwrap();
+    let warm = engine.generate(&greedy(2, 1, None)).unwrap();
+    assert_eq!(warm.mode_used, DecodeMode::Bifurcated, "full hit flips auto to bifurcated");
+    assert_eq!(warm.timing.upload_bytes, 0);
+    assert_eq!(texts(&warm), texts(&cold));
+    // cold auto at this workload would have been fused
+    let fresh = Engine::native("pico-mq", 2, EngineConfig::default()).unwrap();
+    assert_eq!(fresh.generate(&greedy(3, 1, None)).unwrap().mode_used, DecodeMode::Fused);
+}
+
+#[test]
+fn disabled_cache_preserves_the_old_lifecycle() {
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_cache_entries = 0;
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+    let a = engine.generate(&req(1, "10+2=12;11+3=14;12+4=", 8, 5)).unwrap();
+    let b = engine.generate(&req(2, "10+2=12;11+3=14;12+4=", 8, 5)).unwrap();
+    assert_eq!(a.timing.cache_hit_tokens, 0);
+    assert_eq!(b.timing.cache_hit_tokens, 0);
+    assert!(b.timing.upload_bytes > 0, "no cache: every request re-uploads");
+    let stats = engine.kv.borrow().stats();
+    assert_eq!((stats.contexts, stats.sequences, stats.used_blocks), (0, 0, 0));
+}
+
+#[test]
+fn entry_budget_evicts_lru_nodes() {
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_cache_entries = 2;
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+    engine.generate(&req(1, "1+1=", 2, 1)).unwrap();
+    engine.generate(&req(2, "2+2=", 2, 2)).unwrap();
+    // touch the first so the second becomes LRU
+    engine.generate(&req(3, "1+1=", 2, 3)).unwrap();
+    engine.generate(&req(4, "3+3=", 2, 4)).unwrap();
+    {
+        let cache = engine.cache.borrow();
+        assert_eq!(cache.stats().entries, 2);
+        assert_eq!(cache.stats().evictions, 1);
+        cache.check_invariants(&engine.kv.borrow()).unwrap();
+    }
+    // "2+2=" was evicted; "1+1=" survived
+    assert_eq!(engine.generate(&req(5, "1+1=", 2, 5)).unwrap().timing.cache_hit_tokens, 5);
+    assert_eq!(engine.generate(&req(6, "2+2=", 2, 6)).unwrap().timing.cache_hit_tokens, 0);
+}
+
+#[test]
+fn kv_pressure_evicts_cached_nodes_mid_request() {
+    // Capacity of exactly 2 blocks: a request needs 1 block of context +
+    // 1 block of decode slot, so serving a *new* prompt while an old
+    // cached node is resident only works if lease-time eviction kicks in.
+    let be = NativeBackend::preset("pico-mq", 0).unwrap();
+    let bpt = be.cfg.kv_bytes_per_token();
+    let mut cfg = EngineConfig::default();
+    cfg.kv_capacity_bytes = 2 * 16 * bpt;
+    cfg.block_tokens = 16;
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+    let go = |id: u64, prompt: &str| {
+        let mut r = req(id, prompt, 1, id);
+        r.params.max_tokens = 2;
+        engine.generate(&r).unwrap()
+    };
+    go(1, "1+2=");
+    assert_eq!(engine.kv.borrow().stats().cached_contexts, 1);
+    go(2, "3+4="); // forces eviction of the first node to lease its slot
+    {
+        let cache = engine.cache.borrow();
+        assert_eq!(cache.stats().entries, 1);
+        assert_eq!(cache.stats().evictions, 1);
+        cache.check_invariants(&engine.kv.borrow()).unwrap();
+    }
+    engine.kv.borrow().check_invariants().unwrap();
+    // the first prompt is cold again, the second warm
+    assert_eq!(go(3, "3+4=").timing.cache_hit_tokens, 5);
+    engine.kv.borrow().check_invariants().unwrap();
+}

@@ -3,13 +3,17 @@
 //! sampler bounds, pass@k estimator, reranker, and the cost model's
 //! ordering guarantees (DESIGN.md §7).
 
+use std::rc::Rc;
+
 use bifurcated_attn::attention::{kv_io_bifurcated, kv_io_fused};
 use bifurcated_attn::coordinator::request::{Completion, SamplingParams};
 use bifurcated_attn::coordinator::{rerank_top_k, SamplerBatch, Scheduler, SchedulerConfig};
 use bifurcated_attn::evalharness::pass_at_k;
 use bifurcated_attn::kvcache::manager::KvManager;
 use bifurcated_attn::kvcache::BlockAllocator;
+use bifurcated_attn::prefixcache::PrefixCache;
 use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::{Backend, HostTensor, NativeBackend};
 use bifurcated_attn::util::propcheck::forall;
 use bifurcated_attn::util::prng::Pcg;
 
@@ -249,6 +253,96 @@ fn prop_fused_registration_charges_exactly_b_replicas() {
 }
 
 #[test]
+fn prop_prefix_cache_eviction_respects_pins_and_accounting() {
+    // Random interleavings of insert / pin / unpin / evict over a small
+    // prefix cache + KV manager: after every single operation the tree,
+    // cache, and block accounting invariants must hold, a pinned node
+    // must never be evicted, and a full drain must return every block.
+    let be = NativeBackend::preset("pico-mq", 0).unwrap();
+    let cfg = be.cfg().clone();
+    forall(
+        "prefix-cache-ops",
+        60,
+        |rng| {
+            (0..rng.below(50) + 10)
+                .map(|_| (rng.below(6) as u8, rng.next_u64()))
+                .collect::<Vec<(u8, u64)>>()
+        },
+        |ops| {
+            // tiny capacity (24 blocks of 8 tokens) so KV pressure is real
+            let bpt = cfg.kv_bytes_per_token();
+            let mut kv = KvManager::new(24 * 8 * bpt, bpt, 8);
+            let mut cache: PrefixCache<NativeBackend> = PrefixCache::new(4);
+            let mut pinned: Vec<usize> = Vec::new();
+            for &(op, r) in ops {
+                match op {
+                    0 | 1 | 2 => {
+                        // insert a random prompt unless it is already fully
+                        // cached (the engine's full-hit path never inserts)
+                        let len = (r as usize % 12) + 1;
+                        let tokens: Vec<i32> =
+                            (0..len).map(|i| (((r >> (i % 16)) & 3) + 1) as i32).collect();
+                        let full_hit =
+                            cache.lookup(&tokens).is_some_and(|h| h.matched == tokens.len());
+                        if !full_hit && cache.make_room(&mut kv) {
+                            if let Ok(id) = kv.register_cached_context(tokens.len()) {
+                                let kc = Rc::new(HostTensor::zeros_f32(&[
+                                    cfg.l, cfg.g, cfg.m_c_max, cfg.k,
+                                ]));
+                                let vc = Rc::new(HostTensor::zeros_f32(&[
+                                    cfg.l, cfg.g, cfg.m_c_max, cfg.k,
+                                ]));
+                                let ctx =
+                                    Rc::new(be.upload_context(&kc, &vc, tokens.len()).unwrap());
+                                cache.insert(&tokens, vec![0.0; cfg.vocab], kc, vc, ctx, id);
+                            }
+                        }
+                    }
+                    3 => {
+                        let ids = cache.entry_ids();
+                        if !ids.is_empty() {
+                            let id = ids[r as usize % ids.len()];
+                            cache.pin(id);
+                            pinned.push(id);
+                        }
+                    }
+                    4 => {
+                        if !pinned.is_empty() {
+                            let i = r as usize % pinned.len();
+                            let id = pinned.swap_remove(i);
+                            cache.unpin(id);
+                        }
+                    }
+                    _ => {
+                        cache.evict_lru(&mut kv);
+                    }
+                }
+                kv.check_invariants()?;
+                cache.check_invariants(&kv)?;
+                for &id in &pinned {
+                    if !cache.contains(id) {
+                        return Err(format!("pinned node {id} was evicted"));
+                    }
+                }
+            }
+            // drain: unpin everything, evict everything, no block leaks
+            for id in std::mem::take(&mut pinned) {
+                cache.unpin(id);
+            }
+            while cache.evict_lru(&mut kv) {}
+            if !cache.is_empty() {
+                return Err("unpinned entries survived a full drain".into());
+            }
+            let st = kv.stats();
+            if st.used_blocks != 0 || st.contexts != 0 {
+                return Err(format!("leaked KV state after drain: {st:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_scheduler_waves_partition_any_n() {
     let s = Scheduler::new(SchedulerConfig::default(), vec![1, 2, 4, 8, 16, 32]);
     forall(
@@ -298,6 +392,7 @@ fn prop_sampler_respects_max_tokens_and_stop() {
                 max_tokens,
                 stop_token: if with_stop { Some(3) } else { None },
                 seed,
+                mode: None,
             };
             let mut sb = SamplerBatch::new(b, params, vocab, seed);
             let mut rng = Pcg::new(seed);
