@@ -1,0 +1,241 @@
+//! Steady-state decode throughput: tokens/sec and context-bytes-read per
+//! token for both decode modes across a `(b, m_c)` grid — the perf
+//! trajectory number every kernel PR must move (paper Fig. 6 shape on
+//! CPU).
+//!
+//! Writes `target/bench_results/decode_throughput.json` (bench-harness
+//! format) plus a flat `BENCH_decode.json` grid in the crate root. With
+//! `--baseline <path>` it compares bifurcated tokens/sec against a
+//! committed baseline grid and exits nonzero on a >20% regression at any
+//! shared grid point — the CI perf gate.
+
+use bifurcated_attn::bench::{bench_main, Bencher, Cell, Table};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::manifest::ModelCfg;
+use bifurcated_attn::runtime::{Backend, DecodeMode, NativeBackend};
+use bifurcated_attn::util::json::Json;
+use bifurcated_attn::util::prng::Pcg;
+
+const M_D: usize = 16;
+
+fn bench_cfg(m_c: usize) -> ModelCfg {
+    // pico-mq shape (d=64, h=8, g=1, l=3) with the context capacity sized
+    // to the grid point: multi-query is where context sharing pays most.
+    let (d, h, g, l) = (64usize, 8usize, 1usize, 3usize);
+    ModelCfg {
+        name: format!("bench-mq-mc{m_c}"),
+        d,
+        h,
+        g,
+        k: d / h,
+        p: h / g,
+        l,
+        vocab: 16,
+        ffn_mult: 4,
+        m_c_max: m_c,
+        m_d_max: M_D,
+        m_max: m_c + M_D,
+        seq_len: 64,
+        param_count: 0,
+        attention_kind: String::new(),
+    }
+}
+
+struct GridPoint {
+    b: usize,
+    m_c: usize,
+    bif_tok_s: f64,
+    fus_tok_s: f64,
+    bif_ctx_bytes_per_tok: f64,
+    fus_ctx_bytes_per_tok: f64,
+}
+
+/// Steady-state tokens/sec for one mode: one timed pass = a full decode
+/// window of `M_D` steps against a prefilled context.
+fn measure(
+    rt: &NativeBackend,
+    mode: DecodeMode,
+    b: usize,
+    ctx: &<NativeBackend as Backend>::Ctx,
+    quick: bool,
+) -> f64 {
+    let bench = if quick { Bencher::quick("window") } else { Bencher::new("window") };
+    let toks = vec![3i32; b];
+    let s = bench.run(|| {
+        let (mut kd, mut vd) = rt.zero_decode_cache(b);
+        for d_pos in 0..M_D {
+            let out = rt.decode(mode, b, &toks, d_pos, ctx, &kd, &vd).unwrap();
+            kd = out.kd;
+            vd = out.vd;
+        }
+    });
+    // p50 is in milliseconds for a window of b * M_D generated tokens.
+    (b * M_D) as f64 / (s.p50 / 1e3)
+}
+
+fn run_grid(quick: bool, threads: usize) -> Vec<GridPoint> {
+    let grid: &[(usize, usize)] = if quick {
+        &[(4, 128), (16, 512)]
+    } else {
+        &[(1, 128), (4, 128), (16, 128), (1, 512), (4, 512), (16, 512), (32, 512)]
+    };
+    let mut points = Vec::new();
+    let mut last_mc = 0usize;
+    let mut rt_opt: Option<NativeBackend> = None;
+    for &(b, m_c) in grid {
+        if m_c != last_mc {
+            rt_opt = Some(NativeBackend::new(bench_cfg(m_c), 0).unwrap().with_threads(threads));
+            last_mc = m_c;
+        }
+        let rt = rt_opt.as_ref().unwrap();
+        let mut rng = Pcg::new(7);
+        let mut prompt = vec![corpus::BOS];
+        prompt.extend(corpus::token_stream(&mut rng, m_c - 1));
+        let pre = rt.prefill(&prompt).unwrap();
+        let m_c_len = prompt.len();
+
+        let ctx_b = rt.upload_context(&pre.kc, &pre.vc, m_c_len).unwrap();
+        let bif_tok_s = measure(rt, DecodeMode::Bifurcated, b, &ctx_b, quick);
+
+        let kc_rep = pre.kc.broadcast_at(1, b);
+        let vc_rep = pre.vc.broadcast_at(1, b);
+        let ctx_f = rt.upload_context(&kc_rep, &vc_rep, m_c_len).unwrap();
+        let fus_tok_s = measure(rt, DecodeMode::Fused, b, &ctx_f, quick);
+
+        // Context bytes *read* per generated token (analytic, exact for
+        // this backend): every decode step sweeps K_c and V_c once per
+        // layer per group — once total under bifurcated, once per batch
+        // row under fused. A step emits b tokens.
+        let cfg = rt.cfg();
+        let ctx_bytes_per_step = (cfg.l * cfg.g * m_c_len * cfg.k * 4 * 2) as f64;
+        points.push(GridPoint {
+            b,
+            m_c,
+            bif_tok_s,
+            fus_tok_s,
+            bif_ctx_bytes_per_tok: ctx_bytes_per_step / b as f64,
+            fus_ctx_bytes_per_tok: ctx_bytes_per_step,
+        });
+    }
+    points
+}
+
+fn grid_json(points: &[GridPoint], threads: usize) -> Json {
+    Json::obj().set("threads", Json::Num(threads as f64)).set(
+        "grid",
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("b", Json::Num(p.b as f64))
+                        .set("m_c", Json::Num(p.m_c as f64))
+                        .set("bif_tok_s", Json::Num(p.bif_tok_s))
+                        .set("fus_tok_s", Json::Num(p.fus_tok_s))
+                        .set("bif_ctx_bytes_per_tok", Json::Num(p.bif_ctx_bytes_per_tok))
+                        .set("fus_ctx_bytes_per_tok", Json::Num(p.fus_ctx_bytes_per_tok))
+                })
+                .collect(),
+        ),
+    )
+}
+
+/// Compare measured bifurcated tokens/sec against a committed baseline
+/// grid; >20% regression at any shared `(b, m_c)` point fails the run.
+fn check_baseline(points: &[GridPoint], path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("baseline {path}: {e}"))?;
+    let doc = bifurcated_attn::util::json::parse(&text)
+        .map_err(|e| format!("baseline {path}: bad json: {e}"))?;
+    let grid = doc.req("grid");
+    let mut checked = 0usize;
+    let mut failures = Vec::new();
+    let mut i = 0usize;
+    while let Some(entry) = grid.idx(i) {
+        i += 1;
+        let (b, m_c) = (entry.f64_of("b") as usize, entry.f64_of("m_c") as usize);
+        let base = entry.f64_of("bif_tok_s");
+        let Some(p) = points.iter().find(|p| p.b == b && p.m_c == m_c) else {
+            continue;
+        };
+        checked += 1;
+        if p.bif_tok_s < 0.8 * base {
+            failures.push(format!(
+                "b={b} m_c={m_c}: bifurcated {:.0} tok/s is >20% below baseline {:.0}",
+                p.bif_tok_s, base
+            ));
+        } else {
+            eprintln!(
+                "[bench] baseline ok at b={b} m_c={m_c}: {:.0} tok/s vs baseline {:.0}",
+                p.bif_tok_s, base
+            );
+        }
+    }
+    if checked == 0 {
+        return Err(format!("baseline {path} shares no grid points with this run"));
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(failures.join("; "))
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let threads = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    let baseline = args
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut baseline_err: Option<String> = None;
+    bench_main("decode_throughput", |quick| {
+        let points = run_grid(quick, threads);
+        let mut t = Table::new(
+            &format!("Steady-state decode throughput (native CPU, {threads} threads)"),
+            &[
+                "b",
+                "m_c",
+                "fused tok/s",
+                "bif tok/s",
+                "speedup",
+                "fused ctx B/tok",
+                "bif ctx B/tok",
+            ],
+        )
+        .with_note("tokens/sec over full decode windows; ctx bytes/token are exact analytic IO");
+        for p in &points {
+            t.row(vec![
+                Cell::Num(p.b as f64),
+                Cell::Num(p.m_c as f64),
+                Cell::Num(p.fus_tok_s.round()),
+                Cell::Num(p.bif_tok_s.round()),
+                Cell::Num((p.bif_tok_s / p.fus_tok_s * 100.0).round() / 100.0),
+                Cell::Num(p.fus_ctx_bytes_per_tok),
+                Cell::Num(p.bif_ctx_bytes_per_tok),
+            ]);
+        }
+        let flat = grid_json(&points, threads);
+        if let Err(e) = std::fs::write("BENCH_decode.json", flat.to_string_pretty()) {
+            eprintln!("warn: could not write BENCH_decode.json: {e}");
+        } else {
+            eprintln!("[bench] flat grid -> BENCH_decode.json");
+        }
+        if let Some(path) = &baseline {
+            baseline_err = check_baseline(&points, path).err();
+        }
+        vec![t]
+    });
+    if let Some(e) = baseline_err {
+        eprintln!("[bench] PERF REGRESSION: {e}");
+        std::process::exit(1);
+    }
+}

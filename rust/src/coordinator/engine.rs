@@ -42,6 +42,13 @@ pub struct EngineConfig {
     pub block_tokens: usize,
     /// Cross-request prefix-cache entry budget; 0 disables the cache.
     pub prefix_cache_entries: usize,
+    /// Prefix-cache byte budget over resident K_c/V_c storage; 0 means
+    /// unlimited (entry budget only).
+    pub prefix_cache_bytes: usize,
+    /// Kernel thread count for backends that honor it (native); 0 means
+    /// one thread per available core. Completions are bitwise-identical
+    /// at every setting.
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +58,8 @@ impl Default for EngineConfig {
             kv_capacity_bytes: 64 << 20,
             block_tokens: 16,
             prefix_cache_entries: 16,
+            prefix_cache_bytes: 0,
+            threads: 0,
         }
     }
 }
@@ -68,7 +77,12 @@ impl Engine<NativeBackend> {
     /// Build a native-backend engine for a preset model (`pico-mh`,
     /// `pico-mg`, `pico-mq`) — no artifacts, no Python, no XLA.
     pub fn native(model: &str, weight_seed: u64, cfg: EngineConfig) -> Result<Engine<NativeBackend>> {
-        let be = NativeBackend::preset(model, weight_seed)?;
+        let threads = if cfg.threads == 0 {
+            crate::runtime::native::default_threads()
+        } else {
+            cfg.threads
+        };
+        let be = NativeBackend::preset(model, weight_seed)?.with_threads(threads);
         Ok(Engine::new(TokenizerInfo::builtin(), be, cfg))
     }
 }
@@ -86,7 +100,10 @@ impl<B: Backend> Engine<B> {
             tokenizer,
             scheduler,
             kv: std::cell::RefCell::new(kv),
-            cache: std::cell::RefCell::new(PrefixCache::new(cfg.prefix_cache_entries)),
+            cache: std::cell::RefCell::new(PrefixCache::with_budgets(
+                cfg.prefix_cache_entries,
+                cfg.prefix_cache_bytes,
+            )),
             metrics: super::metrics::Metrics::default(),
         }
     }
@@ -162,16 +179,17 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Reserve a prefix-cache slot + `Cached`-class registration for a new
-    /// node. None means caching is skipped for this request (disabled,
-    /// budget full of pinned nodes, or no KV room even after eviction) —
-    /// the request then falls back to a request-owned context.
-    fn try_register_cached(&self, tokens: usize) -> Option<ContextId> {
+    /// node holding `bytes` of K_c/V_c. None means caching is skipped for
+    /// this request (disabled, over the entry/byte budget with everything
+    /// pinned, or no KV room even after eviction) — the request then
+    /// falls back to a request-owned context.
+    fn try_register_cached(&self, tokens: usize, bytes: usize) -> Option<ContextId> {
         if !self.cache.borrow().enabled() {
             return None;
         }
         {
             let mut kv = self.kv.borrow_mut();
-            if !self.cache.borrow_mut().make_room(&mut kv) {
+            if !self.cache.borrow_mut().make_room(&mut kv, bytes) {
                 return None;
             }
         }
@@ -279,7 +297,9 @@ impl<B: Backend> Engine<B> {
             // upload the cache can directly reuse); fused requests only
             // consume cached tensors, they never pay an extra shared copy.
             if mode == DecodeMode::Bifurcated {
-                if let Some(ctx_id) = self.try_register_cached(m_c_len) {
+                if let Some(ctx_id) =
+                    self.try_register_cached(m_c_len, kc.byte_size() + vc.byte_size())
+                {
                     let ctx = match self.rt.upload_context(&kc, &vc, m_c_len) {
                         Ok(c) => c,
                         Err(e) => {

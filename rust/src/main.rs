@@ -57,9 +57,10 @@ fn print_usage() {
         "repro — bifurcated attention reproduction (ICML 2024)\n\n\
          USAGE: repro <subcommand> [options]\n\n\
          serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
-         \x20              [--prefix-cache N] [--backend native|pjrt]\n\
+         \x20              [--prefix-cache N] [--prefix-cache-bytes B] [--threads N]\n\
+         \x20              [--backend native|pjrt]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
-         \x20              [--prefix-cache N] [--backend ...]\n\
+         \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
          tables         [--hw h100]            (all modeled paper tables)\n\
          train-scaling  --out artifacts/scaling [--steps 300] [--filter s0]   (pjrt builds)\n\
@@ -68,7 +69,10 @@ fn print_usage() {
          Backend: native (default; pure Rust, no artifacts) or pjrt\n\
          (`--features pjrt` build + `make artifacts`, root $ARTIFACTS_DIR or ./artifacts).\n\
          --prefix-cache N caps the cross-request prefix cache at N prefilled\n\
-         contexts (default 16; 0 disables). Warm prompts skip prefill + upload."
+         contexts (default 16; 0 disables); --prefix-cache-bytes B additionally\n\
+         caps resident K_c/V_c storage (0 = unlimited). Warm prompts skip\n\
+         prefill + upload. --threads N sets the native kernel fan-out\n\
+         (default: all cores; 1 = serial; outputs identical either way)."
     );
 }
 
@@ -108,6 +112,8 @@ fn engine_config(args: &Args) -> EngineConfig {
         _ => {}
     }
     cfg.prefix_cache_entries = args.usize_or("prefix-cache", cfg.prefix_cache_entries);
+    cfg.prefix_cache_bytes = args.usize_or("prefix-cache-bytes", cfg.prefix_cache_bytes);
+    cfg.threads = args.usize_or("threads", cfg.threads);
     cfg
 }
 

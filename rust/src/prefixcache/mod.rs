@@ -29,7 +29,7 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::kvcache::manager::{ContextId, KvManager};
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, ContextView};
 use crate::runtime::tensor::HostTensor;
 use crate::util::json::Json;
 
@@ -46,6 +46,9 @@ pub struct CacheEntry<B: Backend> {
     pub ctx: Rc<B::Ctx>,
     /// The `Cached`-class registration charging this node's storage.
     pub ctx_id: ContextId,
+    /// Resident K_c/V_c bytes this node holds (what the byte budget
+    /// meters).
+    pub bytes: usize,
     pins: usize,
     last_used: u64,
 }
@@ -62,6 +65,8 @@ pub struct CacheHit {
 pub struct CacheStats {
     pub entries: usize,
     pub cached_tokens: usize,
+    /// Total resident K_c/V_c bytes across all entries.
+    pub resident_bytes: usize,
     pub full_hits: u64,
     pub partial_hits: u64,
     pub misses: u64,
@@ -75,6 +80,11 @@ pub struct PrefixCache<B: Backend> {
     entries: BTreeMap<usize, CacheEntry<B>>,
     /// Entry budget; 0 disables the cache entirely.
     max_entries: usize,
+    /// Byte budget over resident K_c/V_c storage; 0 means unlimited.
+    max_bytes: usize,
+    /// Running sum of entry `bytes` (== Σ entries.bytes, checked by
+    /// `check_invariants`).
+    resident_bytes: usize,
     clock: u64,
     full_hits: u64,
     partial_hits: u64,
@@ -86,10 +96,19 @@ pub struct PrefixCache<B: Backend> {
 
 impl<B: Backend> PrefixCache<B> {
     pub fn new(max_entries: usize) -> PrefixCache<B> {
+        PrefixCache::with_budgets(max_entries, 0)
+    }
+
+    /// Entry budget plus a byte budget over resident K_c/V_c storage
+    /// (`max_bytes == 0` = unlimited bytes). Eviction keeps the cache
+    /// within *both*.
+    pub fn with_budgets(max_entries: usize, max_bytes: usize) -> PrefixCache<B> {
         PrefixCache {
             tree: RadixTree::new(),
             entries: BTreeMap::new(),
             max_entries,
+            max_bytes,
+            resident_bytes: 0,
             clock: 0,
             full_hits: 0,
             partial_hits: 0,
@@ -163,13 +182,20 @@ impl<B: Backend> PrefixCache<B> {
         e.pins -= 1;
     }
 
-    /// Evict unpinned entries until a new one fits the entry budget.
-    /// `false` means every resident entry is pinned (caller skips caching).
-    pub fn make_room(&mut self, kv: &mut KvManager) -> bool {
+    /// Evict unpinned entries until a new entry of `incoming_bytes` fits
+    /// both the entry budget and the byte budget. `false` means it can
+    /// never fit (every resident entry is pinned/leased, or the incoming
+    /// entry alone exceeds the byte budget) — the caller skips caching.
+    pub fn make_room(&mut self, kv: &mut KvManager, incoming_bytes: usize) -> bool {
         if !self.enabled() {
             return false;
         }
-        while self.entries.len() >= self.max_entries {
+        if self.max_bytes > 0 && incoming_bytes > self.max_bytes {
+            return false;
+        }
+        while self.entries.len() >= self.max_entries
+            || (self.max_bytes > 0 && self.resident_bytes + incoming_bytes > self.max_bytes)
+        {
             if !self.evict_lru(kv) {
                 return false;
             }
@@ -192,9 +218,11 @@ impl<B: Backend> PrefixCache<B> {
         let node = self.tree.insert(tokens);
         assert!(!self.entries.contains_key(&node), "insert over a live entry");
         self.clock += 1;
+        let bytes = ctx.bytes();
+        self.resident_bytes += bytes;
         self.entries.insert(
             node,
-            CacheEntry { logits, kc, vc, ctx, ctx_id, pins: 0, last_used: self.clock },
+            CacheEntry { logits, kc, vc, ctx, ctx_id, bytes, pins: 0, last_used: self.clock },
         );
         self.insertions += 1;
         node
@@ -211,6 +239,7 @@ impl<B: Backend> PrefixCache<B> {
             .map(|(&id, _)| id);
         let Some(id) = victim else { return false };
         let e = self.entries.remove(&id).expect("victim vanished");
+        self.resident_bytes -= e.bytes;
         kv.release_context(e.ctx_id);
         self.tree.remove_payload(id);
         self.evictions += 1;
@@ -221,6 +250,7 @@ impl<B: Backend> PrefixCache<B> {
         CacheStats {
             entries: self.entries.len(),
             cached_tokens: self.entries.keys().map(|&n| self.tree.depth(n)).sum(),
+            resident_bytes: self.resident_bytes,
             full_hits: self.full_hits,
             partial_hits: self.partial_hits,
             misses: self.misses,
@@ -244,6 +274,8 @@ impl<B: Backend> PrefixCache<B> {
             .set("entries", Json::Num(s.entries as f64))
             .set("max_entries", Json::Num(self.max_entries as f64))
             .set("cached_tokens", Json::Num(s.cached_tokens as f64))
+            .set("resident_bytes", Json::Num(s.resident_bytes as f64))
+            .set("max_bytes", Json::Num(self.max_bytes as f64))
             .set("full_hits", Json::Num(s.full_hits as f64))
             .set("partial_hits", Json::Num(s.partial_hits as f64))
             .set("misses", Json::Num(s.misses as f64))
@@ -263,6 +295,19 @@ impl<B: Backend> PrefixCache<B> {
                 "{} entries exceed budget {}",
                 self.entries.len(),
                 self.max_entries
+            ));
+        }
+        let byte_sum: usize = self.entries.values().map(|e| e.bytes).sum();
+        if byte_sum != self.resident_bytes {
+            return Err(format!(
+                "resident_bytes {} != sum of entries {byte_sum}",
+                self.resident_bytes
+            ));
+        }
+        if self.max_bytes > 0 && self.resident_bytes > self.max_bytes {
+            return Err(format!(
+                "resident {} bytes exceed byte budget {}",
+                self.resident_bytes, self.max_bytes
             ));
         }
         for (&node, e) in &self.entries {
@@ -358,7 +403,7 @@ mod tests {
         let b = insert(&mut c, &be, &mut kv, &[2, 2]);
         // touch `a` so `b` becomes LRU
         assert!(c.lookup(&[1, 1]).is_some());
-        assert!(c.make_room(&mut kv));
+        assert!(c.make_room(&mut kv, 0));
         let _d = insert(&mut c, &be, &mut kv, &[3, 3]);
         assert!(c.contains(a));
         assert!(!c.contains(b), "LRU entry should be the victim");
@@ -400,6 +445,39 @@ mod tests {
         kv.finish_sequence(seq);
         assert!(c.evict_lru(&mut kv));
         c.check_invariants(&kv).unwrap();
+    }
+
+    #[test]
+    fn byte_budget_evicts_by_resident_bytes() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        // every entry holds the same padded K_c/V_c volume on this backend
+        let c0 = be.cfg();
+        let entry_bytes = 2 * c0.l * c0.g * c0.m_c_max * c0.k * 4;
+        // room for 2 entries by bytes, 8 by count: bytes must bind
+        let mut c: PrefixCache<NativeBackend> = PrefixCache::with_budgets(8, 2 * entry_bytes);
+        let a = insert(&mut c, &be, &mut kv, &[1, 1]);
+        let b = insert(&mut c, &be, &mut kv, &[2, 2]);
+        assert_eq!(c.stats().resident_bytes, 2 * entry_bytes);
+        // touch `a` so `b` is LRU; making room for a third must evict it
+        assert!(c.lookup(&[1, 1]).is_some());
+        assert!(c.make_room(&mut kv, entry_bytes));
+        let d = insert(&mut c, &be, &mut kv, &[3, 3]);
+        assert!(c.contains(a) && c.contains(d));
+        assert!(!c.contains(b), "byte budget should evict the LRU entry");
+        assert_eq!(c.stats().resident_bytes, 2 * entry_bytes);
+        // an entry bigger than the whole budget can never fit
+        assert!(!c.make_room(&mut kv, 3 * entry_bytes));
+        // pinned entries block byte-budget eviction too
+        c.pin(a);
+        c.pin(d);
+        assert!(!c.make_room(&mut kv, entry_bytes));
+        c.unpin(a);
+        c.unpin(d);
+        c.check_invariants(&kv).unwrap();
+        let j = c.stats_json();
+        assert_eq!(j.f64_of("resident_bytes"), (2 * entry_bytes) as f64);
+        assert_eq!(j.f64_of("max_bytes"), (2 * entry_bytes) as f64);
     }
 
     #[test]

@@ -1,9 +1,79 @@
 //! Dense math primitives for the native CPU backend (substrate — no BLAS
 //! in the offline registry). Row-major f32 throughout; shapes are passed
 //! explicitly and asserted so shape bugs fail loudly at the call site.
+//!
+//! Two tiers coexist:
+//!
+//! * **naive oracle** — [`matmul`], [`dot`], [`axpy`]: the original
+//!   scalar loops, branch-free so their flop *order* matches the blocked
+//!   kernels element-for-element. Kept as the test reference; hot paths
+//!   must not call them.
+//! * **blocked kernels** — [`matmul_into`] (`y = x·w`) and
+//!   [`matmul_nt_into`] (`y = x·wᵀ`): register-tiled (4 output rows /
+//!   4×4 micro-tiles) so the streamed operand is read once per row block
+//!   instead of once per row, with the inner loop shaped for LLVM
+//!   auto-vectorization, writing into caller-owned buffers (no
+//!   allocation), and fanning rows out over scoped threads when the
+//!   work is large enough to amortize the spawn.
+//!
+//! Determinism contract: every output element is accumulated over the
+//! shared axis in strictly increasing index order, regardless of tiling
+//! or thread count — threads partition output *rows*, never a reduction —
+//! so results are bitwise-identical at `threads = 1` and `threads = N`,
+//! and bitwise-identical to the naive oracle.
 
-/// `y[m, n] = x[m, kk] @ w[kk, n]` (row-major). The k-inner loop is written
-/// as an axpy over output rows so the compiler can vectorize the `n` axis.
+/// Below this many multiply-accumulates a GEMM stays on the calling
+/// thread: a scoped spawn costs tens of microseconds, which small decode
+/// shapes would feel.
+const PAR_MIN_MACS: usize = 1 << 17;
+
+/// Rows of register blocking in both kernels (and columns of the
+/// micro-tile in [`matmul_nt_into`]).
+const MR: usize = 4;
+
+/// Effective fan-out for a job of `macs` multiply-accumulates over `m`
+/// rows: 1 when the work is too small, never more than one row per
+/// thread.
+pub(crate) fn plan_threads(threads: usize, m: usize, macs: usize) -> usize {
+    if threads <= 1 || macs < PAR_MIN_MACS {
+        1
+    } else {
+        threads.min(m).max(1)
+    }
+}
+
+/// Split `dst` into `t` contiguous row chunks and run `f(row0, chunk)` on
+/// each, chunks 1.. on scoped threads and chunk 0 on the calling thread.
+/// Rows are whole `row_len` slices, so writers never alias.
+pub(crate) fn par_rows<F>(dst: &mut [f32], m: usize, row_len: usize, t: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(dst.len(), m * row_len);
+    if t <= 1 {
+        f(0, dst);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    let (chunk0, mut rest) = dst.split_at_mut(rows_per.min(m) * row_len);
+    std::thread::scope(|s| {
+        let mut row0 = rows_per; // chunk 0 runs on this thread below
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+            rest = tail;
+            let fr = &f;
+            let r0 = row0;
+            s.spawn(move || fr(r0, chunk));
+            row0 += take;
+        }
+        f(0, chunk0);
+    });
+}
+
+/// `y[m, n] = x[m, kk] @ w[kk, n]` (row-major), naive oracle. Kept
+/// branch-free (no zero-skip) so its flop order matches [`matmul_into`]
+/// exactly; use only in tests and cold paths.
 pub fn matmul(x: &[f32], w: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * kk, "matmul lhs shape");
     assert_eq!(w.len(), kk * n, "matmul rhs shape");
@@ -12,9 +82,6 @@ pub fn matmul(x: &[f32], w: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
         let xrow = &x[i * kk..(i + 1) * kk];
         let yrow = &mut y[i * n..(i + 1) * n];
         for (c, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
             let wrow = &w[c * n..(c + 1) * n];
             for (yv, &wv) in yrow.iter_mut().zip(wrow) {
                 *yv += xv * wv;
@@ -22,6 +89,168 @@ pub fn matmul(x: &[f32], w: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
         }
     }
     y
+}
+
+/// Serial core of [`matmul_into`] over a row range: `dst` and `x` are the
+/// aligned row slices (`rows * n` and `rows * kk`).
+fn matmul_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
+    dst.fill(0.0);
+    let mut xit = x.chunks_exact(MR * kk);
+    let mut dit = dst.chunks_exact_mut(MR * n);
+    for (xb, db) in (&mut xit).zip(&mut dit) {
+        let (x0, xr) = xb.split_at(kk);
+        let (x1, xr) = xr.split_at(kk);
+        let (x2, x3) = xr.split_at(kk);
+        let (d0, dr) = db.split_at_mut(n);
+        let (d1, dr) = dr.split_at_mut(n);
+        let (d2, d3) = dr.split_at_mut(n);
+        for c in 0..kk {
+            let wrow = &w[c * n..(c + 1) * n];
+            let (a0, a1, a2, a3) = (x0[c], x1[c], x2[c], x3[c]);
+            for j in 0..n {
+                let wv = wrow[j];
+                d0[j] += a0 * wv;
+                d1[j] += a1 * wv;
+                d2[j] += a2 * wv;
+                d3[j] += a3 * wv;
+            }
+        }
+    }
+    for (xrow, drow) in xit
+        .remainder()
+        .chunks_exact(kk)
+        .zip(dit.into_remainder().chunks_exact_mut(n))
+    {
+        for (c, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[c * n..(c + 1) * n];
+            for (dv, &wv) in drow.iter_mut().zip(wrow) {
+                *dv += xv * wv;
+            }
+        }
+    }
+}
+
+/// `dst[m, n] = x[m, kk] @ w[kk, n]` (row-major) into a caller-owned
+/// buffer: register-tiled over `MR` output rows (the `w` stream is read
+/// once per row block, the `n` loop vectorizes) and row-parallel over
+/// `threads` scoped threads when large enough.
+pub fn matmul_into(
+    dst: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kk: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(dst.len(), m * n, "matmul_into dst shape");
+    assert_eq!(x.len(), m * kk, "matmul_into lhs shape");
+    assert_eq!(w.len(), kk * n, "matmul_into rhs shape");
+    let t = plan_threads(threads, m, m * kk * n);
+    par_rows(dst, m, n, t, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_rows(chunk, &x[row0 * kk..(row0 + rows) * kk], w, kk, n);
+    });
+}
+
+/// Serial core of [`matmul_nt_into`] over a row range.
+fn matmul_nt_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
+    let mut xit = x.chunks_exact(MR * kk);
+    let mut dit = dst.chunks_exact_mut(MR * n);
+    for (xb, db) in (&mut xit).zip(&mut dit) {
+        let (x0, xr) = xb.split_at(kk);
+        let (x1, xr) = xr.split_at(kk);
+        let (x2, x3) = xr.split_at(kk);
+        let (d0, dr) = db.split_at_mut(n);
+        let (d1, dr) = dr.split_at_mut(n);
+        let (d2, d3) = dr.split_at_mut(n);
+        let mut j = 0usize;
+        while j + MR <= n {
+            let w0 = &w[j * kk..(j + 1) * kk];
+            let w1 = &w[(j + 1) * kk..(j + 2) * kk];
+            let w2 = &w[(j + 2) * kk..(j + 3) * kk];
+            let w3 = &w[(j + 3) * kk..(j + 4) * kk];
+            let mut acc = [0.0f32; MR * MR];
+            for c in 0..kk {
+                let (b0, b1, b2, b3) = (w0[c], w1[c], w2[c], w3[c]);
+                let (a0, a1, a2, a3) = (x0[c], x1[c], x2[c], x3[c]);
+                acc[0] += a0 * b0;
+                acc[1] += a0 * b1;
+                acc[2] += a0 * b2;
+                acc[3] += a0 * b3;
+                acc[4] += a1 * b0;
+                acc[5] += a1 * b1;
+                acc[6] += a1 * b2;
+                acc[7] += a1 * b3;
+                acc[8] += a2 * b0;
+                acc[9] += a2 * b1;
+                acc[10] += a2 * b2;
+                acc[11] += a2 * b3;
+                acc[12] += a3 * b0;
+                acc[13] += a3 * b1;
+                acc[14] += a3 * b2;
+                acc[15] += a3 * b3;
+            }
+            d0[j..j + MR].copy_from_slice(&acc[0..MR]);
+            d1[j..j + MR].copy_from_slice(&acc[MR..2 * MR]);
+            d2[j..j + MR].copy_from_slice(&acc[2 * MR..3 * MR]);
+            d3[j..j + MR].copy_from_slice(&acc[3 * MR..4 * MR]);
+            j += MR;
+        }
+        while j < n {
+            let wrow = &w[j * kk..(j + 1) * kk];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for c in 0..kk {
+                let bv = wrow[c];
+                s0 += x0[c] * bv;
+                s1 += x1[c] * bv;
+                s2 += x2[c] * bv;
+                s3 += x3[c] * bv;
+            }
+            d0[j] = s0;
+            d1[j] = s1;
+            d2[j] = s2;
+            d3[j] = s3;
+            j += 1;
+        }
+    }
+    for (xrow, drow) in xit
+        .remainder()
+        .chunks_exact(kk)
+        .zip(dit.into_remainder().chunks_exact_mut(n))
+    {
+        for (j, dv) in drow.iter_mut().enumerate() {
+            let wrow = &w[j * kk..(j + 1) * kk];
+            let mut s = 0.0f32;
+            for c in 0..kk {
+                s += xrow[c] * wrow[c];
+            }
+            *dv = s;
+        }
+    }
+}
+
+/// `dst[m, n] = x[m, kk] @ wᵀ` where `w` is `[n, kk]` row-major — the
+/// attention-score shape (`Q @ Kᵀ` with `K` stored `[m_c, k]`). 4×4
+/// micro-tiles keep both streams in registers; each key row is read once
+/// per 4 query rows instead of once per query row.
+pub fn matmul_nt_into(
+    dst: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kk: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(dst.len(), m * n, "matmul_nt_into dst shape");
+    assert_eq!(x.len(), m * kk, "matmul_nt_into lhs shape");
+    assert_eq!(w.len(), n * kk, "matmul_nt_into rhs shape");
+    let t = plan_threads(threads, m, m * kk * n);
+    par_rows(dst, m, n, t, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_nt_rows(chunk, &x[row0 * kk..(row0 + rows) * kk], w, kk, n);
+    });
 }
 
 /// Add a bias row `b[n]` to every row of `y[m, n]`.
@@ -38,11 +267,18 @@ pub fn add_bias(y: &mut [f32], b: &[f32]) {
 /// LayerNorm over the last axis: rows of width `d`, learned scale/bias.
 /// Matches the JAX reference: biased variance, eps inside the rsqrt.
 pub fn layer_norm(x: &[f32], s: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    layer_norm_into(&mut out, x, s, b, d);
+    out
+}
+
+/// Allocation-free LayerNorm into a caller-owned buffer.
+pub fn layer_norm_into(out: &mut [f32], x: &[f32], s: &[f32], b: &[f32], d: usize) {
     const EPS: f32 = 1e-5;
     assert_eq!(s.len(), d);
     assert_eq!(b.len(), d);
     assert!(x.len() % d == 0, "layer_norm shape");
-    let mut out = vec![0.0f32; x.len()];
+    assert_eq!(out.len(), x.len(), "layer_norm out shape");
     for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let mean = row.iter().sum::<f32>() / d as f32;
         let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
@@ -51,7 +287,6 @@ pub fn layer_norm(x: &[f32], s: &[f32], b: &[f32], d: usize) -> Vec<f32> {
             *o = (v - mean) * inv * sv + bv;
         }
     }
-    out
 }
 
 /// GELU, tanh approximation (`jax.nn.gelu` default).
@@ -82,6 +317,11 @@ pub fn axpy(acc: &mut [f32], w: f32, row: &[f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Pcg;
+
+    fn randv(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
 
     #[test]
     fn matmul_small_known_values() {
@@ -97,6 +337,73 @@ mod tests {
         let x = [1.5, -2.0, 0.25, 3.0];
         let id = [1.0, 0.0, 0.0, 1.0];
         assert_eq!(matmul(&x, &id, 2, 2, 2), x.to_vec());
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_across_shapes() {
+        // The determinism contract: same accumulation order means the
+        // blocked kernel equals the naive oracle *exactly*, remainder
+        // rows and all thread counts included.
+        let mut rng = Pcg::new(42);
+        for &(m, kk, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (4, 8, 16),
+            (5, 7, 9),
+            (13, 64, 33),
+            (16, 64, 256),
+        ] {
+            let x = randv(&mut rng, m * kk);
+            let w = randv(&mut rng, kk * n);
+            let oracle = matmul(&x, &w, m, kk, n);
+            for threads in [1usize, 2, 8] {
+                let mut y = vec![7.0f32; m * n]; // poisoned: kernel must overwrite
+                matmul_into(&mut y, &x, &w, m, kk, n, threads);
+                assert_eq!(y, oracle, "m={m} kk={kk} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_matches_naive_bitwise_across_shapes() {
+        let mut rng = Pcg::new(43);
+        for &(m, kk, n) in &[
+            (1usize, 1usize, 1usize),
+            (2, 8, 3),
+            (4, 8, 4),
+            (5, 8, 6),
+            (9, 16, 13),
+            (32, 8, 96),
+        ] {
+            let x = randv(&mut rng, m * kk);
+            let w = randv(&mut rng, n * kk); // [n, kk]: transposed layout
+            // oracle: y[i][j] = dot(x_i, w_j)
+            let mut oracle = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    oracle[i * n + j] = dot(&x[i * kk..(i + 1) * kk], &w[j * kk..(j + 1) * kk]);
+                }
+            }
+            for threads in [1usize, 2, 8] {
+                let mut y = vec![7.0f32; m * n];
+                matmul_nt_into(&mut y, &x, &w, m, kk, n, threads);
+                assert_eq!(y, oracle, "m={m} kk={kk} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_threshold_and_partitioning() {
+        // Force the parallel path with a shape above PAR_MIN_MACS and an
+        // uneven row split; equality with the oracle proves partitioning.
+        let mut rng = Pcg::new(44);
+        let (m, kk, n) = (37usize, 64usize, 80usize); // 189k MACs > threshold
+        let x = randv(&mut rng, m * kk);
+        let w = randv(&mut rng, kk * n);
+        let oracle = matmul(&x, &w, m, kk, n);
+        let mut y = vec![0.0f32; m * n];
+        matmul_into(&mut y, &x, &w, m, kk, n, 3);
+        assert_eq!(y, oracle);
     }
 
     #[test]
@@ -126,6 +433,18 @@ mod tests {
         // normalized row is [-1, 1] (up to eps), scaled to [-3, 3], shifted
         assert!((y[0] + 2.0).abs() < 1e-2, "{y:?}");
         assert!((y[1] - 4.0).abs() < 1e-2, "{y:?}");
+    }
+
+    #[test]
+    fn layer_norm_into_matches_allocating_form() {
+        let mut rng = Pcg::new(45);
+        let d = 16;
+        let x = randv(&mut rng, 5 * d);
+        let s = randv(&mut rng, d);
+        let b = randv(&mut rng, d);
+        let mut out = vec![0.0f32; x.len()];
+        layer_norm_into(&mut out, &x, &s, &b, d);
+        assert_eq!(out, layer_norm(&x, &s, &b, d));
     }
 
     #[test]

@@ -7,11 +7,18 @@
 //! paper are implemented as genuinely separate code paths so the
 //! bifurcated-vs-fused parity suite (`tests/parity_native.rs`) is a real
 //! test of Eq. 3–4 and not a tautology.
+//!
+//! Hot paths run on blocked, multithreaded, allocation-free kernels
+//! ([`math`], [`model`]); the original scalar implementations survive as
+//! the [`model::reference`] oracle, reachable through
+//! [`NativeBackend::prefill_reference`] / [`NativeBackend::decode_reference`].
+//! Thread count comes from [`NativeBackend::with_threads`] (default: all
+//! cores) and never changes results — only output rows are partitioned.
 
 pub mod math;
 pub mod model;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 
 use anyhow::{ensure, Result};
 
@@ -20,7 +27,12 @@ use super::manifest::ModelCfg;
 use super::models::{DecodeMode, DecodeOut, PrefillOut};
 use super::tensor::HostTensor;
 
-use model::NativeWeights;
+use model::{DecodeScratch, NativeWeights};
+
+/// Default kernel fan-out: one thread per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// Batch buckets the native decode step serves. Mirrors the PJRT artifact
 /// buckets so scheduler behaviour is identical across backends. (The
@@ -53,6 +65,12 @@ pub struct NativeBackend {
     buckets: Vec<usize>,
     weights: NativeWeights,
     upload_bytes: Cell<usize>,
+    /// Kernel fan-out (1 = fully serial). Outputs are bitwise-identical
+    /// at every thread count; see `model` for the determinism contract.
+    threads: usize,
+    /// Reusable decode buffers: steady-state decode allocates nothing
+    /// beyond its returned logits once these reach their high-water size.
+    scratch: RefCell<DecodeScratch>,
 }
 
 fn pico_cfg(name: &str, g: usize) -> ModelCfg {
@@ -125,6 +143,81 @@ impl NativeBackend {
             buckets: NATIVE_BUCKETS.to_vec(),
             weights,
             upload_bytes: Cell::new(0),
+            threads: default_threads(),
+            scratch: RefCell::new(DecodeScratch::new()),
+        })
+    }
+
+    /// Set the kernel thread count (clamped to >= 1; 1 restores fully
+    /// serial execution). Completions are bitwise-identical at every
+    /// setting — threads only partition independent output rows.
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The kernel fan-out this backend runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Test oracle: full prefill through the original scalar kernels
+    /// (`model::reference`). Same contract as [`Backend::prefill`]; no
+    /// upload accounting. Not a hot path.
+    pub fn prefill_reference(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let c = &self.cfg;
+        ensure!(!tokens.is_empty(), "empty prompt");
+        ensure!(tokens.len() <= c.m_c_max, "prompt {} > m_c_max {}", tokens.len(), c.m_c_max);
+        let len = tokens.len();
+        let mut padded = tokens.to_vec();
+        padded.resize(c.m_c_max, 0);
+        let (logits, kc, vc) = model::reference::prefill_forward(c, &self.weights, &padded, len);
+        Ok(PrefillOut {
+            logits,
+            kc: HostTensor::from_f32(kc, &[c.l, c.g, c.m_c_max, c.k]),
+            vc: HostTensor::from_f32(vc, &[c.l, c.g, c.m_c_max, c.k]),
+        })
+    }
+
+    /// Test oracle: one decode step through the original scalar kernels
+    /// (`model::reference`). Same contract as [`Backend::decode`]; no
+    /// upload accounting. Not a hot path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_reference(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        ctx: &NativeContext,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        let c = &self.cfg;
+        ensure!(!tokens.is_empty() && tokens.len() <= bucket, "batch {} > bucket {bucket}", tokens.len());
+        let per_row = matches!(mode, DecodeMode::Fused);
+        let mut toks = tokens.to_vec();
+        toks.resize(bucket, 0);
+        let mut kd2 = kd.clone();
+        let mut vd2 = vd.clone();
+        let logits = model::reference::decode_forward(
+            c,
+            &self.weights,
+            mode,
+            bucket,
+            &toks,
+            d_pos,
+            ctx.m_c_len,
+            ctx.kc.f32s(),
+            ctx.vc.f32s(),
+            per_row,
+            kd2.f32s_mut(),
+            vd2.f32s_mut(),
+        );
+        Ok(DecodeOut {
+            logits: HostTensor::from_f32(logits, &[bucket, c.vocab]),
+            kd: kd2,
+            vd: vd2,
         })
     }
 
@@ -165,7 +258,7 @@ impl Backend for NativeBackend {
         let len = tokens.len();
         let mut padded = tokens.to_vec();
         padded.resize(c.m_c_max, 0);
-        let (logits, kc, vc) = model::prefill_forward(c, &self.weights, &padded, len);
+        let (logits, kc, vc) = model::prefill_forward(c, &self.weights, &padded, len, self.threads);
         Ok(PrefillOut {
             logits,
             kc: HostTensor::from_f32(kc, &[c.l, c.g, c.m_c_max, c.k]),
@@ -206,6 +299,7 @@ impl Backend for NativeBackend {
             cached_len,
             &padded,
             len,
+            self.threads,
         );
         Ok(PrefillOut {
             logits,
@@ -275,6 +369,7 @@ impl Backend for NativeBackend {
         // comparable.
         let mut kd2 = kd.clone();
         let mut vd2 = vd.clone();
+        let mut scratch = self.scratch.borrow_mut();
         let logits = model::decode_forward(
             c,
             &self.weights,
@@ -288,6 +383,8 @@ impl Backend for NativeBackend {
             per_row,
             kd2.f32s_mut(),
             vd2.f32s_mut(),
+            self.threads,
+            &mut scratch,
         );
         Ok(DecodeOut {
             logits: HostTensor::from_f32(logits, &[bucket, c.vocab]),
@@ -350,6 +447,29 @@ mod tests {
         assert!(be.prefill_extend(&pre_prefix.kc, &pre_prefix.vc, 0, &full).is_err());
         let bad = HostTensor::zeros_f32(&[1, 1, 1, 1]);
         assert!(be.prefill_extend(&bad, &bad, 2, &full).is_err());
+    }
+
+    #[test]
+    fn threads_do_not_change_outputs() {
+        // The determinism contract at the backend level: prefill and
+        // decode are bitwise-identical at threads=1 and threads=8.
+        let be1 = NativeBackend::preset("pico-mg", 5).unwrap().with_threads(1);
+        let be8 = NativeBackend::preset("pico-mg", 5).unwrap().with_threads(8);
+        assert_eq!((be1.threads(), be8.threads()), (1, 8));
+        let prompt = vec![1, 3, 12, 4];
+        let p1 = be1.prefill(&prompt).unwrap();
+        let p8 = be8.prefill(&prompt).unwrap();
+        assert_eq!(p1.logits, p8.logits);
+        assert_eq!(p1.kc, p8.kc);
+        assert_eq!(p1.vc, p8.vc);
+        let ctx1 = be1.upload_context(&p1.kc, &p1.vc, prompt.len()).unwrap();
+        let ctx8 = be8.upload_context(&p8.kc, &p8.vc, prompt.len()).unwrap();
+        let (kd, vd) = be1.zero_decode_cache(4);
+        let o1 = be1.decode(DecodeMode::Bifurcated, 4, &[5, 6, 7, 8], 0, &ctx1, &kd, &vd).unwrap();
+        let o8 = be8.decode(DecodeMode::Bifurcated, 4, &[5, 6, 7, 8], 0, &ctx8, &kd, &vd).unwrap();
+        assert_eq!(o1.logits, o8.logits);
+        assert_eq!(o1.kd, o8.kd);
+        assert_eq!(o1.vd, o8.vd);
     }
 
     #[test]

@@ -9,23 +9,41 @@
 //! GPT-2-style (normal σ=0.02, residual projections scaled by 1/√(2l))
 //! from [`crate::util::prng::Pcg`], so no Python artifacts are needed.
 //!
-//! The decode step implements both attention formulations under test:
+//! The hot paths run on the blocked, row-parallel kernels in
+//! [`super::math`] (`matmul_into` / `matmul_nt_into`) with a reusable
+//! [`DecodeScratch`] arena, so a steady-state decode step performs no
+//! heap allocation beyond its returned logits. The decode step implements
+//! both attention formulations under test:
 //!
-//! * [`DecodeMode::Bifurcated`] — paper Eq. 3–4: one dot-product sweep over
-//!   the *shared* context K_c/V_c, one over the per-sampler decode K_d/V_d,
-//!   and a softmax recombined across the two partitions (max joined by
-//!   `max`, numerators/denominators joined by `+`);
+//! * [`DecodeMode::Bifurcated`] — paper Eq. 3–4, restructured as a
+//!   **single sweep** over the shared context: per (layer, group) one
+//!   `Q[b·p, k] @ K_cᵀ` score GEMM and one `P[b·p, m_c] @ V_c` value
+//!   GEMM serve every batch row at once, then each row's small decode
+//!   GEMM against its own K_d/V_d, joined by the two-partition softmax
+//!   recombination (max joined by `max`, numerators/denominators by `+`);
 //! * [`DecodeMode::Fused`] — the baseline: context replicated per batch
-//!   row, one softmax over the concatenated `[m_c | m_d]` axis.
+//!   row (`[l, b, g, m_c, k]` layout), so the score/value GEMMs run per
+//!   (layer, row, group) against that row's own replica — the same
+//!   blocked kernels, b× the context reads. The comparison isolates the
+//!   paper's memory-IO claim, not kernel quality.
 //!
 //! Both are mathematically identical (paper Appendix E.1); the parity
-//! suite in `tests/parity_native.rs` asserts it numerically.
+//! suite in `tests/parity_native.rs` asserts it numerically, and the
+//! [`reference`] module keeps the original scalar implementations as the
+//! test oracle for the optimized kernels.
+//!
+//! Determinism: threads only ever partition independent output rows
+//! (each row's reduction order is fixed), so all outputs are
+//! bitwise-identical across thread counts — `tests` and
+//! `tests/threaded_determinism.rs` pin this.
 
 use crate::runtime::manifest::ModelCfg;
 use crate::runtime::models::DecodeMode;
 use crate::util::prng::Pcg;
 
-use super::math::{add_bias, axpy, dot, gelu_inplace, layer_norm, matmul};
+use super::math::{
+    add_bias, gelu_inplace, layer_norm_into, matmul_into, matmul_nt_into, par_rows, plan_threads,
+};
 
 pub const NEG_INF: f32 = -1e30;
 
@@ -126,19 +144,185 @@ fn embed(cfg: &ModelCfg, w: &NativeWeights, tok: i32, p: usize, out: &mut [f32])
     }
 }
 
-/// MLP half-block: `x += gelu(ln(x) @ w1 + b1) @ w2 + b2` over `rows` rows.
-fn mlp_block(cfg: &ModelCfg, lw: &LayerWeights, x: &mut [f32], rows: usize) {
-    let d = cfg.d;
-    let ff = cfg.ffn_mult * d;
-    let h2 = layer_norm(x, &lw.ln2_s, &lw.ln2_b, d);
-    let mut t = matmul(&h2, &lw.w1, rows, d, ff);
-    add_bias(&mut t, &lw.b1);
-    gelu_inplace(&mut t);
-    let mut o = matmul(&t, &lw.w2, rows, ff, d);
-    add_bias(&mut o, &lw.b2);
-    for (xv, &ov) in x.iter_mut().zip(&o) {
-        *xv += ov;
+/// Size `buf` to exactly `n` elements without zeroing the retained prefix
+/// and without shrinking capacity — for buffers whose every element the
+/// next kernel call assigns (the GEMM kernels zero-or-assign their whole
+/// destination themselves, so a second sweep here would just be wasted
+/// write traffic on the decode hot path). After warmup, no reallocation.
+fn size_for_overwrite(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    } else {
+        buf.truncate(n);
     }
+}
+
+/// Residual add: `x += delta` elementwise.
+fn add_assign(x: &mut [f32], delta: &[f32]) {
+    debug_assert_eq!(x.len(), delta.len());
+    for (xv, &dv) in x.iter_mut().zip(delta) {
+        *xv += dv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefill (full + incremental) on the blocked kernels
+// ---------------------------------------------------------------------------
+
+/// Working buffers for one prefill pass (sized to the widest layer op).
+struct PrefillBufs {
+    h1: Vec<f32>,
+    q: Vec<f32>,
+    kt: Vec<f32>,
+    vt: Vec<f32>,
+    o: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+}
+
+impl PrefillBufs {
+    fn new(cfg: &ModelCfg, rows: usize) -> PrefillBufs {
+        let (d, kk, g, h) = (cfg.d, cfg.k, cfg.g, cfg.h);
+        PrefillBufs {
+            h1: vec![0.0; rows * d],
+            q: vec![0.0; rows * h * kk],
+            kt: vec![0.0; rows * g * kk],
+            vt: vec![0.0; rows * g * kk],
+            o: vec![0.0; rows * h * kk],
+            proj: vec![0.0; rows * d],
+            ff: vec![0.0; rows * cfg.ffn_mult * d],
+        }
+    }
+}
+
+/// Causal attention for `rows` query rows at absolute positions
+/// `pos0..pos0+rows` of layer `li`: `q` holds the query rows
+/// (`[rows, h·k]`), `kc_all`/`vc_all` the full per-layer caches in the
+/// shared `[l, g, s_max, k]` layout (already containing this chunk's
+/// K/V), and `o` receives `[rows, h·k]`. Rows fan out across threads;
+/// each row's math is identical to the serial path, so outputs are
+/// bitwise-stable across thread counts.
+#[allow(clippy::too_many_arguments)]
+fn prefill_attn_rows(
+    cfg: &ModelCfg,
+    li: usize,
+    len: usize,
+    pos0: usize,
+    rows: usize,
+    q: &[f32],
+    kc_all: &[f32],
+    vc_all: &[f32],
+    o: &mut [f32],
+    threads: usize,
+) {
+    let (kk, g, h, p) = (cfg.k, cfg.g, cfg.h, cfg.p);
+    let s_max = cfg.m_c_max;
+    let scale = 1.0 / (kk as f32).sqrt();
+    assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
+    // Per-row cost is O(h·k·j_end); size the fan-out by the worst row.
+    let t = plan_threads(threads, rows, rows * h * kk * s_max);
+    par_rows(o, rows, h * kk, t, |r0, chunk| {
+        let mut sc: Vec<f32> = Vec::new();
+        let mut acc: Vec<f32> = Vec::new();
+        for (rr, orow) in chunk.chunks_exact_mut(h * kk).enumerate() {
+            let r = r0 + rr;
+            let i = pos0 + r;
+            // Valid keys: j <= i AND j < len. For i < len that is 0..=i;
+            // for padded queries (i >= len) it is 0..len. Either way the
+            // set is non-empty because len >= 1.
+            let j_end = if i < len { i + 1 } else { len };
+            let qrow = &q[r * h * kk..(r + 1) * h * kk];
+            for gi in 0..g {
+                let base = (li * g + gi) * s_max * kk;
+                let qg = &qrow[gi * p * kk..(gi + 1) * p * kk];
+                size_for_overwrite(&mut sc, p * j_end);
+                matmul_nt_into(&mut sc, qg, &kc_all[base..base + j_end * kk], p, kk, j_end, 1);
+                for v in sc.iter_mut() {
+                    *v *= scale;
+                }
+                let mut denoms = [0.0f32; 64]; // p <= h <= 64 everywhere here
+                for (pp, srow) in sc.chunks_exact_mut(j_end).enumerate() {
+                    let mut mx = NEG_INF;
+                    for &v in srow.iter() {
+                        if v > mx {
+                            mx = v;
+                        }
+                    }
+                    let mut dn = 0.0f32;
+                    for v in srow.iter_mut() {
+                        *v = (*v - mx).exp();
+                        dn += *v;
+                    }
+                    denoms[pp] = dn;
+                }
+                size_for_overwrite(&mut acc, p * kk);
+                matmul_into(&mut acc, &sc, &vc_all[base..base + j_end * kk], p, j_end, kk, 1);
+                for pp in 0..p {
+                    let dn = denoms[pp];
+                    let arow = &acc[pp * kk..(pp + 1) * kk];
+                    let dst = &mut orow[(gi * p + pp) * kk..(gi * p + pp + 1) * kk];
+                    for (ov, &av) in dst.iter_mut().zip(arow) {
+                        *ov = av / dn;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// One transformer layer over `rows` residual-stream rows at absolute
+/// positions `pos0..`: QKV projection, cache stash, causal attention,
+/// output projection, MLP. Shared verbatim by [`prefill_forward`] and
+/// [`prefill_extend_forward`] — that sharing is what makes the extend
+/// path bitwise-identical to a full prefill over the same rows.
+#[allow(clippy::too_many_arguments)]
+fn prefill_layer(
+    cfg: &ModelCfg,
+    lw: &LayerWeights,
+    li: usize,
+    len: usize,
+    pos0: usize,
+    rows: usize,
+    x: &mut [f32],
+    kc_all: &mut [f32],
+    vc_all: &mut [f32],
+    bufs: &mut PrefillBufs,
+    threads: usize,
+) {
+    let (d, kk, g, h) = (cfg.d, cfg.k, cfg.g, cfg.h);
+    let s_max = cfg.m_c_max;
+    let ff = cfg.ffn_mult * d;
+
+    layer_norm_into(&mut bufs.h1, x, &lw.ln1_s, &lw.ln1_b, d);
+    matmul_into(&mut bufs.q, &bufs.h1, &lw.wq, rows, d, h * kk, threads);
+    matmul_into(&mut bufs.kt, &bufs.h1, &lw.wk, rows, d, g * kk, threads);
+    matmul_into(&mut bufs.vt, &bufs.h1, &lw.wv, rows, d, g * kk, threads);
+
+    // Stash this chunk's K/V into the shared [g, S, k] cache layout before
+    // any attention row runs — rows only ever read positions <= their own,
+    // all of which are now present.
+    for gi in 0..g {
+        for r in 0..rows {
+            let src = &bufs.kt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
+            let dst = ((li * g + gi) * s_max + pos0 + r) * kk;
+            kc_all[dst..dst + kk].copy_from_slice(src);
+            let src = &bufs.vt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
+            vc_all[dst..dst + kk].copy_from_slice(src);
+        }
+    }
+
+    prefill_attn_rows(cfg, li, len, pos0, rows, &bufs.q, kc_all, vc_all, &mut bufs.o, threads);
+
+    matmul_into(&mut bufs.proj, &bufs.o, &lw.wo, rows, h * kk, d, threads);
+    add_assign(x, &bufs.proj);
+
+    layer_norm_into(&mut bufs.h1, x, &lw.ln2_s, &lw.ln2_b, d);
+    matmul_into(&mut bufs.ff, &bufs.h1, &lw.w1, rows, d, ff, threads);
+    add_bias(&mut bufs.ff, &lw.b1);
+    gelu_inplace(&mut bufs.ff);
+    matmul_into(&mut bufs.proj, &bufs.ff, &lw.w2, rows, ff, d, threads);
+    add_bias(&mut bufs.proj, &lw.b2);
+    add_assign(x, &bufs.proj);
 }
 
 /// Full-context prefill over a right-padded prompt of `len` valid tokens.
@@ -150,12 +334,12 @@ pub fn prefill_forward(
     w: &NativeWeights,
     tokens_padded: &[i32],
     len: usize,
+    threads: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+    let (d, kk, g) = (cfg.d, cfg.k, cfg.g);
     let s_max = cfg.m_c_max;
     assert_eq!(tokens_padded.len(), s_max, "prompt must be padded to m_c_max");
     assert!(len >= 1 && len <= s_max, "valid length out of range");
-    let scale = 1.0 / (kk as f32).sqrt();
 
     let mut x = vec![0.0f32; s_max * d];
     for s in 0..s_max {
@@ -164,75 +348,19 @@ pub fn prefill_forward(
 
     let mut kc_all = vec![0.0f32; cfg.l * g * s_max * kk];
     let mut vc_all = vec![0.0f32; cfg.l * g * s_max * kk];
+    let mut bufs = PrefillBufs::new(cfg, s_max);
 
     for (li, lw) in w.layers.iter().enumerate() {
-        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
-        let q = matmul(&h1, &lw.wq, s_max, d, h * kk); // [S, h·k]
-        let kt = matmul(&h1, &lw.wk, s_max, d, g * kk); // [S, g·k]
-        let vt = matmul(&h1, &lw.wv, s_max, d, g * kk);
-
-        // Stash this layer's cache in [g, S, k] order (the shared-context
-        // layout the decode step consumes).
-        for gi in 0..g {
-            for s in 0..s_max {
-                let src = &kt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
-                let dst = ((li * g + gi) * s_max + s) * kk;
-                kc_all[dst..dst + kk].copy_from_slice(src);
-                let src = &vt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
-                vc_all[dst..dst + kk].copy_from_slice(src);
-            }
-        }
-
-        // Causal multi-group attention: query position i attends to key
-        // positions j <= i that are also < len.
-        let mut o = vec![0.0f32; s_max * h * kk];
-        let mut logits = vec![0.0f32; s_max]; // scratch, truncated per row
-        for i in 0..s_max {
-            // Valid keys: j <= i AND j < len. For i < len that is 0..=i;
-            // for padded queries (i >= len) it is 0..len. Either way the
-            // set is non-empty because len >= 1.
-            let j_end = if i < len { i + 1 } else { len };
-            for hh in 0..h {
-                let gi = hh / p;
-                let qv = &q[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
-                let kbase = (li * g + gi) * s_max * kk;
-                let mut mx = NEG_INF;
-                for (j, lj) in logits[..j_end].iter_mut().enumerate() {
-                    let krow = kt_at(&kc_all, kbase, j, kk);
-                    *lj = dot(qv, krow) * scale;
-                    if *lj > mx {
-                        mx = *lj;
-                    }
-                }
-                let mut denom = 0.0f32;
-                let orow = &mut o[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
-                for (j, &lj) in logits[..j_end].iter().enumerate() {
-                    let e = (lj - mx).exp();
-                    denom += e;
-                    axpy(orow, e, kt_at(&vc_all, kbase, j, kk));
-                }
-                for v in orow.iter_mut() {
-                    *v /= denom;
-                }
-            }
-        }
-
-        let proj = matmul(&o, &lw.wo, s_max, h * kk, d);
-        for (xv, &pv) in x.iter_mut().zip(&proj) {
-            *xv += pv;
-        }
-        mlp_block(cfg, lw, &mut x, s_max);
+        prefill_layer(
+            cfg, lw, li, len, 0, s_max, &mut x, &mut kc_all, &mut vc_all, &mut bufs, threads,
+        );
     }
 
-    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
-    let last = &xf[(len - 1) * d..len * d];
-    let logits = matmul(last, &w.head, 1, d, cfg.vocab);
+    layer_norm_into(&mut bufs.h1, &x, &w.lnf_s, &w.lnf_b, d);
+    let last = &bufs.h1[(len - 1) * d..len * d];
+    let mut logits = vec![0.0f32; cfg.vocab];
+    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, 1);
     (logits, kc_all, vc_all)
-}
-
-#[inline]
-fn kt_at(buf: &[f32], base: usize, j: usize, kk: usize) -> &[f32] {
-    &buf[base + j * kk..base + (j + 1) * kk]
 }
 
 /// Incremental prefill: extend a previous prefill's caches (valid for the
@@ -242,8 +370,9 @@ fn kt_at(buf: &[f32], base: usize, j: usize, kk: usize) -> &[f32] {
 /// Bitwise-identical to [`prefill_forward`] over the same prompt: cached
 /// rows `j < cached_len` are exactly what a full prefill computes for them
 /// (causality — row `j` sees only tokens `<= j`), and the recomputed rows
-/// run the same per-row ops in the same accumulation order against the
-/// same per-layer K/V buffer. `tests` pins this with `assert_eq`.
+/// run the same per-row ops ([`prefill_layer`]) in the same accumulation
+/// order against the same per-layer K/V buffer. `tests` pins this with
+/// `assert_eq`.
 #[allow(clippy::too_many_arguments)]
 pub fn prefill_extend_forward(
     cfg: &ModelCfg,
@@ -253,14 +382,14 @@ pub fn prefill_extend_forward(
     cached_len: usize,
     tokens_padded: &[i32],
     len: usize,
+    threads: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+    let (d, kk, g) = (cfg.d, cfg.k, cfg.g);
     let s_max = cfg.m_c_max;
     assert_eq!(tokens_padded.len(), s_max, "prompt must be padded to m_c_max");
     assert!(cached_len >= 1 && cached_len < len && len <= s_max, "extension range out of order");
     assert_eq!(cached_kc.len(), cfg.l * g * s_max * kk, "cached kc shape");
     assert_eq!(cached_vc.len(), cached_kc.len(), "cached vc shape");
-    let scale = 1.0 / (kk as f32).sqrt();
     let rows = s_max - cached_len;
 
     let mut x = vec![0.0f32; rows * d];
@@ -270,116 +399,272 @@ pub fn prefill_extend_forward(
 
     let mut kc_all = cached_kc.to_vec();
     let mut vc_all = cached_vc.to_vec();
+    let mut bufs = PrefillBufs::new(cfg, rows);
 
     for (li, lw) in w.layers.iter().enumerate() {
-        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
-        let q = matmul(&h1, &lw.wq, rows, d, h * kk);
-        let kt = matmul(&h1, &lw.wk, rows, d, g * kk);
-        let vt = matmul(&h1, &lw.wv, rows, d, g * kk);
-
-        // Overwrite the suffix rows of this layer's cache; the cached
-        // prefix rows stay untouched and feed the attention below.
-        for gi in 0..g {
-            for r in 0..rows {
-                let src = &kt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
-                let dst = ((li * g + gi) * s_max + cached_len + r) * kk;
-                kc_all[dst..dst + kk].copy_from_slice(src);
-                let src = &vt[r * g * kk + gi * kk..r * g * kk + (gi + 1) * kk];
-                vc_all[dst..dst + kk].copy_from_slice(src);
-            }
-        }
-
-        let mut o = vec![0.0f32; rows * h * kk];
-        let mut logits = vec![0.0f32; s_max];
-        for r in 0..rows {
-            let i = cached_len + r;
-            let j_end = if i < len { i + 1 } else { len };
-            for hh in 0..h {
-                let gi = hh / p;
-                let qv = &q[r * h * kk + hh * kk..r * h * kk + (hh + 1) * kk];
-                let kbase = (li * g + gi) * s_max * kk;
-                let mut mx = NEG_INF;
-                for (j, lj) in logits[..j_end].iter_mut().enumerate() {
-                    let krow = kt_at(&kc_all, kbase, j, kk);
-                    *lj = dot(qv, krow) * scale;
-                    if *lj > mx {
-                        mx = *lj;
-                    }
-                }
-                let mut denom = 0.0f32;
-                let orow = &mut o[r * h * kk + hh * kk..r * h * kk + (hh + 1) * kk];
-                for (j, &lj) in logits[..j_end].iter().enumerate() {
-                    let e = (lj - mx).exp();
-                    denom += e;
-                    axpy(orow, e, kt_at(&vc_all, kbase, j, kk));
-                }
-                for v in orow.iter_mut() {
-                    *v /= denom;
-                }
-            }
-        }
-
-        let proj = matmul(&o, &lw.wo, rows, h * kk, d);
-        for (xv, &pv) in x.iter_mut().zip(&proj) {
-            *xv += pv;
-        }
-        mlp_block(cfg, lw, &mut x, rows);
+        prefill_layer(
+            cfg, lw, li, len, cached_len, rows, &mut x, &mut kc_all, &mut vc_all, &mut bufs,
+            threads,
+        );
     }
 
-    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+    layer_norm_into(&mut bufs.h1, &x, &w.lnf_s, &w.lnf_b, d);
     let last_row = len - 1 - cached_len;
-    let last = &xf[last_row * d..(last_row + 1) * d];
-    let logits = matmul(last, &w.head, 1, d, cfg.vocab);
+    let last = &bufs.h1[last_row * d..(last_row + 1) * d];
+    let mut logits = vec![0.0f32; cfg.vocab];
+    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, 1);
     (logits, kc_all, vc_all)
 }
 
-/// Reused per-head scratch buffers for the decode attention inner loop.
-/// Hoisted out of the (layer × row × head) loop so neither mode pays
-/// allocator overhead — the microbench's bifurcated-vs-fused latency
-/// comparison must measure the memory-access pattern, not malloc.
+// ---------------------------------------------------------------------------
+// Decode on the blocked kernels
+// ---------------------------------------------------------------------------
+
+/// Reusable buffers for the decode step — owned by the backend and handed
+/// to every [`decode_forward`] call so steady-state decode performs no
+/// heap allocation (buffers keep their high-water capacity).
 #[derive(Default)]
-struct Scratch {
-    logits_c: Vec<f32>,
-    logits_d: Vec<f32>,
+pub struct DecodeScratch {
+    x: Vec<f32>,
+    h1: Vec<f32>,
+    q: Vec<f32>,
+    knew: Vec<f32>,
+    vnew: Vec<f32>,
+    o: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    qg: Vec<f32>,
+    sc: Vec<f32>,
+    sd: Vec<f32>,
     acc_c: Vec<f32>,
     acc_d: Vec<f32>,
+    denom: Vec<f32>,
 }
 
-impl Scratch {
-    /// Zero-fill `buf` to exactly `n` elements without shrinking capacity.
-    fn fill(buf: &mut Vec<f32>, n: usize) {
-        buf.clear();
-        buf.resize(n, 0.0);
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
     }
 }
 
-/// Context-KV addressing for the decode step's two layouts.
-struct CtxIndex<'a> {
-    kc: &'a [f32],
-    vc: &'a [f32],
-    /// true: `[l, b, g, mc, k]` (fused replicas); false: `[l, g, mc, k]`.
-    per_row: bool,
+/// Geometry of one decode step's attention, shared by both modes.
+#[derive(Clone, Copy)]
+struct AttnGeom {
     b: usize,
     g: usize,
-    mc: usize,
+    p: usize,
     kk: usize,
+    /// Context buffer stride (`m_c_max`), not the valid length.
+    mc: usize,
+    m_c_len: usize,
+    md: usize,
+    d_pos: usize,
+    scale: f32,
+    threads: usize,
 }
 
-impl<'a> CtxIndex<'a> {
-    fn base(&self, li: usize, bi: usize, gi: usize) -> usize {
-        if self.per_row {
-            (((li * self.b + bi) * self.g) + gi) * self.mc * self.kk
-        } else {
-            (li * self.g + gi) * self.mc * self.kk
+/// Paper Eq. 3–4 as a single sweep: per (layer, group) the context scores
+/// and context values are each ONE batched GEMM over all `b·p` query rows
+/// against the *shared* K_c/V_c — the context is read once per step
+/// regardless of batch size. Decode-partition scores/values stay per-row
+/// (each sampler owns its K_d/V_d), and the two partitions recombine
+/// through the joint softmax.
+#[allow(clippy::too_many_arguments)]
+fn attend_bifurcated_batched(
+    geom: &AttnGeom,
+    li: usize,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    o: &mut [f32],
+    qg: &mut Vec<f32>,
+    sc: &mut Vec<f32>,
+    sd: &mut Vec<f32>,
+    acc_c: &mut Vec<f32>,
+    acc_d: &mut Vec<f32>,
+    denom: &mut Vec<f32>,
+) {
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale, threads } = *geom;
+    let bp = b * p;
+    let md1 = d_pos + 1;
+    let hkk = g * p * kk; // = h·k, the row stride of q and o
+    for gi in 0..g {
+        let cbase = (li * g + gi) * mc * kk; // shared [l, g, mc, k] layout
+        // Gather this group's query rows into [b·p, k] (contiguous per
+        // batch row: heads g·p..(g+1)·p are adjacent in the q row).
+        size_for_overwrite(qg, bp * kk);
+        for bi in 0..b {
+            let src = bi * hkk + gi * p * kk;
+            qg[bi * p * kk..(bi + 1) * p * kk].copy_from_slice(&q[src..src + p * kk]);
+        }
+        // ⟨Q, K_c⟩: one GEMM for the whole batch — the single sweep.
+        size_for_overwrite(sc, bp * m_c_len);
+        matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], bp, kk, m_c_len, threads);
+        for v in sc.iter_mut() {
+            *v *= scale;
+        }
+        // ⟨Q, K_d⟩: per-sampler decode prefix (j <= d_pos).
+        size_for_overwrite(sd, bp * md1);
+        for bi in 0..b {
+            let dbase = ((li * b + bi) * g + gi) * md * kk;
+            matmul_nt_into(
+                &mut sd[bi * p * md1..(bi + 1) * p * md1],
+                &qg[bi * p * kk..(bi + 1) * p * kk],
+                &kd[dbase..dbase + md1 * kk],
+                p,
+                kk,
+                md1,
+                1,
+            );
+        }
+        for v in sd.iter_mut() {
+            *v *= scale;
+        }
+        // Joint softmax across the partition boundary: shared max, then
+        // exponentiate both partitions in place; denominators join by +.
+        size_for_overwrite(denom, bp);
+        for r in 0..bp {
+            let scrow = &mut sc[r * m_c_len..(r + 1) * m_c_len];
+            let sdrow = &mut sd[r * md1..(r + 1) * md1];
+            let mut mx = NEG_INF;
+            for &v in scrow.iter() {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            for &v in sdrow.iter() {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            let mut dc = 0.0f32;
+            for v in scrow.iter_mut() {
+                *v = (*v - mx).exp();
+                dc += *v;
+            }
+            let mut dd = 0.0f32;
+            for v in sdrow.iter_mut() {
+                *v = (*v - mx).exp();
+                dd += *v;
+            }
+            denom[r] = dc + dd;
+        }
+        // Numerators: context values again one batched GEMM, decode
+        // values per sampler.
+        size_for_overwrite(acc_c, bp * kk);
+        matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], bp, m_c_len, kk, threads);
+        size_for_overwrite(acc_d, bp * kk);
+        for bi in 0..b {
+            let dbase = ((li * b + bi) * g + gi) * md * kk;
+            matmul_into(
+                &mut acc_d[bi * p * kk..(bi + 1) * p * kk],
+                &sd[bi * p * md1..(bi + 1) * p * md1],
+                &vd[dbase..dbase + md1 * kk],
+                p,
+                md1,
+                kk,
+                1,
+            );
+        }
+        // Recombine and scatter into the o rows.
+        for bi in 0..b {
+            for pp in 0..p {
+                let r = bi * p + pp;
+                let dn = denom[r];
+                let dst = &mut o[bi * hkk + (gi * p + pp) * kk..bi * hkk + (gi * p + pp + 1) * kk];
+                let cc = &acc_c[r * kk..(r + 1) * kk];
+                let cd = &acc_d[r * kk..(r + 1) * kk];
+                for ((ov, &cv), &dv) in dst.iter_mut().zip(cc).zip(cd) {
+                    *ov = (cv + dv) / dn;
+                }
+            }
         }
     }
+}
 
-    fn k_row(&self, base: usize, j: usize) -> &'a [f32] {
-        &self.kc[base + j * self.kk..base + (j + 1) * self.kk]
-    }
-
-    fn v_row(&self, base: usize, j: usize) -> &'a [f32] {
-        &self.vc[base + j * self.kk..base + (j + 1) * self.kk]
+/// Baseline fused semantics on the same blocked kernels: each batch row's
+/// *own* context replica (`[l, b, g, mc, k]` layout) and its decode rows
+/// form one `[m_c | m_d]` axis under a single softmax, so the score and
+/// value GEMMs run per (row, group) and the context is read `b` times per
+/// step — the replicated memory schedule the paper's Eq. 5 charges.
+#[allow(clippy::too_many_arguments)]
+fn attend_fused_blocked(
+    geom: &AttnGeom,
+    li: usize,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    o: &mut [f32],
+    sc: &mut Vec<f32>,
+    sd: &mut Vec<f32>,
+    acc_c: &mut Vec<f32>,
+    acc_d: &mut Vec<f32>,
+) {
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale, threads } = *geom;
+    let md1 = d_pos + 1;
+    let hkk = g * p * kk;
+    assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
+    for bi in 0..b {
+        for gi in 0..g {
+            let cbase = (((li * b + bi) * g) + gi) * mc * kk; // replicated layout
+            let dbase = ((li * b + bi) * g + gi) * md * kk;
+            let qg = &q[bi * hkk + gi * p * kk..bi * hkk + (gi + 1) * p * kk];
+            size_for_overwrite(sc, p * m_c_len);
+            matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], p, kk, m_c_len, threads);
+            size_for_overwrite(sd, p * md1);
+            matmul_nt_into(sd, qg, &kd[dbase..dbase + md1 * kk], p, kk, md1, 1);
+            for v in sc.iter_mut() {
+                *v *= scale;
+            }
+            for v in sd.iter_mut() {
+                *v *= scale;
+            }
+            // One softmax over the concatenated [m_c | m_d] axis.
+            let mut denoms = [0.0f32; 64]; // p <= 64 everywhere here
+            for pp in 0..p {
+                let scrow = &mut sc[pp * m_c_len..(pp + 1) * m_c_len];
+                let sdrow = &mut sd[pp * md1..(pp + 1) * md1];
+                let mut mx = NEG_INF;
+                for &v in scrow.iter() {
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+                for &v in sdrow.iter() {
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+                let mut dn = 0.0f32;
+                for v in scrow.iter_mut() {
+                    *v = (*v - mx).exp();
+                    dn += *v;
+                }
+                for v in sdrow.iter_mut() {
+                    *v = (*v - mx).exp();
+                    dn += *v;
+                }
+                denoms[pp] = dn;
+            }
+            size_for_overwrite(acc_c, p * kk);
+            matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], p, m_c_len, kk, threads);
+            size_for_overwrite(acc_d, p * kk);
+            matmul_into(acc_d, sd, &vd[dbase..dbase + md1 * kk], p, md1, kk, 1);
+            for pp in 0..p {
+                let dn = denoms[pp];
+                let dst =
+                    &mut o[bi * hkk + (gi * p + pp) * kk..bi * hkk + (gi * p + pp + 1) * kk];
+                let cc = &acc_c[pp * kk..(pp + 1) * kk];
+                let cd = &acc_d[pp * kk..(pp + 1) * kk];
+                for ((ov, &cv), &dv) in dst.iter_mut().zip(cc).zip(cd) {
+                    *ov = (cv + dv) / dn;
+                }
+            }
+        }
     }
 }
 
@@ -391,7 +676,8 @@ impl<'a> CtxIndex<'a> {
 /// their layout described by `ctx_per_row` (`true` for the fused replicas
 /// `[l, b, g, mc, k]`, `false` for the shared `[l, g, mc, k]`).
 ///
-/// Returns the logits, flat `[bucket, vocab]`.
+/// Returns the logits, flat `[bucket, vocab]` — the step's only heap
+/// allocation once `scratch` is warm.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_forward(
     cfg: &ModelCfg,
@@ -406,10 +692,13 @@ pub fn decode_forward(
     ctx_per_row: bool,
     kd: &mut [f32],
     vd: &mut [f32],
+    threads: usize,
+    scr: &mut DecodeScratch,
 ) -> Vec<f32> {
     let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
     let (mc, md) = (cfg.m_c_max, cfg.m_d_max);
     let b = bucket;
+    let ff = cfg.ffn_mult * d;
     assert_eq!(tokens.len(), b, "tokens must be padded to the bucket");
     assert!(d_pos < md, "decode position {d_pos} >= m_d_max {md}");
     assert!(m_c_len >= 1 && m_c_len <= mc, "context length out of range");
@@ -418,173 +707,456 @@ pub fn decode_forward(
     let expect_ctx = if ctx_per_row { cfg.l * b * g * mc * kk } else { cfg.l * g * mc * kk };
     assert_eq!(kc.len(), expect_ctx, "context cache shape");
     assert_eq!(vc.len(), expect_ctx, "context cache shape");
-    let scale = 1.0 / (kk as f32).sqrt();
-    let ctx = CtxIndex { kc, vc, per_row: ctx_per_row, b, g, mc, kk };
+    // Unlike the scalar oracle (whose CtxIndex decouples layout from
+    // mode), the blocked kernels hardcode shared addressing for
+    // bifurcated and replicated addressing for fused — reject the two
+    // combinations they would silently mis-index.
+    assert_eq!(
+        ctx_per_row,
+        mode == DecodeMode::Fused,
+        "context layout must match the decode mode (shared for bifurcated, replicated for fused)"
+    );
+    let geom = AttnGeom {
+        b,
+        g,
+        p,
+        kk,
+        mc,
+        m_c_len,
+        md,
+        d_pos,
+        scale: 1.0 / (kk as f32).sqrt(),
+        threads,
+    };
 
-    let mut x = vec![0.0f32; b * d];
+    size_for_overwrite(&mut scr.x, b * d);
     for bi in 0..b {
-        embed(cfg, w, tokens[bi], m_c_len + d_pos, &mut x[bi * d..(bi + 1) * d]);
+        embed(cfg, w, tokens[bi], m_c_len + d_pos, &mut scr.x[bi * d..(bi + 1) * d]);
     }
+    size_for_overwrite(&mut scr.h1, b * d);
+    size_for_overwrite(&mut scr.q, b * h * kk);
+    size_for_overwrite(&mut scr.knew, b * g * kk);
+    size_for_overwrite(&mut scr.vnew, b * g * kk);
+    size_for_overwrite(&mut scr.o, b * h * kk);
+    size_for_overwrite(&mut scr.proj, b * d);
+    size_for_overwrite(&mut scr.ff, b * ff);
 
-    let mut scratch = Scratch::default();
     for (li, lw) in w.layers.iter().enumerate() {
-        let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
-        let q = matmul(&h1, &lw.wq, b, d, h * kk); // [b, h·k]
-        let knew = matmul(&h1, &lw.wk, b, d, g * kk); // [b, g·k]
-        let vnew = matmul(&h1, &lw.wv, b, d, g * kk);
+        layer_norm_into(&mut scr.h1, &scr.x, &lw.ln1_s, &lw.ln1_b, d);
+        matmul_into(&mut scr.q, &scr.h1, &lw.wq, b, d, h * kk, threads);
+        matmul_into(&mut scr.knew, &scr.h1, &lw.wk, b, d, g * kk, threads);
+        matmul_into(&mut scr.vnew, &scr.h1, &lw.wv, b, d, g * kk, threads);
 
         // Functional cache update: write this step's K/V at d_pos.
         for bi in 0..b {
             for gi in 0..g {
                 let dst = (((li * b + bi) * g + gi) * md + d_pos) * kk;
                 let src = bi * g * kk + gi * kk;
-                kd[dst..dst + kk].copy_from_slice(&knew[src..src + kk]);
-                vd[dst..dst + kk].copy_from_slice(&vnew[src..src + kk]);
+                kd[dst..dst + kk].copy_from_slice(&scr.knew[src..src + kk]);
+                vd[dst..dst + kk].copy_from_slice(&scr.vnew[src..src + kk]);
             }
         }
 
-        let mut o = vec![0.0f32; b * h * kk];
-        for bi in 0..b {
-            for hh in 0..h {
-                let gi = hh / p;
-                let qv = &q[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
-                let dbase = ((li * b + bi) * g + gi) * md * kk;
-                let orow = &mut o[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
-                match mode {
-                    DecodeMode::Bifurcated => attend_bifurcated(
-                        qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
-                        &mut scratch,
-                    ),
-                    DecodeMode::Fused => attend_fused(
-                        qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
-                        &mut scratch,
-                    ),
+        match mode {
+            DecodeMode::Bifurcated => attend_bifurcated_batched(
+                &geom,
+                li,
+                &scr.q,
+                kc,
+                vc,
+                kd,
+                vd,
+                &mut scr.o,
+                &mut scr.qg,
+                &mut scr.sc,
+                &mut scr.sd,
+                &mut scr.acc_c,
+                &mut scr.acc_d,
+                &mut scr.denom,
+            ),
+            DecodeMode::Fused => attend_fused_blocked(
+                &geom,
+                li,
+                &scr.q,
+                kc,
+                vc,
+                kd,
+                vd,
+                &mut scr.o,
+                &mut scr.sc,
+                &mut scr.sd,
+                &mut scr.acc_c,
+                &mut scr.acc_d,
+            ),
+        }
+
+        matmul_into(&mut scr.proj, &scr.o, &lw.wo, b, h * kk, d, threads);
+        add_assign(&mut scr.x, &scr.proj);
+
+        layer_norm_into(&mut scr.h1, &scr.x, &lw.ln2_s, &lw.ln2_b, d);
+        matmul_into(&mut scr.ff, &scr.h1, &lw.w1, b, d, ff, threads);
+        add_bias(&mut scr.ff, &lw.b1);
+        gelu_inplace(&mut scr.ff);
+        matmul_into(&mut scr.proj, &scr.ff, &lw.w2, b, ff, d, threads);
+        add_bias(&mut scr.proj, &lw.b2);
+        add_assign(&mut scr.x, &scr.proj);
+    }
+
+    layer_norm_into(&mut scr.h1, &scr.x, &w.lnf_s, &w.lnf_b, d);
+    let mut logits = vec![0.0f32; b * cfg.vocab];
+    matmul_into(&mut logits, &scr.h1, &w.head, b, d, cfg.vocab, threads);
+    logits
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference oracle
+// ---------------------------------------------------------------------------
+
+/// The original scalar implementations (per-row · per-head `dot`/`axpy`
+/// sweeps over the naive [`super::math::matmul`]), kept verbatim as the
+/// test oracle for the blocked kernels. `tests/parity_native.rs` holds
+/// the optimized paths to ≤1e-5 of these across the full grid; nothing on
+/// a hot path may call into this module.
+pub mod reference {
+    use super::*;
+    use crate::runtime::native::math::{add_bias, axpy, dot, gelu_inplace, layer_norm, matmul};
+
+    /// MLP half-block: `x += gelu(ln(x) @ w1 + b1) @ w2 + b2`.
+    fn mlp_block(cfg: &ModelCfg, lw: &LayerWeights, x: &mut [f32], rows: usize) {
+        let d = cfg.d;
+        let ff = cfg.ffn_mult * d;
+        let h2 = layer_norm(x, &lw.ln2_s, &lw.ln2_b, d);
+        let mut t = matmul(&h2, &lw.w1, rows, d, ff);
+        add_bias(&mut t, &lw.b1);
+        gelu_inplace(&mut t);
+        let mut o = matmul(&t, &lw.w2, rows, ff, d);
+        add_bias(&mut o, &lw.b2);
+        for (xv, &ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+    }
+
+    #[inline]
+    fn kt_at(buf: &[f32], base: usize, j: usize, kk: usize) -> &[f32] {
+        &buf[base + j * kk..base + (j + 1) * kk]
+    }
+
+    /// Scalar full-context prefill (see [`super::prefill_forward`] for the
+    /// contract). Same outputs as the optimized path, bit for bit.
+    pub fn prefill_forward(
+        cfg: &ModelCfg,
+        w: &NativeWeights,
+        tokens_padded: &[i32],
+        len: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+        let s_max = cfg.m_c_max;
+        assert_eq!(tokens_padded.len(), s_max, "prompt must be padded to m_c_max");
+        assert!(len >= 1 && len <= s_max, "valid length out of range");
+        let scale = 1.0 / (kk as f32).sqrt();
+
+        let mut x = vec![0.0f32; s_max * d];
+        for s in 0..s_max {
+            embed(cfg, w, tokens_padded[s], s, &mut x[s * d..(s + 1) * d]);
+        }
+
+        let mut kc_all = vec![0.0f32; cfg.l * g * s_max * kk];
+        let mut vc_all = vec![0.0f32; cfg.l * g * s_max * kk];
+
+        for (li, lw) in w.layers.iter().enumerate() {
+            let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
+            let q = matmul(&h1, &lw.wq, s_max, d, h * kk); // [S, h·k]
+            let kt = matmul(&h1, &lw.wk, s_max, d, g * kk); // [S, g·k]
+            let vt = matmul(&h1, &lw.wv, s_max, d, g * kk);
+
+            for gi in 0..g {
+                for s in 0..s_max {
+                    let src = &kt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
+                    let dst = ((li * g + gi) * s_max + s) * kk;
+                    kc_all[dst..dst + kk].copy_from_slice(src);
+                    let src = &vt[s * g * kk + gi * kk..s * g * kk + (gi + 1) * kk];
+                    vc_all[dst..dst + kk].copy_from_slice(src);
                 }
             }
+
+            let mut o = vec![0.0f32; s_max * h * kk];
+            let mut logits = vec![0.0f32; s_max];
+            for i in 0..s_max {
+                let j_end = if i < len { i + 1 } else { len };
+                for hh in 0..h {
+                    let gi = hh / p;
+                    let qv = &q[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
+                    let kbase = (li * g + gi) * s_max * kk;
+                    let mut mx = NEG_INF;
+                    for (j, lj) in logits[..j_end].iter_mut().enumerate() {
+                        let krow = kt_at(&kc_all, kbase, j, kk);
+                        *lj = dot(qv, krow) * scale;
+                        if *lj > mx {
+                            mx = *lj;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    let orow = &mut o[i * h * kk + hh * kk..i * h * kk + (hh + 1) * kk];
+                    for (j, &lj) in logits[..j_end].iter().enumerate() {
+                        let e = (lj - mx).exp();
+                        denom += e;
+                        axpy(orow, e, kt_at(&vc_all, kbase, j, kk));
+                    }
+                    for v in orow.iter_mut() {
+                        *v /= denom;
+                    }
+                }
+            }
+
+            let proj = matmul(&o, &lw.wo, s_max, h * kk, d);
+            for (xv, &pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            mlp_block(cfg, lw, &mut x, s_max);
         }
 
-        let proj = matmul(&o, &lw.wo, b, h * kk, d);
-        for (xv, &pv) in x.iter_mut().zip(&proj) {
-            *xv += pv;
-        }
-        mlp_block(cfg, lw, &mut x, b);
+        let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+        let last = &xf[(len - 1) * d..len * d];
+        let logits = matmul(last, &w.head, 1, d, cfg.vocab);
+        (logits, kc_all, vc_all)
     }
 
-    let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
-    matmul(&xf, &w.head, b, d, cfg.vocab)
-}
+    /// Reused per-head scratch for the scalar decode inner loop.
+    #[derive(Default)]
+    struct Scratch {
+        logits_c: Vec<f32>,
+        logits_d: Vec<f32>,
+        acc_c: Vec<f32>,
+        acc_d: Vec<f32>,
+    }
 
-/// Paper Eq. 3–4: separate context and decode sweeps, one softmax
-/// recombined across the partition boundary. The context rows are
-/// addressed through the *shared* (batch-independent) layout — the
-/// memory-schedule statement of the bifurcation.
-#[allow(clippy::too_many_arguments)]
-fn attend_bifurcated(
-    qv: &[f32],
-    scale: f32,
-    ctx: &CtxIndex<'_>,
-    li: usize,
-    bi: usize,
-    gi: usize,
-    m_c_len: usize,
-    kd: &[f32],
-    vd: &[f32],
-    dbase: usize,
-    d_pos: usize,
-    kk: usize,
-    orow: &mut [f32],
-    scratch: &mut Scratch,
-) {
-    let cbase = ctx.base(li, bi, gi);
-    // ⟨q, K_c⟩ over the valid context prefix.
-    Scratch::fill(&mut scratch.logits_c, m_c_len);
-    let mut mx = NEG_INF;
-    for (j, l) in scratch.logits_c.iter_mut().enumerate() {
-        *l = dot(qv, ctx.k_row(cbase, j)) * scale;
-        if *l > mx {
-            mx = *l;
+    impl Scratch {
+        fn fill(buf: &mut Vec<f32>, n: usize) {
+            buf.clear();
+            buf.resize(n, 0.0);
         }
     }
-    // ⟨q, K_d⟩ over this sampler's decode prefix (j <= d_pos).
-    Scratch::fill(&mut scratch.logits_d, d_pos + 1);
-    for (j, l) in scratch.logits_d.iter_mut().enumerate() {
-        *l = dot(qv, &kd[dbase + j * kk..dbase + (j + 1) * kk]) * scale;
-        if *l > mx {
-            mx = *l;
-        }
-    }
-    // Joint softmax: numerators and denominators joined by summation.
-    Scratch::fill(&mut scratch.acc_c, kk);
-    let mut denom_c = 0.0f32;
-    for (j, &l) in scratch.logits_c.iter().enumerate() {
-        let e = (l - mx).exp();
-        denom_c += e;
-        axpy(&mut scratch.acc_c, e, ctx.v_row(cbase, j));
-    }
-    Scratch::fill(&mut scratch.acc_d, kk);
-    let mut denom_d = 0.0f32;
-    for (j, &l) in scratch.logits_d.iter().enumerate() {
-        let e = (l - mx).exp();
-        denom_d += e;
-        axpy(&mut scratch.acc_d, e, &vd[dbase + j * kk..dbase + (j + 1) * kk]);
-    }
-    let denom = denom_c + denom_d;
-    for ((o, &c), &dv) in orow.iter_mut().zip(&scratch.acc_c).zip(&scratch.acc_d) {
-        *o = (c + dv) / denom;
-    }
-}
 
-/// Baseline fused semantics: this batch row's *own* context replica and
-/// its decode rows form one concatenated `[m_c | m_d]` axis with a single
-/// softmax — exactly what a GEMM over `K = K_c ⊕ K_d` computes.
-#[allow(clippy::too_many_arguments)]
-fn attend_fused(
-    qv: &[f32],
-    scale: f32,
-    ctx: &CtxIndex<'_>,
-    li: usize,
-    bi: usize,
-    gi: usize,
-    m_c_len: usize,
-    kd: &[f32],
-    vd: &[f32],
-    dbase: usize,
-    d_pos: usize,
-    kk: usize,
-    orow: &mut [f32],
-    scratch: &mut Scratch,
-) {
-    let cbase = ctx.base(li, bi, gi);
-    let total = m_c_len + d_pos + 1;
-    Scratch::fill(&mut scratch.logits_c, total);
-    let mut mx = NEG_INF;
-    for (j, l) in scratch.logits_c.iter_mut().enumerate() {
-        let krow = if j < m_c_len {
-            ctx.k_row(cbase, j)
-        } else {
-            let jd = j - m_c_len;
-            &kd[dbase + jd * kk..dbase + (jd + 1) * kk]
-        };
-        *l = dot(qv, krow) * scale;
-        if *l > mx {
-            mx = *l;
+    /// Context-KV addressing for the decode step's two layouts.
+    struct CtxIndex<'a> {
+        kc: &'a [f32],
+        vc: &'a [f32],
+        /// true: `[l, b, g, mc, k]` (fused replicas); false: `[l, g, mc, k]`.
+        per_row: bool,
+        b: usize,
+        g: usize,
+        mc: usize,
+        kk: usize,
+    }
+
+    impl<'a> CtxIndex<'a> {
+        fn base(&self, li: usize, bi: usize, gi: usize) -> usize {
+            if self.per_row {
+                (((li * self.b + bi) * self.g) + gi) * self.mc * self.kk
+            } else {
+                (li * self.g + gi) * self.mc * self.kk
+            }
+        }
+
+        fn k_row(&self, base: usize, j: usize) -> &'a [f32] {
+            &self.kc[base + j * self.kk..base + (j + 1) * self.kk]
+        }
+
+        fn v_row(&self, base: usize, j: usize) -> &'a [f32] {
+            &self.vc[base + j * self.kk..base + (j + 1) * self.kk]
         }
     }
-    Scratch::fill(&mut scratch.acc_c, kk);
-    let mut denom = 0.0f32;
-    for (j, &l) in scratch.logits_c.iter().enumerate() {
-        let e = (l - mx).exp();
-        denom += e;
-        let vrow = if j < m_c_len {
-            ctx.v_row(cbase, j)
-        } else {
-            let jd = j - m_c_len;
-            &vd[dbase + jd * kk..dbase + (jd + 1) * kk]
-        };
-        axpy(&mut scratch.acc_c, e, vrow);
+
+    /// Scalar decode step (see [`super::decode_forward`] for the
+    /// contract). `kd`/`vd` are updated in place exactly like the
+    /// optimized path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_forward(
+        cfg: &ModelCfg,
+        w: &NativeWeights,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: usize,
+        m_c_len: usize,
+        kc: &[f32],
+        vc: &[f32],
+        ctx_per_row: bool,
+        kd: &mut [f32],
+        vd: &mut [f32],
+    ) -> Vec<f32> {
+        let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
+        let (mc, md) = (cfg.m_c_max, cfg.m_d_max);
+        let b = bucket;
+        assert_eq!(tokens.len(), b, "tokens must be padded to the bucket");
+        assert!(d_pos < md, "decode position {d_pos} >= m_d_max {md}");
+        assert!(m_c_len >= 1 && m_c_len <= mc, "context length out of range");
+        assert_eq!(kd.len(), cfg.l * b * g * md * kk, "kd cache shape");
+        assert_eq!(vd.len(), kd.len(), "vd cache shape");
+        let expect_ctx = if ctx_per_row { cfg.l * b * g * mc * kk } else { cfg.l * g * mc * kk };
+        assert_eq!(kc.len(), expect_ctx, "context cache shape");
+        assert_eq!(vc.len(), expect_ctx, "context cache shape");
+        let scale = 1.0 / (kk as f32).sqrt();
+        let ctx = CtxIndex { kc, vc, per_row: ctx_per_row, b, g, mc, kk };
+
+        let mut x = vec![0.0f32; b * d];
+        for bi in 0..b {
+            embed(cfg, w, tokens[bi], m_c_len + d_pos, &mut x[bi * d..(bi + 1) * d]);
+        }
+
+        let mut scratch = Scratch::default();
+        for (li, lw) in w.layers.iter().enumerate() {
+            let h1 = layer_norm(&x, &lw.ln1_s, &lw.ln1_b, d);
+            let q = matmul(&h1, &lw.wq, b, d, h * kk);
+            let knew = matmul(&h1, &lw.wk, b, d, g * kk);
+            let vnew = matmul(&h1, &lw.wv, b, d, g * kk);
+
+            for bi in 0..b {
+                for gi in 0..g {
+                    let dst = (((li * b + bi) * g + gi) * md + d_pos) * kk;
+                    let src = bi * g * kk + gi * kk;
+                    kd[dst..dst + kk].copy_from_slice(&knew[src..src + kk]);
+                    vd[dst..dst + kk].copy_from_slice(&vnew[src..src + kk]);
+                }
+            }
+
+            let mut o = vec![0.0f32; b * h * kk];
+            for bi in 0..b {
+                for hh in 0..h {
+                    let gi = hh / p;
+                    let qv = &q[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
+                    let dbase = ((li * b + bi) * g + gi) * md * kk;
+                    let orow = &mut o[bi * h * kk + hh * kk..bi * h * kk + (hh + 1) * kk];
+                    match mode {
+                        DecodeMode::Bifurcated => attend_bifurcated(
+                            qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
+                            &mut scratch,
+                        ),
+                        DecodeMode::Fused => attend_fused(
+                            qv, scale, &ctx, li, bi, gi, m_c_len, kd, vd, dbase, d_pos, kk, orow,
+                            &mut scratch,
+                        ),
+                    }
+                }
+            }
+
+            let proj = matmul(&o, &lw.wo, b, h * kk, d);
+            for (xv, &pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            mlp_block(cfg, lw, &mut x, b);
+        }
+
+        let xf = layer_norm(&x, &w.lnf_s, &w.lnf_b, d);
+        matmul(&xf, &w.head, b, d, cfg.vocab)
     }
-    for (o, &a) in orow.iter_mut().zip(&scratch.acc_c) {
-        *o = a / denom;
+
+    /// Paper Eq. 3–4, scalar form: separate context and decode sweeps,
+    /// one softmax recombined across the partition boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_bifurcated(
+        qv: &[f32],
+        scale: f32,
+        ctx: &CtxIndex<'_>,
+        li: usize,
+        bi: usize,
+        gi: usize,
+        m_c_len: usize,
+        kd: &[f32],
+        vd: &[f32],
+        dbase: usize,
+        d_pos: usize,
+        kk: usize,
+        orow: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let cbase = ctx.base(li, bi, gi);
+        Scratch::fill(&mut scratch.logits_c, m_c_len);
+        let mut mx = NEG_INF;
+        for (j, l) in scratch.logits_c.iter_mut().enumerate() {
+            *l = dot(qv, ctx.k_row(cbase, j)) * scale;
+            if *l > mx {
+                mx = *l;
+            }
+        }
+        Scratch::fill(&mut scratch.logits_d, d_pos + 1);
+        for (j, l) in scratch.logits_d.iter_mut().enumerate() {
+            *l = dot(qv, &kd[dbase + j * kk..dbase + (j + 1) * kk]) * scale;
+            if *l > mx {
+                mx = *l;
+            }
+        }
+        Scratch::fill(&mut scratch.acc_c, kk);
+        let mut denom_c = 0.0f32;
+        for (j, &l) in scratch.logits_c.iter().enumerate() {
+            let e = (l - mx).exp();
+            denom_c += e;
+            axpy(&mut scratch.acc_c, e, ctx.v_row(cbase, j));
+        }
+        Scratch::fill(&mut scratch.acc_d, kk);
+        let mut denom_d = 0.0f32;
+        for (j, &l) in scratch.logits_d.iter().enumerate() {
+            let e = (l - mx).exp();
+            denom_d += e;
+            axpy(&mut scratch.acc_d, e, &vd[dbase + j * kk..dbase + (j + 1) * kk]);
+        }
+        let denom = denom_c + denom_d;
+        for ((o, &c), &dv) in orow.iter_mut().zip(&scratch.acc_c).zip(&scratch.acc_d) {
+            *o = (c + dv) / denom;
+        }
+    }
+
+    /// Baseline fused semantics, scalar form: one concatenated
+    /// `[m_c | m_d]` axis with a single softmax.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_fused(
+        qv: &[f32],
+        scale: f32,
+        ctx: &CtxIndex<'_>,
+        li: usize,
+        bi: usize,
+        gi: usize,
+        m_c_len: usize,
+        kd: &[f32],
+        vd: &[f32],
+        dbase: usize,
+        d_pos: usize,
+        kk: usize,
+        orow: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let cbase = ctx.base(li, bi, gi);
+        let total = m_c_len + d_pos + 1;
+        Scratch::fill(&mut scratch.logits_c, total);
+        let mut mx = NEG_INF;
+        for (j, l) in scratch.logits_c.iter_mut().enumerate() {
+            let krow = if j < m_c_len {
+                ctx.k_row(cbase, j)
+            } else {
+                let jd = j - m_c_len;
+                &kd[dbase + jd * kk..dbase + (jd + 1) * kk]
+            };
+            *l = dot(qv, krow) * scale;
+            if *l > mx {
+                mx = *l;
+            }
+        }
+        Scratch::fill(&mut scratch.acc_c, kk);
+        let mut denom = 0.0f32;
+        for (j, &l) in scratch.logits_c.iter().enumerate() {
+            let e = (l - mx).exp();
+            denom += e;
+            let vrow = if j < m_c_len {
+                ctx.v_row(cbase, j)
+            } else {
+                let jd = j - m_c_len;
+                &vd[dbase + jd * kk..dbase + (jd + 1) * kk]
+            };
+            axpy(&mut scratch.acc_c, e, vrow);
+        }
+        for (o, &a) in orow.iter_mut().zip(&scratch.acc_c) {
+            *o = a / denom;
+        }
     }
 }
 
@@ -656,7 +1228,7 @@ mod tests {
         let w = NativeWeights::init(&cfg, 1);
         let mut toks = vec![1, 2, 12, 3, 13];
         toks.resize(cfg.m_c_max, 0);
-        let (logits, kc, vc) = prefill_forward(&cfg, &w, &toks, 5);
+        let (logits, kc, vc) = prefill_forward(&cfg, &w, &toks, 5, 1);
         assert_eq!(logits.len(), cfg.vocab);
         assert_eq!(kc.len(), cfg.l * cfg.g * cfg.m_c_max * cfg.k);
         assert_eq!(vc.len(), kc.len());
@@ -675,8 +1247,8 @@ mod tests {
         a.resize(cfg.m_c_max, 0);
         let mut b = vec![1, 5, 12, 6];
         b.resize(cfg.m_c_max, 9);
-        let (la, kca, _) = prefill_forward(&cfg, &w, &a, len);
-        let (lb, kcb, _) = prefill_forward(&cfg, &w, &b, len);
+        let (la, kca, _) = prefill_forward(&cfg, &w, &a, len, 1);
+        let (lb, kcb, _) = prefill_forward(&cfg, &w, &b, len, 1);
         assert_eq!(la, lb);
         for gi in 0..cfg.g {
             for li in 0..cfg.l {
@@ -689,6 +1261,24 @@ mod tests {
     }
 
     #[test]
+    fn prefill_matches_scalar_reference_bitwise() {
+        // The optimized prefill accumulates every output element in the
+        // same order as the scalar oracle, so agreement is exact — at
+        // every thread count.
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 11);
+        let mut toks = vec![1, 5, 12, 6, 13, 2];
+        toks.resize(cfg.m_c_max, 0);
+        let (l_ref, kc_ref, vc_ref) = reference::prefill_forward(&cfg, &w, &toks, 6);
+        for threads in [1usize, 2, 8] {
+            let (l, kc, vc) = prefill_forward(&cfg, &w, &toks, 6, threads);
+            assert_eq!(l, l_ref, "logits diverge at threads={threads}");
+            assert_eq!(kc, kc_ref, "kc diverges at threads={threads}");
+            assert_eq!(vc, vc_ref, "vc diverges at threads={threads}");
+        }
+    }
+
+    #[test]
     fn prefill_extend_is_bitwise_identical_to_full_prefill() {
         // Prefill a prefix, then extend it with the remaining tokens: the
         // logits and both caches must equal a from-scratch prefill exactly
@@ -697,18 +1287,97 @@ mod tests {
         let w = NativeWeights::init(&cfg, 5);
         let full: Vec<i32> = vec![1, 5, 12, 6, 13, 2, 3];
         let len = full.len();
-        for cached_len in 1..len {
-            let mut prefix = full[..cached_len].to_vec();
-            prefix.resize(cfg.m_c_max, 0);
-            let (_, kc_p, vc_p) = prefill_forward(&cfg, &w, &prefix, cached_len);
-            let mut padded = full.clone();
-            padded.resize(cfg.m_c_max, 0);
-            let (l_ref, kc_ref, vc_ref) = prefill_forward(&cfg, &w, &padded, len);
-            let (l_ext, kc_ext, vc_ext) =
-                prefill_extend_forward(&cfg, &w, &kc_p, &vc_p, cached_len, &padded, len);
-            assert_eq!(l_ext, l_ref, "logits diverge at cached_len={cached_len}");
-            assert_eq!(kc_ext, kc_ref, "kc diverges at cached_len={cached_len}");
-            assert_eq!(vc_ext, vc_ref, "vc diverges at cached_len={cached_len}");
+        for threads in [1usize, 2] {
+            for cached_len in 1..len {
+                let mut prefix = full[..cached_len].to_vec();
+                prefix.resize(cfg.m_c_max, 0);
+                let (_, kc_p, vc_p) = prefill_forward(&cfg, &w, &prefix, cached_len, threads);
+                let mut padded = full.clone();
+                padded.resize(cfg.m_c_max, 0);
+                let (l_ref, kc_ref, vc_ref) = prefill_forward(&cfg, &w, &padded, len, threads);
+                let (l_ext, kc_ext, vc_ext) = prefill_extend_forward(
+                    &cfg, &w, &kc_p, &vc_p, cached_len, &padded, len, threads,
+                );
+                assert_eq!(l_ext, l_ref, "logits diverge at cached_len={cached_len}");
+                assert_eq!(kc_ext, kc_ref, "kc diverges at cached_len={cached_len}");
+                assert_eq!(vc_ext, vc_ref, "vc diverges at cached_len={cached_len}");
+            }
+        }
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn decode_matches_scalar_reference() {
+        // Bifurcated: the batched single-sweep GEMMs accumulate in the
+        // oracle's exact order -> bitwise equality. Fused: the blocked
+        // form splits the concatenated softmax sums per partition, so
+        // agreement is within fp tolerance.
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 9);
+        let mut toks = vec![1, 2, 7];
+        toks.resize(cfg.m_c_max, 0);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 3, 1);
+        let b = 2usize;
+        let n = cfg.l * b * cfg.g * cfg.m_d_max * cfg.k;
+        let kc_rep: Vec<f32> = {
+            // replicate [l, g, mc, k] -> [l, b, g, mc, k]
+            let chunk = cfg.g * cfg.m_c_max * cfg.k;
+            let mut out = Vec::with_capacity(b * kc.len());
+            for li in 0..cfg.l {
+                for _ in 0..b {
+                    out.extend_from_slice(&kc[li * chunk..(li + 1) * chunk]);
+                }
+            }
+            out
+        };
+        let vc_rep: Vec<f32> = {
+            let chunk = cfg.g * cfg.m_c_max * cfg.k;
+            let mut out = Vec::with_capacity(b * vc.len());
+            for li in 0..cfg.l {
+                for _ in 0..b {
+                    out.extend_from_slice(&vc[li * chunk..(li + 1) * chunk]);
+                }
+            }
+            out
+        };
+        let mut scr = DecodeScratch::new();
+        for threads in [1usize, 2, 8] {
+            // feed two steps so the decode-partition path is non-trivial
+            let (mut kd, mut vd) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut kd_r, mut vd_r) = (vec![0.0f32; n], vec![0.0f32; n]);
+            for d_pos in 0..2 {
+                let toks_step = [3i32, 4];
+                let l_opt = decode_forward(
+                    &cfg, &w, DecodeMode::Bifurcated, b, &toks_step, d_pos, 3, &kc, &vc, false,
+                    &mut kd, &mut vd, threads, &mut scr,
+                );
+                let l_ref = reference::decode_forward(
+                    &cfg, &w, DecodeMode::Bifurcated, b, &toks_step, d_pos, 3, &kc, &vc, false,
+                    &mut kd_r, &mut vd_r,
+                );
+                assert_eq!(l_opt, l_ref, "bifurcated diverges at threads={threads} d_pos={d_pos}");
+                assert_eq!(kd, kd_r);
+                assert_eq!(vd, vd_r);
+            }
+            let (mut kd, mut vd) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut kd_r, mut vd_r) = (vec![0.0f32; n], vec![0.0f32; n]);
+            for d_pos in 0..2 {
+                let toks_step = [5i32, 6];
+                let l_opt = decode_forward(
+                    &cfg, &w, DecodeMode::Fused, b, &toks_step, d_pos, 3, &kc_rep, &vc_rep, true,
+                    &mut kd, &mut vd, threads, &mut scr,
+                );
+                let l_ref = reference::decode_forward(
+                    &cfg, &w, DecodeMode::Fused, b, &toks_step, d_pos, 3, &kc_rep, &vc_rep, true,
+                    &mut kd_r, &mut vd_r,
+                );
+                let d = max_abs_diff(&l_opt, &l_ref);
+                assert!(d <= 1e-5, "fused diverges by {d} at threads={threads} d_pos={d_pos}");
+            }
         }
     }
 
@@ -718,11 +1387,14 @@ mod tests {
         let w = NativeWeights::init(&cfg, 3);
         let mut toks = vec![1, 2];
         toks.resize(cfg.m_c_max, 0);
-        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 2);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 2, 1);
         let n = cfg.l * 2 * cfg.g * cfg.m_d_max * cfg.k;
         let (mut kd, mut vd) = (vec![0.0; n], vec![0.0; n]);
-        let logits =
-            decode_forward(&cfg, &w, DecodeMode::Bifurcated, 2, &[3, 4], 0, 2, &kc, &vc, false, &mut kd, &mut vd);
+        let mut scr = DecodeScratch::new();
+        let logits = decode_forward(
+            &cfg, &w, DecodeMode::Bifurcated, 2, &[3, 4], 0, 2, &kc, &vc, false, &mut kd, &mut vd,
+            1, &mut scr,
+        );
         assert_eq!(logits.len(), 2 * cfg.vocab);
         assert!(logits.iter().all(|v| v.is_finite()));
         // position 0 of every (layer, row, group) slot was written

@@ -7,6 +7,11 @@
 //! one concatenated softmax), so agreement here is evidence, not a
 //! tautology. Runs the full grid of (batch ∈ {1, 4, 16}, context length ∈
 //! {8, 64, 256}, g ∈ {1, h}) plus engine-level and padding checks.
+//!
+//! Since the kernel rewrite, every grid point additionally holds both
+//! optimized modes to ≤1e-5 of the scalar reference oracle
+//! (`NativeBackend::{prefill,decode}_reference`) — the blocked/threaded
+//! GEMM paths must not drift from the original per-head sweeps.
 
 use bifurcated_attn::coordinator::{
     Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
@@ -65,6 +70,15 @@ fn assert_parity(g: usize, h: usize, m_c_len: usize, b: usize, seed: u64) {
     assert_eq!(pre.logits.len(), cfg.vocab);
     assert!(pre.logits.iter().all(|v| v.is_finite()));
 
+    // optimized prefill vs the scalar oracle
+    let pre_ref = be.prefill_reference(&prompt).unwrap();
+    assert!(
+        max_abs_diff(&pre.logits, &pre_ref.logits) <= TOL,
+        "g={g} m_c={m_c_len}: prefill drifts from the scalar oracle"
+    );
+    assert!(max_abs_diff(pre.kc.f32s(), pre_ref.kc.f32s()) <= TOL);
+    assert!(max_abs_diff(pre.vc.f32s(), pre_ref.vc.f32s()) <= TOL);
+
     // bifurcated: one shared context copy; fused: b replicas
     let ctx_bif = be.upload_context(&pre.kc, &pre.vc, m_c_len).unwrap();
     let kc_rep = pre.kc.broadcast_at(1, b);
@@ -93,6 +107,21 @@ fn assert_parity(g: usize, h: usize, m_c_len: usize, b: usize, seed: u64) {
         assert!(max_abs_diff(ob.kd.f32s(), of.kd.f32s()) <= TOL);
         assert!(max_abs_diff(ob.vd.f32s(), of.vd.f32s()) <= TOL);
         assert!(ob.logits.f32s().iter().all(|v| v.is_finite()));
+        // both optimized modes vs the scalar oracle, on the same inputs
+        let rb = be
+            .decode_reference(DecodeMode::Bifurcated, b, &toks, step, &ctx_bif, &kd_b, &vd_b)
+            .unwrap();
+        let rf = be
+            .decode_reference(DecodeMode::Fused, b, &toks, step, &ctx_fus, &kd_f, &vd_f)
+            .unwrap();
+        let db = max_abs_diff(ob.logits.f32s(), rb.logits.f32s());
+        let df = max_abs_diff(of.logits.f32s(), rf.logits.f32s());
+        assert!(db <= TOL, "g={g} m_c={m_c_len} b={b} step {step}: bifurcated vs oracle {db}");
+        assert!(df <= TOL, "g={g} m_c={m_c_len} b={b} step {step}: fused vs oracle {df}");
+        assert!(max_abs_diff(ob.kd.f32s(), rb.kd.f32s()) <= TOL);
+        assert!(max_abs_diff(ob.vd.f32s(), rb.vd.f32s()) <= TOL);
+        assert!(max_abs_diff(of.kd.f32s(), rf.kd.f32s()) <= TOL);
+        assert!(max_abs_diff(of.vd.f32s(), rf.vd.f32s()) <= TOL);
         // greedy-feed each row's argmax so later steps have diverged,
         // non-trivial decode caches
         toks = ob.logits.f32s()[..b * cfg.vocab]

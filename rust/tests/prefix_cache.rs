@@ -160,6 +160,40 @@ fn entry_budget_evicts_lru_nodes() {
 }
 
 #[test]
+fn byte_budget_evicts_by_resident_bytes() {
+    // Entry budget of 8 but bytes for only 2 resident K_c/V_c pairs: the
+    // byte budget must be the binding constraint, LRU order preserved.
+    let be = NativeBackend::preset("pico-mq", 0).unwrap();
+    let c = &be.cfg;
+    let entry_bytes = 2 * c.l * c.g * c.m_c_max * c.k * 4;
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_cache_entries = 8;
+    cfg.prefix_cache_bytes = 2 * entry_bytes;
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+    engine.generate(&req(1, "1+1=", 2, 1)).unwrap();
+    engine.generate(&req(2, "2+2=", 2, 2)).unwrap();
+    // touch the first so the second becomes LRU, then insert a third
+    engine.generate(&req(3, "1+1=", 2, 3)).unwrap();
+    engine.generate(&req(4, "3+3=", 2, 4)).unwrap();
+    {
+        let cache = engine.cache.borrow();
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2, "byte budget holds 2 entries");
+        assert_eq!(stats.resident_bytes, 2 * entry_bytes);
+        assert_eq!(stats.evictions, 1);
+        cache.check_invariants(&engine.kv.borrow()).unwrap();
+    }
+    // "2+2=" was the byte-budget victim; "1+1=" survived
+    assert_eq!(engine.generate(&req(5, "1+1=", 2, 5)).unwrap().timing.cache_hit_tokens, 5);
+    assert_eq!(engine.generate(&req(6, "2+2=", 2, 6)).unwrap().timing.cache_hit_tokens, 0);
+    // the /metrics payload carries the resident-bytes gauge
+    let m = engine.metrics_report();
+    assert_eq!(m.req("prefix_cache").f64_of("resident_bytes"), (2 * entry_bytes) as f64);
+    assert_eq!(m.req("prefix_cache").f64_of("max_bytes"), (2 * entry_bytes) as f64);
+}
+
+#[test]
 fn kv_pressure_evicts_cached_nodes_mid_request() {
     // Capacity of exactly 2 blocks: a request needs 1 block of context +
     // 1 block of decode slot, so serving a *new* prompt while an old

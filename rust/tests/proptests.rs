@@ -272,7 +272,12 @@ fn prop_prefix_cache_eviction_respects_pins_and_accounting() {
             // tiny capacity (24 blocks of 8 tokens) so KV pressure is real
             let bpt = cfg.kv_bytes_per_token();
             let mut kv = KvManager::new(24 * 8 * bpt, bpt, 8);
-            let mut cache: PrefixCache<NativeBackend> = PrefixCache::new(4);
+            // every entry's resident K_c/V_c is the same padded size here,
+            // so a 3-entry byte budget under a 4-entry budget makes the
+            // byte limit the binding constraint
+            let entry_bytes = 2 * cfg.l * cfg.g * cfg.m_c_max * cfg.k * 4;
+            let mut cache: PrefixCache<NativeBackend> =
+                PrefixCache::with_budgets(4, 3 * entry_bytes);
             let mut pinned: Vec<usize> = Vec::new();
             for &(op, r) in ops {
                 match op {
@@ -284,7 +289,7 @@ fn prop_prefix_cache_eviction_respects_pins_and_accounting() {
                             (0..len).map(|i| (((r >> (i % 16)) & 3) + 1) as i32).collect();
                         let full_hit =
                             cache.lookup(&tokens).is_some_and(|h| h.matched == tokens.len());
-                        if !full_hit && cache.make_room(&mut kv) {
+                        if !full_hit && cache.make_room(&mut kv, entry_bytes) {
                             if let Ok(id) = kv.register_cached_context(tokens.len()) {
                                 let kc = Rc::new(HostTensor::zeros_f32(&[
                                     cfg.l, cfg.g, cfg.m_c_max, cfg.k,
