@@ -1,15 +1,26 @@
 //! Steady-state decode throughput: tokens/sec and context-bytes-read per
-//! token for both decode modes across a `(b, m_c)` grid — the perf
-//! trajectory number every kernel PR must move (paper Fig. 6 shape on
-//! CPU).
+//! token for both decode modes across a `(b, m_c, g)` grid — MQ plus GQA
+//! models — the perf trajectory number every kernel PR must move (paper
+//! Fig. 6 shape on CPU).
+//!
+//! Each grid point also measures the **dispatch ablation**: the same
+//! bifurcated decode with the persistent worker pool (the hot-path
+//! default) vs PR 3's per-kernel scoped-spawn dispatch
+//! (`with_reference_dispatch`). Outputs are bitwise-identical between the
+//! two — only dispatch differs — so the `pool/spawn` column isolates what
+//! the pool buys: no spawn cost on large GEMMs, and profitable fan-out of
+//! the medium GEMMs that spawns could never amortize (exactly the small
+//! per-step shapes, `b <= 4`, where bifurcated decode lives).
 //!
 //! Writes `target/bench_results/decode_throughput.json` (bench-harness
 //! format) plus a flat `BENCH_decode.json` grid in the crate root. With
 //! `--baseline <path>` it compares bifurcated tokens/sec against a
 //! committed baseline grid and exits nonzero on a >20% regression at any
-//! shared grid point — the CI perf gate.
+//! shared grid point, or if pool dispatch fails to reach 1.2x over
+//! scoped-spawn dispatch at every small shape (`b <= 4`, multithreaded
+//! runs only) — the CI perf gates.
 
-use bifurcated_attn::bench::{bench_main, Bencher, Cell, Table};
+use bifurcated_attn::bench::{bench_main, cli_threads, Bencher, Cell, Table};
 use bifurcated_attn::corpus;
 use bifurcated_attn::runtime::manifest::ModelCfg;
 use bifurcated_attn::runtime::{Backend, DecodeMode, NativeBackend};
@@ -18,12 +29,13 @@ use bifurcated_attn::util::prng::Pcg;
 
 const M_D: usize = 16;
 
-fn bench_cfg(m_c: usize) -> ModelCfg {
-    // pico-mq shape (d=64, h=8, g=1, l=3) with the context capacity sized
-    // to the grid point: multi-query is where context sharing pays most.
-    let (d, h, g, l) = (64usize, 8usize, 1usize, 3usize);
+fn bench_cfg(m_c: usize, g: usize) -> ModelCfg {
+    // d=64, h=8, l=3 with `g` KV groups: g=1 is the pico-mq shape where
+    // context sharing pays most; g>1 covers the GQA family, whose
+    // context reads scale with g. Context capacity sized to the point.
+    let (d, h, l) = (64usize, 8usize, 3usize);
     ModelCfg {
-        name: format!("bench-mq-mc{m_c}"),
+        name: format!("bench-g{g}-mc{m_c}"),
         d,
         h,
         g,
@@ -44,10 +56,20 @@ fn bench_cfg(m_c: usize) -> ModelCfg {
 struct GridPoint {
     b: usize,
     m_c: usize,
+    g: usize,
     bif_tok_s: f64,
     fus_tok_s: f64,
+    /// Bifurcated tokens/sec under the scoped-spawn reference dispatch —
+    /// the ablation control (same math, PR 3's dispatch).
+    bif_tok_s_scoped: f64,
     bif_ctx_bytes_per_tok: f64,
     fus_ctx_bytes_per_tok: f64,
+}
+
+impl GridPoint {
+    fn dispatch_speedup(&self) -> f64 {
+        self.bif_tok_s / self.bif_tok_s_scoped
+    }
 }
 
 /// Steady-state tokens/sec for one mode: one timed pass = a full decode
@@ -74,20 +96,40 @@ fn measure(
 }
 
 fn run_grid(quick: bool, threads: usize) -> Vec<GridPoint> {
-    let grid: &[(usize, usize)] = if quick {
-        &[(4, 128), (16, 512)]
+    let grid: &[(usize, usize, usize)] = if quick {
+        // CI smoke: one large point, one small point, one GQA point.
+        &[(4, 128, 1), (16, 512, 1), (4, 128, 2)]
     } else {
-        &[(1, 128), (4, 128), (16, 128), (1, 512), (4, 512), (16, 512), (32, 512)]
+        &[
+            (1, 128, 1),
+            (4, 128, 1),
+            (16, 128, 1),
+            (1, 512, 1),
+            (4, 512, 1),
+            (16, 512, 1),
+            (32, 512, 1),
+            (4, 128, 2),
+            (16, 512, 2),
+            (4, 128, 4),
+            (16, 512, 4),
+        ]
     };
     let mut points = Vec::new();
-    let mut last_mc = 0usize;
-    let mut rt_opt: Option<NativeBackend> = None;
-    for &(b, m_c) in grid {
-        if m_c != last_mc {
-            rt_opt = Some(NativeBackend::new(bench_cfg(m_c), 0).unwrap().with_threads(threads));
-            last_mc = m_c;
+    let mut last_shape = (0usize, 0usize);
+    let mut rt_opt: Option<(NativeBackend, NativeBackend)> = None;
+    for &(b, m_c, g) in grid {
+        if (m_c, g) != last_shape {
+            // Same weights, two dispatchers: the persistent pool (the hot
+            // path) and PR 3's scoped spawns (the ablation control).
+            let pool = NativeBackend::new(bench_cfg(m_c, g), 0).unwrap().with_threads(threads);
+            let scoped = NativeBackend::new(bench_cfg(m_c, g), 0)
+                .unwrap()
+                .with_threads(threads)
+                .with_reference_dispatch();
+            rt_opt = Some((pool, scoped));
+            last_shape = (m_c, g);
         }
-        let rt = rt_opt.as_ref().unwrap();
+        let (rt, rt_scoped) = rt_opt.as_ref().unwrap();
         let mut rng = Pcg::new(7);
         let mut prompt = vec![corpus::BOS];
         prompt.extend(corpus::token_stream(&mut rng, m_c - 1));
@@ -96,6 +138,8 @@ fn run_grid(quick: bool, threads: usize) -> Vec<GridPoint> {
 
         let ctx_b = rt.upload_context(&pre.kc, &pre.vc, m_c_len).unwrap();
         let bif_tok_s = measure(rt, DecodeMode::Bifurcated, b, &ctx_b, quick);
+        let ctx_s = rt_scoped.upload_context(&pre.kc, &pre.vc, m_c_len).unwrap();
+        let bif_tok_s_scoped = measure(rt_scoped, DecodeMode::Bifurcated, b, &ctx_s, quick);
 
         let kc_rep = pre.kc.broadcast_at(1, b);
         let vc_rep = pre.vc.broadcast_at(1, b);
@@ -105,14 +149,17 @@ fn run_grid(quick: bool, threads: usize) -> Vec<GridPoint> {
         // Context bytes *read* per generated token (analytic, exact for
         // this backend): every decode step sweeps K_c and V_c once per
         // layer per group — once total under bifurcated, once per batch
-        // row under fused. A step emits b tokens.
+        // row under fused. A step emits b tokens. GQA models read g times
+        // the per-group volume.
         let cfg = rt.cfg();
         let ctx_bytes_per_step = (cfg.l * cfg.g * m_c_len * cfg.k * 4 * 2) as f64;
         points.push(GridPoint {
             b,
             m_c,
+            g,
             bif_tok_s,
             fus_tok_s,
+            bif_tok_s_scoped,
             bif_ctx_bytes_per_tok: ctx_bytes_per_step / b as f64,
             fus_ctx_bytes_per_tok: ctx_bytes_per_step,
         });
@@ -130,8 +177,11 @@ fn grid_json(points: &[GridPoint], threads: usize) -> Json {
                     Json::obj()
                         .set("b", Json::Num(p.b as f64))
                         .set("m_c", Json::Num(p.m_c as f64))
+                        .set("g", Json::Num(p.g as f64))
                         .set("bif_tok_s", Json::Num(p.bif_tok_s))
                         .set("fus_tok_s", Json::Num(p.fus_tok_s))
+                        .set("bif_tok_s_scoped", Json::Num(p.bif_tok_s_scoped))
+                        .set("dispatch_speedup", Json::Num(p.dispatch_speedup()))
                         .set("bif_ctx_bytes_per_tok", Json::Num(p.bif_ctx_bytes_per_tok))
                         .set("fus_ctx_bytes_per_tok", Json::Num(p.fus_ctx_bytes_per_tok))
                 })
@@ -141,10 +191,10 @@ fn grid_json(points: &[GridPoint], threads: usize) -> Json {
 }
 
 /// Compare measured bifurcated tokens/sec against a committed baseline
-/// grid; >20% regression at any shared `(b, m_c)` point fails the run.
+/// grid; >20% regression at any shared `(b, m_c, g)` point fails the run.
+/// Baseline entries without a `g` field are treated as `g = 1`.
 fn check_baseline(points: &[GridPoint], path: &str) -> Result<(), String> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| format!("baseline {path}: {e}"))?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("baseline {path}: {e}"))?;
     let doc = bifurcated_attn::util::json::parse(&text)
         .map_err(|e| format!("baseline {path}: bad json: {e}"))?;
     let grid = doc.req("grid");
@@ -154,19 +204,20 @@ fn check_baseline(points: &[GridPoint], path: &str) -> Result<(), String> {
     while let Some(entry) = grid.idx(i) {
         i += 1;
         let (b, m_c) = (entry.f64_of("b") as usize, entry.f64_of("m_c") as usize);
+        let g = entry.get("g").and_then(|v| v.as_usize()).unwrap_or(1);
         let base = entry.f64_of("bif_tok_s");
-        let Some(p) = points.iter().find(|p| p.b == b && p.m_c == m_c) else {
+        let Some(p) = points.iter().find(|p| p.b == b && p.m_c == m_c && p.g == g) else {
             continue;
         };
         checked += 1;
         if p.bif_tok_s < 0.8 * base {
             failures.push(format!(
-                "b={b} m_c={m_c}: bifurcated {:.0} tok/s is >20% below baseline {:.0}",
+                "b={b} m_c={m_c} g={g}: bifurcated {:.0} tok/s is >20% below baseline {:.0}",
                 p.bif_tok_s, base
             ));
         } else {
             eprintln!(
-                "[bench] baseline ok at b={b} m_c={m_c}: {:.0} tok/s vs baseline {:.0}",
+                "[bench] baseline ok at b={b} m_c={m_c} g={g}: {:.0} tok/s vs baseline {:.0}",
                 p.bif_tok_s, base
             );
         }
@@ -181,22 +232,55 @@ fn check_baseline(points: &[GridPoint], path: &str) -> Result<(), String> {
     }
 }
 
+/// Dispatch-ablation gate: on a multithreaded run, pool dispatch must
+/// beat scoped-spawn dispatch by >= 1.2x bifurcated tokens/sec at the
+/// small decode shapes (`b <= 4`) — the shapes whose GEMMs are too small
+/// to amortize a spawn, i.e. exactly where the pool must pay off. Gated
+/// on the best small-shape point so one noisy cell can't flake CI, while
+/// a real dispatch regression (pool ~ spawn everywhere) still fails.
+fn check_dispatch(points: &[GridPoint], threads: usize) -> Result<(), String> {
+    if threads <= 1 {
+        eprintln!("[bench] dispatch gate skipped: single-threaded run (both dispatchers serial)");
+        return Ok(());
+    }
+    let small: Vec<&GridPoint> = points.iter().filter(|p| p.b <= 4).collect();
+    if small.is_empty() {
+        return Ok(());
+    }
+    let best = small
+        .iter()
+        .map(|p| p.dispatch_speedup())
+        .fold(f64::NEG_INFINITY, f64::max);
+    for p in &small {
+        eprintln!(
+            "[bench] dispatch ablation at b={} m_c={} g={}: pool {:.0} vs spawn {:.0} tok/s ({:.2}x)",
+            p.b,
+            p.m_c,
+            p.g,
+            p.bif_tok_s,
+            p.bif_tok_s_scoped,
+            p.dispatch_speedup()
+        );
+    }
+    if best >= 1.2 {
+        Ok(())
+    } else {
+        Err(format!(
+            "pool dispatch best small-shape (b<=4) speedup {best:.2}x over scoped spawns is \
+             below the 1.2x floor"
+        ))
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let threads = args
-        .iter()
-        .position(|a| a == "--threads")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
+    let threads = cli_threads();
     let baseline = args
         .iter()
         .position(|a| a == "--baseline")
         .and_then(|i| args.get(i + 1))
         .cloned();
-    let mut baseline_err: Option<String> = None;
+    let mut gate_err: Option<String> = None;
     bench_main("decode_throughput", |quick| {
         let points = run_grid(quick, threads);
         let mut t = Table::new(
@@ -204,21 +288,31 @@ fn main() {
             &[
                 "b",
                 "m_c",
+                "g",
                 "fused tok/s",
                 "bif tok/s",
                 "speedup",
+                "bif tok/s (spawn)",
+                "pool/spawn",
                 "fused ctx B/tok",
                 "bif ctx B/tok",
             ],
         )
-        .with_note("tokens/sec over full decode windows; ctx bytes/token are exact analytic IO");
+        .with_note(
+            "tokens/sec over full decode windows; ctx bytes/token are exact analytic IO; \
+             'pool/spawn' is the dispatch ablation (same kernels, persistent pool vs \
+             per-call scoped spawns)",
+        );
         for p in &points {
             t.row(vec![
                 Cell::Num(p.b as f64),
                 Cell::Num(p.m_c as f64),
+                Cell::Num(p.g as f64),
                 Cell::Num(p.fus_tok_s.round()),
                 Cell::Num(p.bif_tok_s.round()),
                 Cell::Num((p.bif_tok_s / p.fus_tok_s * 100.0).round() / 100.0),
+                Cell::Num(p.bif_tok_s_scoped.round()),
+                Cell::Num((p.dispatch_speedup() * 100.0).round() / 100.0),
                 Cell::Num(p.fus_ctx_bytes_per_tok),
                 Cell::Num(p.bif_ctx_bytes_per_tok),
             ]);
@@ -230,11 +324,13 @@ fn main() {
             eprintln!("[bench] flat grid -> BENCH_decode.json");
         }
         if let Some(path) = &baseline {
-            baseline_err = check_baseline(&points, path).err();
+            gate_err = check_baseline(&points, path)
+                .and_then(|()| check_dispatch(&points, threads))
+                .err();
         }
         vec![t]
     });
-    if let Some(e) = baseline_err {
+    if let Some(e) = gate_err {
         eprintln!("[bench] PERF REGRESSION: {e}");
         std::process::exit(1);
     }

@@ -8,7 +8,7 @@
 //! reflect chance and only become meaningful with trained pjrt artifacts
 //! (see tests/integration_engine.rs on a `--features pjrt` build).
 
-use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::bench::{bench_main, cli_threads, Cell, Table};
 use bifurcated_attn::coordinator::{Engine, EngineConfig};
 use bifurcated_attn::evalharness::{run_suite, SuiteConfig};
 
@@ -24,6 +24,8 @@ fn main() {
             // for the bench that measures exactly that effect)
             let mut ecfg = EngineConfig::default();
             ecfg.prefix_cache_entries = 0;
+            // `--threads` must reach the backend, not default silently.
+            ecfg.threads = cli_threads();
             let engine = Engine::native(model, 0, ecfg).unwrap();
             let mut t = Table::new(
                 &format!("Fig 8 — pass@n / pass@top3 vs latency, {model} (native CPU)"),

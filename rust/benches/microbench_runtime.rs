@@ -5,16 +5,61 @@
 //! made measurable). Runs with no artifacts; a `--features pjrt` build
 //! measures the PJRT executables via tests/integration_* instead.
 
-use bifurcated_attn::bench::{bench_main, Bencher, Cell, Table};
+use bifurcated_attn::bench::{bench_main, cli_threads, Bencher, Cell, Table};
 use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::native::math::{matmul, matmul_into};
+use bifurcated_attn::runtime::native::Executor;
 use bifurcated_attn::runtime::{Backend, ContextView, DecodeMode, NativeBackend};
+use bifurcated_attn::util::prng::Pcg;
+
+/// Raw GEMM micro-bench: naive oracle vs the register-tiled kernel
+/// (serial, then pool-dispatched) on decode-step shapes — the
+/// criterion-free delta that shows the micro-kernel restructure (and the
+/// pool fan-out on top) actually landed, per shape.
+fn kernel_table(quick: bool, threads: usize) -> Table {
+    let mut t = Table::new(
+        &format!("GEMM micro-kernels (naive vs blocked, {threads}-thread pool)"),
+        &["m", "k", "n", "naive ms", "blocked ms", "blocked+pool ms", "blocked/naive"],
+    )
+    .with_note("same accumulation order everywhere — identical bits, different schedules");
+    let pool = Executor::with_threads(threads);
+    let mut rng = Pcg::new(11);
+    for &(m, kk, n) in &[(4usize, 64usize, 256usize), (32, 8, 512), (96, 64, 256)] {
+        let x: Vec<f32> = (0..m * kk).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..kk * n).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; m * n];
+        let bench = |nm| if quick { Bencher::quick(nm) } else { Bencher::new(nm) };
+        let s_naive = bench("naive").run(|| {
+            std::hint::black_box(matmul(&x, &w, m, kk, n));
+        });
+        let s_serial = bench("blocked").run(|| {
+            matmul_into(&mut y, &x, &w, m, kk, n, &Executor::Serial);
+            std::hint::black_box(&y);
+        });
+        let s_pool = bench("pool").run(|| {
+            matmul_into(&mut y, &x, &w, m, kk, n, &pool);
+            std::hint::black_box(&y);
+        });
+        t.row(vec![
+            Cell::Num(m as f64),
+            Cell::Num(kk as f64),
+            Cell::Num(n as f64),
+            Cell::Ms(s_naive.p50),
+            Cell::Ms(s_serial.p50),
+            Cell::Ms(s_pool.p50),
+            Cell::Num((s_naive.p50 / s_serial.p50 * 100.0).round() / 100.0),
+        ]);
+    }
+    t
+}
 
 fn main() {
+    let threads = cli_threads();
     bench_main("microbench_runtime", |quick| {
         let buckets: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
-        let mut tables = Vec::new();
+        let mut tables = vec![kernel_table(quick, threads)];
         for model in ["pico-mh", "pico-mq"] {
-            let rt = NativeBackend::preset(model, 0).unwrap();
+            let rt = NativeBackend::preset(model, 0).unwrap().with_threads(threads);
             rt.warm(&[DecodeMode::Bifurcated, DecodeMode::Fused], buckets).unwrap();
 
             let prompt: Vec<i32> = {
@@ -25,7 +70,9 @@ fn main() {
             let pre = rt.prefill(&prompt).unwrap();
 
             let mut t = Table::new(
-                &format!("Measured decode step latency, {model} (native CPU, f32)"),
+                &format!(
+                    "Measured decode step latency, {model} (native CPU, f32, {threads} threads)"
+                ),
                 &["b", "fused ms/step", "bifurcated ms/step", "speedup", "fused ctx upload B", "bif ctx upload B"],
             )
             .with_note("real forward passes; pico-scale — trends, not paper magnitudes");

@@ -11,7 +11,7 @@
 //! not paper magnitudes). `--quick` runs the CI smoke configuration:
 //! tiny prefix, 2 timed iterations.
 
-use bifurcated_attn::bench::{bench_main, Cell, Table};
+use bifurcated_attn::bench::{bench_main, cli_threads, Cell, Table};
 use bifurcated_attn::coordinator::{
     Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
 };
@@ -58,7 +58,10 @@ fn shared_prefix(tokens: usize) -> String {
 }
 
 fn engine(prefix_tokens: usize) -> Engine<NativeBackend> {
-    let be = NativeBackend::new(bench_cfg(prefix_tokens), 0).unwrap();
+    // `--threads` must reach the backend: TTFT numbers depend on the
+    // kernel fan-out (and on the pool the backend now shares across
+    // prefill/extend/decode).
+    let be = NativeBackend::new(bench_cfg(prefix_tokens), 0).unwrap().with_threads(cli_threads());
     let mut cfg = EngineConfig::default();
     cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
     cfg.prefix_cache_entries = 8;

@@ -220,6 +220,20 @@ pub fn save_results(name: &str, tables: &[Table]) {
     }
 }
 
+/// Shared `--threads N` parsing for every bench that builds a native
+/// backend, so no bench silently ignores the flag. Returns the resolved
+/// kernel fan-out: the flag when given, otherwise the backend default
+/// (all cores, or `BIFURCATED_THREADS` when set).
+pub fn cli_threads() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(crate::runtime::native::default_threads)
+}
+
 /// Shared entry glue for `cargo bench` binaries: honors `--quick` and the
 /// standard libtest flags cargo passes (`--bench`).
 pub fn bench_main(name: &str, f: impl FnOnce(bool) -> Vec<Table>) {

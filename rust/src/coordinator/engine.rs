@@ -45,9 +45,11 @@ pub struct EngineConfig {
     /// Prefix-cache byte budget over resident K_c/V_c storage; 0 means
     /// unlimited (entry budget only).
     pub prefix_cache_bytes: usize,
-    /// Kernel thread count for backends that honor it (native); 0 means
-    /// one thread per available core. Completions are bitwise-identical
-    /// at every setting.
+    /// Kernel thread count for backends that honor it (native, where it
+    /// sizes the persistent worker pool shared by prefill/extend/decode);
+    /// 0 means one thread per available core, or the `BIFURCATED_THREADS`
+    /// env var when set. Completions are bitwise-identical at every
+    /// setting.
     pub threads: usize,
 }
 

@@ -71,8 +71,10 @@ fn print_usage() {
          --prefix-cache N caps the cross-request prefix cache at N prefilled\n\
          contexts (default 16; 0 disables); --prefix-cache-bytes B additionally\n\
          caps resident K_c/V_c storage (0 = unlimited). Warm prompts skip\n\
-         prefill + upload. --threads N sets the native kernel fan-out\n\
-         (default: all cores; 1 = serial; outputs identical either way)."
+         prefill + upload. --threads N sets the native kernel fan-out — one\n\
+         persistent worker pool shared by prefill/extend/decode (default:\n\
+         all cores, or $BIFURCATED_THREADS; 1 = serial; outputs are\n\
+         bitwise-identical at every setting)."
     );
 }
 

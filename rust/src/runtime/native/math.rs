@@ -9,44 +9,66 @@
 //!   kernels element-for-element. Kept as the test reference; hot paths
 //!   must not call them.
 //! * **blocked kernels** — [`matmul_into`] (`y = x·w`) and
-//!   [`matmul_nt_into`] (`y = x·wᵀ`): register-tiled (4 output rows /
-//!   4×4 micro-tiles) so the streamed operand is read once per row block
-//!   instead of once per row, with the inner loop shaped for LLVM
-//!   auto-vectorization, writing into caller-owned buffers (no
-//!   allocation), and fanning rows out over scoped threads when the
-//!   work is large enough to amortize the spawn.
+//!   [`matmul_nt_into`] (`y = x·wᵀ`): register-tiled micro-kernels
+//!   (`MR×NR` output tiles held entirely in registers in the streaming
+//!   kernel, 4×4 tiles with the shared axis unrolled over contiguous
+//!   `[f32; 4]` chunks in the transposed kernel) whose inner loops are
+//!   branch-free, bounds-check-free, and shaped for LLVM
+//!   autovectorization. They write into caller-owned buffers (no
+//!   allocation) and fan rows out through the backend's persistent
+//!   [`Executor`] — pool dispatch on hot paths, so a kernel call costs an
+//!   atomic handoff, not a thread spawn.
 //!
 //! Determinism contract: every output element is accumulated over the
-//! shared axis in strictly increasing index order, regardless of tiling
-//! or thread count — threads partition output *rows*, never a reduction —
-//! so results are bitwise-identical at `threads = 1` and `threads = N`,
-//! and bitwise-identical to the naive oracle.
+//! shared axis in strictly increasing index order starting from 0.0,
+//! regardless of tiling, dispatcher, or pool size — executors partition
+//! output *rows*, never a reduction — so results are bitwise-identical
+//! at every pool size, under every dispatcher, and vs the naive oracle.
 
-/// Below this many multiply-accumulates a GEMM stays on the calling
-/// thread: a scoped spawn costs tens of microseconds, which small decode
-/// shapes would feel.
-const PAR_MIN_MACS: usize = 1 << 17;
+use super::pool::Executor;
 
 /// Rows of register blocking in both kernels (and columns of the
 /// micro-tile in [`matmul_nt_into`]).
 const MR: usize = 4;
 
+/// Columns per register block in [`matmul_rows`]: each `MR×NR` output
+/// tile is accumulated entirely in registers and stored exactly once.
+const NR: usize = 8;
+
 /// Effective fan-out for a job of `macs` multiply-accumulates over `m`
-/// rows: 1 when the work is too small, never more than one row per
-/// thread.
-pub(crate) fn plan_threads(threads: usize, m: usize, macs: usize) -> usize {
-    if threads <= 1 || macs < PAR_MIN_MACS {
+/// rows on dispatcher `exec`: 1 when the work is below the dispatcher's
+/// amortization threshold ([`Executor::par_min_macs`] — much lower for
+/// the pool than for scoped spawns), never more than one row per thread.
+pub(crate) fn plan_threads(exec: &Executor, m: usize, macs: usize) -> usize {
+    let t = exec.threads();
+    if t <= 1 || macs < exec.par_min_macs() {
         1
     } else {
-        threads.min(m).max(1)
+        t.min(m).max(1)
     }
 }
 
+/// Raw base pointer of a row-partitioned destination, shareable with pool
+/// workers: every part derives its own disjoint whole-row `&mut` range.
+struct RowBase(*mut f32);
+
+// SAFETY: parts index disjoint row ranges (see `par_rows`), and the
+// submitter blocks until every part finishes, keeping the buffer alive.
+unsafe impl Send for RowBase {}
+unsafe impl Sync for RowBase {}
+
 /// Split `dst` into `t` contiguous row chunks and run `f(row0, chunk)` on
-/// each, chunks 1.. on scoped threads and chunk 0 on the calling thread.
-/// Rows are whole `row_len` slices, so writers never alias.
-pub(crate) fn par_rows<F>(dst: &mut [f32], m: usize, row_len: usize, t: usize, f: F)
-where
+/// each through `exec`. Chunk boundaries depend only on `(m, t)` and rows
+/// are whole `row_len` slices, so writers never alias and which thread
+/// runs a chunk cannot change the math.
+pub(crate) fn par_rows<F>(
+    exec: &Executor,
+    dst: &mut [f32],
+    m: usize,
+    row_len: usize,
+    t: usize,
+    f: F,
+) where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(dst.len(), m * row_len);
@@ -55,19 +77,16 @@ where
         return;
     }
     let rows_per = m.div_ceil(t);
-    let (chunk0, mut rest) = dst.split_at_mut(rows_per.min(m) * row_len);
-    std::thread::scope(|s| {
-        let mut row0 = rows_per; // chunk 0 runs on this thread below
-        while row0 < m {
-            let take = rows_per.min(m - row0);
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
-            rest = tail;
-            let fr = &f;
-            let r0 = row0;
-            s.spawn(move || fr(r0, chunk));
-            row0 += take;
-        }
-        f(0, chunk0);
+    let parts = m.div_ceil(rows_per);
+    let base = RowBase(dst.as_mut_ptr());
+    exec.run(parts, &|i| {
+        let row0 = i * rows_per;
+        let take = rows_per.min(m - row0);
+        // SAFETY: part i owns exactly rows row0..row0+take — disjoint
+        // whole-row ranges of `dst`, which outlives `exec.run`.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(row0 * row_len), take * row_len) };
+        f(row0, chunk);
     });
 }
 
@@ -91,10 +110,42 @@ pub fn matmul(x: &[f32], w: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
     y
 }
 
+/// One output row of [`matmul_rows`] below the `MR` row blocking: the
+/// same `NR`-column register tiles, one row at a time.
+fn matmul_row_tail(drow: &mut [f32], xrow: &[f32], w: &[f32], n: usize) {
+    let nb = n - n % NR;
+    let mut j = 0usize;
+    while j < nb {
+        let mut acc = [0.0f32; NR];
+        for (c, &xv) in xrow.iter().enumerate() {
+            let wv: &[f32; NR] = w[c * n + j..c * n + j + NR].try_into().unwrap();
+            for (av, &bv) in acc.iter_mut().zip(wv) {
+                *av += xv * bv;
+            }
+        }
+        drow[j..j + NR].copy_from_slice(&acc);
+        j += NR;
+    }
+    while j < n {
+        let mut s = 0.0f32;
+        for (c, &xv) in xrow.iter().enumerate() {
+            s += xv * w[c * n + j];
+        }
+        drow[j] = s;
+        j += 1;
+    }
+}
+
 /// Serial core of [`matmul_into`] over a row range: `dst` and `x` are the
-/// aligned row slices (`rows * n` and `rows * kk`).
+/// aligned row slices (`rows * n` and `rows * kk`). `MR×NR` output tiles
+/// are accumulated entirely in registers with the shared axis innermost
+/// over contiguous `[f32; NR]` chunks of the streamed operand — the tile
+/// is stored exactly once, and the chunked loads are bounds-check-free
+/// and autovectorize. Each output element still accumulates over the
+/// shared axis in strictly increasing order from 0.0, so the result is
+/// bitwise-identical to the naive oracle.
 fn matmul_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
-    dst.fill(0.0);
+    let nb = n - n % NR;
     let mut xit = x.chunks_exact(MR * kk);
     let mut dit = dst.chunks_exact_mut(MR * n);
     for (xb, db) in (&mut xit).zip(&mut dit) {
@@ -104,16 +155,42 @@ fn matmul_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
         let (d0, dr) = db.split_at_mut(n);
         let (d1, dr) = dr.split_at_mut(n);
         let (d2, d3) = dr.split_at_mut(n);
-        for c in 0..kk {
-            let wrow = &w[c * n..(c + 1) * n];
-            let (a0, a1, a2, a3) = (x0[c], x1[c], x2[c], x3[c]);
-            for j in 0..n {
-                let wv = wrow[j];
-                d0[j] += a0 * wv;
-                d1[j] += a1 * wv;
-                d2[j] += a2 * wv;
-                d3[j] += a3 * wv;
+        let mut j = 0usize;
+        while j < nb {
+            let mut a0 = [0.0f32; NR];
+            let mut a1 = [0.0f32; NR];
+            let mut a2 = [0.0f32; NR];
+            let mut a3 = [0.0f32; NR];
+            for c in 0..kk {
+                let wv: &[f32; NR] = w[c * n + j..c * n + j + NR].try_into().unwrap();
+                let (b0, b1, b2, b3) = (x0[c], x1[c], x2[c], x3[c]);
+                for t in 0..NR {
+                    a0[t] += b0 * wv[t];
+                    a1[t] += b1 * wv[t];
+                    a2[t] += b2 * wv[t];
+                    a3[t] += b3 * wv[t];
+                }
             }
+            d0[j..j + NR].copy_from_slice(&a0);
+            d1[j..j + NR].copy_from_slice(&a1);
+            d2[j..j + NR].copy_from_slice(&a2);
+            d3[j..j + NR].copy_from_slice(&a3);
+            j += NR;
+        }
+        while j < n {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for c in 0..kk {
+                let wv = w[c * n + j];
+                s0 += x0[c] * wv;
+                s1 += x1[c] * wv;
+                s2 += x2[c] * wv;
+                s3 += x3[c] * wv;
+            }
+            d0[j] = s0;
+            d1[j] = s1;
+            d2[j] = s2;
+            d3[j] = s3;
+            j += 1;
         }
     }
     for (xrow, drow) in xit
@@ -121,19 +198,14 @@ fn matmul_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
         .chunks_exact(kk)
         .zip(dit.into_remainder().chunks_exact_mut(n))
     {
-        for (c, &xv) in xrow.iter().enumerate() {
-            let wrow = &w[c * n..(c + 1) * n];
-            for (dv, &wv) in drow.iter_mut().zip(wrow) {
-                *dv += xv * wv;
-            }
-        }
+        matmul_row_tail(drow, xrow, w, n);
     }
 }
 
 /// `dst[m, n] = x[m, kk] @ w[kk, n]` (row-major) into a caller-owned
-/// buffer: register-tiled over `MR` output rows (the `w` stream is read
-/// once per row block, the `n` loop vectorizes) and row-parallel over
-/// `threads` scoped threads when large enough.
+/// buffer: register-tiled (`MR×NR` tiles, see [`matmul_rows`]) and
+/// row-parallel through the backend's persistent [`Executor`] when the
+/// work clears the dispatcher's amortization threshold.
 pub fn matmul_into(
     dst: &mut [f32],
     x: &[f32],
@@ -141,20 +213,25 @@ pub fn matmul_into(
     m: usize,
     kk: usize,
     n: usize,
-    threads: usize,
+    exec: &Executor,
 ) {
     assert_eq!(dst.len(), m * n, "matmul_into dst shape");
     assert_eq!(x.len(), m * kk, "matmul_into lhs shape");
     assert_eq!(w.len(), kk * n, "matmul_into rhs shape");
-    let t = plan_threads(threads, m, m * kk * n);
-    par_rows(dst, m, n, t, |row0, chunk| {
+    let t = plan_threads(exec, m, m * kk * n);
+    par_rows(exec, dst, m, n, t, |row0, chunk| {
         let rows = chunk.len() / n;
         matmul_rows(chunk, &x[row0 * kk..(row0 + rows) * kk], w, kk, n);
     });
 }
 
-/// Serial core of [`matmul_nt_into`] over a row range.
+/// Serial core of [`matmul_nt_into`] over a row range. 4×4 micro-tiles
+/// (16 independent accumulator chains — SLP-vectorizable) with the
+/// shared axis unrolled over contiguous `[f32; MR]` chunks of both
+/// streams; every chain still adds in strictly increasing shared-axis
+/// order, so results match the naive `dot` bitwise.
 fn matmul_nt_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
+    let kb = kk - kk % MR;
     let mut xit = x.chunks_exact(MR * kk);
     let mut dit = dst.chunks_exact_mut(MR * n);
     for (xb, db) in (&mut xit).zip(&mut dit) {
@@ -171,7 +248,39 @@ fn matmul_nt_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
             let w2 = &w[(j + 2) * kk..(j + 3) * kk];
             let w3 = &w[(j + 3) * kk..(j + 4) * kk];
             let mut acc = [0.0f32; MR * MR];
-            for c in 0..kk {
+            let mut c = 0usize;
+            while c < kb {
+                let xa0: &[f32; MR] = x0[c..c + MR].try_into().unwrap();
+                let xa1: &[f32; MR] = x1[c..c + MR].try_into().unwrap();
+                let xa2: &[f32; MR] = x2[c..c + MR].try_into().unwrap();
+                let xa3: &[f32; MR] = x3[c..c + MR].try_into().unwrap();
+                let wb0: &[f32; MR] = w0[c..c + MR].try_into().unwrap();
+                let wb1: &[f32; MR] = w1[c..c + MR].try_into().unwrap();
+                let wb2: &[f32; MR] = w2[c..c + MR].try_into().unwrap();
+                let wb3: &[f32; MR] = w3[c..c + MR].try_into().unwrap();
+                for u in 0..MR {
+                    let (b0, b1, b2, b3) = (wb0[u], wb1[u], wb2[u], wb3[u]);
+                    let (a0, a1, a2, a3) = (xa0[u], xa1[u], xa2[u], xa3[u]);
+                    acc[0] += a0 * b0;
+                    acc[1] += a0 * b1;
+                    acc[2] += a0 * b2;
+                    acc[3] += a0 * b3;
+                    acc[4] += a1 * b0;
+                    acc[5] += a1 * b1;
+                    acc[6] += a1 * b2;
+                    acc[7] += a1 * b3;
+                    acc[8] += a2 * b0;
+                    acc[9] += a2 * b1;
+                    acc[10] += a2 * b2;
+                    acc[11] += a2 * b3;
+                    acc[12] += a3 * b0;
+                    acc[13] += a3 * b1;
+                    acc[14] += a3 * b2;
+                    acc[15] += a3 * b3;
+                }
+                c += MR;
+            }
+            while c < kk {
                 let (b0, b1, b2, b3) = (w0[c], w1[c], w2[c], w3[c]);
                 let (a0, a1, a2, a3) = (x0[c], x1[c], x2[c], x3[c]);
                 acc[0] += a0 * b0;
@@ -190,6 +299,7 @@ fn matmul_nt_rows(dst: &mut [f32], x: &[f32], w: &[f32], kk: usize, n: usize) {
                 acc[13] += a3 * b1;
                 acc[14] += a3 * b2;
                 acc[15] += a3 * b3;
+                c += 1;
             }
             d0[j..j + MR].copy_from_slice(&acc[0..MR]);
             d1[j..j + MR].copy_from_slice(&acc[MR..2 * MR]);
@@ -241,13 +351,13 @@ pub fn matmul_nt_into(
     m: usize,
     kk: usize,
     n: usize,
-    threads: usize,
+    exec: &Executor,
 ) {
     assert_eq!(dst.len(), m * n, "matmul_nt_into dst shape");
     assert_eq!(x.len(), m * kk, "matmul_nt_into lhs shape");
     assert_eq!(w.len(), n * kk, "matmul_nt_into rhs shape");
-    let t = plan_threads(threads, m, m * kk * n);
-    par_rows(dst, m, n, t, |row0, chunk| {
+    let t = plan_threads(exec, m, m * kk * n);
+    par_rows(exec, dst, m, n, t, |row0, chunk| {
         let rows = chunk.len() / n;
         matmul_nt_rows(chunk, &x[row0 * kk..(row0 + rows) * kk], w, kk, n);
     });
@@ -323,6 +433,8 @@ mod tests {
         (0..n).map(|_| rng.normal() as f32).collect()
     }
 
+    use crate::runtime::native::pool::test_execs;
+
     #[test]
     fn matmul_small_known_values() {
         // [2x3] @ [3x2]
@@ -342,24 +454,26 @@ mod tests {
     #[test]
     fn blocked_matches_naive_bitwise_across_shapes() {
         // The determinism contract: same accumulation order means the
-        // blocked kernel equals the naive oracle *exactly*, remainder
-        // rows and all thread counts included.
+        // blocked kernel equals the naive oracle *exactly* — remainder
+        // rows/columns, every pool size, and every dispatcher included.
         let mut rng = Pcg::new(42);
+        let execs = test_execs();
         for &(m, kk, n) in &[
             (1usize, 1usize, 1usize),
             (3, 5, 2),
             (4, 8, 16),
             (5, 7, 9),
+            (7, 3, 21),
             (13, 64, 33),
             (16, 64, 256),
         ] {
             let x = randv(&mut rng, m * kk);
             let w = randv(&mut rng, kk * n);
             let oracle = matmul(&x, &w, m, kk, n);
-            for threads in [1usize, 2, 8] {
+            for (ei, exec) in execs.iter().enumerate() {
                 let mut y = vec![7.0f32; m * n]; // poisoned: kernel must overwrite
-                matmul_into(&mut y, &x, &w, m, kk, n, threads);
-                assert_eq!(y, oracle, "m={m} kk={kk} n={n} threads={threads}");
+                matmul_into(&mut y, &x, &w, m, kk, n, exec);
+                assert_eq!(y, oracle, "m={m} kk={kk} n={n} exec={ei}");
             }
         }
     }
@@ -367,11 +481,13 @@ mod tests {
     #[test]
     fn nt_matches_naive_bitwise_across_shapes() {
         let mut rng = Pcg::new(43);
+        let execs = test_execs();
         for &(m, kk, n) in &[
             (1usize, 1usize, 1usize),
             (2, 8, 3),
             (4, 8, 4),
             (5, 8, 6),
+            (5, 7, 6), // kk % MR != 0: exercises the unroll tail
             (9, 16, 13),
             (32, 8, 96),
         ] {
@@ -384,25 +500,47 @@ mod tests {
                     oracle[i * n + j] = dot(&x[i * kk..(i + 1) * kk], &w[j * kk..(j + 1) * kk]);
                 }
             }
-            for threads in [1usize, 2, 8] {
+            for (ei, exec) in execs.iter().enumerate() {
                 let mut y = vec![7.0f32; m * n];
-                matmul_nt_into(&mut y, &x, &w, m, kk, n, threads);
-                assert_eq!(y, oracle, "m={m} kk={kk} n={n} threads={threads}");
+                matmul_nt_into(&mut y, &x, &w, m, kk, n, exec);
+                assert_eq!(y, oracle, "m={m} kk={kk} n={n} exec={ei}");
             }
         }
     }
 
     #[test]
     fn par_rows_threshold_and_partitioning() {
-        // Force the parallel path with a shape above PAR_MIN_MACS and an
-        // uneven row split; equality with the oracle proves partitioning.
+        // Force the parallel path with a shape above both dispatchers'
+        // thresholds and an uneven row split; equality with the oracle
+        // proves partitioning.
         let mut rng = Pcg::new(44);
-        let (m, kk, n) = (37usize, 64usize, 80usize); // 189k MACs > threshold
+        let (m, kk, n) = (37usize, 64usize, 80usize); // 189k MACs > both thresholds
+        let x = randv(&mut rng, m * kk);
+        let w = randv(&mut rng, kk * n);
+        let oracle = matmul(&x, &w, m, kk, n);
+        for exec in [Executor::with_threads(3), Executor::ScopedReference(3)] {
+            let mut y = vec![0.0f32; m * n];
+            matmul_into(&mut y, &x, &w, m, kk, n, &exec);
+            assert_eq!(y, oracle);
+        }
+    }
+
+    #[test]
+    fn pool_threshold_is_lower_than_scoped() {
+        // The medium decode GEMM shape (a b=4 score sweep): pool dispatch
+        // fans it out, the scoped reference keeps it serial — and the
+        // outputs are bitwise-identical either way.
+        let pool = Executor::with_threads(4);
+        let scoped = Executor::ScopedReference(4);
+        let (m, kk, n) = (32usize, 8usize, 256usize); // 64k MACs
+        assert!(plan_threads(&pool, m, m * kk * n) > 1);
+        assert_eq!(plan_threads(&scoped, m, m * kk * n), 1);
+        let mut rng = Pcg::new(46);
         let x = randv(&mut rng, m * kk);
         let w = randv(&mut rng, kk * n);
         let oracle = matmul(&x, &w, m, kk, n);
         let mut y = vec![0.0f32; m * n];
-        matmul_into(&mut y, &x, &w, m, kk, n, 3);
+        matmul_into(&mut y, &x, &w, m, kk, n, &pool);
         assert_eq!(y, oracle);
     }
 

@@ -9,14 +9,21 @@
 //! test of Eq. 3–4 and not a tautology.
 //!
 //! Hot paths run on blocked, multithreaded, allocation-free kernels
-//! ([`math`], [`model`]); the original scalar implementations survive as
-//! the [`model::reference`] oracle, reachable through
-//! [`NativeBackend::prefill_reference`] / [`NativeBackend::decode_reference`].
-//! Thread count comes from [`NativeBackend::with_threads`] (default: all
-//! cores) and never changes results — only output rows are partitioned.
+//! ([`math`], [`model`]) dispatched through a **persistent worker pool**
+//! ([`pool`]): [`NativeBackend::with_threads`] builds one pool that
+//! prefill, extend, and decode all share, so no steady-state kernel call
+//! ever pays a thread spawn (PR 3's scoped-spawn dispatch survives only
+//! as the measured ablation control, [`scoped_reference`]). The original
+//! scalar implementations survive as the [`model::reference`] oracle,
+//! reachable through [`NativeBackend::prefill_reference`] /
+//! [`NativeBackend::decode_reference`]. Thread count (default: all
+//! cores, or `BIFURCATED_THREADS` when set) never changes results — only
+//! output rows are partitioned.
 
 pub mod math;
 pub mod model;
+pub mod pool;
+pub(crate) mod scoped_reference;
 
 use std::cell::{Cell, RefCell};
 
@@ -28,9 +35,17 @@ use super::models::{DecodeMode, DecodeOut, PrefillOut};
 use super::tensor::HostTensor;
 
 use model::{DecodeScratch, NativeWeights};
+pub use pool::{Executor, WorkerPool};
 
-/// Default kernel fan-out: one thread per available core.
+/// Default kernel fan-out: the `BIFURCATED_THREADS` environment variable
+/// when set (how CI exercises the pool paths at a pinned fan-out),
+/// otherwise one thread per available core.
 pub fn default_threads() -> usize {
+    if let Some(n) =
+        std::env::var("BIFURCATED_THREADS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -65,9 +80,11 @@ pub struct NativeBackend {
     buckets: Vec<usize>,
     weights: NativeWeights,
     upload_bytes: Cell<usize>,
-    /// Kernel fan-out (1 = fully serial). Outputs are bitwise-identical
-    /// at every thread count; see `model` for the determinism contract.
-    threads: usize,
+    /// Kernel dispatcher — ONE persistent pool shared by prefill, extend,
+    /// and decode (or serial at `threads = 1`). Outputs are
+    /// bitwise-identical at every pool size and under every dispatcher;
+    /// see `model` for the determinism contract.
+    exec: Executor,
     /// Reusable decode buffers: steady-state decode allocates nothing
     /// beyond its returned logits once these reach their high-water size.
     scratch: RefCell<DecodeScratch>,
@@ -143,22 +160,34 @@ impl NativeBackend {
             buckets: NATIVE_BUCKETS.to_vec(),
             weights,
             upload_bytes: Cell::new(0),
-            threads: default_threads(),
+            exec: Executor::with_threads(default_threads()),
             scratch: RefCell::new(DecodeScratch::new()),
         })
     }
 
     /// Set the kernel thread count (clamped to >= 1; 1 restores fully
-    /// serial execution). Completions are bitwise-identical at every
-    /// setting — threads only partition independent output rows.
+    /// serial execution). Builds ONE persistent [`WorkerPool`] shared by
+    /// prefill, extend, and decode — dispatching a kernel costs an atomic
+    /// handoff, never a spawn. Completions are bitwise-identical at every
+    /// setting — executors only partition independent output rows.
     pub fn with_threads(mut self, threads: usize) -> NativeBackend {
-        self.threads = threads.max(1);
+        self.exec = Executor::with_threads(threads.max(1));
+        self
+    }
+
+    /// Ablation control ONLY: replace the persistent pool with PR 3's
+    /// per-kernel-call scoped-spawn dispatch at the same fan-out (see
+    /// [`scoped_reference`]). Results are bitwise-identical to pool
+    /// dispatch; `benches/decode_throughput.rs` measures the throughput
+    /// delta between the two. Not a hot path.
+    pub fn with_reference_dispatch(mut self) -> NativeBackend {
+        self.exec = Executor::ScopedReference(self.exec.threads());
         self
     }
 
     /// The kernel fan-out this backend runs with.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.exec.threads()
     }
 
     /// Test oracle: full prefill through the original scalar kernels
@@ -258,7 +287,7 @@ impl Backend for NativeBackend {
         let len = tokens.len();
         let mut padded = tokens.to_vec();
         padded.resize(c.m_c_max, 0);
-        let (logits, kc, vc) = model::prefill_forward(c, &self.weights, &padded, len, self.threads);
+        let (logits, kc, vc) = model::prefill_forward(c, &self.weights, &padded, len, &self.exec);
         Ok(PrefillOut {
             logits,
             kc: HostTensor::from_f32(kc, &[c.l, c.g, c.m_c_max, c.k]),
@@ -299,7 +328,7 @@ impl Backend for NativeBackend {
             cached_len,
             &padded,
             len,
-            self.threads,
+            &self.exec,
         );
         Ok(PrefillOut {
             logits,
@@ -383,7 +412,7 @@ impl Backend for NativeBackend {
             per_row,
             kd2.f32s_mut(),
             vd2.f32s_mut(),
-            self.threads,
+            &self.exec,
             &mut scratch,
         );
         Ok(DecodeOut {
@@ -470,6 +499,30 @@ mod tests {
         assert_eq!(o1.logits, o8.logits);
         assert_eq!(o1.kd, o8.kd);
         assert_eq!(o1.vd, o8.vd);
+    }
+
+    #[test]
+    fn reference_dispatch_matches_pool_dispatch_bitwise() {
+        // The spawn-vs-pool ablation is a pure dispatch change: the same
+        // row partitions run, only who executes them differs, so outputs
+        // must be bitwise-identical (what makes the bench a fair A/B).
+        let pool = NativeBackend::preset("pico-mg", 5).unwrap().with_threads(4);
+        let scoped =
+            NativeBackend::preset("pico-mg", 5).unwrap().with_threads(4).with_reference_dispatch();
+        assert_eq!((pool.threads(), scoped.threads()), (4, 4));
+        let prompt = vec![1, 3, 12, 4, 13];
+        let pp = pool.prefill(&prompt).unwrap();
+        let ps = scoped.prefill(&prompt).unwrap();
+        assert_eq!(pp.logits, ps.logits);
+        assert_eq!(pp.kc, ps.kc);
+        let cp = pool.upload_context(&pp.kc, &pp.vc, prompt.len()).unwrap();
+        let cs = scoped.upload_context(&ps.kc, &ps.vc, prompt.len()).unwrap();
+        let (kd, vd) = pool.zero_decode_cache(4);
+        let op = pool.decode(DecodeMode::Bifurcated, 4, &[5, 6, 7, 8], 0, &cp, &kd, &vd).unwrap();
+        let os =
+            scoped.decode(DecodeMode::Bifurcated, 4, &[5, 6, 7, 8], 0, &cs, &kd, &vd).unwrap();
+        assert_eq!(op.logits, os.logits);
+        assert_eq!(op.kd, os.kd);
     }
 
     #[test]

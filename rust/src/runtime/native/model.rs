@@ -12,8 +12,11 @@
 //! The hot paths run on the blocked, row-parallel kernels in
 //! [`super::math`] (`matmul_into` / `matmul_nt_into`) with a reusable
 //! [`DecodeScratch`] arena, so a steady-state decode step performs no
-//! heap allocation beyond its returned logits. The decode step implements
-//! both attention formulations under test:
+//! heap allocation beyond its returned logits. Row fan-out goes through
+//! the backend's persistent [`Executor`] — one worker pool shared by
+//! prefill, extend, and decode, so no kernel call on a steady-state path
+//! ever pays a thread spawn. The decode step implements both attention
+//! formulations under test:
 //!
 //! * [`DecodeMode::Bifurcated`] — paper Eq. 3–4, restructured as a
 //!   **single sweep** over the shared context: per (layer, group) one
@@ -32,9 +35,9 @@
 //! [`reference`] module keeps the original scalar implementations as the
 //! test oracle for the optimized kernels.
 //!
-//! Determinism: threads only ever partition independent output rows
+//! Determinism: executors only ever partition independent output rows
 //! (each row's reduction order is fixed), so all outputs are
-//! bitwise-identical across thread counts — `tests` and
+//! bitwise-identical across pool sizes and dispatchers — `tests` and
 //! `tests/threaded_determinism.rs` pin this.
 
 use crate::runtime::manifest::ModelCfg;
@@ -44,6 +47,7 @@ use crate::util::prng::Pcg;
 use super::math::{
     add_bias, gelu_inplace, layer_norm_into, matmul_into, matmul_nt_into, par_rows, plan_threads,
 };
+use super::pool::Executor;
 
 pub const NEG_INF: f32 = -1e30;
 
@@ -199,9 +203,9 @@ impl PrefillBufs {
 /// `pos0..pos0+rows` of layer `li`: `q` holds the query rows
 /// (`[rows, h·k]`), `kc_all`/`vc_all` the full per-layer caches in the
 /// shared `[l, g, s_max, k]` layout (already containing this chunk's
-/// K/V), and `o` receives `[rows, h·k]`. Rows fan out across threads;
+/// K/V), and `o` receives `[rows, h·k]`. Rows fan out across the pool;
 /// each row's math is identical to the serial path, so outputs are
-/// bitwise-stable across thread counts.
+/// bitwise-stable across pool sizes.
 #[allow(clippy::too_many_arguments)]
 fn prefill_attn_rows(
     cfg: &ModelCfg,
@@ -213,15 +217,15 @@ fn prefill_attn_rows(
     kc_all: &[f32],
     vc_all: &[f32],
     o: &mut [f32],
-    threads: usize,
+    exec: &Executor,
 ) {
     let (kk, g, h, p) = (cfg.k, cfg.g, cfg.h, cfg.p);
     let s_max = cfg.m_c_max;
     let scale = 1.0 / (kk as f32).sqrt();
     assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
     // Per-row cost is O(h·k·j_end); size the fan-out by the worst row.
-    let t = plan_threads(threads, rows, rows * h * kk * s_max);
-    par_rows(o, rows, h * kk, t, |r0, chunk| {
+    let t = plan_threads(exec, rows, rows * h * kk * s_max);
+    par_rows(exec, o, rows, h * kk, t, |r0, chunk| {
         let mut sc: Vec<f32> = Vec::new();
         let mut acc: Vec<f32> = Vec::new();
         for (rr, orow) in chunk.chunks_exact_mut(h * kk).enumerate() {
@@ -236,7 +240,17 @@ fn prefill_attn_rows(
                 let base = (li * g + gi) * s_max * kk;
                 let qg = &qrow[gi * p * kk..(gi + 1) * p * kk];
                 size_for_overwrite(&mut sc, p * j_end);
-                matmul_nt_into(&mut sc, qg, &kc_all[base..base + j_end * kk], p, kk, j_end, 1);
+                // Serial inner kernels: this closure is already one part
+                // of a pool job, and parts must never re-enter the pool.
+                matmul_nt_into(
+                    &mut sc,
+                    qg,
+                    &kc_all[base..base + j_end * kk],
+                    p,
+                    kk,
+                    j_end,
+                    &Executor::Serial,
+                );
                 for v in sc.iter_mut() {
                     *v *= scale;
                 }
@@ -256,7 +270,15 @@ fn prefill_attn_rows(
                     denoms[pp] = dn;
                 }
                 size_for_overwrite(&mut acc, p * kk);
-                matmul_into(&mut acc, &sc, &vc_all[base..base + j_end * kk], p, j_end, kk, 1);
+                matmul_into(
+                    &mut acc,
+                    &sc,
+                    &vc_all[base..base + j_end * kk],
+                    p,
+                    j_end,
+                    kk,
+                    &Executor::Serial,
+                );
                 for pp in 0..p {
                     let dn = denoms[pp];
                     let arow = &acc[pp * kk..(pp + 1) * kk];
@@ -287,16 +309,16 @@ fn prefill_layer(
     kc_all: &mut [f32],
     vc_all: &mut [f32],
     bufs: &mut PrefillBufs,
-    threads: usize,
+    exec: &Executor,
 ) {
     let (d, kk, g, h) = (cfg.d, cfg.k, cfg.g, cfg.h);
     let s_max = cfg.m_c_max;
     let ff = cfg.ffn_mult * d;
 
     layer_norm_into(&mut bufs.h1, x, &lw.ln1_s, &lw.ln1_b, d);
-    matmul_into(&mut bufs.q, &bufs.h1, &lw.wq, rows, d, h * kk, threads);
-    matmul_into(&mut bufs.kt, &bufs.h1, &lw.wk, rows, d, g * kk, threads);
-    matmul_into(&mut bufs.vt, &bufs.h1, &lw.wv, rows, d, g * kk, threads);
+    matmul_into(&mut bufs.q, &bufs.h1, &lw.wq, rows, d, h * kk, exec);
+    matmul_into(&mut bufs.kt, &bufs.h1, &lw.wk, rows, d, g * kk, exec);
+    matmul_into(&mut bufs.vt, &bufs.h1, &lw.wv, rows, d, g * kk, exec);
 
     // Stash this chunk's K/V into the shared [g, S, k] cache layout before
     // any attention row runs — rows only ever read positions <= their own,
@@ -311,16 +333,16 @@ fn prefill_layer(
         }
     }
 
-    prefill_attn_rows(cfg, li, len, pos0, rows, &bufs.q, kc_all, vc_all, &mut bufs.o, threads);
+    prefill_attn_rows(cfg, li, len, pos0, rows, &bufs.q, kc_all, vc_all, &mut bufs.o, exec);
 
-    matmul_into(&mut bufs.proj, &bufs.o, &lw.wo, rows, h * kk, d, threads);
+    matmul_into(&mut bufs.proj, &bufs.o, &lw.wo, rows, h * kk, d, exec);
     add_assign(x, &bufs.proj);
 
     layer_norm_into(&mut bufs.h1, x, &lw.ln2_s, &lw.ln2_b, d);
-    matmul_into(&mut bufs.ff, &bufs.h1, &lw.w1, rows, d, ff, threads);
+    matmul_into(&mut bufs.ff, &bufs.h1, &lw.w1, rows, d, ff, exec);
     add_bias(&mut bufs.ff, &lw.b1);
     gelu_inplace(&mut bufs.ff);
-    matmul_into(&mut bufs.proj, &bufs.ff, &lw.w2, rows, ff, d, threads);
+    matmul_into(&mut bufs.proj, &bufs.ff, &lw.w2, rows, ff, d, exec);
     add_bias(&mut bufs.proj, &lw.b2);
     add_assign(x, &bufs.proj);
 }
@@ -334,7 +356,7 @@ pub fn prefill_forward(
     w: &NativeWeights,
     tokens_padded: &[i32],
     len: usize,
-    threads: usize,
+    exec: &Executor,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let (d, kk, g) = (cfg.d, cfg.k, cfg.g);
     let s_max = cfg.m_c_max;
@@ -352,14 +374,14 @@ pub fn prefill_forward(
 
     for (li, lw) in w.layers.iter().enumerate() {
         prefill_layer(
-            cfg, lw, li, len, 0, s_max, &mut x, &mut kc_all, &mut vc_all, &mut bufs, threads,
+            cfg, lw, li, len, 0, s_max, &mut x, &mut kc_all, &mut vc_all, &mut bufs, exec,
         );
     }
 
     layer_norm_into(&mut bufs.h1, &x, &w.lnf_s, &w.lnf_b, d);
     let last = &bufs.h1[(len - 1) * d..len * d];
     let mut logits = vec![0.0f32; cfg.vocab];
-    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, 1);
+    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, &Executor::Serial);
     (logits, kc_all, vc_all)
 }
 
@@ -382,7 +404,7 @@ pub fn prefill_extend_forward(
     cached_len: usize,
     tokens_padded: &[i32],
     len: usize,
-    threads: usize,
+    exec: &Executor,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let (d, kk, g) = (cfg.d, cfg.k, cfg.g);
     let s_max = cfg.m_c_max;
@@ -403,8 +425,7 @@ pub fn prefill_extend_forward(
 
     for (li, lw) in w.layers.iter().enumerate() {
         prefill_layer(
-            cfg, lw, li, len, cached_len, rows, &mut x, &mut kc_all, &mut vc_all, &mut bufs,
-            threads,
+            cfg, lw, li, len, cached_len, rows, &mut x, &mut kc_all, &mut vc_all, &mut bufs, exec,
         );
     }
 
@@ -412,7 +433,7 @@ pub fn prefill_extend_forward(
     let last_row = len - 1 - cached_len;
     let last = &bufs.h1[last_row * d..(last_row + 1) * d];
     let mut logits = vec![0.0f32; cfg.vocab];
-    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, 1);
+    matmul_into(&mut logits, last, &w.head, 1, d, cfg.vocab, &Executor::Serial);
     (logits, kc_all, vc_all)
 }
 
@@ -460,7 +481,6 @@ struct AttnGeom {
     md: usize,
     d_pos: usize,
     scale: f32,
-    threads: usize,
 }
 
 /// Paper Eq. 3–4 as a single sweep: per (layer, group) the context scores
@@ -485,8 +505,9 @@ fn attend_bifurcated_batched(
     acc_c: &mut Vec<f32>,
     acc_d: &mut Vec<f32>,
     denom: &mut Vec<f32>,
+    exec: &Executor,
 ) {
-    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale, threads } = *geom;
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale } = *geom;
     let bp = b * p;
     let md1 = d_pos + 1;
     let hkk = g * p * kk; // = h·k, the row stride of q and o
@@ -501,7 +522,7 @@ fn attend_bifurcated_batched(
         }
         // ⟨Q, K_c⟩: one GEMM for the whole batch — the single sweep.
         size_for_overwrite(sc, bp * m_c_len);
-        matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], bp, kk, m_c_len, threads);
+        matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], bp, kk, m_c_len, exec);
         for v in sc.iter_mut() {
             *v *= scale;
         }
@@ -516,7 +537,7 @@ fn attend_bifurcated_batched(
                 p,
                 kk,
                 md1,
-                1,
+                &Executor::Serial,
             );
         }
         for v in sd.iter_mut() {
@@ -554,7 +575,7 @@ fn attend_bifurcated_batched(
         // Numerators: context values again one batched GEMM, decode
         // values per sampler.
         size_for_overwrite(acc_c, bp * kk);
-        matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], bp, m_c_len, kk, threads);
+        matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], bp, m_c_len, kk, exec);
         size_for_overwrite(acc_d, bp * kk);
         for bi in 0..b {
             let dbase = ((li * b + bi) * g + gi) * md * kk;
@@ -565,7 +586,7 @@ fn attend_bifurcated_batched(
                 p,
                 md1,
                 kk,
-                1,
+                &Executor::Serial,
             );
         }
         // Recombine and scatter into the o rows.
@@ -603,8 +624,9 @@ fn attend_fused_blocked(
     sd: &mut Vec<f32>,
     acc_c: &mut Vec<f32>,
     acc_d: &mut Vec<f32>,
+    exec: &Executor,
 ) {
-    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale, threads } = *geom;
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale } = *geom;
     let md1 = d_pos + 1;
     let hkk = g * p * kk;
     assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
@@ -614,9 +636,9 @@ fn attend_fused_blocked(
             let dbase = ((li * b + bi) * g + gi) * md * kk;
             let qg = &q[bi * hkk + gi * p * kk..bi * hkk + (gi + 1) * p * kk];
             size_for_overwrite(sc, p * m_c_len);
-            matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], p, kk, m_c_len, threads);
+            matmul_nt_into(sc, qg, &kc[cbase..cbase + m_c_len * kk], p, kk, m_c_len, exec);
             size_for_overwrite(sd, p * md1);
-            matmul_nt_into(sd, qg, &kd[dbase..dbase + md1 * kk], p, kk, md1, 1);
+            matmul_nt_into(sd, qg, &kd[dbase..dbase + md1 * kk], p, kk, md1, &Executor::Serial);
             for v in sc.iter_mut() {
                 *v *= scale;
             }
@@ -651,9 +673,9 @@ fn attend_fused_blocked(
                 denoms[pp] = dn;
             }
             size_for_overwrite(acc_c, p * kk);
-            matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], p, m_c_len, kk, threads);
+            matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], p, m_c_len, kk, exec);
             size_for_overwrite(acc_d, p * kk);
-            matmul_into(acc_d, sd, &vd[dbase..dbase + md1 * kk], p, md1, kk, 1);
+            matmul_into(acc_d, sd, &vd[dbase..dbase + md1 * kk], p, md1, kk, &Executor::Serial);
             for pp in 0..p {
                 let dn = denoms[pp];
                 let dst =
@@ -692,7 +714,7 @@ pub fn decode_forward(
     ctx_per_row: bool,
     kd: &mut [f32],
     vd: &mut [f32],
-    threads: usize,
+    exec: &Executor,
     scr: &mut DecodeScratch,
 ) -> Vec<f32> {
     let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
@@ -716,18 +738,8 @@ pub fn decode_forward(
         mode == DecodeMode::Fused,
         "context layout must match the decode mode (shared for bifurcated, replicated for fused)"
     );
-    let geom = AttnGeom {
-        b,
-        g,
-        p,
-        kk,
-        mc,
-        m_c_len,
-        md,
-        d_pos,
-        scale: 1.0 / (kk as f32).sqrt(),
-        threads,
-    };
+    let geom =
+        AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale: 1.0 / (kk as f32).sqrt() };
 
     size_for_overwrite(&mut scr.x, b * d);
     for bi in 0..b {
@@ -743,9 +755,9 @@ pub fn decode_forward(
 
     for (li, lw) in w.layers.iter().enumerate() {
         layer_norm_into(&mut scr.h1, &scr.x, &lw.ln1_s, &lw.ln1_b, d);
-        matmul_into(&mut scr.q, &scr.h1, &lw.wq, b, d, h * kk, threads);
-        matmul_into(&mut scr.knew, &scr.h1, &lw.wk, b, d, g * kk, threads);
-        matmul_into(&mut scr.vnew, &scr.h1, &lw.wv, b, d, g * kk, threads);
+        matmul_into(&mut scr.q, &scr.h1, &lw.wq, b, d, h * kk, exec);
+        matmul_into(&mut scr.knew, &scr.h1, &lw.wk, b, d, g * kk, exec);
+        matmul_into(&mut scr.vnew, &scr.h1, &lw.wv, b, d, g * kk, exec);
 
         // Functional cache update: write this step's K/V at d_pos.
         for bi in 0..b {
@@ -773,6 +785,7 @@ pub fn decode_forward(
                 &mut scr.acc_c,
                 &mut scr.acc_d,
                 &mut scr.denom,
+                exec,
             ),
             DecodeMode::Fused => attend_fused_blocked(
                 &geom,
@@ -787,24 +800,25 @@ pub fn decode_forward(
                 &mut scr.sd,
                 &mut scr.acc_c,
                 &mut scr.acc_d,
+                exec,
             ),
         }
 
-        matmul_into(&mut scr.proj, &scr.o, &lw.wo, b, h * kk, d, threads);
+        matmul_into(&mut scr.proj, &scr.o, &lw.wo, b, h * kk, d, exec);
         add_assign(&mut scr.x, &scr.proj);
 
         layer_norm_into(&mut scr.h1, &scr.x, &lw.ln2_s, &lw.ln2_b, d);
-        matmul_into(&mut scr.ff, &scr.h1, &lw.w1, b, d, ff, threads);
+        matmul_into(&mut scr.ff, &scr.h1, &lw.w1, b, d, ff, exec);
         add_bias(&mut scr.ff, &lw.b1);
         gelu_inplace(&mut scr.ff);
-        matmul_into(&mut scr.proj, &scr.ff, &lw.w2, b, ff, d, threads);
+        matmul_into(&mut scr.proj, &scr.ff, &lw.w2, b, ff, d, exec);
         add_bias(&mut scr.proj, &lw.b2);
         add_assign(&mut scr.x, &scr.proj);
     }
 
     layer_norm_into(&mut scr.h1, &scr.x, &w.lnf_s, &w.lnf_b, d);
     let mut logits = vec![0.0f32; b * cfg.vocab];
-    matmul_into(&mut logits, &scr.h1, &w.head, b, d, cfg.vocab, threads);
+    matmul_into(&mut logits, &scr.h1, &w.head, b, d, cfg.vocab, exec);
     logits
 }
 
@@ -1222,13 +1236,15 @@ mod tests {
         assert_eq!(NativeWeights::param_count(&cfg), expect);
     }
 
+    use crate::runtime::native::pool::test_execs;
+
     #[test]
     fn prefill_shapes_and_finiteness() {
         let cfg = tiny_cfg();
         let w = NativeWeights::init(&cfg, 1);
         let mut toks = vec![1, 2, 12, 3, 13];
         toks.resize(cfg.m_c_max, 0);
-        let (logits, kc, vc) = prefill_forward(&cfg, &w, &toks, 5, 1);
+        let (logits, kc, vc) = prefill_forward(&cfg, &w, &toks, 5, &Executor::Serial);
         assert_eq!(logits.len(), cfg.vocab);
         assert_eq!(kc.len(), cfg.l * cfg.g * cfg.m_c_max * cfg.k);
         assert_eq!(vc.len(), kc.len());
@@ -1247,8 +1263,8 @@ mod tests {
         a.resize(cfg.m_c_max, 0);
         let mut b = vec![1, 5, 12, 6];
         b.resize(cfg.m_c_max, 9);
-        let (la, kca, _) = prefill_forward(&cfg, &w, &a, len, 1);
-        let (lb, kcb, _) = prefill_forward(&cfg, &w, &b, len, 1);
+        let (la, kca, _) = prefill_forward(&cfg, &w, &a, len, &Executor::Serial);
+        let (lb, kcb, _) = prefill_forward(&cfg, &w, &b, len, &Executor::Serial);
         assert_eq!(la, lb);
         for gi in 0..cfg.g {
             for li in 0..cfg.l {
@@ -1264,17 +1280,17 @@ mod tests {
     fn prefill_matches_scalar_reference_bitwise() {
         // The optimized prefill accumulates every output element in the
         // same order as the scalar oracle, so agreement is exact — at
-        // every thread count.
+        // every pool size and under every dispatcher.
         let cfg = tiny_cfg();
         let w = NativeWeights::init(&cfg, 11);
         let mut toks = vec![1, 5, 12, 6, 13, 2];
         toks.resize(cfg.m_c_max, 0);
         let (l_ref, kc_ref, vc_ref) = reference::prefill_forward(&cfg, &w, &toks, 6);
-        for threads in [1usize, 2, 8] {
-            let (l, kc, vc) = prefill_forward(&cfg, &w, &toks, 6, threads);
-            assert_eq!(l, l_ref, "logits diverge at threads={threads}");
-            assert_eq!(kc, kc_ref, "kc diverges at threads={threads}");
-            assert_eq!(vc, vc_ref, "vc diverges at threads={threads}");
+        for (ei, exec) in test_execs().iter().enumerate() {
+            let (l, kc, vc) = prefill_forward(&cfg, &w, &toks, 6, exec);
+            assert_eq!(l, l_ref, "logits diverge at exec={ei}");
+            assert_eq!(kc, kc_ref, "kc diverges at exec={ei}");
+            assert_eq!(vc, vc_ref, "vc diverges at exec={ei}");
         }
     }
 
@@ -1287,16 +1303,16 @@ mod tests {
         let w = NativeWeights::init(&cfg, 5);
         let full: Vec<i32> = vec![1, 5, 12, 6, 13, 2, 3];
         let len = full.len();
-        for threads in [1usize, 2] {
+        for exec in [Executor::Serial, Executor::with_threads(2)] {
             for cached_len in 1..len {
                 let mut prefix = full[..cached_len].to_vec();
                 prefix.resize(cfg.m_c_max, 0);
-                let (_, kc_p, vc_p) = prefill_forward(&cfg, &w, &prefix, cached_len, threads);
+                let (_, kc_p, vc_p) = prefill_forward(&cfg, &w, &prefix, cached_len, &exec);
                 let mut padded = full.clone();
                 padded.resize(cfg.m_c_max, 0);
-                let (l_ref, kc_ref, vc_ref) = prefill_forward(&cfg, &w, &padded, len, threads);
+                let (l_ref, kc_ref, vc_ref) = prefill_forward(&cfg, &w, &padded, len, &exec);
                 let (l_ext, kc_ext, vc_ext) = prefill_extend_forward(
-                    &cfg, &w, &kc_p, &vc_p, cached_len, &padded, len, threads,
+                    &cfg, &w, &kc_p, &vc_p, cached_len, &padded, len, &exec,
                 );
                 assert_eq!(l_ext, l_ref, "logits diverge at cached_len={cached_len}");
                 assert_eq!(kc_ext, kc_ref, "kc diverges at cached_len={cached_len}");
@@ -1320,7 +1336,7 @@ mod tests {
         let w = NativeWeights::init(&cfg, 9);
         let mut toks = vec![1, 2, 7];
         toks.resize(cfg.m_c_max, 0);
-        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 3, 1);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 3, &Executor::Serial);
         let b = 2usize;
         let n = cfg.l * b * cfg.g * cfg.m_d_max * cfg.k;
         let kc_rep: Vec<f32> = {
@@ -1345,7 +1361,7 @@ mod tests {
             out
         };
         let mut scr = DecodeScratch::new();
-        for threads in [1usize, 2, 8] {
+        for (ei, exec) in test_execs().iter().enumerate() {
             // feed two steps so the decode-partition path is non-trivial
             let (mut kd, mut vd) = (vec![0.0f32; n], vec![0.0f32; n]);
             let (mut kd_r, mut vd_r) = (vec![0.0f32; n], vec![0.0f32; n]);
@@ -1353,13 +1369,13 @@ mod tests {
                 let toks_step = [3i32, 4];
                 let l_opt = decode_forward(
                     &cfg, &w, DecodeMode::Bifurcated, b, &toks_step, d_pos, 3, &kc, &vc, false,
-                    &mut kd, &mut vd, threads, &mut scr,
+                    &mut kd, &mut vd, exec, &mut scr,
                 );
                 let l_ref = reference::decode_forward(
                     &cfg, &w, DecodeMode::Bifurcated, b, &toks_step, d_pos, 3, &kc, &vc, false,
                     &mut kd_r, &mut vd_r,
                 );
-                assert_eq!(l_opt, l_ref, "bifurcated diverges at threads={threads} d_pos={d_pos}");
+                assert_eq!(l_opt, l_ref, "bifurcated diverges at exec={ei} d_pos={d_pos}");
                 assert_eq!(kd, kd_r);
                 assert_eq!(vd, vd_r);
             }
@@ -1369,14 +1385,14 @@ mod tests {
                 let toks_step = [5i32, 6];
                 let l_opt = decode_forward(
                     &cfg, &w, DecodeMode::Fused, b, &toks_step, d_pos, 3, &kc_rep, &vc_rep, true,
-                    &mut kd, &mut vd, threads, &mut scr,
+                    &mut kd, &mut vd, exec, &mut scr,
                 );
                 let l_ref = reference::decode_forward(
                     &cfg, &w, DecodeMode::Fused, b, &toks_step, d_pos, 3, &kc_rep, &vc_rep, true,
                     &mut kd_r, &mut vd_r,
                 );
                 let d = max_abs_diff(&l_opt, &l_ref);
-                assert!(d <= 1e-5, "fused diverges by {d} at threads={threads} d_pos={d_pos}");
+                assert!(d <= 1e-5, "fused diverges by {d} at exec={ei} d_pos={d_pos}");
             }
         }
     }
@@ -1387,13 +1403,13 @@ mod tests {
         let w = NativeWeights::init(&cfg, 3);
         let mut toks = vec![1, 2];
         toks.resize(cfg.m_c_max, 0);
-        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 2, 1);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 2, &Executor::Serial);
         let n = cfg.l * 2 * cfg.g * cfg.m_d_max * cfg.k;
         let (mut kd, mut vd) = (vec![0.0; n], vec![0.0; n]);
         let mut scr = DecodeScratch::new();
         let logits = decode_forward(
             &cfg, &w, DecodeMode::Bifurcated, 2, &[3, 4], 0, 2, &kc, &vc, false, &mut kd, &mut vd,
-            1, &mut scr,
+            &Executor::Serial, &mut scr,
         );
         assert_eq!(logits.len(), 2 * cfg.vocab);
         assert!(logits.iter().all(|v| v.is_finite()));

@@ -1,0 +1,474 @@
+//! Persistent worker-pool execution layer for the native kernels.
+//!
+//! PR 3 fanned kernel rows out with per-call scoped spawns, whose cost
+//! (tens of microseconds per spawn) set the dispatch floor of every GEMM.
+//! The small per-step decode GEMMs that bifurcated attention makes cheap
+//! were paying that floor over and over — or, below the spawn-amortizing
+//! work threshold, not parallelizing at all. This module replaces the
+//! per-call spawns with threads that live as long as the backend:
+//!
+//! * [`WorkerPool::new`] spawns its workers **once**; every kernel call is
+//!   then an indexed job handed out through an atomic part counter.
+//! * Workers park on a condvar between jobs, with a short spin window
+//!   first so the dense back-to-back kernel stream of a decode step never
+//!   pays a wakeup.
+//! * Because dispatch is now ~a counter bump instead of a spawn, the
+//!   fan-out threshold can drop by 4x ([`Executor::par_min_macs`]):
+//!   medium GEMMs that had to run serial under scoped spawns now
+//!   parallelize profitably.
+//!
+//! Determinism: a job's parts are fixed row ranges computed from the
+//! *configured* thread count (`math::par_rows`), and the atomic counter
+//! only decides **which** thread runs a part, never what the part
+//! computes — so outputs are bitwise-identical across pool sizes, across
+//! dispatchers, and vs the naive oracle, exactly as before.
+//!
+//! [`Executor`] is the dispatch handle the kernels take: the pool on hot
+//! paths, [`Executor::Serial`] inside already-parallel regions, and the
+//! scoped-spawn dispatch of PR 3 preserved in
+//! [`super::scoped_reference`] purely as the measured ablation control
+//! (`benches/decode_throughput.rs`).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::scoped_reference;
+
+/// Spin iterations before a worker (or a waiting submitter) parks on its
+/// condvar. Sized to cover the serial gaps between a decode step's kernel
+/// calls (a few tens of microseconds) so steady-state decode never pays a
+/// condvar wakeup; an idle pool still parks quickly enough not to matter.
+const SPIN_ITERS: u32 = 1 << 15;
+
+/// Fan-out threshold (multiply-accumulates) under pool dispatch. Handing
+/// a job to spinning workers costs roughly a cache-line ping, so GEMMs as
+/// small as a decode step's score/value sweeps are worth splitting.
+const PAR_MIN_MACS_POOL: usize = 1 << 15;
+
+/// Fan-out threshold under the scoped-spawn reference dispatch — PR 3's
+/// value, kept so the ablation control reproduces PR 3's behaviour: below
+/// this, a spawn costs more than the GEMM.
+const PAR_MIN_MACS_SCOPED: usize = 1 << 17;
+
+/// Per-job counters, one allocation per published job (NOT reusable
+/// across jobs: a late worker holding a stale `Job` clone must find a
+/// counter that belongs to *that* job, so its claims can only no-op).
+struct JobState {
+    next: AtomicUsize,
+    done: AtomicUsize,
+    /// First panic payload from any part, re-raised by the submitter so
+    /// assert messages survive the pool boundary intact.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// One in-flight parallel region. `f` is the submitter's closure with its
+/// lifetime erased; safety rests on [`WorkerPool::run`] not returning
+/// until `done == parts`, so the borrow outlives every dereference (a
+/// worker that clones the job after completion finds the part counter
+/// exhausted and never touches `f`).
+#[derive(Clone)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    parts: usize,
+    state: Arc<JobState>,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced while the
+// submitting thread is blocked in `run` (see `Job`); the Arcs are Send.
+unsafe impl Send for Job {}
+
+struct Shared {
+    /// Bumped (under the `job` lock) once per published job; workers
+    /// watch it to detect new work without taking the lock.
+    epoch: AtomicU64,
+    shutdown: AtomicBool,
+    job: Mutex<Option<Job>>,
+    /// Workers park here when their spin window expires.
+    work_cv: Condvar,
+    /// The submitter parks here waiting for the last parts to retire.
+    done_cv: Condvar,
+}
+
+/// Long-lived std-only worker threads executing indexed jobs. Owned by
+/// [`super::NativeBackend`] (one pool shared by prefill, extend, and
+/// decode) and joined cleanly on drop. Workers are spawned **lazily** on
+/// the first parallel dispatch, so constructing (and discarding — e.g.
+/// `new().with_threads(n)` chains) a pool is free.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    workers: OnceLock<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// A pool with `threads` total executors: `threads - 1` workers plus
+    /// the submitting thread, which always participates in every job.
+    /// `threads <= 1` runs everything inline. No threads are spawned
+    /// until the first parallel [`WorkerPool::run`].
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(Shared {
+                epoch: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                job: Mutex::new(None),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            threads: threads.max(1),
+            workers: OnceLock::new(),
+        }
+    }
+
+    /// Total executor count (workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Spawn the workers on first use.
+    fn ensure_workers(&self) {
+        self.workers.get_or_init(|| {
+            (1..self.threads)
+                .map(|i| {
+                    let sh = Arc::clone(&self.shared);
+                    std::thread::Builder::new()
+                        .name(format!("native-pool-{i}"))
+                        .spawn(move || worker_loop(&sh))
+                        .expect("spawn pool worker")
+                })
+                .collect()
+        });
+    }
+
+    /// Run `f(0..parts)` across the pool and block until every part has
+    /// finished. Parts are claimed through an atomic counter, so load
+    /// balance is dynamic while each part's work is fixed by its index.
+    /// Must not be called from inside a running part (single job slot —
+    /// the kernels never nest: inner calls take [`Executor::Serial`]).
+    pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if parts <= 1 || self.threads <= 1 {
+            for i in 0..parts {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_workers();
+        // SAFETY: lifetime erasure only; `run` blocks until `done ==
+        // parts`, after which no executor can claim a part, so `f` is
+        // never dereferenced past this frame.
+        let erased = unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync + '_),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f as *const (dyn Fn(usize) + Sync + '_))
+        };
+        let job = Job {
+            f: erased,
+            parts,
+            state: Arc::new(JobState {
+                next: AtomicUsize::new(0),
+                done: AtomicUsize::new(0),
+                panic: Mutex::new(None),
+            }),
+        };
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            debug_assert!(slot.is_none(), "WorkerPool::run re-entered");
+            *slot = Some(job.clone());
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter is executor 0: claim parts like any worker.
+        run_parts(&self.shared, &job);
+        // Wait for parts claimed by workers to retire: spin through the
+        // typical sub-microsecond tail, then park.
+        let mut spins = 0u32;
+        while job.state.done.load(Ordering::Acquire) < parts {
+            if spins < SPIN_ITERS {
+                std::hint::spin_loop();
+                spins += 1;
+            } else {
+                let guard = self.shared.job.lock().unwrap();
+                let _g = self
+                    .shared
+                    .done_cv
+                    .wait_while(guard, |_| job.state.done.load(Ordering::Acquire) < parts)
+                    .unwrap();
+                break;
+            }
+        }
+        // Retire the job before surfacing anything; the slot must be
+        // clear before the next `run` publishes.
+        *self.shared.job.lock().unwrap() = None;
+        if let Some(p) = job.state.panic.lock().unwrap().take() {
+            resume_unwind(p); // original payload: assert messages survive
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Clean shutdown: wake every parked worker, let spinning ones
+    /// observe the flag, and join them all — any work is already
+    /// complete because `run` only returns once its job has retired.
+    /// A pool that never ran a parallel job has no threads to join.
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.job.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        if let Some(handles) = self.workers.take() {
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Claim and execute parts of `job` until the counter is exhausted.
+/// Panics inside a part are caught so the pool survives (and the
+/// submitter re-raises); the part still counts as done so nobody blocks.
+fn run_parts(shared: &Shared, job: &Job) {
+    loop {
+        let i = job.state.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.parts {
+            return;
+        }
+        // SAFETY: a *claimed* part pins the submitter inside `run` (done
+        // cannot reach parts until this part retires below), so the
+        // borrow behind `f` is alive. The raw pointer is only turned
+        // into a reference here, after the claim — a stale worker whose
+        // job already completed never gets past the check above.
+        let f = unsafe { &*job.f };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            let mut slot = job.state.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        if job.state.done.fetch_add(1, Ordering::AcqRel) + 1 == job.parts {
+            // Last part overall: wake the submitter if it parked. Taking
+            // the lock orders this notify after any concurrent wait.
+            let _g = shared.job.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        // Spin first (dense decode streams publish the next job within
+        // the window), yielding periodically so oversubscribed pools —
+        // more threads than cores — don't starve the working threads.
+        let mut spins = 0u32;
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if shared.epoch.load(Ordering::Acquire) != seen {
+                break;
+            }
+            if spins < SPIN_ITERS {
+                spins += 1;
+                if (spins & 0x3FF) == 0 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            } else {
+                let guard = shared.job.lock().unwrap();
+                let _g = shared
+                    .work_cv
+                    .wait_while(guard, |_| {
+                        shared.epoch.load(Ordering::Acquire) == seen
+                            && !shared.shutdown.load(Ordering::Acquire)
+                    })
+                    .unwrap();
+            }
+        }
+        seen = shared.epoch.load(Ordering::Acquire);
+        let job = shared.job.lock().unwrap().clone();
+        if let Some(job) = job {
+            run_parts(shared, &job);
+        }
+    }
+}
+
+/// The dispatch handle every native kernel takes: how (and whether) a
+/// kernel call fans its row ranges out.
+pub enum Executor {
+    /// Everything on the calling thread. Used inside already-parallel
+    /// regions (a part must never re-enter the pool) and for `threads=1`.
+    Serial,
+    /// The persistent pool — the hot-path default.
+    Pool(WorkerPool),
+    /// PR 3's per-call scoped spawns, preserved in
+    /// [`super::scoped_reference`] **only** as the measured control for
+    /// the spawn-vs-pool dispatch ablation. Not a hot path.
+    ScopedReference(usize),
+}
+
+impl Executor {
+    /// The hot-path dispatcher for a given fan-out: a shared pool for
+    /// `threads > 1`, serial otherwise (no threads to manage).
+    pub fn with_threads(threads: usize) -> Executor {
+        if threads.max(1) == 1 {
+            Executor::Serial
+        } else {
+            Executor::Pool(WorkerPool::new(threads))
+        }
+    }
+
+    /// Upper bound on useful fan-out for this dispatcher.
+    pub fn threads(&self) -> usize {
+        match self {
+            Executor::Serial => 1,
+            Executor::Pool(p) => p.threads(),
+            Executor::ScopedReference(n) => (*n).max(1),
+        }
+    }
+
+    /// Minimum multiply-accumulates before a kernel call fans out on this
+    /// dispatcher. Pool dispatch is cheap enough to split GEMMs 4x
+    /// smaller than a scoped spawn could amortize — that delta is where
+    /// small-batch decode gains its throughput (the bench ablation
+    /// measures it).
+    pub fn par_min_macs(&self) -> usize {
+        match self {
+            Executor::Serial => usize::MAX,
+            Executor::Pool(_) => PAR_MIN_MACS_POOL,
+            Executor::ScopedReference(_) => PAR_MIN_MACS_SCOPED,
+        }
+    }
+
+    /// Execute `f(0..parts)`, blocking until every part has finished.
+    pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        match self {
+            Executor::Serial => {
+                for i in 0..parts {
+                    f(i);
+                }
+            }
+            Executor::Pool(p) => p.run(parts, f),
+            Executor::ScopedReference(_) => scoped_reference::run(parts, f),
+        }
+    }
+}
+
+/// The bitwise-parity dispatcher matrix shared by the `math` and `model`
+/// test modules: one of each dispatcher kind, pool sizes {1, 2, 8}.
+/// Outputs must be identical across ALL of them.
+#[cfg(test)]
+pub(crate) fn test_execs() -> Vec<Executor> {
+    vec![
+        Executor::Serial,
+        Executor::with_threads(1),
+        Executor::with_threads(2),
+        Executor::with_threads(8),
+        Executor::ScopedReference(8),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_part_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for parts in [1usize, 2, 3, 7, 64] {
+            let hits: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(parts, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "part {i} of {parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        // Back-to-back jobs exercise both the spin fast path and (with a
+        // pause) the condvar park/wake path.
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for round in 0..200 {
+            pool.run(5, &|i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+            if round == 100 {
+                std::thread::sleep(std::time::Duration::from_millis(30)); // park everyone
+            }
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 15);
+    }
+
+    #[test]
+    fn drop_joins_parked_spinning_and_unused_workers() {
+        // Never used: lazy spawn means there is nothing to join.
+        drop(WorkerPool::new(4));
+        // Dropped immediately after a burst: workers are mid-spin.
+        let pool = WorkerPool::new(4);
+        let n = AtomicUsize::new(0);
+        for _ in 0..8 {
+            pool.run(8, &|_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(n.load(Ordering::Relaxed), 64);
+        drop(pool);
+        // Dropped after workers have certainly parked.
+        let pool = WorkerPool::new(2);
+        pool.run(2, &|_| {});
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(pool);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // The ORIGINAL payload must cross the pool boundary, so a kernel
+        // assert's message is not replaced by a generic pool panic.
+        let payload = caught.expect_err("panic must surface on the submitter");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool is still functional afterwards.
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn executor_threads_and_thresholds() {
+        assert_eq!(Executor::Serial.threads(), 1);
+        assert_eq!(Executor::with_threads(0).threads(), 1); // clamped serial
+        assert_eq!(Executor::with_threads(1).threads(), 1);
+        let ex = Executor::with_threads(3);
+        assert_eq!(ex.threads(), 3);
+        assert!(ex.par_min_macs() < Executor::ScopedReference(3).par_min_macs());
+        assert_eq!(Executor::ScopedReference(0).threads(), 1);
+    }
+
+    #[test]
+    fn all_dispatchers_run_all_parts() {
+        for ex in [Executor::Serial, Executor::with_threads(4), Executor::ScopedReference(4)] {
+            let hits: Vec<AtomicUsize> = (0..9).map(|_| AtomicUsize::new(0)).collect();
+            ex.run(9, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+}

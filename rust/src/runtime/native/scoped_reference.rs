@@ -1,0 +1,42 @@
+//! Reference dispatch: PR 3's per-kernel-call scoped-spawn fan-out,
+//! preserved **only** as the measured control for the spawn-vs-pool
+//! dispatch ablation (`benches/decode_throughput.rs`, the `pool/spawn`
+//! column) and its tests. Nothing on a steady-state path may call this:
+//! each spawn here costs tens of microseconds — the dispatch floor the
+//! persistent [`super::pool::WorkerPool`] exists to remove — and
+//! [`super::pool::Executor::par_min_macs`] keeps PR 3's much higher
+//! fan-out threshold for this dispatcher so the ablation reproduces PR
+//! 3's behaviour faithfully.
+
+/// Run `f(0..parts)`: parts `1..` on freshly spawned scoped threads,
+/// part `0` on the calling thread, exactly like PR 3's row fan-out.
+pub(crate) fn run(parts: usize, f: &(dyn Fn(usize) + Sync)) {
+    if parts <= 1 {
+        for i in 0..parts {
+            f(i);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for i in 1..parts {
+            s.spawn(move || f(i));
+        }
+        f(0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_part_exactly_once() {
+        for parts in [0usize, 1, 2, 5] {
+            let hits: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            super::run(parts, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+}

@@ -1,16 +1,24 @@
-//! Threaded determinism: the kernel fan-out must never change results.
+//! Threaded determinism + pool lifecycle: the kernel fan-out must never
+//! change results, and the persistent worker pool must survive the whole
+//! serving lifecycle.
 //!
-//! Threads only partition independent output rows (each row's reduction
-//! order is fixed inside a tile), so the same seed + the same request must
-//! produce **bitwise-identical** completions at `--threads 1` and
-//! `--threads 8` — token ids, text, and log-probabilities alike. This is
-//! what makes the threading flag safe to default to all cores.
+//! Executors only partition independent output rows (each row's reduction
+//! order is fixed inside a tile), so the same seed + the same request
+//! must produce **bitwise-identical** completions at every pool size —
+//! token ids, text, and log-probabilities alike — and under the
+//! scoped-spawn reference dispatch. This is what makes the threading flag
+//! safe to default to all cores. The lifecycle tests pin the pool's
+//! clean-shutdown and reuse guarantees: one pool serves
+//! prefill → decode → prefill across requests, and dropping a backend
+//! (pool included) joins its workers whether they are parked, spinning,
+//! or have never run a job.
 
 use bifurcated_attn::coordinator::{
     Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
 };
 use bifurcated_attn::corpus;
 use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::native::WorkerPool;
 use bifurcated_attn::runtime::NativeBackend;
 
 fn engine_with_threads(threads: usize, policy: Option<ModePolicy>) -> Engine<NativeBackend> {
@@ -38,22 +46,50 @@ fn req(seed: u64) -> GenerationRequest {
 }
 
 #[test]
-fn same_seed_same_completions_across_thread_counts() {
+fn same_seed_same_completions_across_pool_sizes() {
+    // Pool sizes {1, 2, 8}: size 1 is the no-pool serial dispatcher, 2 is
+    // the minimal real pool, 8 oversubscribes a small CI box — all three
+    // must agree bitwise, in both decode modes.
     for mode in [DecodeMode::Bifurcated, DecodeMode::Fused] {
         let e1 = engine_with_threads(1, Some(ModePolicy::Force(mode)));
-        let e8 = engine_with_threads(8, Some(ModePolicy::Force(mode)));
-        assert_eq!(e1.rt.threads(), 1);
-        assert_eq!(e8.rt.threads(), 8);
         let r1 = e1.generate(&req(13)).unwrap();
-        let r8 = e8.generate(&req(13)).unwrap();
-        assert_eq!(r1.completions.len(), r8.completions.len());
-        for (a, b) in r1.completions.iter().zip(&r8.completions) {
-            assert_eq!(a.tokens, b.tokens, "{mode:?}: token stream diverged across threads");
-            assert_eq!(a.text, b.text);
-            // bitwise: log-probs come out of the same float ops
-            assert_eq!(a.sum_logp.to_bits(), b.sum_logp.to_bits(), "{mode:?}: logp drifted");
-            assert_eq!(a.finished_by_stop, b.finished_by_stop);
+        for threads in [2usize, 8] {
+            let en = engine_with_threads(threads, Some(ModePolicy::Force(mode)));
+            assert_eq!(en.rt.threads(), threads);
+            let rn = en.generate(&req(13)).unwrap();
+            assert_eq!(r1.completions.len(), rn.completions.len());
+            for (a, b) in r1.completions.iter().zip(&rn.completions) {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{mode:?}: token stream diverged at pool size {threads}"
+                );
+                assert_eq!(a.text, b.text);
+                // bitwise: log-probs come out of the same float ops
+                assert_eq!(
+                    a.sum_logp.to_bits(),
+                    b.sum_logp.to_bits(),
+                    "{mode:?}: logp drifted at pool size {threads}"
+                );
+                assert_eq!(a.finished_by_stop, b.finished_by_stop);
+            }
         }
+    }
+}
+
+#[test]
+fn scoped_reference_dispatch_reproduces_pool_completions() {
+    // The spawn-vs-pool bench ablation is a fair A/B only if the two
+    // dispatchers are bit-for-bit interchangeable end to end.
+    let pool = engine_with_threads(4, Some(ModePolicy::Force(DecodeMode::Bifurcated)));
+    let be = NativeBackend::preset("pico-mg", 0).unwrap().with_threads(4).with_reference_dispatch();
+    let mut cfg = EngineConfig { threads: 4, ..EngineConfig::default() };
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let scoped = Engine::new(bifurcated_attn::runtime::TokenizerInfo::builtin(), be, cfg);
+    let rp = pool.generate(&req(21)).unwrap();
+    let rs = scoped.generate(&req(21)).unwrap();
+    for (a, b) in rp.completions.iter().zip(&rs.completions) {
+        assert_eq!(a.tokens, b.tokens, "dispatcher changed the token stream");
+        assert_eq!(a.sum_logp.to_bits(), b.sum_logp.to_bits());
     }
 }
 
@@ -78,4 +114,63 @@ fn warm_cache_hits_are_thread_count_invariant() {
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.sum_logp.to_bits(), b.sum_logp.to_bits());
     }
+}
+
+#[test]
+fn one_pool_serves_prefill_decode_prefill_across_requests() {
+    // The backend builds ONE pool and reuses it for every phase of every
+    // request. Interleave cold prefills, batched decode waves, and warm
+    // extends on the same engine, then check against a fresh engine —
+    // reuse must not corrupt anything.
+    let e = engine_with_threads(4, Some(ModePolicy::Force(DecodeMode::Bifurcated)));
+    let a1 = e.generate(&req(9)).unwrap(); // prefill + decode
+    let mut longer = req(9);
+    longer.prompt.push_str("16;13+5="); // partial hit -> extend + decode
+    let a2 = e.generate(&longer).unwrap();
+    let a3 = e.generate(&req(9)).unwrap(); // warm full hit -> decode only
+    let fresh = engine_with_threads(4, Some(ModePolicy::Force(DecodeMode::Bifurcated)));
+    let b1 = fresh.generate(&req(9)).unwrap();
+    for (a, b) in a1.completions.iter().zip(&b1.completions) {
+        assert_eq!(a.tokens, b.tokens, "pool reuse changed a cold completion");
+        assert_eq!(a.sum_logp.to_bits(), b.sum_logp.to_bits());
+    }
+    // warm completions reproduce the cold ones (same engine, pool reused)
+    for (a, b) in a1.completions.iter().zip(&a3.completions) {
+        assert_eq!(a.tokens, b.tokens, "pool reuse changed a warm completion");
+    }
+    assert!(a2.completions.iter().all(|c| !c.tokens.is_empty()));
+}
+
+#[test]
+fn backend_drop_joins_pool_in_every_state() {
+    // Never ran a job: workers were never even spawned (lazy pool).
+    drop(NativeBackend::preset("pico-mq", 0).unwrap().with_threads(4));
+    // Dropped right after heavy use: workers are mid-spin.
+    let be = NativeBackend::preset("pico-mq", 0).unwrap().with_threads(4);
+    let pre = be.prefill(&[1, 3, 12, 4]).unwrap();
+    drop(be);
+    assert!(pre.logits.iter().all(|v| v.is_finite()));
+    // with_threads rebuilds the pool: the old one must shut down cleanly
+    // while the new one takes over mid-lifecycle.
+    let be = NativeBackend::preset("pico-mq", 0).unwrap().with_threads(2);
+    let p2 = be.prefill(&[1, 3, 12, 4]).unwrap();
+    let be = be.with_threads(8);
+    let p8 = be.prefill(&[1, 3, 12, 4]).unwrap();
+    assert_eq!(p2.logits, p8.logits);
+}
+
+#[test]
+fn raw_pool_survives_queued_burst_then_drop() {
+    // Hammer the pool with back-to-back jobs (the decode dispatch
+    // pattern), then drop it immediately, workers still hot.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let pool = WorkerPool::new(8);
+    let total = AtomicUsize::new(0);
+    for _ in 0..500 {
+        pool.run(8, &|i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+    }
+    assert_eq!(total.load(Ordering::Relaxed), 500 * 28);
+    drop(pool);
 }
