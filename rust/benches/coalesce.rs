@@ -1,0 +1,215 @@
+//! Continuous-batching coalescing bench: per-request context-bytes-read
+//! per generated token as the coalesced wave width grows 1 → 4 → 16 over
+//! a shared prefix of ≥ 256 tokens.
+//!
+//! The wave runner sweeps the shared K_c/V_c once per decode step no
+//! matter how many requests' samplers ride the wave, so
+//! `ctx_bytes/token = sweep_volume · steps / tokens` must fall as 1/width.
+//! The numbers come from the engine's own wave counters (each scenario
+//! really serves W concurrent requests through the batcher), not from a
+//! closed-form model — and the run **asserts** strict decrease, which CI
+//! smoke-checks with `--quick`. Writes `BENCH_coalesce.json`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use bifurcated_attn::bench::{bench_main, cli_threads, Cell, Table};
+use bifurcated_attn::coordinator::batcher::{BatchConfig, BatchJob, Batcher, ScriptedSource};
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, RequestResult, SamplingParams,
+};
+use bifurcated_attn::runtime::manifest::ModelCfg;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::{NativeBackend, TokenizerInfo};
+use bifurcated_attn::util::json::Json;
+
+const MAX_TOKENS: usize = 8;
+
+/// pico-mq shapes with a context budget big enough for a ≥256-token
+/// shared prefix (the pico presets cap m_c at 96).
+fn bench_cfg() -> ModelCfg {
+    let (d, h, l) = (64usize, 8usize, 3usize);
+    let (m_c_max, m_d_max) = (288usize, 16usize);
+    ModelCfg {
+        name: "coalesce-mq".into(),
+        d,
+        h,
+        g: 1,
+        k: d / h,
+        p: h,
+        l,
+        vocab: 16,
+        ffn_mult: 4,
+        m_c_max,
+        m_d_max,
+        m_max: m_c_max + m_d_max,
+        seq_len: 64,
+        param_count: 0,
+        attention_kind: String::new(),
+    }
+}
+
+/// A ≥256-token shared prompt from the arithmetic grammar (29 x 9-token
+/// expressions + BOS = 262 tokens).
+fn shared_prompt() -> String {
+    "12+34=46;".repeat(29)
+}
+
+struct ScenarioResult {
+    width: usize,
+    prompt_tokens: usize,
+    waves: usize,
+    wave_steps: usize,
+    ctx_sweep_bytes: usize,
+    generated_tokens: usize,
+    coalesced_requests: usize,
+    ctx_bytes_per_tok: f64,
+}
+
+/// Serve `width` concurrent same-prefix requests through the batcher on a
+/// fresh engine and read the wave counters back.
+fn run_scenario(width: usize, threads: usize) -> ScenarioResult {
+    let be = NativeBackend::new(bench_cfg(), 0).unwrap().with_threads(threads);
+    let engine = Engine::new(TokenizerInfo::builtin(), be, EngineConfig::default());
+    let prompt = shared_prompt();
+    let prompt_tokens = engine.tokenize_prompt(&prompt).unwrap().len();
+    assert!(prompt_tokens >= 256, "shared prefix must be >= 256 tokens, got {prompt_tokens}");
+
+    let results: Rc<RefCell<Vec<RequestResult>>> = Rc::new(RefCell::new(Vec::new()));
+    let mut source: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    for i in 0..width {
+        let req = GenerationRequest {
+            id: i as u64 + 1,
+            prompt: prompt.clone(),
+            params: SamplingParams {
+                n: 1,
+                temperature: 0.8,
+                top_p: 0.95,
+                max_tokens: MAX_TOKENS,
+                stop_token: None,
+                seed: i as u64,
+                mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+            },
+        };
+        let sink = Rc::clone(&results);
+        source.push(
+            0,
+            BatchJob::Generate(
+                req,
+                Box::new(move |res| {
+                    sink.borrow_mut().push(res.expect("coalesced request failed"));
+                }),
+            ),
+        );
+    }
+    Batcher::new(&engine, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut source);
+
+    let got = results.borrow();
+    assert_eq!(got.len(), width, "every request must complete");
+    for r in got.iter() {
+        assert_eq!(r.completions.len(), 1);
+        assert_eq!(r.completions[0].tokens.len(), MAX_TOKENS);
+        assert_eq!(r.mode_used, DecodeMode::Bifurcated);
+    }
+    let b = engine.metrics.batch_counters();
+    assert!(b.generated_tokens > 0, "wave counters must have fired");
+    ScenarioResult {
+        width,
+        prompt_tokens,
+        waves: b.waves,
+        wave_steps: b.wave_steps,
+        ctx_sweep_bytes: b.ctx_sweep_bytes,
+        generated_tokens: b.generated_tokens,
+        coalesced_requests: b.coalesced_requests,
+        ctx_bytes_per_tok: b.ctx_sweep_bytes as f64 / b.generated_tokens as f64,
+    }
+}
+
+fn main() {
+    let threads = cli_threads();
+    let mut gate_err: Option<String> = None;
+    bench_main("coalesce", |_quick| {
+        // The measurement is exact counter arithmetic (no wall clocks), so
+        // quick and full runs measure the same grid.
+        let widths = [1usize, 4, 16];
+        let scenarios: Vec<ScenarioResult> =
+            widths.iter().map(|&w| run_scenario(w, threads)).collect();
+
+        let mut t = Table::new(
+            &format!(
+                "Coalesced decode: context bytes read per token vs wave width \
+                 (m_c = {}, native CPU, {threads} threads)",
+                scenarios[0].prompt_tokens
+            ),
+            &[
+                "width",
+                "waves",
+                "steps",
+                "coalesced reqs",
+                "ctx sweep B",
+                "tokens",
+                "ctx B/token",
+            ],
+        )
+        .with_note(
+            "W concurrent same-prefix requests through the continuous batcher; one context \
+             sweep per step serves the whole wave, so bytes/token falls as 1/W",
+        );
+        for s in &scenarios {
+            t.row(vec![
+                Cell::Num(s.width as f64),
+                Cell::Num(s.waves as f64),
+                Cell::Num(s.wave_steps as f64),
+                Cell::Num(s.coalesced_requests as f64),
+                Cell::Num(s.ctx_sweep_bytes as f64),
+                Cell::Num(s.generated_tokens as f64),
+                Cell::Num((s.ctx_bytes_per_tok * 100.0).round() / 100.0),
+            ]);
+        }
+
+        let flat = Json::obj()
+            .set("m_c", Json::Num(scenarios[0].prompt_tokens as f64))
+            .set("threads", Json::Num(threads as f64))
+            .set(
+                "grid",
+                Json::Arr(
+                    scenarios
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .set("width", Json::Num(s.width as f64))
+                                .set("requests", Json::Num(s.width as f64))
+                                .set("waves", Json::Num(s.waves as f64))
+                                .set("wave_steps", Json::Num(s.wave_steps as f64))
+                                .set("ctx_sweep_bytes", Json::Num(s.ctx_sweep_bytes as f64))
+                                .set("generated_tokens", Json::Num(s.generated_tokens as f64))
+                                .set("ctx_bytes_per_tok", Json::Num(s.ctx_bytes_per_tok))
+                        })
+                        .collect(),
+                ),
+            );
+        if let Err(e) = std::fs::write("BENCH_coalesce.json", flat.to_string_pretty()) {
+            eprintln!("warn: could not write BENCH_coalesce.json: {e}");
+        } else {
+            eprintln!("[bench] flat grid -> BENCH_coalesce.json");
+        }
+
+        // The gate: bytes/token must STRICTLY decrease as width grows.
+        for pair in scenarios.windows(2) {
+            if pair[1].ctx_bytes_per_tok >= pair[0].ctx_bytes_per_tok {
+                gate_err = Some(format!(
+                    "ctx bytes/token did not decrease: width {} -> {:.1} B/tok, width {} -> {:.1} B/tok",
+                    pair[0].width,
+                    pair[0].ctx_bytes_per_tok,
+                    pair[1].width,
+                    pair[1].ctx_bytes_per_tok
+                ));
+            }
+        }
+        vec![t]
+    });
+    if let Some(e) = gate_err {
+        eprintln!("[bench] COALESCING REGRESSION: {e}");
+        std::process::exit(1);
+    }
+}

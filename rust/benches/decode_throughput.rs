@@ -243,6 +243,18 @@ fn check_dispatch(points: &[GridPoint], threads: usize) -> Result<(), String> {
         eprintln!("[bench] dispatch gate skipped: single-threaded run (both dispatchers serial)");
         return Ok(());
     }
+    // A multithreaded POOL on a single hardware core can never beat scoped
+    // spawns by 1.2x — there is no second core to fan out to, only context
+    // switches. Skip the sub-gate (with a notice) so CI on 1-vCPU runners
+    // cannot flake; the >20% tok/s baseline gate above still applies.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores == 1 {
+        eprintln!(
+            "[bench] dispatch gate skipped: available_parallelism() == 1 \
+             (pool vs spawn is a wash without a second core)"
+        );
+        return Ok(());
+    }
     let small: Vec<&GridPoint> = points.iter().filter(|p| p.b <= 4).collect();
     if small.is_empty() {
         return Ok(());

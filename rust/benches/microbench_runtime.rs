@@ -7,7 +7,7 @@
 
 use bifurcated_attn::bench::{bench_main, cli_threads, Bencher, Cell, Table};
 use bifurcated_attn::corpus;
-use bifurcated_attn::runtime::native::math::{matmul, matmul_into};
+use bifurcated_attn::runtime::native::math::{matmul, matmul_into, ShapeClass};
 use bifurcated_attn::runtime::native::Executor;
 use bifurcated_attn::runtime::{Backend, ContextView, DecodeMode, NativeBackend};
 use bifurcated_attn::util::prng::Pcg;
@@ -53,11 +53,60 @@ fn kernel_table(quick: bool, threads: usize) -> Table {
     t
 }
 
+/// Pool fan-out thresholds per shape class: the committed MAC floor next
+/// to a measured serial-vs-pool A/B at a probe shape sitting right at the
+/// floor — the crossover evidence the per-class constants were picked
+/// from (re-measured here on the running machine).
+fn threshold_table(quick: bool, threads: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Pool fan-out thresholds per shape class ({threads}-thread pool)"),
+        &["class", "min MACs", "probe m", "probe k", "probe n", "serial ms", "pool ms", "serial/pool"],
+    )
+    .with_note(
+        "probe shapes sit exactly at each class's committed floor; serial/pool > 1 means the \
+         fan-out pays for itself at the floor (scoped-spawn dispatch keeps PR 3's flat 2^17)",
+    );
+    let pool = Executor::with_threads(threads);
+    let mut rng = Pcg::new(23);
+    // (class, probe m/k/n) with m·k·n == the class floor
+    let probes: &[(ShapeClass, usize, usize, usize)] = &[
+        (ShapeClass::ManyRows, 16, 32, 32),   // 2^14
+        (ShapeClass::Standard, 8, 64, 64),    // 2^15
+        (ShapeClass::RowStarved, 2, 64, 512), // 2^16
+    ];
+    for &(class, m, kk, n) in probes {
+        debug_assert_eq!(m * kk * n, class.pool_min_macs());
+        let x: Vec<f32> = (0..m * kk).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..kk * n).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; m * n];
+        let bench = |nm| if quick { Bencher::quick(nm) } else { Bencher::new(nm) };
+        let s_serial = bench("serial").run(|| {
+            matmul_into(&mut y, &x, &w, m, kk, n, &Executor::Serial);
+            std::hint::black_box(&y);
+        });
+        let s_pool = bench("pool").run(|| {
+            matmul_into(&mut y, &x, &w, m, kk, n, &pool);
+            std::hint::black_box(&y);
+        });
+        t.row(vec![
+            Cell::Str(class.label().to_string()),
+            Cell::Num(class.pool_min_macs() as f64),
+            Cell::Num(m as f64),
+            Cell::Num(kk as f64),
+            Cell::Num(n as f64),
+            Cell::Ms(s_serial.p50),
+            Cell::Ms(s_pool.p50),
+            Cell::Num((s_serial.p50 / s_pool.p50 * 100.0).round() / 100.0),
+        ]);
+    }
+    t
+}
+
 fn main() {
     let threads = cli_threads();
     bench_main("microbench_runtime", |quick| {
         let buckets: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
-        let mut tables = vec![kernel_table(quick, threads)];
+        let mut tables = vec![kernel_table(quick, threads), threshold_table(quick, threads)];
         for model in ["pico-mh", "pico-mq"] {
             let rt = NativeBackend::preset(model, 0).unwrap().with_threads(threads);
             rt.warm(&[DecodeMode::Bifurcated, DecodeMode::Fused], buckets).unwrap();

@@ -1,0 +1,756 @@
+//! Cross-request continuous batching: coalesce concurrently arriving
+//! requests that resolve to the same prefix-cache node into ONE shared
+//! decode wave.
+//!
+//! The paper's memory-IO win is that the shared-prefix K_c/V_c is swept
+//! once per decode step no matter how many samplers hang off it. Before
+//! this module that sharing stopped at the request boundary: each
+//! `/generate` call planned its own wave, so two concurrent calls over the
+//! same cached prefix paid the context sweep twice per step. The batcher
+//! sits between the HTTP handlers and the engine:
+//!
+//! * incoming requests run [`Engine::prepare`] (prefix lookup, prefill or
+//!   reuse, pin) and **park in a per-cache-node queue**;
+//! * a wave runner drains a queue — after a small admission window
+//!   ([`BatchConfig::window_us`]) — into one *union* decode loop whose
+//!   batch is every parked request's samplers: one `Q[b·p,k] @ K_cᵀ` /
+//!   `P @ V_c` sweep per (layer, group) serves everyone;
+//! * requests that finish early **detach at step boundaries** (their rows
+//!   compact out of the decode GEMMs); requests arriving mid-wave for the
+//!   same node **join at the next step boundary** (their rows start at
+//!   decode position 0 via the backend's ragged
+//!   [`Backend::decode_multi`] positions) up to the width cap, so the
+//!   sweep stays amortized under sustained load.
+//!
+//! Each request keeps its own [`SamplerBatch`] (seeds, temperature, stop,
+//! max_tokens), and rows never mix in the kernels, so a coalesced
+//! request's completions are **bitwise-identical** to what it would get
+//! running alone (`tests/coalesce_parity.rs` pins this, including under
+//! mid-wave join and early detach). Requests that cannot coalesce — fused
+//! mode, cache disabled, no node — fall back to the classic solo path
+//! unchanged.
+//!
+//! The batcher runs on the engine thread (backends are not `Send`); it
+//! pulls work from a [`JobSource`] — the server's mpsc channel in
+//! production, a deterministic [`ScriptedSource`] in tests and benches.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kvcache::manager::SeqId;
+use crate::runtime::backend::Backend;
+use crate::runtime::models::DecodeMode;
+use crate::runtime::HostTensor;
+
+use super::engine::{wave_seed, Engine, Prepared};
+use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
+use super::sampler::SamplerBatch;
+
+/// How long the batcher sleeps when fully idle before re-checking for
+/// shutdown (no correctness impact — arrivals interrupt the wait).
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// Continuous-batching knobs. Defaults: window from the
+/// `BIFURCATED_BATCH_WINDOW_US` env var (0 when unset — coalesce whatever
+/// is already queued, never delay a lone request), width capped by the
+/// backend's largest batch bucket.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Admission window in microseconds: how long a freshly parked node
+    /// queue waits for more same-prefix arrivals before its wave launches.
+    pub window_us: u64,
+    /// Max union rows in one wave; 0 means the backend's largest bucket.
+    /// A single wave wider than the cap still runs alone (waves are never
+    /// split) — the cap only limits *additional* joins.
+    pub max_wave_rows: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { window_us: default_batch_window_us(), max_wave_rows: 0 }
+    }
+}
+
+/// The `BIFURCATED_BATCH_WINDOW_US` env default (how CI runs the whole
+/// suite with batching enabled); 0 when unset or unparsable.
+pub fn default_batch_window_us() -> u64 {
+    std::env::var("BIFURCATED_BATCH_WINDOW_US")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
+/// Delivers one request's outcome. Runs on the engine thread; the server
+/// wraps its reply channel in one of these.
+pub type Responder = Box<dyn FnOnce(Result<RequestResult>)>;
+
+/// One unit of work for the batcher.
+pub enum BatchJob<B: Backend> {
+    /// A generation request plus its reply path.
+    Generate(GenerationRequest, Responder),
+    /// An engine-thread side effect served at the next boundary without
+    /// waiting for in-flight waves (metrics snapshots).
+    Inspect(Box<dyn FnOnce(&Engine<B>)>),
+}
+
+/// Where the batcher pulls jobs from. `poll` is called at every step
+/// boundary (this is what makes mid-wave joins possible); `wait` blocks
+/// the idle batcher up to the admission-window deadline.
+pub trait JobSource<B: Backend> {
+    /// Non-blocking: drain everything currently available.
+    fn poll(&mut self) -> Vec<BatchJob<B>>;
+    /// Block up to `timeout` for one job; `None` on timeout.
+    fn wait(&mut self, timeout: Duration) -> Option<BatchJob<B>>;
+    /// True once no further jobs can ever arrive.
+    fn closed(&self) -> bool;
+}
+
+/// Deterministic [`JobSource`] for tests and benches: job `i` is released
+/// once `poll`/`wait` has been observed `at_poll` times. The batcher polls
+/// once per scheduling tick, so release points land at exact step
+/// boundaries of the wave loop — mid-wave joins without threads, clocks,
+/// or sleeps. Release points must be pushed in non-decreasing order.
+pub struct ScriptedSource<B: Backend> {
+    jobs: VecDeque<(usize, BatchJob<B>)>,
+    polls: usize,
+}
+
+impl<B: Backend> ScriptedSource<B> {
+    pub fn new() -> ScriptedSource<B> {
+        ScriptedSource { jobs: VecDeque::new(), polls: 0 }
+    }
+
+    /// Release `job` at the `at_poll`-th poll (0 = immediately available).
+    pub fn push(&mut self, at_poll: usize, job: BatchJob<B>) {
+        if let Some(&(last, _)) = self.jobs.back() {
+            assert!(at_poll >= last, "release points must be non-decreasing");
+        }
+        self.jobs.push_back((at_poll, job));
+    }
+}
+
+impl<B: Backend> Default for ScriptedSource<B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<B: Backend> JobSource<B> for ScriptedSource<B> {
+    fn poll(&mut self) -> Vec<BatchJob<B>> {
+        self.polls += 1;
+        let mut out = Vec::new();
+        while self.jobs.front().is_some_and(|&(at, _)| at <= self.polls) {
+            out.push(self.jobs.pop_front().unwrap().1);
+        }
+        out
+    }
+
+    fn wait(&mut self, _timeout: Duration) -> Option<BatchJob<B>> {
+        // Waiting counts as a poll round so future-scheduled jobs still
+        // arrive once the batcher runs out of nearer work.
+        self.polls += 1;
+        if self.jobs.front().is_some_and(|&(at, _)| at <= self.polls) {
+            return Some(self.jobs.pop_front().unwrap().1);
+        }
+        None
+    }
+
+    fn closed(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// One request's decode state across the batcher's waves.
+struct Pending<B: Backend> {
+    prep: Prepared<B>,
+    reply: Responder,
+    /// Index of the next solo-plan wave to start as a lane.
+    next_wave: usize,
+    completions: Vec<Completion>,
+    decode_steps: usize,
+    started: Option<Instant>,
+    peak_rows: usize,
+    coalesced: bool,
+}
+
+/// One request-wave's rows inside the union batch: its own sampler,
+/// sequence leases, feed tokens, and decode depth. A request has at most
+/// one live lane at a time (its waves run in order, like the solo path).
+struct Lane {
+    key: u64,
+    live: usize,
+    max_tokens: usize,
+    sampler: SamplerBatch,
+    tokens: Vec<i32>,
+    d_pos: usize,
+    steps: usize,
+    seq_ids: Vec<SeqId>,
+    /// Row offset in the union kd/vd tensors (valid between rebuilds).
+    r0: usize,
+}
+
+impl Lane {
+    /// The solo loop's exit condition, per lane.
+    fn done(&self) -> bool {
+        self.sampler.all_finished() || self.d_pos >= self.max_tokens
+    }
+}
+
+/// The running union wave over one cache node's shared context.
+struct ActiveWave<B: Backend> {
+    node: usize,
+    ctx: Rc<B::Ctx>,
+    m_c_len: usize,
+    mode: DecodeMode,
+    lanes: Vec<Lane>,
+    kd: HostTensor,
+    vd: HostTensor,
+    bucket: usize,
+    /// Lane composition changed since kd/vd were laid out.
+    dirty: bool,
+    /// Reusable step-assembly buffers (same no-per-step-allocation
+    /// discipline as the backend's decode scratch).
+    toks: Vec<i32>,
+    pos: Vec<usize>,
+}
+
+/// The continuous-batching coordinator. Owns the per-node queues and the
+/// union wave; borrows the engine on the engine thread.
+pub struct Batcher<'e, B: Backend> {
+    engine: &'e Engine<B>,
+    cfg: BatchConfig,
+    requests: BTreeMap<u64, Pending<B>>,
+    /// node -> request keys waiting to start their next lane (FIFO; a
+    /// multi-wave request's successor wave re-enters at the front).
+    queues: BTreeMap<usize, VecDeque<u64>>,
+    /// node -> admission deadline, for queues without a running wave.
+    deadlines: BTreeMap<usize, Instant>,
+    active: Option<ActiveWave<B>>,
+    next_key: u64,
+    ragged_ok: bool,
+    cap: usize,
+    /// Reusable per-step buffer of the lane keys touched by a step.
+    key_scratch: Vec<u64>,
+}
+
+impl<'e, B: Backend> Batcher<'e, B> {
+    pub fn new(engine: &'e Engine<B>, cfg: BatchConfig) -> Batcher<'e, B> {
+        let max_bucket = engine.scheduler.max_bucket();
+        let cap = if cfg.max_wave_rows == 0 {
+            max_bucket
+        } else {
+            cfg.max_wave_rows.min(max_bucket)
+        };
+        Batcher {
+            ragged_ok: engine.rt.supports_ragged_decode(),
+            engine,
+            cfg,
+            requests: BTreeMap::new(),
+            queues: BTreeMap::new(),
+            deadlines: BTreeMap::new(),
+            active: None,
+            next_key: 1,
+            cap,
+            key_scratch: Vec::new(),
+        }
+    }
+
+    /// Serve jobs until the source closes and every admitted request has
+    /// drained.
+    pub fn run(&mut self, source: &mut dyn JobSource<B>) {
+        loop {
+            for job in source.poll() {
+                self.admit(job);
+            }
+            if self.active.is_some() {
+                self.tick();
+                continue;
+            }
+            match self.next_due() {
+                Some((_, due)) => {
+                    let now = Instant::now();
+                    if due <= now || source.closed() {
+                        self.tick();
+                    } else if let Some(job) = source.wait(due - now) {
+                        self.admit(job);
+                    }
+                }
+                None => {
+                    if source.closed() {
+                        return;
+                    }
+                    if let Some(job) = source.wait(IDLE_WAIT) {
+                        self.admit(job);
+                    }
+                }
+            }
+        }
+    }
+
+    /// True while any admitted request is still in flight.
+    pub fn has_work(&self) -> bool {
+        !self.requests.is_empty()
+    }
+
+    /// Admit one job: prepare it, then park it on its cache node's queue
+    /// (coalescible) or serve it on the classic solo path right away.
+    pub fn admit(&mut self, job: BatchJob<B>) {
+        match job {
+            BatchJob::Inspect(f) => f(self.engine),
+            BatchJob::Generate(req, reply) => match self.engine.prepare(&req) {
+                Err(e) => reply(Err(e)),
+                Ok(prep) => {
+                    let coalescible = prep.node.is_some()
+                        && prep.mode == DecodeMode::Bifurcated
+                        && prep.shared_ctx.is_some();
+                    if !coalescible {
+                        // Solo fallback — the same serve path `generate`
+                        // composes.
+                        reply(self.engine.serve_prepared(prep));
+                        return;
+                    }
+                    let node = prep.node.unwrap();
+                    let key = self.next_key;
+                    self.next_key += 1;
+                    self.requests.insert(
+                        key,
+                        Pending {
+                            prep,
+                            reply,
+                            next_wave: 0,
+                            completions: Vec::new(),
+                            decode_steps: 0,
+                            started: None,
+                            peak_rows: 0,
+                            coalesced: false,
+                        },
+                    );
+                    self.queues.entry(node).or_default().push_back(key);
+                    let active_node = self.active.as_ref().map(|a| a.node);
+                    if active_node != Some(node) {
+                        let window = Duration::from_micros(self.cfg.window_us);
+                        self.deadlines.entry(node).or_insert_with(|| Instant::now() + window);
+                    }
+                }
+            },
+        }
+    }
+
+    /// One scheduling step: launch the next due wave when idle, otherwise
+    /// advance the running wave by one decode step (joins and detaches
+    /// happen at this boundary). Returns true while work remains.
+    pub fn tick(&mut self) -> bool {
+        if self.active.is_none() {
+            match self.next_due() {
+                Some((node, _)) => self.launch(node),
+                None => return self.has_work(),
+            }
+        }
+        self.step_active();
+        self.has_work()
+    }
+
+    /// Earliest (node, deadline) among queues waiting to launch. Queues
+    /// whose deadline entry is gone (requeued after a failed wave) count
+    /// as due immediately.
+    fn next_due(&self) -> Option<(usize, Instant)> {
+        let now = Instant::now();
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&node, _)| (node, self.deadlines.get(&node).copied().unwrap_or(now)))
+            .min_by_key(|&(_, due)| due)
+    }
+
+    /// Open a union wave for `node`; the join phase of the first step
+    /// pulls parked requests in.
+    fn launch(&mut self, node: usize) {
+        self.deadlines.remove(&node);
+        let (ctx, m_c_len) = {
+            let q = self.queues.get(&node).expect("launch of unknown node");
+            let key = *q.front().expect("launch of empty queue");
+            let prep = &self.requests[&key].prep;
+            (Rc::clone(prep.shared_ctx.as_ref().expect("parked without ctx")), prep.m_c_len)
+        };
+        // The union's mode is decided on the AGGREGATED width across every
+        // parked request — the workload the FAQ-4 switch should actually
+        // judge — with the node's context resident.
+        let agg_rows: usize = self.queues[&node]
+            .iter()
+            .map(|k| {
+                let p = &self.requests[k];
+                p.prep.waves.get(p.next_wave).map_or(0, |w| w.live)
+            })
+            .sum();
+        let mode = self.engine.scheduler.pick_wave_mode(agg_rows.max(1), m_c_len, m_c_len);
+        debug_assert_eq!(mode, DecodeMode::Bifurcated, "resident-node waves decode bifurcated");
+        let (kd, vd) = self.engine.rt.zero_decode_cache(1);
+        self.engine.metrics.observe_wave_launch();
+        self.active = Some(ActiveWave {
+            node,
+            ctx,
+            m_c_len,
+            mode,
+            lanes: Vec::new(),
+            kd,
+            vd,
+            bucket: 1,
+            dirty: true,
+            toks: Vec::new(),
+            pos: Vec::new(),
+        });
+    }
+
+    /// Advance the union wave one decode step: join parked lanes, retire
+    /// finished ones, rebuild the union caches if the composition changed,
+    /// then run one (possibly ragged) decode step for everyone.
+    fn step_active(&mut self) {
+        // Join/retire until stable: joining can surface lanes that finish
+        // on their first (prefix-logits) draw, and retiring those frees
+        // width for the next parked request or a multi-wave successor.
+        loop {
+            self.join_ready();
+            if !self.retire_finished() {
+                break;
+            }
+            if self.active.is_none() {
+                return;
+            }
+        }
+        {
+            let Some(active) = self.active.as_ref() else { return };
+            if active.lanes.is_empty() {
+                // Nothing joinable (every lane start failed); close the
+                // wave so a non-empty queue relaunches cleanly.
+                let node = active.node;
+                self.active = None;
+                let empty = match self.queues.get(&node) {
+                    Some(q) => q.is_empty(),
+                    None => true,
+                };
+                if empty {
+                    self.queues.remove(&node);
+                }
+                return;
+            }
+        }
+        let (step, total, upload_before) = {
+            let active = self.active.as_mut().expect("active wave vanished");
+            if active.dirty {
+                Self::rebuild_caches(self.engine, active);
+            }
+            let total: usize = active.lanes.iter().map(|l| l.live).sum();
+            active.toks.clear();
+            active.pos.clear();
+            for lane in &active.lanes {
+                active.toks.extend_from_slice(&lane.tokens);
+                active.pos.extend(std::iter::repeat(lane.d_pos).take(lane.live));
+            }
+            let upload_before = self.engine.rt.upload_bytes();
+            let step = self
+                .engine
+                .rt
+                .decode_multi(
+                    active.mode,
+                    active.bucket,
+                    &active.toks,
+                    &active.pos,
+                    &active.ctx,
+                    &active.kd,
+                    &active.vd,
+                )
+                .with_context(|| format!("coalesced decode step over node {}", active.node));
+            (step, total, upload_before)
+        };
+        let out = match step {
+            Ok(o) => o,
+            Err(e) => {
+                self.fail_active(e);
+                return;
+            }
+        };
+        let vocab = self.engine.rt.cfg().vocab;
+        let (sweep_bytes, shared) = {
+            let active = self.active.as_mut().expect("active wave vanished");
+            let logits = out.logits.f32s();
+            let shared = active.lanes.len() > 1;
+            let mut r0 = 0usize;
+            for lane in active.lanes.iter_mut() {
+                debug_assert_eq!(lane.r0, r0, "assembly order must match the cache layout");
+                let rows = &logits[r0 * vocab..(r0 + lane.live) * vocab];
+                lane.tokens = lane.sampler.step(rows);
+                lane.d_pos += 1;
+                lane.steps += 1;
+                r0 += lane.live;
+            }
+            active.kd = out.kd;
+            active.vd = out.vd;
+            // One context sweep served `total` rows this step — the
+            // amortized quantity (`benches/coalesce.rs` divides it by the
+            // tokens generated).
+            let c = self.engine.rt.cfg();
+            let sweep_bytes = 2 * c.l * c.g * active.m_c_len * c.k * 4;
+            self.key_scratch.clear();
+            self.key_scratch.extend(active.lanes.iter().map(|l| l.key));
+            (sweep_bytes, shared)
+        };
+        let step_bytes = self.engine.rt.upload_bytes() - upload_before;
+        self.engine.metrics.observe_wave_step(total, sweep_bytes, step_bytes);
+        for key in &self.key_scratch {
+            if let Some(p) = self.requests.get_mut(key) {
+                p.peak_rows = p.peak_rows.max(total);
+                if shared {
+                    p.coalesced = true;
+                }
+            }
+        }
+        self.retire_finished();
+    }
+
+    /// Pull parked requests (and multi-wave successors) into the union
+    /// while width allows. Joining a wave that has already stepped needs
+    /// ragged decode support; every backend supports joins before the
+    /// first step (all lanes still at position 0).
+    fn join_ready(&mut self) {
+        let Some(node) = self.active.as_ref().map(|a| a.node) else { return };
+        loop {
+            let candidate = {
+                let active = self.active.as_ref().unwrap();
+                let Some(&key) = self.queues.get(&node).and_then(|q| q.front()) else {
+                    break;
+                };
+                let total: usize = active.lanes.iter().map(|l| l.live).sum();
+                let p = &self.requests[&key];
+                let wave = p.prep.waves[p.next_wave];
+                let fits = active.lanes.is_empty()
+                    || ((self.ragged_ok || active.lanes.iter().all(|l| l.d_pos == 0))
+                        && total + wave.live <= self.cap);
+                if fits {
+                    Some(key)
+                } else {
+                    None
+                }
+            };
+            let Some(key) = candidate else { break };
+            self.queues.get_mut(&node).expect("queue vanished").pop_front();
+            if let Some(lane) = self.start_lane(key) {
+                let mid_wave = {
+                    let active = self.active.as_ref().unwrap();
+                    active.lanes.iter().any(|l| l.d_pos > 0)
+                };
+                if mid_wave {
+                    self.engine.metrics.observe_mid_wave_join();
+                }
+                let active = self.active.as_mut().unwrap();
+                active.lanes.push(lane);
+                active.dirty = true;
+            }
+            // start_lane failure: the request has been failed and removed;
+            // keep draining the queue.
+        }
+    }
+
+    /// Start the next wave of request `key` as a fresh lane: sequences
+    /// leased, sampler seeded with the solo path's per-wave seed, first
+    /// tokens drawn from the prefix-end logits — exactly the solo wave
+    /// bring-up. On lease failure the request is failed and removed;
+    /// returns None.
+    fn start_lane(&mut self, key: u64) -> Option<Lane> {
+        let vocab = self.engine.rt.cfg().vocab;
+        let (wave, lease_ctx, max_tokens, seed, params) = {
+            let p = self.requests.get_mut(&key).expect("lane for unknown request");
+            let wi = p.next_wave;
+            let wave = p.prep.waves[wi];
+            p.next_wave += 1;
+            if p.started.is_none() {
+                p.started = Some(Instant::now());
+            }
+            (
+                wave,
+                p.prep.lease_ctx,
+                p.prep.max_tokens,
+                wave_seed(p.prep.id, wi),
+                SamplingParams { max_tokens: p.prep.max_tokens, ..p.prep.params.clone() },
+            )
+        };
+        let seq_ids = match self.engine.lease_sequences(lease_ctx, wave.live, max_tokens) {
+            Ok(ids) => ids,
+            Err(e) => {
+                self.fail_request(key, e);
+                return None;
+            }
+        };
+        let mut sampler = SamplerBatch::new(wave.live, params, vocab, seed);
+        let tokens = sampler.first_tokens(&self.requests[&key].prep.pre_logits);
+        Some(Lane {
+            key,
+            live: wave.live,
+            max_tokens,
+            sampler,
+            tokens,
+            d_pos: 0,
+            steps: 0,
+            seq_ids,
+            r0: 0,
+        })
+    }
+
+    /// Retire every finished lane: return its sequences, collect its
+    /// completions, queue the request's next wave or complete it. Returns
+    /// whether any lane retired (the union caches are then dirty). Closes
+    /// the wave when nothing is left to run or join.
+    fn retire_finished(&mut self) -> bool {
+        let node = match self.active.as_ref() {
+            Some(a) => a.node,
+            None => return false,
+        };
+        let mut retired: Vec<Lane> = Vec::new();
+        {
+            let active = self.active.as_mut().expect("checked above");
+            let mut i = 0;
+            while i < active.lanes.len() {
+                if active.lanes[i].done() {
+                    retired.push(active.lanes.remove(i));
+                    active.dirty = true;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let any = !retired.is_empty();
+        for lane in retired {
+            for s in lane.seq_ids {
+                self.engine.kv.borrow_mut().finish_sequence(s);
+            }
+            let more_waves = {
+                let p = self.requests.get_mut(&lane.key).expect("lane without request");
+                p.decode_steps += lane.steps;
+                let tok = &self.engine.tokenizer;
+                p.completions.extend(lane.sampler.into_completions(|ids| tok.decode(ids)));
+                p.next_wave < p.prep.waves.len()
+            };
+            if more_waves {
+                // The successor wave goes to the queue FRONT so a long
+                // request keeps its place ahead of later arrivals.
+                self.queues.entry(node).or_default().push_front(lane.key);
+            } else {
+                self.complete(lane.key);
+            }
+        }
+        let close = {
+            let active = self.active.as_ref().expect("checked above");
+            let queue_empty = match self.queues.get(&node) {
+                Some(q) => q.is_empty(),
+                None => true,
+            };
+            active.lanes.is_empty() && queue_empty
+        };
+        if close {
+            self.active = None;
+            self.queues.remove(&node);
+        }
+        any
+    }
+
+    /// Deliver a finished request's result and release its resources.
+    fn complete(&mut self, key: u64) {
+        let p = self.requests.remove(&key).expect("complete of unknown request");
+        let decode_ms = p.started.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e3);
+        let timing = Timing {
+            prefill_ms: p.prep.prefill_ms,
+            decode_ms,
+            decode_steps: p.decode_steps,
+            waves: p.prep.waves.len(),
+            upload_bytes: p.prep.ctx_upload_bytes,
+            // Per-step uploads are shared by the whole wave and accounted
+            // once, under /metrics `batch.step_upload_bytes`.
+            step_upload_bytes: 0,
+            cache_hit_tokens: p.prep.hit_len,
+            coalesced_peak_rows: p.peak_rows,
+        };
+        let generated: usize = p.completions.iter().map(|c| c.tokens.len()).sum();
+        let result = RequestResult {
+            id: p.prep.id,
+            completions: p.completions,
+            timing,
+            mode_used: p.prep.mode,
+        };
+        self.engine.metrics.observe_request(&result.timing, result.completions.len());
+        self.engine.metrics.observe_batched_request(p.coalesced, generated);
+        self.engine.finish_prepared(p.prep);
+        (p.reply)(Ok(result));
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// Fail one request (lease exhaustion at lane start): release its
+    /// resources and reply with the error.
+    fn fail_request(&mut self, key: u64, err: anyhow::Error) {
+        let p = self.requests.remove(&key).expect("fail of unknown request");
+        self.engine.finish_prepared(p.prep);
+        (p.reply)(Err(err));
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// A decode step failed: every lane in the union fails with it (their
+    /// sequences returned, their requests answered), the wave closes, and
+    /// still-parked requests stay queued for a fresh launch.
+    fn fail_active(&mut self, err: anyhow::Error) {
+        let Some(active) = self.active.take() else { return };
+        let msg = format!("{err:#}");
+        for lane in active.lanes {
+            for s in lane.seq_ids {
+                self.engine.kv.borrow_mut().finish_sequence(s);
+            }
+            if let Some(p) = self.requests.remove(&lane.key) {
+                self.engine.finish_prepared(p.prep);
+                (p.reply)(Err(anyhow::anyhow!("coalesced wave failed: {msg}")));
+            }
+        }
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// Re-lay the union decode caches after a composition change: a fresh
+    /// zeroed `[l, bucket', g, m_d_max, k]` pair sized to the new width,
+    /// with every surviving lane's rows copied over (rows a lane has not
+    /// written yet are zero on both sides). Assigns each lane its new row
+    /// offset — the same offsets step assembly uses — so a lane's rows
+    /// stay bitwise the caches a solo run would carry.
+    fn rebuild_caches(engine: &Engine<B>, active: &mut ActiveWave<B>) {
+        let total: usize = active.lanes.iter().map(|l| l.live).sum();
+        let bucket = engine
+            .rt
+            .bucket_for(total)
+            .expect("union width exceeds the largest bucket");
+        let (mut kd, mut vd) = engine.rt.zero_decode_cache(bucket);
+        let c = engine.rt.cfg();
+        let chunk = c.g * c.m_d_max * c.k; // one batch row within a layer
+        {
+            let old_bucket = active.bucket;
+            let ksrc = active.kd.f32s();
+            let vsrc = active.vd.f32s();
+            let kdst = kd.f32s_mut();
+            let vdst = vd.f32s_mut();
+            let mut new_r0 = 0usize;
+            for lane in active.lanes.iter_mut() {
+                if lane.d_pos > 0 {
+                    for li in 0..c.l {
+                        let src = (li * old_bucket + lane.r0) * chunk;
+                        let dst = (li * bucket + new_r0) * chunk;
+                        let n = lane.live * chunk;
+                        kdst[dst..dst + n].copy_from_slice(&ksrc[src..src + n]);
+                        vdst[dst..dst + n].copy_from_slice(&vsrc[src..src + n]);
+                    }
+                }
+                lane.r0 = new_r0;
+                new_r0 += lane.live;
+            }
+        }
+        active.kd = kd;
+        active.vd = vd;
+        active.bucket = bucket;
+        active.dirty = false;
+    }
+}

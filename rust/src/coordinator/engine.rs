@@ -11,6 +11,19 @@
 //! Cold bifurcated requests populate the cache, whose nodes are pinned
 //! while in use and LRU-evicted under KV-capacity pressure.
 //!
+//! Request execution is split into three phases so the continuous-batching
+//! coordinator ([`crate::coordinator::batcher`]) can interleave decode
+//! steps from *different* requests over one shared context:
+//!
+//! * [`Engine::prepare`] — tokenize, prefix lookup, prefill/extend, KV
+//!   registration, context upload: everything up to the first decode step,
+//!   captured in a [`Prepared`];
+//! * [`Engine::run_prepared`] / [`Engine::decode_wave`] — the solo decode
+//!   loop (`generate` composes these; the batcher owns its own step-level
+//!   loop over [`Backend::decode_multi`] instead);
+//! * [`Engine::finish_prepared`] — unpin cache nodes, release the
+//!   request-owned context registration.
+//!
 //! The engine is generic over [`Backend`], so the same scheduling, KV
 //! accounting, and sampling logic drives both the native CPU backend and
 //! the PJRT artifact runtime.
@@ -20,18 +33,18 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::kvcache::block::AllocError;
 use crate::kvcache::manager::{ContextId, KvManager, SeqId};
 use crate::prefixcache::PrefixCache;
 use crate::runtime::backend::{Backend, ContextView};
 use crate::runtime::models::DecodeMode;
 use crate::runtime::native::NativeBackend;
-use crate::runtime::TokenizerInfo;
+use crate::runtime::{HostTensor, TokenizerInfo};
 use crate::util::json::Json;
 
-use super::request::{Completion, GenerationRequest, RequestResult, Timing};
+use super::batcher::BatchConfig;
+use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 use super::sampler::SamplerBatch;
-use super::scheduler::{Scheduler, SchedulerConfig};
+use super::scheduler::{Scheduler, SchedulerConfig, Wave};
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -51,6 +64,9 @@ pub struct EngineConfig {
     /// env var when set. Completions are bitwise-identical at every
     /// setting.
     pub threads: usize,
+    /// Continuous-batching knobs (admission window, wave width cap) the
+    /// server's batcher runs with. The solo `generate` path ignores them.
+    pub batching: BatchConfig,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +78,7 @@ impl Default for EngineConfig {
             prefix_cache_entries: 16,
             prefix_cache_bytes: 0,
             threads: 0,
+            batching: BatchConfig::default(),
         }
     }
 }
@@ -73,6 +90,60 @@ pub struct Engine<B: Backend> {
     pub kv: std::cell::RefCell<KvManager>,
     pub cache: std::cell::RefCell<PrefixCache<B>>,
     pub metrics: super::metrics::Metrics,
+    /// Continuous-batching configuration the server-side batcher reads.
+    pub batching: BatchConfig,
+}
+
+/// The sampler seed for wave `wi` of request `id` — shared by the solo
+/// wave loop and the batcher's lanes so a coalesced request draws exactly
+/// the tokens it would draw running alone.
+pub fn wave_seed(id: u64, wi: usize) -> u64 {
+    id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64)
+}
+
+/// A request past its context phase: prompt tokenized, prefix cache
+/// consulted, prefill/extend done, capacity registered, shared context
+/// resident (bifurcated modes). Decode it with [`Engine::run_prepared`]
+/// (solo) or lane by lane through the batcher, then always close it out
+/// with [`Engine::finish_prepared`].
+pub struct Prepared<B: Backend> {
+    pub id: u64,
+    pub params: SamplingParams,
+    /// Per-request token cap, already clamped to the model's m_d_max.
+    pub max_tokens: usize,
+    pub m_c_len: usize,
+    /// Prompt tokens served from the prefix cache (0 on a miss).
+    pub hit_len: usize,
+    /// Decode mode the request would use on its own (the batcher re-judges
+    /// coalesced waves on the aggregated width via
+    /// [`Scheduler::pick_wave_mode`]).
+    pub mode: DecodeMode,
+    /// Solo wave plan for `params.n` — the batcher's lane sequence.
+    pub waves: Vec<Wave>,
+    /// Next-token logits at the prefix end (every sampler's first draw).
+    pub pre_logits: Vec<f32>,
+    pub kc: Rc<HostTensor>,
+    pub vc: Rc<HostTensor>,
+    /// Resident shared-layout context for bifurcated decode; `None` means
+    /// fused waves re-materialize replicas per wave.
+    pub shared_ctx: Option<Rc<B::Ctx>>,
+    /// Context registration decode sequences lease against.
+    pub lease_ctx: ContextId,
+    /// Set when `lease_ctx` is request-owned (released by
+    /// [`Engine::finish_prepared`]); cache-node-backed requests borrow the
+    /// node's `Cached`-class registration instead.
+    owned_active: Option<ContextId>,
+    /// The pinned prefix-cache node backing `shared_ctx` — the coalescing
+    /// key continuous batching groups concurrent requests by.
+    pub node: Option<usize>,
+    /// Every node pinned on this request's behalf (hit node, extension
+    /// source, inserted node); unpinned by [`Engine::finish_prepared`].
+    pins: Vec<usize>,
+    pub prefill_ms: f64,
+    /// Context K_c/V_c bytes uploaded during preparation.
+    pub ctx_upload_bytes: usize,
+    /// Backend upload counter before preparation (for step accounting).
+    pub upload_before: usize,
 }
 
 impl Engine<NativeBackend> {
@@ -107,6 +178,7 @@ impl<B: Backend> Engine<B> {
                 cfg.prefix_cache_bytes,
             )),
             metrics: super::metrics::Metrics::default(),
+            batching: cfg.batching,
         }
     }
 
@@ -166,14 +238,21 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    fn start_sequence_evicting(&self, ctx: ContextId, m_d_cap: usize) -> Result<SeqId, AllocError> {
+    /// Lease one wave's worth of sequences on `ctx`, evicting prefix-cache
+    /// nodes and retrying the whole group under capacity pressure.
+    pub(crate) fn lease_sequences(
+        &self,
+        ctx: ContextId,
+        count: usize,
+        m_d_cap: usize,
+    ) -> Result<Vec<SeqId>> {
         loop {
-            let res = self.kv.borrow_mut().start_sequence(ctx, m_d_cap);
+            let res = self.kv.borrow_mut().lease_sequences(ctx, count, m_d_cap);
             match res {
-                Ok(s) => return Ok(s),
+                Ok(ids) => return Ok(ids),
                 Err(e) => {
                     if !self.evict_one() {
-                        return Err(e);
+                        return Err(anyhow::anyhow!("KV capacity: {e}"));
                     }
                 }
             }
@@ -208,35 +287,54 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// Serve one request: reuse or prefill the shared context, then decode
-    /// all n samplers (in waves if n exceeds the largest compiled bucket).
+    /// Serve one request end to end on the solo path: prepare, decode all
+    /// n samplers in waves, clean up. The batcher composes the same phases
+    /// with its own step-level loop instead.
     pub fn generate(&self, req: &GenerationRequest) -> Result<RequestResult> {
-        let mut pins: Vec<usize> = Vec::new();
-        let result = self.generate_pinned(req, &mut pins);
-        {
-            let mut cache = self.cache.borrow_mut();
-            for id in pins {
-                cache.unpin(id);
+        match self.prepare(req) {
+            Ok(prep) => self.serve_prepared(prep),
+            Err(e) => {
+                debug_assert!(self.kv.borrow().check_invariants().is_ok());
+                Err(e)
             }
         }
-        if let Ok(r) = &result {
+    }
+
+    /// Decode a prepared request solo and close it out — observing the
+    /// request metrics and invariants exactly once. Shared by `generate`
+    /// and the batcher's fallback for non-coalescible requests.
+    pub fn serve_prepared(&self, prep: Prepared<B>) -> Result<RequestResult> {
+        let res = self.run_prepared(&prep);
+        self.finish_prepared(prep);
+        if let Ok(r) = &res {
             self.metrics.observe_request(&r.timing, r.completions.len());
         }
         debug_assert!(self.kv.borrow().check_invariants().is_ok());
-        result
+        res
     }
 
-    /// The request body; any cache node pushed onto `pins` stays pinned
-    /// (eviction-proof) until the caller unpins after this returns —
-    /// including on every error path.
-    fn generate_pinned(
-        &self,
-        req: &GenerationRequest,
-        pins: &mut Vec<usize>,
-    ) -> Result<RequestResult> {
+    /// The context phase: tokenize, prefix-cache lookup, prefill or
+    /// extend, capacity registration, shared-context upload. Any node
+    /// pinned along the way stays pinned (eviction-proof) inside the
+    /// returned [`Prepared`] until [`Engine::finish_prepared`] — on error
+    /// every pin taken so far is released before returning.
+    pub fn prepare(&self, req: &GenerationRequest) -> Result<Prepared<B>> {
+        let mut pins: Vec<usize> = Vec::new();
+        match self.prepare_pinned(req, &mut pins) {
+            Ok(p) => Ok(p),
+            Err(e) => {
+                let mut cache = self.cache.borrow_mut();
+                for id in pins {
+                    cache.unpin(id);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn prepare_pinned(&self, req: &GenerationRequest, pins: &mut Vec<usize>) -> Result<Prepared<B>> {
         let params = &req.params;
         anyhow::ensure!(params.n >= 1, "n must be >= 1");
-        let vocab = self.rt.cfg().vocab;
         let max_tokens = params.max_tokens.min(self.rt.cfg().m_d_max);
         let prompt_ids = self.tokenize_prompt(&req.prompt)?;
         let m_c_len = prompt_ids.len();
@@ -261,10 +359,11 @@ impl<B: Backend> Engine<B> {
         // ---- context phase: reuse, extend, or prefill from scratch ----
         let t0 = Instant::now();
         let pre_logits: Vec<f32>;
-        let kc: Rc<crate::runtime::HostTensor>;
-        let vc: Rc<crate::runtime::HostTensor>;
+        let kc: Rc<HostTensor>;
+        let vc: Rc<HostTensor>;
         let mut shared_ctx: Option<Rc<B::Ctx>> = None;
         let mut cached_lease: Option<ContextId> = None;
+        let mut node: Option<usize> = None;
 
         if full_hit {
             // warm: no prefill, and (bifurcated) no upload either
@@ -276,6 +375,7 @@ impl<B: Backend> Engine<B> {
             if mode == DecodeMode::Bifurcated {
                 shared_ctx = Some(Rc::clone(&e.ctx));
                 cached_lease = Some(e.ctx_id);
+                node = Some(hit.as_ref().unwrap().node);
             }
         } else {
             let pre = if hit_len > 0 {
@@ -311,7 +411,7 @@ impl<B: Backend> Engine<B> {
                     };
                     ctx_upload_bytes += ctx.bytes();
                     let ctx = Rc::new(ctx);
-                    let node = self.cache.borrow_mut().insert(
+                    let new_node = self.cache.borrow_mut().insert(
                         &prompt_ids,
                         pre_logits.clone(),
                         Rc::clone(&kc),
@@ -319,10 +419,11 @@ impl<B: Backend> Engine<B> {
                         Rc::clone(&ctx),
                         ctx_id,
                     );
-                    self.cache.borrow_mut().pin(node);
-                    pins.push(node);
+                    self.cache.borrow_mut().pin(new_node);
+                    pins.push(new_node);
                     shared_ctx = Some(ctx);
                     cached_lease = Some(ctx_id);
+                    node = Some(new_node);
                 }
             }
         }
@@ -351,111 +452,138 @@ impl<B: Backend> Engine<B> {
                 id
             }
         };
-        // Any error exit below must release the active registration (cache
-        // nodes stay — they are owned by the cache, not the request).
-        let release_owned = || {
-            if let Some(id) = owned_active {
-                self.kv.borrow_mut().release_context(id);
-            }
-        };
 
+        Ok(Prepared {
+            id: req.id,
+            params: params.clone(),
+            max_tokens,
+            m_c_len,
+            hit_len,
+            mode,
+            waves,
+            pre_logits,
+            kc,
+            vc,
+            shared_ctx,
+            lease_ctx,
+            owned_active,
+            node,
+            pins: std::mem::take(pins),
+            prefill_ms,
+            ctx_upload_bytes,
+            upload_before,
+        })
+    }
+
+    /// One solo decode wave: lease sequences, run the step loop to
+    /// completion, return the completions and the number of steps taken.
+    /// Sequences are returned to the KV manager even on a failed wave.
+    pub(crate) fn decode_wave(
+        &self,
+        prep: &Prepared<B>,
+        wi: usize,
+        wave: Wave,
+        ctx: &B::Ctx,
+    ) -> Result<(Vec<Completion>, usize)> {
+        let vocab = self.rt.cfg().vocab;
+        let seq_ids = self.lease_sequences(prep.lease_ctx, wave.live, prep.max_tokens)?;
+        let mut sampler = SamplerBatch::new(
+            wave.live,
+            SamplingParams { max_tokens: prep.max_tokens, ..prep.params.clone() },
+            vocab,
+            wave_seed(prep.id, wi),
+        );
+        let mut tokens = sampler.first_tokens(&prep.pre_logits);
+        let (mut kd, mut vd) = self.rt.zero_decode_cache(wave.bucket);
+        let mut d_pos = 0usize;
+        let mut steps = 0usize;
+        let wave_run = (|| -> Result<()> {
+            while !sampler.all_finished() && d_pos < prep.max_tokens {
+                let out = self
+                    .rt
+                    .decode(prep.mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
+                    .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
+                let live_logits = &out.logits.f32s()[..wave.live * vocab];
+                tokens = sampler.step(live_logits);
+                kd = out.kd;
+                vd = out.vd;
+                d_pos += 1;
+                steps += 1;
+            }
+            Ok(())
+        })();
+        // KV leases are returned even on a failed wave
+        for s in seq_ids {
+            self.kv.borrow_mut().finish_sequence(s);
+        }
+        wave_run?;
+        let tok = &self.tokenizer;
+        Ok((sampler.into_completions(|ids| tok.decode(ids)), steps))
+    }
+
+    /// The solo decode phase: run every planned wave back to back. Errors
+    /// bubble with all sequences already returned; the caller still owes a
+    /// [`Engine::finish_prepared`].
+    pub fn run_prepared(&self, prep: &Prepared<B>) -> Result<RequestResult> {
         let t1 = Instant::now();
-        let mut completions: Vec<Completion> = Vec::with_capacity(params.n);
+        let mut ctx_upload_bytes = prep.ctx_upload_bytes;
+        let mut completions: Vec<Completion> = Vec::with_capacity(prep.params.n);
         let mut decode_steps = 0usize;
-        for (wi, wave) in waves.iter().enumerate() {
+        for (wi, wave) in prep.waves.iter().enumerate() {
             let ctx_storage; // keep fused uploads alive through the wave
-            let ctx: &B::Ctx = match &shared_ctx {
+            let ctx: &B::Ctx = match &prep.shared_ctx {
                 Some(c) => c,
                 None => {
                     // fused baseline: re-materialize the broadcast per wave
-                    let kc_rep = kc.broadcast_at(1, wave.bucket);
-                    let vc_rep = vc.broadcast_at(1, wave.bucket);
-                    match self.rt.upload_context(&kc_rep, &vc_rep, m_c_len) {
-                        Ok(c) => {
-                            ctx_upload_bytes += c.bytes();
-                            ctx_storage = c;
-                            &ctx_storage
-                        }
-                        Err(e) => {
-                            release_owned();
-                            return Err(e);
-                        }
-                    }
+                    let kc_rep = prep.kc.broadcast_at(1, wave.bucket);
+                    let vc_rep = prep.vc.broadcast_at(1, wave.bucket);
+                    let c = self.rt.upload_context(&kc_rep, &vc_rep, prep.m_c_len)?;
+                    ctx_upload_bytes += c.bytes();
+                    ctx_storage = c;
+                    &ctx_storage
                 }
             };
-
-            // lease sequences; on capacity exhaustion (after eviction has
-            // been tried) roll back cleanly
-            let mut seq_ids = Vec::with_capacity(wave.live);
-            for _ in 0..wave.live {
-                match self.start_sequence_evicting(lease_ctx, max_tokens) {
-                    Ok(s) => seq_ids.push(s),
-                    Err(e) => {
-                        for s in seq_ids {
-                            self.kv.borrow_mut().finish_sequence(s);
-                        }
-                        release_owned();
-                        return Err(anyhow::anyhow!("KV capacity: {e}"));
-                    }
-                }
-            }
-
-            let mut sampler = SamplerBatch::new(
-                wave.live,
-                super::request::SamplingParams { max_tokens, ..params.clone() },
-                vocab,
-                req.id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64),
-            );
-            let mut tokens = sampler.first_tokens(&pre_logits);
-            let (mut kd, mut vd) = self.rt.zero_decode_cache(wave.bucket);
-            let mut d_pos = 0usize;
-            let wave_run = (|| -> Result<()> {
-                while !sampler.all_finished() && d_pos < max_tokens {
-                    let out = self
-                        .rt
-                        .decode(mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
-                        .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
-                    let live_logits = &out.logits.f32s()[..wave.live * vocab];
-                    tokens = sampler.step(live_logits);
-                    kd = out.kd;
-                    vd = out.vd;
-                    d_pos += 1;
-                    decode_steps += 1;
-                }
-                Ok(())
-            })();
-            // KV leases are returned even on a failed wave
-            for s in seq_ids {
-                self.kv.borrow_mut().finish_sequence(s);
-            }
-            if let Err(e) = wave_run {
-                release_owned();
-                return Err(e);
-            }
-            let tok = &self.tokenizer;
-            completions.extend(sampler.into_completions(|ids| tok.decode(ids)));
+            let (comps, steps) = self.decode_wave(prep, wi, *wave, ctx)?;
+            completions.extend(comps);
+            decode_steps += steps;
         }
-        release_owned();
 
         let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
         let timing = Timing {
-            prefill_ms,
+            prefill_ms: prep.prefill_ms,
             decode_ms,
             decode_steps,
-            waves: waves.len(),
+            waves: prep.waves.len(),
             upload_bytes: ctx_upload_bytes,
-            step_upload_bytes: (self.rt.upload_bytes() - upload_before)
+            step_upload_bytes: (self.rt.upload_bytes() - prep.upload_before)
                 .saturating_sub(ctx_upload_bytes),
-            cache_hit_tokens: hit_len,
+            cache_hit_tokens: prep.hit_len,
+            coalesced_peak_rows: 0,
         };
 
-        Ok(RequestResult { id: req.id, completions, timing, mode_used: mode })
+        Ok(RequestResult { id: prep.id, completions, timing, mode_used: prep.mode })
+    }
+
+    /// Close out a prepared request: release the request-owned context
+    /// registration (all sequences must already be finished) and unpin
+    /// every cache node pinned on the request's behalf. Must run exactly
+    /// once per successful [`Engine::prepare`], on every path.
+    pub fn finish_prepared(&self, prep: Prepared<B>) {
+        if let Some(id) = prep.owned_active {
+            self.kv.borrow_mut().release_context(id);
+        }
+        let mut cache = self.cache.borrow_mut();
+        for id in &prep.pins {
+            cache.unpin(*id);
+        }
     }
 }
 
 // Engine-over-native coverage lives in tests/parity_native.rs and
 // tests/prefix_cache.rs (warm-vs-cold parity, eviction); error-path
-// rollback is exercised by tests/engine_errors.rs. The PJRT path is
-// exercised by tests/integration_engine.rs (pjrt feature). The pure
-// pieces (scheduler, sampler, ranker, kv manager, prefix cache) are
-// unit-tested in their own modules.
+// rollback is exercised by tests/engine_errors.rs; the prepare/decode/
+// finish split under coalescing by tests/coalesce_parity.rs and
+// tests/batcher.rs. The PJRT path is exercised by
+// tests/integration_engine.rs (pjrt feature). The pure pieces (scheduler,
+// sampler, ranker, kv manager, prefix cache) are unit-tested in their own
+// modules.

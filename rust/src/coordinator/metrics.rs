@@ -1,4 +1,6 @@
-//! Serving metrics: request counters + latency histograms.
+//! Serving metrics: request counters + latency histograms, plus the
+//! continuous-batching wave/coalescing counters the batcher feeds
+//! (`/metrics` serves them under `"batch"`).
 
 use std::cell::RefCell;
 
@@ -21,6 +23,38 @@ struct Inner {
     prefill_ms: Histogram,
     per_step_ms: Histogram,
     total_ms: Histogram,
+    batch: BatchCounters,
+}
+
+/// Continuous-batching counters: how often the context sweep was actually
+/// amortized across HTTP calls, and by how much.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BatchCounters {
+    /// Shared decode waves launched (one per cache-node drain).
+    pub waves: usize,
+    /// Decode steps executed by shared waves (== context sweeps paid).
+    pub wave_steps: usize,
+    /// Σ over steps of the rows decoded that step (mean width = rows/steps).
+    pub wave_rows: usize,
+    /// Widest single step any wave ran.
+    pub peak_rows: usize,
+    /// Requests served through the batcher at all.
+    pub batched_requests: usize,
+    /// The subset that shared at least one decode step with another
+    /// request — true cross-request coalescing.
+    pub coalesced_requests: usize,
+    /// Requests that joined a wave after it had already stepped.
+    pub mid_wave_joins: usize,
+    /// Context K_c/V_c bytes read by wave decode steps (one sweep per
+    /// step regardless of width — the amortized quantity).
+    pub ctx_sweep_bytes: usize,
+    /// Tokens sampled by wave-served requests (the denominator of
+    /// context-bytes-read per token).
+    pub generated_tokens: usize,
+    /// Per-step token/cache upload bytes paid by shared waves (charged
+    /// once per wave step, not per request — see the README metrics
+    /// reference).
+    pub step_upload_bytes: usize,
 }
 
 impl Metrics {
@@ -39,8 +73,46 @@ impl Metrics {
         m.total_ms.record(timing.total_ms());
     }
 
+    /// One shared-wave launch.
+    pub fn observe_wave_launch(&self) {
+        self.inner.borrow_mut().batch.waves += 1;
+    }
+
+    /// One shared-wave decode step over `rows` live samplers that swept
+    /// `ctx_bytes` of context K_c/V_c and uploaded `step_bytes` of
+    /// per-step state.
+    pub fn observe_wave_step(&self, rows: usize, ctx_bytes: usize, step_bytes: usize) {
+        let mut m = self.inner.borrow_mut();
+        m.batch.wave_steps += 1;
+        m.batch.wave_rows += rows;
+        m.batch.peak_rows = m.batch.peak_rows.max(rows);
+        m.batch.ctx_sweep_bytes += ctx_bytes;
+        m.batch.step_upload_bytes += step_bytes;
+    }
+
+    /// A request joined a wave that had already stepped.
+    pub fn observe_mid_wave_join(&self) {
+        self.inner.borrow_mut().batch.mid_wave_joins += 1;
+    }
+
+    /// A batcher-served request completed. `coalesced` is whether it
+    /// shared at least one decode step with another request;
+    /// `generated_tokens` is its total sampled token count.
+    pub fn observe_batched_request(&self, coalesced: bool, generated_tokens: usize) {
+        let mut m = self.inner.borrow_mut();
+        m.batch.batched_requests += 1;
+        if coalesced {
+            m.batch.coalesced_requests += 1;
+        }
+        m.batch.generated_tokens += generated_tokens;
+    }
+
     pub fn requests(&self) -> usize {
         self.inner.borrow().requests
+    }
+
+    pub fn batch_counters(&self) -> BatchCounters {
+        self.inner.borrow().batch
     }
 
     pub fn report(&self) -> Json {
@@ -61,7 +133,27 @@ impl Metrics {
         if !m.total_ms.is_empty() {
             j = j.set("total_ms", m.total_ms.summary().to_json());
         }
-        j
+        let b = &m.batch;
+        let ctx_bytes_per_token = if b.generated_tokens == 0 {
+            0.0
+        } else {
+            b.ctx_sweep_bytes as f64 / b.generated_tokens as f64
+        };
+        j.set(
+            "batch",
+            Json::obj()
+                .set("waves", Json::Num(b.waves as f64))
+                .set("wave_steps", Json::Num(b.wave_steps as f64))
+                .set("wave_rows", Json::Num(b.wave_rows as f64))
+                .set("peak_rows", Json::Num(b.peak_rows as f64))
+                .set("batched_requests", Json::Num(b.batched_requests as f64))
+                .set("coalesced_requests", Json::Num(b.coalesced_requests as f64))
+                .set("mid_wave_joins", Json::Num(b.mid_wave_joins as f64))
+                .set("ctx_sweep_bytes", Json::Num(b.ctx_sweep_bytes as f64))
+                .set("generated_tokens", Json::Num(b.generated_tokens as f64))
+                .set("step_upload_bytes", Json::Num(b.step_upload_bytes as f64))
+                .set("ctx_bytes_per_token", Json::Num(ctx_bytes_per_token)),
+        )
     }
 }
 
@@ -82,6 +174,7 @@ mod tests {
                 upload_bytes: 100,
                 step_upload_bytes: 40,
                 cache_hit_tokens: 0,
+                coalesced_peak_rows: 0,
             },
             4,
         );
@@ -94,6 +187,7 @@ mod tests {
                 upload_bytes: 50,
                 step_upload_bytes: 10,
                 cache_hit_tokens: 12,
+                coalesced_peak_rows: 0,
             },
             8,
         );
@@ -105,5 +199,31 @@ mod tests {
         assert_eq!(r.f64_of("cache_hit_tokens"), 12.0);
         assert_eq!(r.req("prefill_ms").f64_of("count"), 2.0);
         assert!((r.req("per_step_ms").f64_of("mean") - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wave_counters_aggregate_and_derive() {
+        let m = Metrics::default();
+        m.observe_wave_launch();
+        m.observe_wave_step(4, 1000, 64);
+        m.observe_wave_step(6, 1000, 64);
+        m.observe_mid_wave_join();
+        m.observe_batched_request(true, 8);
+        m.observe_batched_request(false, 2);
+        let b = m.batch_counters();
+        assert_eq!(b.waves, 1);
+        assert_eq!(b.wave_steps, 2);
+        assert_eq!(b.wave_rows, 10);
+        assert_eq!(b.peak_rows, 6);
+        assert_eq!(b.mid_wave_joins, 1);
+        assert_eq!((b.batched_requests, b.coalesced_requests), (2, 1));
+        assert_eq!(b.ctx_sweep_bytes, 2000);
+        assert_eq!(b.generated_tokens, 10);
+        assert_eq!(b.step_upload_bytes, 128);
+        let r = m.report();
+        let j = r.req("batch");
+        assert_eq!(j.f64_of("waves"), 1.0);
+        assert_eq!(j.f64_of("peak_rows"), 6.0);
+        assert!((j.f64_of("ctx_bytes_per_token") - 200.0).abs() < 1e-9);
     }
 }

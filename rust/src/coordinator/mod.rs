@@ -1,8 +1,10 @@
 //! L3 coordinator — the serving-side contribution: request types, the
-//! single-context batch-sampling engine, the FAQ-4 workload-based
-//! bifurcation switch, temperature/top-p samplers with mean-log-p
-//! tracking, and the reranker.
+//! single-context batch-sampling engine, the cross-request continuous
+//! batcher (coalesced shared-context decode waves), the FAQ-4
+//! workload-based bifurcation switch, temperature/top-p samplers with
+//! mean-log-p tracking, and the reranker.
 
+pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod ranker;
@@ -10,7 +12,8 @@ pub mod request;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineConfig};
+pub use batcher::{BatchConfig, BatchJob, Batcher, JobSource, ScriptedSource};
+pub use engine::{wave_seed, Engine, EngineConfig, Prepared};
 pub use ranker::rerank_top_k;
 pub use request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 pub use sampler::SamplerBatch;

@@ -76,6 +76,11 @@ pub struct Timing {
     /// Prompt tokens served from the cross-request prefix cache
     /// (== prompt length on a full hit: prefill was skipped entirely).
     pub cache_hit_tokens: usize,
+    /// Widest decode batch this request's samplers shared a step with
+    /// under continuous batching (counting every coalesced request's
+    /// rows). 0 for requests served by the solo path; == own wave width
+    /// for a batched request that never shared a wave.
+    pub coalesced_peak_rows: usize,
 }
 
 impl Timing {

@@ -91,6 +91,19 @@ impl Scheduler {
         }
     }
 
+    /// Mode for a **coalesced** decode wave: `agg_rows` is the union width
+    /// across every request sharing the wave — the batch the FAQ-4 switch
+    /// must judge, not any single request's `n`. A lone `n = 1` request on
+    /// a short warm prompt sits below the redundant-read threshold, but
+    /// eight of them coalesced over one cache node cross it together; the
+    /// aggregated width is what makes the shared sweep worth planning.
+    /// `resident_len` is the cached context length backing the wave (the
+    /// node the requests coalesced on), so a full-resident wave tips to
+    /// bifurcated exactly like a warm solo request does.
+    pub fn pick_wave_mode(&self, agg_rows: usize, m_c_len: usize, resident_len: usize) -> DecodeMode {
+        self.pick_mode_with(Some(ModePolicy::Auto), agg_rows, m_c_len, resident_len)
+    }
+
     /// Pack `n` samplers into waves. Greedy largest-bucket-first, then the
     /// tail goes into the smallest bucket that fits it.
     pub fn plan_waves(&self, n: usize) -> Vec<Wave> {
@@ -187,6 +200,23 @@ mod tests {
             forced.pick_mode_with(Some(ModePolicy::Auto), 32, 96, 0),
             DecodeMode::Bifurcated
         );
+    }
+
+    #[test]
+    fn wave_mode_judges_the_aggregated_width() {
+        let s = sched(); // threshold 64
+        // one n=1 request on a 16-token cold prompt: below threshold
+        assert_eq!(s.pick_mode_with(None, 1, 16, 0), DecodeMode::Fused);
+        // eight of them coalesced into one wave cross it together
+        assert_eq!(s.pick_wave_mode(8, 16, 0), DecodeMode::Bifurcated);
+        // a fully resident node tips the wave regardless of width
+        assert_eq!(s.pick_wave_mode(1, 16, 16), DecodeMode::Bifurcated);
+        // the wave decision ignores an engine-forced policy: the union
+        // decodes against the node's shared-layout context
+        let mut cfg = SchedulerConfig::default();
+        cfg.policy = ModePolicy::Force(DecodeMode::Fused);
+        let forced = Scheduler::new(cfg, vec![1, 4]);
+        assert_eq!(forced.pick_wave_mode(4, 96, 96), DecodeMode::Bifurcated);
     }
 
     #[test]

@@ -139,6 +139,32 @@ impl KvManager {
         Ok(id)
     }
 
+    /// Lease `count` sequences on `ctx` at once — the per-request slice of
+    /// a coalesced decode wave. All-or-nothing: on any allocation failure
+    /// every lease already acquired for this group is returned before the
+    /// error surfaces, so a caller never holds a partial wave (the engine
+    /// retries the whole group after evicting prefix-cache nodes).
+    pub fn lease_sequences(
+        &mut self,
+        ctx: ContextId,
+        count: usize,
+        m_d_cap: usize,
+    ) -> Result<Vec<SeqId>, AllocError> {
+        let mut ids = Vec::with_capacity(count);
+        for _ in 0..count {
+            match self.start_sequence(ctx, m_d_cap) {
+                Ok(s) => ids.push(s),
+                Err(e) => {
+                    for s in ids {
+                        self.finish_sequence(s);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
     /// Finish a sampler: frees its decode slot and drops its context lease.
     pub fn finish_sequence(&mut self, seq: SeqId) {
         let state = self.seqs.remove(&seq).expect("unknown sequence");
@@ -298,6 +324,28 @@ mod tests {
         m.release_context(active);
         assert_eq!(m.stats().used_blocks, 0);
         assert!(!m.contains_context(cached));
+    }
+
+    #[test]
+    fn group_lease_is_all_or_nothing() {
+        // capacity: 96-token context + exactly 3 * 32-token decode slots
+        let mut m = KvManager::new((96 + 3 * 32) * 64, 64, 16);
+        let ctx = m.register_context(96, DecodeMode::Bifurcated, 4).unwrap();
+        // 4 slots cannot fit: the whole group must roll back
+        let before = m.stats();
+        assert!(m.lease_sequences(ctx, 4, 32).is_err());
+        assert_eq!(m.stats(), before, "failed group lease must leak nothing");
+        assert_eq!(m.context_leases(ctx), 0);
+        m.check_invariants().unwrap();
+        // 3 fit fine
+        let seqs = m.lease_sequences(ctx, 3, 32).unwrap();
+        assert_eq!(seqs.len(), 3);
+        assert_eq!(m.context_leases(ctx), 3);
+        for s in seqs {
+            m.finish_sequence(s);
+        }
+        m.release_context(ctx);
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -58,7 +58,7 @@ fn print_usage() {
          USAGE: repro <subcommand> [options]\n\n\
          serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
          \x20              [--prefix-cache N] [--prefix-cache-bytes B] [--threads N]\n\
-         \x20              [--backend native|pjrt]\n\
+         \x20              [--batch-window-us U] [--batch-width W] [--backend native|pjrt]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -74,7 +74,13 @@ fn print_usage() {
          prefill + upload. --threads N sets the native kernel fan-out — one\n\
          persistent worker pool shared by prefill/extend/decode (default:\n\
          all cores, or $BIFURCATED_THREADS; 1 = serial; outputs are\n\
-         bitwise-identical at every setting)."
+         bitwise-identical at every setting). Concurrent same-prefix\n\
+         requests coalesce into one shared decode wave (continuous\n\
+         batching): --batch-window-us U holds a fresh wave open U microseconds\n\
+         for more arrivals (default $BIFURCATED_BATCH_WINDOW_US or 0);\n\
+         --batch-width W caps the coalesced wave width (default: largest\n\
+         batch bucket). Coalesced completions are bitwise-identical to\n\
+         serial execution."
     );
 }
 
@@ -116,6 +122,8 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.prefix_cache_entries = args.usize_or("prefix-cache", cfg.prefix_cache_entries);
     cfg.prefix_cache_bytes = args.usize_or("prefix-cache-bytes", cfg.prefix_cache_bytes);
     cfg.threads = args.usize_or("threads", cfg.threads);
+    cfg.batching.window_us = args.usize_or("batch-window-us", cfg.batching.window_us as usize) as u64;
+    cfg.batching.max_wave_rows = args.usize_or("batch-width", cfg.batching.max_wave_rows);
     cfg
 }
 

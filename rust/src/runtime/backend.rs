@@ -89,6 +89,52 @@ pub trait Backend {
         vd: &HostTensor,
     ) -> Result<DecodeOut>;
 
+    /// One incremental decode step where sampler row `i` sits at its own
+    /// decode position `d_pos[i]` (`d_pos.len() == tokens.len()`). The
+    /// continuous-batching coordinator uses this to let a request join a
+    /// running wave at a step boundary: the joiner's rows start at
+    /// position 0 while resident rows are mid-decode. Row `i`'s output
+    /// must be exactly what a uniform decode at `d_pos[i]` would produce
+    /// for it (rows never mix).
+    ///
+    /// The default serves only the uniform case and delegates to
+    /// [`Backend::decode`] — correct for backends with compiled
+    /// fixed-position graphs (PJRT), which then simply never accept
+    /// mid-wave joins. [`Backend::supports_ragged_decode`] advertises the
+    /// real thing.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_multi(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: &[usize],
+        ctx: &Self::Ctx,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        anyhow::ensure!(
+            d_pos.len() == tokens.len(),
+            "d_pos has {} entries for {} tokens",
+            d_pos.len(),
+            tokens.len()
+        );
+        let p0 = d_pos.first().copied().unwrap_or(0);
+        anyhow::ensure!(
+            d_pos.iter().all(|&p| p == p0),
+            "backend '{}' cannot decode ragged positions {d_pos:?}",
+            self.name()
+        );
+        self.decode(mode, bucket, tokens, p0, ctx, kd, vd)
+    }
+
+    /// Whether [`Backend::decode_multi`] accepts genuinely ragged (per-row)
+    /// decode positions. `false` restricts the batching coordinator to
+    /// joins at wave launch, where every lane starts at position 0.
+    fn supports_ragged_decode(&self) -> bool {
+        false
+    }
+
     /// Fresh zero decode caches for a bucket.
     fn zero_decode_cache(&self, bucket: usize) -> (HostTensor, HostTensor) {
         let c = self.cfg();

@@ -35,13 +35,70 @@ const MR: usize = 4;
 /// tile is accumulated entirely in registers and stored exactly once.
 const NR: usize = 8;
 
+/// Shape class of a GEMM for the pool fan-out decision, keyed on the
+/// output-row count `m` — the only axis executors can partition. The
+/// per-class MAC floors were picked from the microbench crossover table
+/// (`benches/microbench_runtime.rs` re-measures them on the running
+/// machine, next to the committed values):
+///
+/// * **row-rich** GEMMs (the decode score/value sweeps, `m = b·p`) split
+///   into enough parts to feed every worker even on wide pools, so the
+///   handoff amortizes earlier;
+/// * **row-starved** GEMMs (`m < 4`: tiny-batch MLP/projection steps)
+///   yield at most `m` parts — each part must carry enough work to beat
+///   the cache-line ping of a handoff, so the floor is higher.
+///
+/// Thresholds only gate *whether* a call fans out, never what any row
+/// computes, so they are free to tune without touching the determinism
+/// contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeClass {
+    /// `m >= 16`: plenty of rows per worker (batched context sweeps,
+    /// prefill row blocks).
+    ManyRows,
+    /// `4 <= m < 16`: the PR 4 default band.
+    Standard,
+    /// `m < 4`: at most 3 parts; fan out only for hefty rows.
+    RowStarved,
+}
+
+impl ShapeClass {
+    pub fn of_rows(m: usize) -> ShapeClass {
+        if m >= 16 {
+            ShapeClass::ManyRows
+        } else if m >= 4 {
+            ShapeClass::Standard
+        } else {
+            ShapeClass::RowStarved
+        }
+    }
+
+    /// Pool-dispatch fan-out floor (multiply-accumulates) for this class.
+    pub fn pool_min_macs(self) -> usize {
+        match self {
+            ShapeClass::ManyRows => 1 << 14,
+            ShapeClass::Standard => 1 << 15,
+            ShapeClass::RowStarved => 1 << 16,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShapeClass::ManyRows => "many-rows (m>=16)",
+            ShapeClass::Standard => "standard (4<=m<16)",
+            ShapeClass::RowStarved => "row-starved (m<4)",
+        }
+    }
+}
+
 /// Effective fan-out for a job of `macs` multiply-accumulates over `m`
 /// rows on dispatcher `exec`: 1 when the work is below the dispatcher's
-/// amortization threshold ([`Executor::par_min_macs`] — much lower for
-/// the pool than for scoped spawns), never more than one row per thread.
+/// amortization threshold ([`Executor::par_min_macs_for`] — per shape
+/// class for the pool, flat and much higher for scoped spawns), never
+/// more than one row per thread.
 pub(crate) fn plan_threads(exec: &Executor, m: usize, macs: usize) -> usize {
     let t = exec.threads();
-    if t <= 1 || macs < exec.par_min_macs() {
+    if t <= 1 || macs < exec.par_min_macs_for(m) {
         1
     } else {
         t.min(m).max(1)
@@ -542,6 +599,23 @@ mod tests {
         let mut y = vec![0.0f32; m * n];
         matmul_into(&mut y, &x, &w, m, kk, n, &pool);
         assert_eq!(y, oracle);
+    }
+
+    #[test]
+    fn shape_classes_partition_by_rows() {
+        assert_eq!(ShapeClass::of_rows(1), ShapeClass::RowStarved);
+        assert_eq!(ShapeClass::of_rows(3), ShapeClass::RowStarved);
+        assert_eq!(ShapeClass::of_rows(4), ShapeClass::Standard);
+        assert_eq!(ShapeClass::of_rows(15), ShapeClass::Standard);
+        assert_eq!(ShapeClass::of_rows(16), ShapeClass::ManyRows);
+        // floors are ordered: more rows -> earlier fan-out
+        assert!(ShapeClass::ManyRows.pool_min_macs() < ShapeClass::Standard.pool_min_macs());
+        assert!(ShapeClass::Standard.pool_min_macs() < ShapeClass::RowStarved.pool_min_macs());
+        // the decode value sweep at b=4 (m = b·p = 32) fans out on the
+        // pool, while a b=2 MLP step (m=2) stays serial at the same MACs
+        let pool = Executor::with_threads(4);
+        assert!(plan_threads(&pool, 32, 1 << 15) > 1);
+        assert_eq!(plan_threads(&pool, 2, 1 << 15), 1);
     }
 
     #[test]

@@ -88,6 +88,9 @@ pub struct NativeBackend {
     /// Reusable decode buffers: steady-state decode allocates nothing
     /// beyond its returned logits once these reach their high-water size.
     scratch: RefCell<DecodeScratch>,
+    /// Reusable per-row decode-position buffer (same no-allocation
+    /// discipline as `scratch`).
+    pos_scratch: RefCell<Vec<usize>>,
 }
 
 fn pico_cfg(name: &str, g: usize) -> ModelCfg {
@@ -162,6 +165,7 @@ impl NativeBackend {
             upload_bytes: Cell::new(0),
             exec: Executor::with_threads(default_threads()),
             scratch: RefCell::new(DecodeScratch::new()),
+            pos_scratch: RefCell::new(Vec::new()),
         })
     }
 
@@ -355,9 +359,73 @@ impl Backend for NativeBackend {
         kd: &HostTensor,
         vd: &HostTensor,
     ) -> Result<DecodeOut> {
+        ensure!(d_pos < self.cfg.m_d_max, "decode position {d_pos} >= m_d_max {}", self.cfg.m_d_max);
+        let pos = {
+            let mut pos = self.pos_scratch.borrow_mut();
+            pos.clear();
+            // Pad rows share the live position — bitwise the pre-ragged
+            // behaviour, pads included.
+            pos.resize(bucket, d_pos);
+            pos
+        };
+        self.decode_with_positions(mode, bucket, tokens, &pos, ctx, kd, vd)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode_multi(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        d_pos: &[usize],
+        ctx: &NativeContext,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
+        ensure!(
+            d_pos.len() == tokens.len(),
+            "d_pos has {} entries for {} tokens",
+            d_pos.len(),
+            tokens.len()
+        );
+        for &dp in d_pos {
+            ensure!(dp < self.cfg.m_d_max, "decode position {dp} >= m_d_max {}", self.cfg.m_d_max);
+        }
+        let pos = {
+            let mut pos = self.pos_scratch.borrow_mut();
+            pos.clear();
+            pos.extend_from_slice(d_pos);
+            pos.resize(bucket, 0); // pad rows decode at depth 0 (inert)
+            pos
+        };
+        self.decode_with_positions(mode, bucket, tokens, &pos, ctx, kd, vd)
+    }
+
+    fn supports_ragged_decode(&self) -> bool {
+        true
+    }
+
+    fn upload_bytes(&self) -> usize {
+        self.upload_bytes.get()
+    }
+}
+
+impl NativeBackend {
+    /// Shared body of [`Backend::decode`] / [`Backend::decode_multi`]:
+    /// `pos` is already padded to `bucket` entries and validated.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_with_positions(
+        &self,
+        mode: DecodeMode,
+        bucket: usize,
+        tokens: &[i32],
+        pos: &[usize],
+        ctx: &NativeContext,
+        kd: &HostTensor,
+        vd: &HostTensor,
+    ) -> Result<DecodeOut> {
         let c = &self.cfg;
         ensure!(!tokens.is_empty() && tokens.len() <= bucket, "batch {} > bucket {bucket}", tokens.len());
-        ensure!(d_pos < c.m_d_max, "decode position {d_pos} >= m_d_max {}", c.m_d_max);
         let shared = vec![c.l, c.g, c.m_c_max, c.k];
         let replicated = vec![c.l, bucket, c.g, c.m_c_max, c.k];
         let per_row = match mode {
@@ -399,13 +467,13 @@ impl Backend for NativeBackend {
         let mut kd2 = kd.clone();
         let mut vd2 = vd.clone();
         let mut scratch = self.scratch.borrow_mut();
-        let logits = model::decode_forward(
+        let logits = model::decode_forward_at(
             c,
             &self.weights,
             mode,
             bucket,
             &toks,
-            d_pos,
+            pos,
             ctx.m_c_len,
             ctx.kc.f32s(),
             ctx.vc.f32s(),
@@ -420,10 +488,6 @@ impl Backend for NativeBackend {
             kd: kd2,
             vd: vd2,
         })
-    }
-
-    fn upload_bytes(&self) -> usize {
-        self.upload_bytes.get()
     }
 }
 
@@ -523,6 +587,63 @@ mod tests {
             scoped.decode(DecodeMode::Bifurcated, 4, &[5, 6, 7, 8], 0, &cs, &kd, &vd).unwrap();
         assert_eq!(op.logits, os.logits);
         assert_eq!(op.kd, os.kd);
+    }
+
+    #[test]
+    fn decode_multi_matches_decode_and_supports_ragged_rows() {
+        let be = NativeBackend::preset("pico-mq", 7).unwrap();
+        assert!(be.supports_ragged_decode());
+        let prompt = vec![1, 3, 12, 4, 13];
+        let pre = be.prefill(&prompt).unwrap();
+        let ctx = be.upload_context(&pre.kc, &pre.vc, prompt.len()).unwrap();
+
+        // uniform positions: decode_multi is bitwise the scalar decode
+        let (kd, vd) = be.zero_decode_cache(2);
+        let a = be.decode(DecodeMode::Bifurcated, 2, &[5, 6], 0, &ctx, &kd, &vd).unwrap();
+        let b = be
+            .decode_multi(DecodeMode::Bifurcated, 2, &[5, 6], &[0, 0], &ctx, &kd, &vd)
+            .unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.kd, b.kd);
+        assert_eq!(a.vd, b.vd);
+
+        // ragged positions: row 0 one step deep, row 1 fresh. A fresh row
+        // at depth 0 overwrites its cache slot 0 before attending and
+        // reads nothing deeper, so its logits must equal a solo b=1 fresh
+        // decode bitwise — what makes mid-wave joins transparent.
+        let solo = {
+            let (kd1, vd1) = be.zero_decode_cache(1);
+            be.decode(DecodeMode::Bifurcated, 1, &[6], 0, &ctx, &kd1, &vd1).unwrap()
+        };
+        let (kd0, vd0) = be.zero_decode_cache(2);
+        let stepped = be.decode(DecodeMode::Bifurcated, 2, &[5, 9], 0, &ctx, &kd0, &vd0).unwrap();
+        let ragged = be
+            .decode_multi(
+                DecodeMode::Bifurcated,
+                2,
+                &[7, 6],
+                &[1, 0],
+                &ctx,
+                &stepped.kd,
+                &stepped.vd,
+            )
+            .unwrap();
+        let v = be.cfg.vocab;
+        assert_eq!(ragged.logits.shape, vec![2, v]);
+        assert_eq!(
+            &ragged.logits.f32s()[v..2 * v],
+            &solo.logits.f32s()[..v],
+            "a fresh row in a ragged batch must match its solo decode"
+        );
+        assert!(ragged.logits.f32s()[..v].iter().all(|x| x.is_finite()));
+
+        // error surface: length mismatch and out-of-range positions
+        assert!(be
+            .decode_multi(DecodeMode::Bifurcated, 2, &[5, 6], &[0], &ctx, &kd, &vd)
+            .is_err());
+        assert!(be
+            .decode_multi(DecodeMode::Bifurcated, 2, &[5, 6], &[0, 99], &ctx, &kd, &vd)
+            .is_err());
     }
 
     #[test]

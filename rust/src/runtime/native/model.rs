@@ -468,7 +468,10 @@ impl DecodeScratch {
     }
 }
 
-/// Geometry of one decode step's attention, shared by both modes.
+/// Geometry of one decode step's attention, shared by both modes. The
+/// per-row decode positions travel separately (`d_pos: &[usize]`, one per
+/// batch row) so a wave can carry rows at different depths — the
+/// continuous-batching mid-wave join.
 #[derive(Clone, Copy)]
 struct AttnGeom {
     b: usize,
@@ -479,7 +482,6 @@ struct AttnGeom {
     mc: usize,
     m_c_len: usize,
     md: usize,
-    d_pos: usize,
     scale: f32,
 }
 
@@ -487,12 +489,16 @@ struct AttnGeom {
 /// and context values are each ONE batched GEMM over all `b·p` query rows
 /// against the *shared* K_c/V_c — the context is read once per step
 /// regardless of batch size. Decode-partition scores/values stay per-row
-/// (each sampler owns its K_d/V_d), and the two partitions recombine
-/// through the joint softmax.
+/// (each sampler owns its K_d/V_d at its own depth `d_pos[bi]`), and the
+/// two partitions recombine through the joint softmax. The decode-score
+/// buffer `sd` is laid out as back-to-back per-row blocks of
+/// `p · (d_pos[bi]+1)` — for uniform positions that is exactly the old
+/// rectangular layout, so uniform outputs are bitwise-unchanged.
 #[allow(clippy::too_many_arguments)]
 fn attend_bifurcated_batched(
     geom: &AttnGeom,
     li: usize,
+    d_pos: &[usize],
     q: &[f32],
     kc: &[f32],
     vc: &[f32],
@@ -507,10 +513,10 @@ fn attend_bifurcated_batched(
     denom: &mut Vec<f32>,
     exec: &Executor,
 ) {
-    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale } = *geom;
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, scale } = *geom;
     let bp = b * p;
-    let md1 = d_pos + 1;
     let hkk = g * p * kk; // = h·k, the row stride of q and o
+    let sd_total: usize = d_pos.iter().map(|&dp| p * (dp + 1)).sum();
     for gi in 0..g {
         let cbase = (li * g + gi) * mc * kk; // shared [l, g, mc, k] layout
         // Gather this group's query rows into [b·p, k] (contiguous per
@@ -526,12 +532,14 @@ fn attend_bifurcated_batched(
         for v in sc.iter_mut() {
             *v *= scale;
         }
-        // ⟨Q, K_d⟩: per-sampler decode prefix (j <= d_pos).
-        size_for_overwrite(sd, bp * md1);
+        // ⟨Q, K_d⟩: per-sampler decode prefix (j <= d_pos[bi]).
+        size_for_overwrite(sd, sd_total);
+        let mut off = 0usize;
         for bi in 0..b {
+            let md1 = d_pos[bi] + 1;
             let dbase = ((li * b + bi) * g + gi) * md * kk;
             matmul_nt_into(
-                &mut sd[bi * p * md1..(bi + 1) * p * md1],
+                &mut sd[off..off + p * md1],
                 &qg[bi * p * kk..(bi + 1) * p * kk],
                 &kd[dbase..dbase + md1 * kk],
                 p,
@@ -539,6 +547,7 @@ fn attend_bifurcated_batched(
                 md1,
                 &Executor::Serial,
             );
+            off += p * md1;
         }
         for v in sd.iter_mut() {
             *v *= scale;
@@ -546,48 +555,57 @@ fn attend_bifurcated_batched(
         // Joint softmax across the partition boundary: shared max, then
         // exponentiate both partitions in place; denominators join by +.
         size_for_overwrite(denom, bp);
-        for r in 0..bp {
-            let scrow = &mut sc[r * m_c_len..(r + 1) * m_c_len];
-            let sdrow = &mut sd[r * md1..(r + 1) * md1];
-            let mut mx = NEG_INF;
-            for &v in scrow.iter() {
-                if v > mx {
-                    mx = v;
+        let mut off = 0usize;
+        for bi in 0..b {
+            let md1 = d_pos[bi] + 1;
+            for pp in 0..p {
+                let r = bi * p + pp;
+                let scrow = &mut sc[r * m_c_len..(r + 1) * m_c_len];
+                let sdrow = &mut sd[off + pp * md1..off + (pp + 1) * md1];
+                let mut mx = NEG_INF;
+                for &v in scrow.iter() {
+                    if v > mx {
+                        mx = v;
+                    }
                 }
-            }
-            for &v in sdrow.iter() {
-                if v > mx {
-                    mx = v;
+                for &v in sdrow.iter() {
+                    if v > mx {
+                        mx = v;
+                    }
                 }
+                let mut dc = 0.0f32;
+                for v in scrow.iter_mut() {
+                    *v = (*v - mx).exp();
+                    dc += *v;
+                }
+                let mut dd = 0.0f32;
+                for v in sdrow.iter_mut() {
+                    *v = (*v - mx).exp();
+                    dd += *v;
+                }
+                denom[r] = dc + dd;
             }
-            let mut dc = 0.0f32;
-            for v in scrow.iter_mut() {
-                *v = (*v - mx).exp();
-                dc += *v;
-            }
-            let mut dd = 0.0f32;
-            for v in sdrow.iter_mut() {
-                *v = (*v - mx).exp();
-                dd += *v;
-            }
-            denom[r] = dc + dd;
+            off += p * md1;
         }
         // Numerators: context values again one batched GEMM, decode
         // values per sampler.
         size_for_overwrite(acc_c, bp * kk);
         matmul_into(acc_c, sc, &vc[cbase..cbase + m_c_len * kk], bp, m_c_len, kk, exec);
         size_for_overwrite(acc_d, bp * kk);
+        let mut off = 0usize;
         for bi in 0..b {
+            let md1 = d_pos[bi] + 1;
             let dbase = ((li * b + bi) * g + gi) * md * kk;
             matmul_into(
                 &mut acc_d[bi * p * kk..(bi + 1) * p * kk],
-                &sd[bi * p * md1..(bi + 1) * p * md1],
+                &sd[off..off + p * md1],
                 &vd[dbase..dbase + md1 * kk],
                 p,
                 md1,
                 kk,
                 &Executor::Serial,
             );
+            off += p * md1;
         }
         // Recombine and scatter into the o rows.
         for bi in 0..b {
@@ -614,6 +632,7 @@ fn attend_bifurcated_batched(
 fn attend_fused_blocked(
     geom: &AttnGeom,
     li: usize,
+    d_pos: &[usize],
     q: &[f32],
     kc: &[f32],
     vc: &[f32],
@@ -626,11 +645,11 @@ fn attend_fused_blocked(
     acc_d: &mut Vec<f32>,
     exec: &Executor,
 ) {
-    let AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale } = *geom;
-    let md1 = d_pos + 1;
+    let AttnGeom { b, g, p, kk, mc, m_c_len, md, scale } = *geom;
     let hkk = g * p * kk;
     assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
     for bi in 0..b {
+        let md1 = d_pos[bi] + 1;
         for gi in 0..g {
             let cbase = (((li * b + bi) * g) + gi) * mc * kk; // replicated layout
             let dbase = ((li * b + bi) * g + gi) * md * kk;
@@ -692,14 +711,13 @@ fn attend_fused_blocked(
 
 /// One incremental decode step over `bucket` samplers sharing one context.
 ///
-/// `tokens` must already be padded to `bucket` entries. `kd`/`vd` are the
-/// flat `[l, bucket, g, m_d_max, k]` decode caches, updated in place with
-/// this step's K/V at `d_pos`. Context tensors come pre-flattened with
-/// their layout described by `ctx_per_row` (`true` for the fused replicas
-/// `[l, b, g, mc, k]`, `false` for the shared `[l, g, mc, k]`).
+/// Uniform-position wrapper over [`decode_forward_at`]: every row decodes
+/// at the same `d_pos` (what [`Backend::decode`] exposes, and what the
+/// scalar reference implements). Kept for tests and non-hot callers; the
+/// backend's hot path builds its padded position buffer once and calls
+/// [`decode_forward_at`] directly.
 ///
-/// Returns the logits, flat `[bucket, vocab]` — the step's only heap
-/// allocation once `scratch` is warm.
+/// [`Backend::decode`]: crate::runtime::backend::Backend::decode
 #[allow(clippy::too_many_arguments)]
 pub fn decode_forward(
     cfg: &ModelCfg,
@@ -717,12 +735,55 @@ pub fn decode_forward(
     exec: &Executor,
     scr: &mut DecodeScratch,
 ) -> Vec<f32> {
+    let pos = vec![d_pos; bucket];
+    decode_forward_at(
+        cfg, w, mode, bucket, tokens, &pos, m_c_len, kc, vc, ctx_per_row, kd, vd, exec, scr,
+    )
+}
+
+/// One incremental decode step over `bucket` samplers sharing one context,
+/// with **per-row** decode positions.
+///
+/// `tokens` and `d_pos` must already be padded to `bucket` entries; row
+/// `bi` decodes at depth `d_pos[bi]` (its K/V is written there, its
+/// decode-partition attention covers `0..=d_pos[bi]`, and its position
+/// embedding is `m_c_len + d_pos[bi]`). Rows never mix, so each row's
+/// output is bitwise what a uniform step at its own position produces —
+/// the property that lets the continuous-batching coordinator join a
+/// fresh request into a mid-flight wave without disturbing anyone's
+/// completions. `kd`/`vd` are the flat `[l, bucket, g, m_d_max, k]`
+/// decode caches, updated in place. Context tensors come pre-flattened
+/// with their layout described by `ctx_per_row` (`true` for the fused
+/// replicas `[l, b, g, mc, k]`, `false` for the shared `[l, g, mc, k]`).
+///
+/// Returns the logits, flat `[bucket, vocab]` — the step's only heap
+/// allocation once `scratch` is warm.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_forward_at(
+    cfg: &ModelCfg,
+    w: &NativeWeights,
+    mode: DecodeMode,
+    bucket: usize,
+    tokens: &[i32],
+    d_pos: &[usize],
+    m_c_len: usize,
+    kc: &[f32],
+    vc: &[f32],
+    ctx_per_row: bool,
+    kd: &mut [f32],
+    vd: &mut [f32],
+    exec: &Executor,
+    scr: &mut DecodeScratch,
+) -> Vec<f32> {
     let (d, kk, g, h, p) = (cfg.d, cfg.k, cfg.g, cfg.h, cfg.p);
     let (mc, md) = (cfg.m_c_max, cfg.m_d_max);
     let b = bucket;
     let ff = cfg.ffn_mult * d;
     assert_eq!(tokens.len(), b, "tokens must be padded to the bucket");
-    assert!(d_pos < md, "decode position {d_pos} >= m_d_max {md}");
+    assert_eq!(d_pos.len(), b, "d_pos must be padded to the bucket");
+    for (bi, &dp) in d_pos.iter().enumerate() {
+        assert!(dp < md, "decode position {dp} >= m_d_max {md} at row {bi}");
+    }
     assert!(m_c_len >= 1 && m_c_len <= mc, "context length out of range");
     assert_eq!(kd.len(), cfg.l * b * g * md * kk, "kd cache shape");
     assert_eq!(vd.len(), kd.len(), "vd cache shape");
@@ -738,12 +799,11 @@ pub fn decode_forward(
         mode == DecodeMode::Fused,
         "context layout must match the decode mode (shared for bifurcated, replicated for fused)"
     );
-    let geom =
-        AttnGeom { b, g, p, kk, mc, m_c_len, md, d_pos, scale: 1.0 / (kk as f32).sqrt() };
+    let geom = AttnGeom { b, g, p, kk, mc, m_c_len, md, scale: 1.0 / (kk as f32).sqrt() };
 
     size_for_overwrite(&mut scr.x, b * d);
     for bi in 0..b {
-        embed(cfg, w, tokens[bi], m_c_len + d_pos, &mut scr.x[bi * d..(bi + 1) * d]);
+        embed(cfg, w, tokens[bi], m_c_len + d_pos[bi], &mut scr.x[bi * d..(bi + 1) * d]);
     }
     size_for_overwrite(&mut scr.h1, b * d);
     size_for_overwrite(&mut scr.q, b * h * kk);
@@ -759,10 +819,10 @@ pub fn decode_forward(
         matmul_into(&mut scr.knew, &scr.h1, &lw.wk, b, d, g * kk, exec);
         matmul_into(&mut scr.vnew, &scr.h1, &lw.wv, b, d, g * kk, exec);
 
-        // Functional cache update: write this step's K/V at d_pos.
+        // Functional cache update: write each row's K/V at its own depth.
         for bi in 0..b {
             for gi in 0..g {
-                let dst = (((li * b + bi) * g + gi) * md + d_pos) * kk;
+                let dst = (((li * b + bi) * g + gi) * md + d_pos[bi]) * kk;
                 let src = bi * g * kk + gi * kk;
                 kd[dst..dst + kk].copy_from_slice(&scr.knew[src..src + kk]);
                 vd[dst..dst + kk].copy_from_slice(&scr.vnew[src..src + kk]);
@@ -773,6 +833,7 @@ pub fn decode_forward(
             DecodeMode::Bifurcated => attend_bifurcated_batched(
                 &geom,
                 li,
+                d_pos,
                 &scr.q,
                 kc,
                 vc,
@@ -790,6 +851,7 @@ pub fn decode_forward(
             DecodeMode::Fused => attend_fused_blocked(
                 &geom,
                 li,
+                d_pos,
                 &scr.q,
                 kc,
                 vc,
@@ -1393,6 +1455,81 @@ mod tests {
                 );
                 let d = max_abs_diff(&l_opt, &l_ref);
                 assert!(d <= 1e-5, "fused diverges by {d} at exec={ei} d_pos={d_pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_positions_match_solo_rows_bitwise() {
+        // A ragged batch (rows at different decode depths) must give every
+        // row exactly what it gets decoding alone at its own depth — the
+        // property mid-wave joins rest on. Row 0 is two steps deep, row 1
+        // is fresh; both are compared against solo b=1 runs bit for bit.
+        let cfg = tiny_cfg();
+        let w = NativeWeights::init(&cfg, 21);
+        let mut toks = vec![1, 2, 7];
+        toks.resize(cfg.m_c_max, 0);
+        let (_, kc, vc) = prefill_forward(&cfg, &w, &toks, 3, &Executor::Serial);
+        let chunk = cfg.g * cfg.m_d_max * cfg.k; // one batch row per layer
+        let n1 = cfg.l * chunk;
+        let mut scr = DecodeScratch::new();
+
+        // Solo row 0: three uniform steps feeding tokens 3, 4, 5.
+        let (mut kd_a, mut vd_a) = (vec![0.0f32; n1], vec![0.0f32; n1]);
+        let mut logits_a = Vec::new();
+        for (d_pos, t) in [(0usize, 3i32), (1, 4), (2, 5)] {
+            logits_a = decode_forward(
+                &cfg, &w, DecodeMode::Bifurcated, 1, &[t], d_pos, 3, &kc, &vc, false, &mut kd_a,
+                &mut vd_a, &Executor::Serial, &mut scr,
+            );
+        }
+        // Solo row 1: one fresh step feeding token 6.
+        let (mut kd_b, mut vd_b) = (vec![0.0f32; n1], vec![0.0f32; n1]);
+        let logits_b = decode_forward(
+            &cfg, &w, DecodeMode::Bifurcated, 1, &[6], 0, 3, &kc, &vc, false, &mut kd_b, &mut vd_b,
+            &Executor::Serial, &mut scr,
+        );
+
+        for (ei, exec) in test_execs().iter().enumerate() {
+            // Replay row 0's first two steps into a b=1 cache, then copy
+            // its rows into row 0 of a b=2 cache; row 1 stays zeroed (a
+            // joiner's rows start fresh).
+            let n2 = cfg.l * 2 * chunk;
+            let (mut kd, mut vd) = (vec![0.0f32; n2], vec![0.0f32; n2]);
+            let (mut ka, mut va) = (vec![0.0f32; n1], vec![0.0f32; n1]);
+            for (dp, tt) in [(0usize, 3i32), (1, 4)] {
+                decode_forward(
+                    &cfg, &w, DecodeMode::Bifurcated, 1, &[tt], dp, 3, &kc, &vc, false, &mut ka,
+                    &mut va, &Executor::Serial, &mut scr,
+                );
+            }
+            for li in 0..cfg.l {
+                kd[li * 2 * chunk..li * 2 * chunk + chunk]
+                    .copy_from_slice(&ka[li * chunk..(li + 1) * chunk]);
+                vd[li * 2 * chunk..li * 2 * chunk + chunk]
+                    .copy_from_slice(&va[li * chunk..(li + 1) * chunk]);
+            }
+            // One ragged step: row 0 at depth 2 feeding 5, row 1 at depth
+            // 0 feeding 6.
+            let logits = decode_forward_at(
+                &cfg, &w, DecodeMode::Bifurcated, 2, &[5, 6], &[2, 0], 3, &kc, &vc, false,
+                &mut kd, &mut vd, exec, &mut scr,
+            );
+            let v = cfg.vocab;
+            assert_eq!(&logits[..v], &logits_a[..], "row 0 diverges from solo at exec={ei}");
+            assert_eq!(&logits[v..2 * v], &logits_b[..], "row 1 diverges from solo at exec={ei}");
+            // Cache rows match the solo caches too.
+            for li in 0..cfg.l {
+                assert_eq!(
+                    &kd[li * 2 * chunk..li * 2 * chunk + chunk],
+                    &kd_a[li * chunk..(li + 1) * chunk],
+                    "row 0 kd diverges at exec={ei}"
+                );
+                assert_eq!(
+                    &kd[li * 2 * chunk + chunk..(li + 1) * 2 * chunk],
+                    &kd_b[li * chunk..(li + 1) * chunk],
+                    "row 1 kd diverges at exec={ei}"
+                );
             }
         }
     }

@@ -13,9 +13,10 @@
 //!   first so the dense back-to-back kernel stream of a decode step never
 //!   pays a wakeup.
 //! * Because dispatch is now ~a counter bump instead of a spawn, the
-//!   fan-out threshold can drop by 4x ([`Executor::par_min_macs`]):
-//!   medium GEMMs that had to run serial under scoped spawns now
-//!   parallelize profitably.
+//!   fan-out threshold can drop by 4x ([`Executor::par_min_macs_for`],
+//!   tuned per shape class in [`super::math::ShapeClass`]): medium GEMMs
+//!   that had to run serial under scoped spawns now parallelize
+//!   profitably.
 //!
 //! Determinism: a job's parts are fixed row ranges computed from the
 //! *configured* thread count (`math::par_rows`), and the atomic counter
@@ -42,14 +43,11 @@ use super::scoped_reference;
 /// condvar wakeup; an idle pool still parks quickly enough not to matter.
 const SPIN_ITERS: u32 = 1 << 15;
 
-/// Fan-out threshold (multiply-accumulates) under pool dispatch. Handing
-/// a job to spinning workers costs roughly a cache-line ping, so GEMMs as
-/// small as a decode step's score/value sweeps are worth splitting.
-const PAR_MIN_MACS_POOL: usize = 1 << 15;
-
 /// Fan-out threshold under the scoped-spawn reference dispatch — PR 3's
-/// value, kept so the ablation control reproduces PR 3's behaviour: below
-/// this, a spawn costs more than the GEMM.
+/// value, kept flat across shapes so the ablation control reproduces PR
+/// 3's behaviour exactly: below this, a spawn costs more than the GEMM.
+/// Pool dispatch tunes its threshold per shape class instead
+/// ([`super::math::ShapeClass`]).
 const PAR_MIN_MACS_SCOPED: usize = 1 << 17;
 
 /// Per-job counters, one allocation per published job (NOT reusable
@@ -330,15 +328,18 @@ impl Executor {
         }
     }
 
-    /// Minimum multiply-accumulates before a kernel call fans out on this
-    /// dispatcher. Pool dispatch is cheap enough to split GEMMs 4x
-    /// smaller than a scoped spawn could amortize — that delta is where
-    /// small-batch decode gains its throughput (the bench ablation
-    /// measures it).
-    pub fn par_min_macs(&self) -> usize {
+    /// Minimum multiply-accumulates before a kernel call over `m` output
+    /// rows fans out on this dispatcher. Pool dispatch is cheap enough to
+    /// split GEMMs 4x smaller than a scoped spawn could amortize — that
+    /// delta is where small-batch decode gains its throughput (the bench
+    /// ablation measures it) — and tunes the floor per shape class
+    /// ([`super::math::ShapeClass`]): row-rich GEMMs split earlier,
+    /// row-starved ones later. The scoped reference keeps PR 3's flat
+    /// threshold so the ablation stays a pure dispatch A/B.
+    pub fn par_min_macs_for(&self, m: usize) -> usize {
         match self {
             Executor::Serial => usize::MAX,
-            Executor::Pool(_) => PAR_MIN_MACS_POOL,
+            Executor::Pool(_) => super::math::ShapeClass::of_rows(m).pool_min_macs(),
             Executor::ScopedReference(_) => PAR_MIN_MACS_SCOPED,
         }
     }
@@ -457,7 +458,13 @@ mod tests {
         assert_eq!(Executor::with_threads(1).threads(), 1);
         let ex = Executor::with_threads(3);
         assert_eq!(ex.threads(), 3);
-        assert!(ex.par_min_macs() < Executor::ScopedReference(3).par_min_macs());
+        // every pool shape class sits below the flat scoped threshold
+        for m in [1usize, 4, 16, 128] {
+            assert!(ex.par_min_macs_for(m) < Executor::ScopedReference(3).par_min_macs_for(m));
+        }
+        // row-rich shapes fan out earlier than row-starved ones
+        assert!(ex.par_min_macs_for(32) < ex.par_min_macs_for(2));
+        assert_eq!(Executor::Serial.par_min_macs_for(64), usize::MAX);
         assert_eq!(Executor::ScopedReference(0).threads(), 1);
     }
 

@@ -4,7 +4,7 @@
 //! column) and its tests. Nothing on a steady-state path may call this:
 //! each spawn here costs tens of microseconds — the dispatch floor the
 //! persistent [`super::pool::WorkerPool`] exists to remove — and
-//! [`super::pool::Executor::par_min_macs`] keeps PR 3's much higher
+//! [`super::pool::Executor::par_min_macs_for`] keeps PR 3's much higher
 //! fan-out threshold for this dispatcher so the ablation reproduces PR
 //! 3's behaviour faithfully.
 

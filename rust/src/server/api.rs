@@ -5,12 +5,21 @@
 //! on a dedicated thread that owns it — the classic leader/event-loop
 //! shape — and HTTP workers talk to it over an mpsc channel. This is the
 //! "rust owns the event loop / process topology" half of the L3 contract.
+//!
+//! The engine thread's event loop is the continuous-batching
+//! [`Batcher`](crate::coordinator::Batcher): concurrent `/generate` calls
+//! whose prompts resolve to the same prefix-cache node coalesce into one
+//! shared decode wave (see `coordinator/batcher.rs`), everything else runs
+//! the classic solo path. `/metrics` requests are answered at step
+//! boundaries, so they never wait for an in-flight wave to drain.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::coordinator::{
-    rerank_top_k, Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+    rerank_top_k, BatchJob, Batcher, Engine, EngineConfig, GenerationRequest, JobSource,
+    ModePolicy, SamplingParams,
 };
 use crate::runtime::models::DecodeMode;
 use crate::runtime::Backend;
@@ -21,6 +30,65 @@ use super::http::{HttpResponse, HttpServer};
 enum Job {
     Generate(GenerationRequest, usize, Sender<Result<Json, String>>),
     Metrics(Sender<Json>),
+}
+
+/// [`JobSource`] over the server's mpsc channel: `poll` drains whatever
+/// HTTP workers have queued (called at every wave step boundary — this is
+/// what lets requests join a running wave), `wait` parks the idle batcher
+/// until the next arrival or the admission-window deadline.
+struct ChannelSource {
+    rx: Receiver<Job>,
+    closed: bool,
+}
+
+impl ChannelSource {
+    fn convert<B: Backend>(job: Job) -> BatchJob<B> {
+        match job {
+            Job::Generate(req, rerank_k, tx) => BatchJob::Generate(
+                req,
+                Box::new(move |res| {
+                    let _ = tx.send(
+                        res.map(|r| result_to_json(&r, rerank_k)).map_err(|e| format!("{e:#}")),
+                    );
+                }),
+            ),
+            Job::Metrics(tx) => BatchJob::Inspect(Box::new(move |engine: &Engine<B>| {
+                let _ = tx.send(engine.metrics_report());
+            })),
+        }
+    }
+}
+
+impl<B: Backend> JobSource<B> for ChannelSource {
+    fn poll(&mut self) -> Vec<BatchJob<B>> {
+        let mut out = Vec::new();
+        loop {
+            match self.rx.try_recv() {
+                Ok(job) => out.push(Self::convert(job)),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn wait(&mut self, timeout: Duration) -> Option<BatchJob<B>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(job) => Some(Self::convert(job)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.closed = true;
+                None
+            }
+        }
+    }
+
+    fn closed(&self) -> bool {
+        self.closed
+    }
 }
 
 /// Cloneable handle HTTP workers use to reach the engine thread.
@@ -69,20 +137,11 @@ where
                     return;
                 }
             };
-            while let Ok(job) = rx.recv() {
-                match job {
-                    Job::Generate(req, rerank_k, reply) => {
-                        let res = engine
-                            .generate(&req)
-                            .map(|r| result_to_json(&r, rerank_k))
-                            .map_err(|e| format!("{e:#}"));
-                        let _ = reply.send(res);
-                    }
-                    Job::Metrics(reply) => {
-                        let _ = reply.send(engine.metrics_report());
-                    }
-                }
-            }
+            // The event loop IS the continuous batcher: same-prefix
+            // concurrent requests coalesce into shared decode waves.
+            let batching = engine.batching.clone();
+            let mut source = ChannelSource { rx, closed: false };
+            Batcher::new(&engine, batching).run(&mut source);
         })?;
     ready_rx
         .recv()
@@ -139,7 +198,11 @@ fn result_to_json(r: &crate::coordinator::RequestResult, rerank_k: usize) -> Jso
                 .set("waves", Json::Num(r.timing.waves as f64))
                 .set("upload_bytes", Json::Num(r.timing.upload_bytes as f64))
                 .set("step_upload_bytes", Json::Num(r.timing.step_upload_bytes as f64))
-                .set("cache_hit_tokens", Json::Num(r.timing.cache_hit_tokens as f64)),
+                .set("cache_hit_tokens", Json::Num(r.timing.cache_hit_tokens as f64))
+                .set(
+                    "coalesced_peak_rows",
+                    Json::Num(r.timing.coalesced_peak_rows as f64),
+                ),
         );
     if rerank_k > 0 {
         let top = rerank_top_k(&r.completions, rerank_k);

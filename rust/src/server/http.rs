@@ -7,10 +7,61 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::util::threadpool::ThreadPool;
+
+/// Shutdown handle for [`HttpServer::serve`]. The accept loop **blocks**
+/// in `accept()` — no sleep-polling, so a request's arrival latency is
+/// the kernel's, not a poll interval's (that latency budget now belongs
+/// to the continuous-batching admission window). [`Shutdown::trigger`]
+/// flips the flag and dials the listener once, waking the blocked accept
+/// immediately.
+#[derive(Debug, Default)]
+pub struct Shutdown {
+    flag: AtomicBool,
+    /// The bound address, recorded by `serve` so `trigger` can dial it.
+    addr: Mutex<Option<SocketAddr>>,
+}
+
+impl Shutdown {
+    pub fn new() -> Arc<Shutdown> {
+        Arc::new(Shutdown::default())
+    }
+
+    /// Request shutdown: set the flag, then poke the listener with a
+    /// throwaway connection so a blocked `accept()` observes it now.
+    pub fn trigger(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        let addr = *self.addr.lock().unwrap();
+        if let Some(mut addr) = addr {
+            // A wildcard bind (0.0.0.0 / ::) is not a connectable
+            // destination on every platform; dial the loopback of the
+            // same family instead — it reaches the same listener.
+            if addr.ip().is_unspecified() {
+                let loopback = match addr {
+                    SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                };
+                addr.set_ip(loopback);
+            }
+            // The wake connection is dropped immediately; the accept loop
+            // sees the flag before dispatching it. Errors are fine — if
+            // the listener is already gone there is nothing to wake.
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn bind_to(&self, addr: SocketAddr) {
+        *self.addr.lock().unwrap() = Some(addr);
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
@@ -144,38 +195,39 @@ impl HttpServer {
         }
     }
 
-    /// Serve forever on `addr` with `workers` connection threads.
-    /// `shutdown` lets tests stop the loop: checked between accepts.
+    /// Serve on `addr` with `workers` connection threads. The listener
+    /// stays **blocking** — accepted connections are handed to the pool
+    /// with no sleep-polling in between, so arrival latency never eats
+    /// into the batching admission window. `shutdown` lets tests (and
+    /// embedders) stop the loop: [`Shutdown::trigger`] wakes the blocked
+    /// accept with a throwaway connection.
     pub fn serve(
         self,
         addr: &str,
         workers: usize,
-        shutdown: Option<Arc<std::sync::atomic::AtomicBool>>,
+        shutdown: Option<Arc<Shutdown>>,
     ) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(false)?;
         crate::info!("http server listening on {addr}");
         let pool = ThreadPool::new(workers);
         let routes = Arc::new(self);
-        if let Some(flag) = &shutdown {
-            // polling accept so the shutdown flag is honored
-            listener.set_nonblocking(true)?;
-            while !flag.load(std::sync::atomic::Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let routes = Arc::clone(&routes);
-                        pool.execute(move || handle_conn(stream, &routes));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(e) => return Err(e),
-                }
+        if let Some(sd) = &shutdown {
+            sd.bind_to(listener.local_addr()?);
+            // A trigger that raced the bind dialed nothing; honor it now.
+            if sd.is_triggered() {
+                return Ok(());
             }
-            pool.wait_idle();
-            return Ok(());
         }
         for stream in listener.incoming() {
+            if let Some(sd) = &shutdown {
+                if sd.is_triggered() {
+                    // The stream that woke us (trigger's poke or a late
+                    // client) is dropped unanswered.
+                    pool.wait_idle();
+                    return Ok(());
+                }
+            }
             match stream {
                 Ok(stream) => {
                     let routes = Arc::clone(&routes);
@@ -200,7 +252,6 @@ fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicBool, Ordering};
 
     #[test]
     fn parse_post_with_body() {
@@ -239,7 +290,7 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown = Shutdown::new();
         let flag = Arc::clone(&shutdown);
         let port = 34517;
         let t = std::thread::spawn(move || {
@@ -257,8 +308,36 @@ mod tests {
         stream.read_to_string(&mut buf).unwrap();
         assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
         assert!(buf.ends_with("{\"ok\":true}"), "{buf}");
-        shutdown.store(true, Ordering::SeqCst);
+        shutdown.trigger();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_wakes_a_blocking_accept_promptly() {
+        // The accept loop blocks (no sleep-polling), so the only thing
+        // that may unblock it at shutdown is trigger()'s wake connection.
+        // A generous bound still catches a regression to 5 ms polling only
+        // statistically — the real assertion is that join() returns at
+        // all without any client traffic.
+        let shutdown = Shutdown::new();
+        let flag = Arc::clone(&shutdown);
+        let port = 34519;
+        let t = std::thread::spawn(move || {
+            HttpServer::new()
+                .route("GET", "/health", |_| HttpResponse::json(200, "{}".into()))
+                .serve(&format!("127.0.0.1:{port}"), 1, Some(flag))
+                .unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let t0 = std::time::Instant::now();
+        shutdown.trigger();
+        t.join().unwrap();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "shutdown took {:?}",
+            t0.elapsed()
+        );
+        assert!(shutdown.is_triggered());
     }
 
     #[test]

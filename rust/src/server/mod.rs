@@ -7,4 +7,4 @@ pub mod http;
 #[cfg(feature = "pjrt")]
 pub use api::spawn_engine;
 pub use api::{build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, EngineClient};
-pub use http::{HttpRequest, HttpResponse, HttpServer};
+pub use http::{HttpRequest, HttpResponse, HttpServer, Shutdown};

@@ -1,0 +1,188 @@
+//! Batcher lifecycle around the parity core: admission-window coalescing
+//! end-to-end through the server API layer, solo fallbacks for
+//! non-coalescible requests, error replies, and resource hygiene (pins,
+//! leases, KV invariants) after waves drain.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use bifurcated_attn::coordinator::batcher::{BatchConfig, BatchJob, Batcher, ScriptedSource};
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, RequestResult, SamplingParams,
+};
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::NativeBackend;
+use bifurcated_attn::server::{parse_generate_body, spawn_native_engine};
+
+fn engine() -> Engine<NativeBackend> {
+    Engine::native("pico-mq", 0, EngineConfig::default()).unwrap()
+}
+
+fn req(id: u64, prompt: &str, n: usize, mode: Option<ModePolicy>) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens: 4,
+            stop_token: None,
+            seed: id,
+            mode,
+        },
+    }
+}
+
+fn run_one(engine: &Engine<NativeBackend>, r: GenerationRequest) -> anyhow::Result<RequestResult> {
+    let out: Rc<RefCell<Option<anyhow::Result<RequestResult>>>> = Rc::new(RefCell::new(None));
+    let sink = Rc::clone(&out);
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    src.push(
+        0,
+        BatchJob::Generate(
+            r,
+            Box::new(move |res| {
+                *sink.borrow_mut() = Some(res);
+            }),
+        ),
+    );
+    Batcher::new(engine, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    Rc::try_unwrap(out).ok().expect("sink still shared").into_inner().expect("no reply")
+}
+
+#[test]
+fn admission_window_coalesces_concurrent_api_calls() {
+    // Two HTTP-layer calls race into a 300 ms admission window: the
+    // engine-thread batcher must serve them as ONE shared wave.
+    let mut cfg = EngineConfig::default();
+    cfg.batching.window_us = 300_000;
+    let client = spawn_native_engine("pico-mq".into(), 0, cfg).unwrap();
+
+    let body = r#"{"prompt":"10+2=12;11+3=","n":2,"max_tokens":4,"stop":null,"mode":"bifurcated"}"#;
+    let (r1, k1) = parse_generate_body(body, 1).unwrap();
+    let (r2, k2) = parse_generate_body(body, 2).unwrap();
+    let c2 = std::sync::Arc::clone(&client);
+    let t = std::thread::spawn(move || c2.generate(r2, k2).unwrap());
+    let res1 = client.generate(r1, k1).unwrap();
+    let res2 = t.join().unwrap();
+    assert_eq!(res1.req("completions").as_arr().unwrap().len(), 2);
+    assert_eq!(res2.req("completions").as_arr().unwrap().len(), 2);
+
+    let met = client.metrics();
+    let batch = met.req("batch");
+    assert_eq!(batch.f64_of("waves"), 1.0, "window must coalesce both calls into one wave");
+    assert_eq!(batch.f64_of("coalesced_requests"), 2.0);
+    assert_eq!(batch.f64_of("peak_rows"), 4.0);
+    assert!(batch.f64_of("ctx_sweep_bytes") > 0.0);
+    // each response reports the union width it rode in
+    assert_eq!(res1.req("timing").f64_of("coalesced_peak_rows"), 4.0);
+    assert_eq!(res2.req("timing").f64_of("coalesced_peak_rows"), 4.0);
+}
+
+#[test]
+fn forced_fused_requests_fall_back_to_the_solo_path() {
+    let e = engine();
+    let res = run_one(&e, req(1, "1+2=", 4, Some(ModePolicy::Force(DecodeMode::Fused)))).unwrap();
+    assert_eq!(res.mode_used, DecodeMode::Fused);
+    assert_eq!(res.completions.len(), 4);
+    assert_eq!(res.timing.coalesced_peak_rows, 0, "solo path reports no coalescing");
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.batched_requests, 0);
+    assert_eq!(counters.waves, 0);
+    assert_eq!(e.metrics.requests(), 1, "solo fallback still counts the request");
+}
+
+#[test]
+fn small_auto_requests_run_solo_and_cold_bifurcated_parks() {
+    let e = engine();
+    // tiny auto workload: fused solo (below the FAQ-4 threshold)
+    let res = run_one(&e, req(1, "1+2=", 1, None)).unwrap();
+    assert_eq!(res.mode_used, DecodeMode::Fused);
+    assert_eq!(e.metrics.batch_counters().batched_requests, 0);
+    // a big auto workload picks bifurcated, populates the cache, and is
+    // served as a (single-request) wave
+    let res = run_one(&e, req(2, "10+2=12;11+3=14;12+4=", 8, None)).unwrap();
+    assert_eq!(res.mode_used, DecodeMode::Bifurcated);
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.batched_requests, 1);
+    assert_eq!(counters.coalesced_requests, 0, "alone in the wave");
+    assert_eq!(counters.waves, 1);
+}
+
+#[test]
+fn prepare_errors_reply_cleanly() {
+    let e = engine();
+    let err = run_one(&e, req(1, "hello world", 2, None)).unwrap_err();
+    assert!(format!("{err:#}").contains("not in vocabulary"), "{err:#}");
+    // nothing leaked
+    let kv = e.kv.borrow().stats();
+    assert_eq!((kv.contexts, kv.sequences, kv.used_blocks), (0, 0, 0));
+    assert_eq!(e.metrics.batch_counters().batched_requests, 0);
+}
+
+#[test]
+fn pins_release_after_waves_drain() {
+    let e = engine();
+    let reqs: Vec<(usize, GenerationRequest)> = (1..=3u64)
+        .map(|id| (0usize, req(id, "10+2=12;11+3=14;12+4=", 2, Some(ModePolicy::Force(DecodeMode::Bifurcated)))))
+        .collect();
+    let out: Rc<RefCell<Vec<RequestResult>>> = Rc::new(RefCell::new(Vec::new()));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    for (at, r) in reqs {
+        let sink = Rc::clone(&out);
+        src.push(
+            at,
+            BatchJob::Generate(
+                r,
+                Box::new(move |res| {
+                    sink.borrow_mut().push(res.unwrap());
+                }),
+            ),
+        );
+    }
+    Batcher::new(&e, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    assert_eq!(out.borrow().len(), 3);
+    // the node must be unpinned now: LRU eviction can reclaim it
+    e.kv.borrow().check_invariants().unwrap();
+    e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+    assert_eq!(e.cache.borrow().len(), 1);
+    let evicted = {
+        let mut kv = e.kv.borrow_mut();
+        e.cache.borrow_mut().evict_lru(&mut kv)
+    };
+    assert!(evicted, "node still pinned after its waves drained");
+    assert_eq!(e.kv.borrow().stats().used_blocks, 0);
+}
+
+#[test]
+fn inspect_jobs_are_served_between_steps() {
+    // A metrics snapshot queued behind a generate must be answered by the
+    // same run without waiting for a separate request cycle.
+    let e = engine();
+    let seen: Rc<RefCell<Option<f64>>> = Rc::new(RefCell::new(None));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    let done: Rc<RefCell<bool>> = Rc::new(RefCell::new(false));
+    let done2 = Rc::clone(&done);
+    src.push(
+        0,
+        BatchJob::Generate(
+            req(1, "10+2=12;11+3=14;12+4=", 2, Some(ModePolicy::Force(DecodeMode::Bifurcated))),
+            Box::new(move |res| {
+                res.unwrap();
+                *done2.borrow_mut() = true;
+            }),
+        ),
+    );
+    let sink = Rc::clone(&seen);
+    src.push(
+        2,
+        BatchJob::Inspect(Box::new(move |engine: &Engine<NativeBackend>| {
+            *sink.borrow_mut() = Some(engine.metrics_report().req("kv").f64_of("sequences"));
+        })),
+    );
+    Batcher::new(&e, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    assert!(*done.borrow());
+    let mid_sequences = seen.borrow().expect("inspect job never ran");
+    assert_eq!(mid_sequences, 2.0, "snapshot taken mid-wave must see the leased sequences");
+}

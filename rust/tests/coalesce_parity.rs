@@ -1,0 +1,237 @@
+//! Coalescing parity: N concurrent same-prefix `/generate` requests
+//! served by the continuous batcher must produce completions
+//! **bitwise-identical** to the same N requests issued serially (same
+//! per-request ids/seeds), across wave widths {1, 2, 8} and with
+//! mid-wave join and early detach exercised deterministically through a
+//! [`ScriptedSource`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use bifurcated_attn::coordinator::batcher::{BatchConfig, BatchJob, Batcher, ScriptedSource};
+use bifurcated_attn::coordinator::{
+    Completion, Engine, EngineConfig, GenerationRequest, ModePolicy, RequestResult, SamplingParams,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::NativeBackend;
+
+const PROMPT: &str = "10+2=12;11+3=14;12+4=";
+
+fn engine() -> Engine<NativeBackend> {
+    Engine::native("pico-mq", 0, EngineConfig::default()).unwrap()
+}
+
+fn req(
+    id: u64,
+    n: usize,
+    max_tokens: usize,
+    stop: Option<i32>,
+) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: PROMPT.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens,
+            stop_token: stop,
+            seed: id,
+            mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+        },
+    }
+}
+
+/// Serve `jobs` (scripted release point, request) through the batcher on
+/// `engine`; returns results keyed by request id.
+fn run_batched(
+    engine: &Engine<NativeBackend>,
+    jobs: Vec<(usize, GenerationRequest)>,
+) -> BTreeMap<u64, RequestResult> {
+    let out: Rc<RefCell<BTreeMap<u64, RequestResult>>> = Rc::new(RefCell::new(BTreeMap::new()));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    for (at, r) in jobs {
+        let id = r.id;
+        let sink = Rc::clone(&out);
+        src.push(
+            at,
+            BatchJob::Generate(
+                r,
+                Box::new(move |res| {
+                    sink.borrow_mut().insert(id, res.expect("batched request failed"));
+                }),
+            ),
+        );
+    }
+    Batcher::new(engine, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    Rc::try_unwrap(out).ok().expect("sink still shared").into_inner()
+}
+
+/// Serial oracle: the same requests one by one on a fresh engine.
+fn run_serial(reqs: &[GenerationRequest]) -> BTreeMap<u64, RequestResult> {
+    let e = engine();
+    reqs.iter().map(|r| (r.id, e.generate(r).unwrap())).collect()
+}
+
+fn completions(r: &RequestResult) -> &[Completion] {
+    &r.completions
+}
+
+#[test]
+fn concurrent_equals_serial_across_widths() {
+    // stop disabled so every lane deterministically runs all its steps
+    // (the wave-sharing counters below depend on it); stop-token behavior
+    // under coalescing is pinned by stop_token_parity.
+    for width in [1usize, 2, 8] {
+        let reqs: Vec<GenerationRequest> =
+            (1..=width as u64).map(|id| req(id, 2, 6, None)).collect();
+        let serial = run_serial(&reqs);
+
+        let e = engine();
+        let batched = run_batched(&e, reqs.iter().map(|r| (0, r.clone())).collect());
+
+        assert_eq!(batched.len(), width);
+        for (id, b) in &batched {
+            let s = &serial[id];
+            assert_eq!(
+                completions(b),
+                completions(s),
+                "width {width}: request {id} diverged from serial execution"
+            );
+            assert_eq!(b.mode_used, DecodeMode::Bifurcated);
+        }
+        let counters = e.metrics.batch_counters();
+        assert_eq!(counters.batched_requests, width);
+        if width > 1 {
+            assert_eq!(
+                counters.coalesced_requests, width,
+                "width {width}: all requests must share the wave"
+            );
+            assert_eq!(counters.waves, 1, "width {width}: one union wave serves everyone");
+            assert_eq!(counters.peak_rows, 2 * width, "n=2 rows per request");
+        }
+        // KV clean after the run: only the cached node's context remains.
+        let kv = e.kv.borrow().stats();
+        assert_eq!(kv.sequences, 0);
+        assert_eq!(kv.contexts, kv.cached_contexts);
+        e.kv.borrow().check_invariants().unwrap();
+        e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+    }
+}
+
+#[test]
+fn stop_token_parity_under_coalescing() {
+    // Stop-token finishes inside a lane (finished rows keep feeding their
+    // last token, exactly like the solo loop) must not disturb anyone.
+    let reqs: Vec<GenerationRequest> =
+        (1..=4u64).map(|id| req(id, 4, 8, Some(corpus::SEMI))).collect();
+    let serial = run_serial(&reqs);
+    let e = engine();
+    let batched = run_batched(&e, reqs.iter().map(|r| (0, r.clone())).collect());
+    for (id, b) in &batched {
+        assert_eq!(
+            completions(b),
+            completions(&serial[id]),
+            "request {id} diverged with stop tokens in play"
+        );
+    }
+    assert_eq!(e.metrics.batch_counters().batched_requests, 4);
+}
+
+#[test]
+fn mid_wave_join_is_bitwise_transparent() {
+    // A runs a long wave (stop disabled -> exactly max_tokens tokens); B
+    // is released 3 step-boundaries in and joins mid-wave with ragged
+    // decode positions. Both must match the serial oracle bit for bit.
+    let a = req(1, 2, 8, None);
+    let b = req(2, 2, 8, None);
+    let serial = run_serial(&[a.clone(), b.clone()]);
+
+    let e = engine();
+    let batched = run_batched(&e, vec![(0, a), (4, b)]);
+    for id in [1u64, 2] {
+        assert_eq!(
+            completions(&batched[&id]),
+            completions(&serial[&id]),
+            "request {id} diverged under mid-wave join"
+        );
+    }
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.mid_wave_joins, 1, "B must join after A has stepped");
+    assert_eq!(counters.coalesced_requests, 2);
+    assert_eq!(counters.waves, 1);
+    // B's rows were fresh while A was mid-decode: the join ran ragged
+    // positions, and the union peaked at both requests' rows.
+    assert_eq!(counters.peak_rows, 4);
+}
+
+#[test]
+fn early_detach_compacts_without_disturbing_survivors() {
+    // A finishes after 2 tokens and detaches; B decodes to 8. B's rows
+    // survive the compaction rebuild bit-for-bit.
+    let a = req(1, 2, 2, None);
+    let b = req(2, 2, 8, None);
+    let serial = run_serial(&[a.clone(), b.clone()]);
+
+    let e = engine();
+    let batched = run_batched(&e, vec![(0, a), (0, b)]);
+    for id in [1u64, 2] {
+        assert_eq!(
+            completions(&batched[&id]),
+            completions(&serial[&id]),
+            "request {id} diverged under early detach"
+        );
+    }
+    assert_eq!(batched[&1].completions[0].tokens.len(), 2);
+    assert_eq!(batched[&2].completions[0].tokens.len(), 8);
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.waves, 1);
+    assert_eq!(counters.coalesced_requests, 2);
+    // After A detached the wave kept stepping at B's width only.
+    assert_eq!(counters.peak_rows, 4);
+}
+
+#[test]
+fn width_cap_defers_joins_and_multi_wave_requests_sequence() {
+    // A needs two waves (n = 40 > the largest bucket 32); B (n = 4) cannot
+    // fit next to A's first 32-row wave, so it waits and then shares the
+    // second wave with A's 8-row tail. Everyone still matches serial.
+    let a = req(1, 40, 3, None);
+    let b = req(2, 4, 3, None);
+    let serial = run_serial(&[a.clone(), b.clone()]);
+
+    let e = engine();
+    let batched = run_batched(&e, vec![(0, a), (0, b)]);
+    for id in [1u64, 2] {
+        assert_eq!(
+            completions(&batched[&id]),
+            completions(&serial[&id]),
+            "request {id} diverged under the width cap"
+        );
+    }
+    assert_eq!(batched[&1].completions.len(), 40);
+    assert_eq!(batched[&1].timing.waves, 2);
+    let counters = e.metrics.batch_counters();
+    // One union wave hosted both of A's waves and B's.
+    assert_eq!(counters.waves, 1);
+    assert_eq!(counters.peak_rows, 32, "the cap held the union at the largest bucket");
+    assert_eq!(counters.coalesced_requests, 2, "A's tail and B shared steps");
+}
+
+#[test]
+fn batched_timing_reports_cache_and_coalescing() {
+    let e = engine();
+    let batched = run_batched(&e, vec![(0, req(1, 2, 4, None)), (0, req(2, 2, 4, None))]);
+    // First request was cold (it built the node), second warm.
+    let prompt_len = e.tokenize_prompt(PROMPT).unwrap().len();
+    assert_eq!(batched[&1].timing.cache_hit_tokens, 0);
+    assert!(batched[&1].timing.upload_bytes > 0);
+    assert_eq!(batched[&2].timing.cache_hit_tokens, prompt_len);
+    assert_eq!(batched[&2].timing.upload_bytes, 0, "warm join reuses the resident context");
+    for id in [1u64, 2] {
+        assert_eq!(batched[&id].timing.coalesced_peak_rows, 4);
+        assert_eq!(batched[&id].timing.decode_steps, 3, "first token + 3 steps = 4 tokens");
+    }
+}

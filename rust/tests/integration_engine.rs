@@ -186,7 +186,7 @@ fn http_api_serves_generation() {
     )
     .unwrap();
     let server = bifurcated_attn::server::build_server(client);
-    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let shutdown = bifurcated_attn::server::Shutdown::new();
     let flag = std::sync::Arc::clone(&shutdown);
     let t = std::thread::spawn(move || {
         server.serve("127.0.0.1:34981", 2, Some(flag)).unwrap();
@@ -211,6 +211,6 @@ fn http_api_serves_generation() {
     assert!(doc.get("reranked").is_some());
     assert!(doc.req("timing").f64_of("decode_steps") >= 1.0);
 
-    shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+    shutdown.trigger();
     t.join().unwrap();
 }
