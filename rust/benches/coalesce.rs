@@ -96,6 +96,7 @@ fn run_scenario(width: usize, threads: usize) -> ScenarioResult {
             0,
             BatchJob::Generate(
                 req,
+                None,
                 Box::new(move |res| {
                     sink.borrow_mut().push(res.expect("coalesced request failed"));
                 }),

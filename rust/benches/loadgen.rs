@@ -1,0 +1,423 @@
+//! HTTP load harness with SLO gates: drives the REAL server (engine
+//! thread + batcher + chunked streaming) with a Zipf-popular prefix mix
+//! and a long/short prompt blend, open- or closed-loop, and reports
+//! p50/p90/p99 **TTFT**, **inter-token latency**, and request totals
+//! measured at the socket — the streaming numbers a serving SLO is
+//! written against. One client deliberately disconnects mid-stream so the
+//! cancel-on-disconnect path is exercised under load, and the run
+//! **fails** (exit 1) unless:
+//!
+//! * every request succeeded and tokens actually streamed,
+//! * p99 TTFT is finite and below the whole-request p99 (first tokens
+//!   must arrive while decode is still running — the point of streaming),
+//! * the disconnect was observed as a cancellation with its rows freed.
+//!
+//! Writes `BENCH_loadgen.json` (flat grid for CI trend lines) next to the
+//! usual `target/bench_results/loadgen.json` tables.
+//!
+//! Flags: `--quick`, `--threads N` (engine kernels), `--requests N`,
+//! `--concurrency C` (closed loop), `--open --rate R` (open loop,
+//! req/s), `--prefixes P`, `--zipf S`.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use bifurcated_attn::bench::{bench_main, cli_threads, Cell, Table};
+use bifurcated_attn::coordinator::EngineConfig;
+use bifurcated_attn::server::{
+    build_server, connect_retry, send_request, spawn_native_engine, ClientResponse, EngineClient,
+    Shutdown,
+};
+use bifurcated_attn::util::histogram::Histogram;
+use bifurcated_attn::util::json::Json;
+use bifurcated_attn::util::prng::Pcg;
+
+// ---------------------------------------------------------------------------
+// CLI
+// ---------------------------------------------------------------------------
+
+fn flag_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn flag_num<T: std::str::FromStr>(name: &str, default: T) -> T {
+    flag_value(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn has_flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+// ---------------------------------------------------------------------------
+// Workload: Zipf-popular prefixes, long/short blend
+// ---------------------------------------------------------------------------
+
+struct Workload {
+    /// Prompt per prefix rank (rank 0 = most popular).
+    prompts: Vec<String>,
+    /// Cumulative Zipf distribution over the ranks.
+    cdf: Vec<f64>,
+}
+
+impl Workload {
+    /// `prefixes` distinct prompts under Zipf(s) popularity. Even ranks
+    /// are LONG prompts (8 expressions), odd ranks SHORT (2) — so the
+    /// popular head and the tail both mix context lengths.
+    fn new(prefixes: usize, s: f64, rng: &mut Pcg) -> Workload {
+        let mut prompts = Vec::with_capacity(prefixes);
+        for rank in 0..prefixes {
+            let exprs = if rank % 2 == 0 { 8 } else { 2 };
+            let mut p = String::new();
+            for _ in 0..exprs {
+                let a = rng.below(90) + 10; // two-digit operands
+                let b = rng.below(89) + 10;
+                p.push_str(&format!("{a}+{b}={};", a + b));
+            }
+            prompts.push(p);
+        }
+        let mut cdf = Vec::with_capacity(prefixes);
+        let mut acc = 0.0;
+        for rank in 0..prefixes {
+            acc += 1.0 / ((rank + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Workload { prompts, cdf }
+    }
+
+    fn sample(&self, rng: &mut Pcg) -> &str {
+        let u = rng.f64();
+        let rank = self.cdf.iter().position(|&c| u < c).unwrap_or(self.cdf.len() - 1);
+        &self.prompts[rank]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One streaming client call, measured at the socket
+// ---------------------------------------------------------------------------
+
+struct Obs {
+    ttft_ms: f64,
+    total_ms: f64,
+    inter_token_ms: Vec<f64>,
+    tokens: usize,
+}
+
+fn stream_once(addr: std::net::SocketAddr, prompt: &str, n: usize) -> Result<Obs, String> {
+    let body =
+        format!(r#"{{"prompt":"{prompt}","n":{n},"max_tokens":8,"stop":null,"stream":true}}"#);
+    let t0 = Instant::now();
+    let mut s =
+        connect_retry(addr, Duration::from_secs(10)).map_err(|e| format!("connect: {e}"))?;
+    send_request(&mut s, "POST", "/generate", &body).map_err(|e| format!("send: {e}"))?;
+    let mut resp = ClientResponse::read_head(s).map_err(|e| format!("head: {e}"))?;
+    if resp.status != 200 {
+        return Err(format!("status {}: {}", resp.status, resp.read_body().unwrap_or_default()));
+    }
+    let mut ttft_ms = None;
+    let mut inter_token_ms = Vec::new();
+    let mut tokens = 0usize;
+    let mut last_tok_at = t0;
+    let mut finished = false;
+    while let Some(chunk) = resp.next_chunk().map_err(|e| format!("chunk: {e}"))? {
+        for line in chunk.lines().filter(|l| !l.is_empty()) {
+            if line.contains("\"error\"") {
+                return Err(format!("engine error line: {line}"));
+            }
+            if line.contains("\"done\"") {
+                finished = true;
+                continue;
+            }
+            let now = Instant::now();
+            match ttft_ms {
+                None => ttft_ms = Some(now.duration_since(t0).as_secs_f64() * 1e3),
+                Some(_) => inter_token_ms
+                    .push(now.duration_since(last_tok_at).as_secs_f64() * 1e3),
+            }
+            last_tok_at = now;
+            tokens += 1;
+        }
+    }
+    if !finished {
+        return Err("stream ended without a done chunk".into());
+    }
+    Ok(Obs {
+        ttft_ms: ttft_ms.ok_or("no tokens before done")?,
+        total_ms: t0.elapsed().as_secs_f64() * 1e3,
+        inter_token_ms,
+        tokens,
+    })
+}
+
+/// The deliberate mis-behaver: start a big streaming request, read ONE
+/// chunk, vanish. Retries until the server's cancel counter moves (a tiny
+/// request can win the race and complete before a write fails).
+fn disconnect_once(addr: std::net::SocketAddr, prompt: &str, client: &EngineClient) -> bool {
+    for _attempt in 0..10 {
+        let body = format!(
+            r#"{{"prompt":"{prompt}","n":8,"max_tokens":32,"stop":null,"mode":"bifurcated","stream":true}}"#
+        );
+        let Ok(mut s) = connect_retry(addr, Duration::from_secs(10)) else { return false };
+        if send_request(&mut s, "POST", "/generate", &body).is_err() {
+            continue;
+        }
+        let Ok(mut resp) = ClientResponse::read_head(s) else { continue };
+        let _ = resp.next_chunk();
+        drop(resp); // hang up mid-stream
+        for _ in 0..100 {
+            if client.metrics().f64_of("cancelled_requests") >= 1.0 {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+struct RunStats {
+    ttft: Histogram,
+    inter: Histogram,
+    total: Histogram,
+    tokens: usize,
+    errors: Vec<String>,
+}
+
+fn run_load(
+    addr: std::net::SocketAddr,
+    workload: Arc<Workload>,
+    requests: usize,
+    concurrency: usize,
+    open_rate: Option<f64>,
+) -> RunStats {
+    let stats = Arc::new(Mutex::new(RunStats {
+        ttft: Histogram::new(),
+        inter: Histogram::new(),
+        total: Histogram::new(),
+        tokens: 0,
+        errors: Vec::new(),
+    }));
+    match open_rate {
+        // Open loop: arrivals on a fixed-rate schedule regardless of
+        // completions — queueing shows up in TTFT, as in production.
+        Some(rate) => {
+            let interval = Duration::from_secs_f64(1.0 / rate.max(0.1));
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for i in 0..requests {
+                let due = interval * i as u32;
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                let wl = Arc::clone(&workload);
+                let st = Arc::clone(&stats);
+                handles.push(std::thread::spawn(move || issue_thread(addr, wl, st, i)));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        // Closed loop: C workers, next request only after the last one
+        // finished — the classic saturation harness.
+        None => {
+            let next = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..concurrency.max(1) {
+                let next = Arc::clone(&next);
+                let wl = Arc::clone(&workload);
+                let st = Arc::clone(&stats);
+                handles.push(std::thread::spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= requests {
+                        return;
+                    }
+                    issue_thread(addr, Arc::clone(&wl), Arc::clone(&st), i);
+                }));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+    Arc::try_unwrap(stats).ok().expect("stats still shared").into_inner().unwrap()
+}
+
+/// Thread-side body of one load-generated request (shared by both loops).
+fn issue_thread(
+    addr: std::net::SocketAddr,
+    workload: Arc<Workload>,
+    stats: Arc<Mutex<RunStats>>,
+    req_idx: usize,
+) {
+    let mut rng = Pcg::new(0x10ad ^ (req_idx as u64).wrapping_mul(0x9E37_79B9));
+    let prompt = workload.sample(&mut rng).to_string();
+    let n = [1usize, 2, 4][rng.below(3)];
+    let res = stream_once(addr, &prompt, n);
+    let mut st = stats.lock().unwrap();
+    match res {
+        Ok(o) => {
+            st.ttft.record(o.ttft_ms);
+            st.total.record(o.total_ms);
+            for d in o.inter_token_ms {
+                st.inter.record(d);
+            }
+            st.tokens += o.tokens;
+        }
+        Err(e) => st.errors.push(format!("request {req_idx}: {e}")),
+    }
+}
+
+fn main() {
+    let threads = cli_threads();
+    let mut gate_err: Option<String> = None;
+    bench_main("loadgen", |quick| {
+        let requests = flag_num("--requests", if quick { 12 } else { 48 });
+        let concurrency = flag_num("--concurrency", if quick { 3 } else { 6 });
+        let prefixes = flag_num("--prefixes", if quick { 4 } else { 12 });
+        let zipf_s = flag_num("--zipf", 1.0f64);
+        let open_rate: Option<f64> = has_flag("--open").then(|| flag_num("--rate", 25.0f64));
+
+        let mut cfg = EngineConfig::default();
+        cfg.threads = threads;
+        let client = spawn_native_engine("pico-mq".into(), 0, cfg).expect("engine");
+        let server = build_server(Arc::clone(&client));
+        let shutdown = Shutdown::new();
+        let flag = Arc::clone(&shutdown);
+        let http_workers = concurrency + 4;
+        let srv_thread = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", http_workers, Some(flag)).expect("serve");
+        });
+        let addr = shutdown.wait_addr(Duration::from_secs(10)).expect("server never bound");
+
+        let mut wl_rng = Pcg::new(7);
+        let workload = Arc::new(Workload::new(prefixes, zipf_s, &mut wl_rng));
+
+        let t0 = Instant::now();
+        let mut stats = run_load(addr, Arc::clone(&workload), requests, concurrency, open_rate);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let cancelled = disconnect_once(addr, &workload.prompts[0], &client);
+
+        let met = client.metrics();
+        shutdown.trigger();
+        let _ = srv_thread.join();
+
+        // ---------------- gates ----------------
+        if !stats.errors.is_empty() {
+            gate_err = Some(format!(
+                "{} request(s) failed; first: {}",
+                stats.errors.len(),
+                stats.errors[0]
+            ));
+        } else if stats.tokens == 0 || stats.ttft.len() == 0 {
+            gate_err = Some("no tokens were streamed".into());
+        } else if !cancelled {
+            gate_err = Some("mid-stream disconnect was never observed as a cancellation".into());
+        }
+        if stats.ttft.len() == 0 || stats.inter.len() == 0 || stats.total.len() == 0 {
+            // nothing to summarize — the gate above already says why
+            if gate_err.is_none() {
+                gate_err = Some("no latency samples were collected".into());
+            }
+            return vec![];
+        }
+        let (ttft, inter, total) =
+            (stats.ttft.summary(), stats.inter.summary(), stats.total.summary());
+        if gate_err.is_none() {
+            if !ttft.p99.is_finite() {
+                gate_err = Some(format!("p99 TTFT is not finite: {}", ttft.p99));
+            } else if ttft.p99 >= total.p99 {
+                // streaming's whole point: first token beats request end
+                gate_err = Some(format!(
+                    "p99 TTFT {:.2} ms did not beat p99 total {:.2} ms",
+                    ttft.p99, total.p99
+                ));
+            }
+        }
+
+        // ---------------- report ----------------
+        let loop_desc = match open_rate {
+            Some(r) => format!("open loop @ {r:.0} req/s"),
+            None => format!("closed loop, {concurrency} workers"),
+        };
+        let mut t = Table::new(
+            &format!(
+                "Streaming SLO: {requests} requests, {prefixes} Zipf({zipf_s}) prefixes, \
+                 {loop_desc} (pico-mq, {threads} threads)"
+            ),
+            &["metric", "count", "mean ms", "p50 ms", "p90 ms", "p99 ms", "max ms"],
+        )
+        .with_note(
+            "TTFT and inter-token latency measured at the client socket against the real \
+             chunked HTTP server; one extra client disconnects mid-stream to exercise \
+             cancel-on-disconnect",
+        );
+        for (name, s) in [("ttft", &ttft), ("inter-token", &inter), ("total", &total)] {
+            t.row(vec![
+                Cell::Str(name.into()),
+                Cell::Num(s.count as f64),
+                Cell::Ms(s.mean),
+                Cell::Ms(s.p50),
+                Cell::Ms(s.p90),
+                Cell::Ms(s.p99),
+                Cell::Ms(s.max),
+            ]);
+        }
+        let mut c = Table::new(
+            "Server-side accounting after the run",
+            &["tokens streamed", "throughput tok/s", "cancelled", "cancel freed rows", "errors"],
+        );
+        c.row(vec![
+            Cell::Num(met.f64_of("streamed_tokens")),
+            Cell::Num((stats.tokens as f64 / wall_s * 10.0).round() / 10.0),
+            Cell::Num(met.f64_of("cancelled_requests")),
+            Cell::Num(met.f64_of("cancel_freed_rows")),
+            Cell::Num(stats.errors.len() as f64),
+        ]);
+
+        let flat = Json::obj()
+            .set("model", Json::Str("pico-mq".into()))
+            .set("threads", Json::Num(threads as f64))
+            .set("requests", Json::Num(requests as f64))
+            .set("prefixes", Json::Num(prefixes as f64))
+            .set("zipf_s", Json::Num(zipf_s))
+            .set(
+                "loop",
+                match open_rate {
+                    Some(r) => Json::obj()
+                        .set("kind", Json::Str("open".into()))
+                        .set("rate_rps", Json::Num(r)),
+                    None => Json::obj()
+                        .set("kind", Json::Str("closed".into()))
+                        .set("concurrency", Json::Num(concurrency as f64)),
+                },
+            )
+            .set("ttft_ms", ttft.to_json())
+            .set("inter_token_ms", inter.to_json())
+            .set("total_ms", total.to_json())
+            .set("client_tokens", Json::Num(stats.tokens as f64))
+            .set("throughput_tok_s", Json::Num(stats.tokens as f64 / wall_s))
+            .set("streamed_tokens", Json::Num(met.f64_of("streamed_tokens")))
+            .set("cancelled_requests", Json::Num(met.f64_of("cancelled_requests")))
+            .set("cancel_freed_rows", Json::Num(met.f64_of("cancel_freed_rows")))
+            .set("errors", Json::Num(stats.errors.len() as f64));
+        if let Err(e) = std::fs::write("BENCH_loadgen.json", flat.to_string_pretty()) {
+            eprintln!("warn: could not write BENCH_loadgen.json: {e}");
+        } else {
+            eprintln!("[bench] flat grid -> BENCH_loadgen.json");
+        }
+        let _ = std::io::stderr().flush();
+        vec![t, c]
+    });
+    if let Some(e) = gate_err {
+        eprintln!("[bench] STREAMING SLO VIOLATION: {e}");
+        std::process::exit(1);
+    }
+}

@@ -48,6 +48,7 @@ use crate::runtime::HostTensor;
 use super::engine::{wave_seed, Engine, Prepared};
 use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 use super::sampler::SamplerBatch;
+use super::stream::{Cancelled, StreamHandle};
 
 /// How long the batcher sleeps when fully idle before re-checking for
 /// shutdown (no correctness impact — arrivals interrupt the wait).
@@ -89,8 +90,9 @@ pub type Responder = Box<dyn FnOnce(Result<RequestResult>)>;
 
 /// One unit of work for the batcher.
 pub enum BatchJob<B: Backend> {
-    /// A generation request plus its reply path.
-    Generate(GenerationRequest, Responder),
+    /// A generation request, its optional step-boundary token sink
+    /// (`stream=1`), and its reply path.
+    Generate(GenerationRequest, Option<StreamHandle>, Responder),
     /// An engine-thread side effect served at the next boundary without
     /// waiting for in-flight waves (metrics snapshots).
     Inspect(Box<dyn FnOnce(&Engine<B>)>),
@@ -190,6 +192,15 @@ struct Lane {
     seq_ids: Vec<SeqId>,
     /// Row offset in the union kd/vd tensors (valid between rebuilds).
     r0: usize,
+    /// Request-global index of this lane's first sampler (waves
+    /// concatenated) — the streaming row offset.
+    row_base: usize,
+    /// Cloned from the request's [`Prepared::stream`]; lanes emit their
+    /// newly sampled tokens here at every step boundary.
+    stream: Option<StreamHandle>,
+    /// Scratch: finished flags snapshotted before each sampler step so
+    /// the emitter can tell fresh samples from re-fed feed tokens.
+    mask: Vec<bool>,
 }
 
 impl Lane {
@@ -300,9 +311,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
     pub fn admit(&mut self, job: BatchJob<B>) {
         match job {
             BatchJob::Inspect(f) => f(self.engine),
-            BatchJob::Generate(req, reply) => match self.engine.prepare(&req) {
+            BatchJob::Generate(req, stream, reply) => match self.engine.prepare(&req) {
                 Err(e) => reply(Err(e)),
-                Ok(prep) => {
+                Ok(mut prep) => {
+                    prep.stream = stream;
                     let coalescible = prep.node.is_some()
                         && prep.mode == DecodeMode::Bifurcated
                         && prep.shared_ctx.is_some();
@@ -408,6 +420,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// finished ones, rebuild the union caches if the composition changed,
     /// then run one (possibly ragged) decode step for everyone.
     fn step_active(&mut self) {
+        // Step boundary: requests whose streaming client disconnected are
+        // retired first — parked or laned — so a gone client never pays
+        // for another decode step.
+        self.sweep_cancelled();
         // Join/retire until stable: joining can surface lanes that finish
         // on their first (prefix-logits) draw, and retiring those frees
         // width for the next parked request or a multi-wave successor.
@@ -473,6 +489,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
             }
         };
         let vocab = self.engine.rt.cfg().vocab;
+        let mut streamed = 0usize;
         let (sweep_bytes, shared) = {
             let active = self.active.as_mut().expect("active wave vanished");
             let logits = out.logits.f32s();
@@ -481,7 +498,13 @@ impl<'e, B: Backend> Batcher<'e, B> {
             for lane in active.lanes.iter_mut() {
                 debug_assert_eq!(lane.r0, r0, "assembly order must match the cache layout");
                 let rows = &logits[r0 * vocab..(r0 + lane.live) * vocab];
-                lane.tokens = lane.sampler.step(rows);
+                if let Some(h) = &lane.stream {
+                    lane.sampler.finished_mask(&mut lane.mask);
+                    lane.tokens = lane.sampler.step(rows);
+                    streamed += h.emit_sampled(lane.row_base, &lane.mask, &lane.tokens);
+                } else {
+                    lane.tokens = lane.sampler.step(rows);
+                }
                 lane.d_pos += 1;
                 lane.steps += 1;
                 r0 += lane.live;
@@ -499,6 +522,9 @@ impl<'e, B: Backend> Batcher<'e, B> {
         };
         let step_bytes = self.engine.rt.upload_bytes() - upload_before;
         self.engine.metrics.observe_wave_step(total, sweep_bytes, step_bytes);
+        if streamed > 0 {
+            self.engine.metrics.observe_streamed_tokens(streamed);
+        }
         for key in &self.key_scratch {
             if let Some(p) = self.requests.get_mut(key) {
                 p.peak_rows = p.peak_rows.max(total);
@@ -560,10 +586,11 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// returns None.
     fn start_lane(&mut self, key: u64) -> Option<Lane> {
         let vocab = self.engine.rt.cfg().vocab;
-        let (wave, lease_ctx, max_tokens, seed, params) = {
+        let (wave, lease_ctx, max_tokens, seed, params, row_base, stream) = {
             let p = self.requests.get_mut(&key).expect("lane for unknown request");
             let wi = p.next_wave;
             let wave = p.prep.waves[wi];
+            let row_base: usize = p.prep.waves[..wi].iter().map(|w| w.live).sum();
             p.next_wave += 1;
             if p.started.is_none() {
                 p.started = Some(Instant::now());
@@ -574,6 +601,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 p.prep.max_tokens,
                 wave_seed(p.prep.id, wi),
                 SamplingParams { max_tokens: p.prep.max_tokens, ..p.prep.params.clone() },
+                row_base,
+                p.prep.stream.clone(),
             )
         };
         let seq_ids = match self.engine.lease_sequences(lease_ctx, wave.live, max_tokens) {
@@ -585,6 +614,11 @@ impl<'e, B: Backend> Batcher<'e, B> {
         };
         let mut sampler = SamplerBatch::new(wave.live, params, vocab, seed);
         let tokens = sampler.first_tokens(&self.requests[&key].prep.pre_logits);
+        if let Some(h) = &stream {
+            // first draws: no row was finished before them
+            let sent = h.emit_sampled(row_base, &vec![false; wave.live], &tokens);
+            self.engine.metrics.observe_streamed_tokens(sent);
+        }
         Some(Lane {
             key,
             live: wave.live,
@@ -595,6 +629,9 @@ impl<'e, B: Backend> Batcher<'e, B> {
             steps: 0,
             seq_ids,
             r0: 0,
+            row_base,
+            stream,
+            mask: Vec::new(),
         })
     }
 
@@ -691,6 +728,51 @@ impl<'e, B: Backend> Batcher<'e, B> {
         let p = self.requests.remove(&key).expect("fail of unknown request");
         self.engine.finish_prepared(p.prep);
         (p.reply)(Err(err));
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// Retire every request whose streaming client has disconnected.
+    /// Called at each step boundary — the cancellation latency the
+    /// tentpole promises is therefore at most one decode step.
+    fn sweep_cancelled(&mut self) {
+        if self.requests.is_empty() {
+            return;
+        }
+        let cancelled: Vec<u64> = self
+            .requests
+            .iter()
+            .filter(|(_, p)| p.prep.stream.as_ref().is_some_and(|h| h.is_cancelled()))
+            .map(|(&k, _)| k)
+            .collect();
+        for key in cancelled {
+            self.cancel_request(key);
+        }
+    }
+
+    /// Cancel one request exactly like a stop-token finish would retire
+    /// it: its live lane (if any) compacts out of the union at this
+    /// boundary with its sequences returned, parked entries leave their
+    /// queues, KV lease + prefix-cache pins release, and the reply
+    /// resolves with a downcastable [`Cancelled`].
+    fn cancel_request(&mut self, key: u64) {
+        for q in self.queues.values_mut() {
+            q.retain(|&k| k != key);
+        }
+        let mut freed_rows = 0usize;
+        if let Some(active) = self.active.as_mut() {
+            if let Some(i) = active.lanes.iter().position(|l| l.key == key) {
+                let lane = active.lanes.remove(i);
+                active.dirty = true;
+                freed_rows = lane.live;
+                for s in lane.seq_ids {
+                    self.engine.kv.borrow_mut().finish_sequence(s);
+                }
+            }
+        }
+        let p = self.requests.remove(&key).expect("cancel of unknown request");
+        self.engine.metrics.observe_cancelled(freed_rows);
+        self.engine.finish_prepared(p.prep);
+        (p.reply)(Err(anyhow::Error::new(Cancelled { freed_rows })));
         debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
     }
 

@@ -45,6 +45,7 @@ use super::batcher::BatchConfig;
 use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 use super::sampler::SamplerBatch;
 use super::scheduler::{Scheduler, SchedulerConfig, Wave};
+use super::stream::{Cancelled, StreamHandle};
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -139,6 +140,11 @@ pub struct Prepared<B: Backend> {
     /// Every node pinned on this request's behalf (hit node, extension
     /// source, inserted node); unpinned by [`Engine::finish_prepared`].
     pins: Vec<usize>,
+    /// Step-boundary token sink for `stream=1` requests: every newly
+    /// sampled token is emitted here, and the handle's cancel flag is
+    /// checked at every step boundary (client disconnect retires the
+    /// request like a stop-token finish). `None` buffers as before.
+    pub stream: Option<StreamHandle>,
     pub prefill_ms: f64,
     /// Context K_c/V_c bytes uploaded during preparation.
     pub ctx_upload_bytes: usize,
@@ -306,8 +312,13 @@ impl<B: Backend> Engine<B> {
     pub fn serve_prepared(&self, prep: Prepared<B>) -> Result<RequestResult> {
         let res = self.run_prepared(&prep);
         self.finish_prepared(prep);
-        if let Ok(r) = &res {
-            self.metrics.observe_request(&r.timing, r.completions.len());
+        match &res {
+            Ok(r) => self.metrics.observe_request(&r.timing, r.completions.len()),
+            Err(e) => {
+                if let Some(c) = e.downcast_ref::<Cancelled>() {
+                    self.metrics.observe_cancelled(c.freed_rows);
+                }
+            }
         }
         debug_assert!(self.kv.borrow().check_invariants().is_ok());
         res
@@ -469,6 +480,7 @@ impl<B: Backend> Engine<B> {
             owned_active,
             node,
             pins: std::mem::take(pins),
+            stream: None,
             prefill_ms,
             ctx_upload_bytes,
             upload_before,
@@ -494,17 +506,39 @@ impl<B: Backend> Engine<B> {
             wave_seed(prep.id, wi),
         );
         let mut tokens = sampler.first_tokens(&prep.pre_logits);
+        // streaming: rows are numbered across the whole request, so this
+        // wave's samplers start after every earlier wave's
+        let row_base: usize = prep.waves[..wi].iter().map(|w| w.live).sum();
+        let mut mask: Vec<bool> = Vec::new();
+        if let Some(h) = &prep.stream {
+            // first draws: no row was finished before them
+            mask.resize(wave.live, false);
+            let sent = h.emit_sampled(row_base, &mask, &tokens);
+            self.metrics.observe_streamed_tokens(sent);
+        }
         let (mut kd, mut vd) = self.rt.zero_decode_cache(wave.bucket);
         let mut d_pos = 0usize;
         let mut steps = 0usize;
         let wave_run = (|| -> Result<()> {
             while !sampler.all_finished() && d_pos < prep.max_tokens {
+                // step boundary: a disconnected client stops costing decode
+                // here, with the whole wave's rows handed back
+                if prep.stream.as_ref().is_some_and(|h| h.is_cancelled()) {
+                    return Err(anyhow::Error::new(Cancelled { freed_rows: wave.live }));
+                }
                 let out = self
                     .rt
                     .decode(prep.mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
                     .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
                 let live_logits = &out.logits.f32s()[..wave.live * vocab];
-                tokens = sampler.step(live_logits);
+                if let Some(h) = &prep.stream {
+                    sampler.finished_mask(&mut mask);
+                    tokens = sampler.step(live_logits);
+                    let sent = h.emit_sampled(row_base, &mask, &tokens);
+                    self.metrics.observe_streamed_tokens(sent);
+                } else {
+                    tokens = sampler.step(live_logits);
+                }
                 kd = out.kd;
                 vd = out.vd;
                 d_pos += 1;

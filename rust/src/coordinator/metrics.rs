@@ -20,6 +20,14 @@ struct Inner {
     upload_bytes: usize,
     ctx_upload_bytes: usize,
     cache_hit_tokens: usize,
+    /// Tokens delivered to clients at step boundaries (streaming mode).
+    streamed_tokens: usize,
+    /// Requests retired early because their client disconnected
+    /// mid-stream (the gone-client decode leak, now a counter).
+    cancelled_requests: usize,
+    /// Wave rows freed by those cancellations — decode capacity handed
+    /// back to live requests instead of burned to max_tokens.
+    cancel_freed_rows: usize,
     prefill_ms: Histogram,
     per_step_ms: Histogram,
     total_ms: Histogram,
@@ -95,6 +103,27 @@ impl Metrics {
         self.inner.borrow_mut().batch.mid_wave_joins += 1;
     }
 
+    /// `n` tokens were delivered to a streaming client at a step boundary.
+    pub fn observe_streamed_tokens(&self, n: usize) {
+        self.inner.borrow_mut().streamed_tokens += n;
+    }
+
+    /// A request was cancelled because its client disconnected,
+    /// freeing `freed_rows` decode rows at the step boundary.
+    pub fn observe_cancelled(&self, freed_rows: usize) {
+        let mut m = self.inner.borrow_mut();
+        m.cancelled_requests += 1;
+        m.cancel_freed_rows += freed_rows;
+    }
+
+    pub fn cancelled_requests(&self) -> usize {
+        self.inner.borrow().cancelled_requests
+    }
+
+    pub fn streamed_tokens(&self) -> usize {
+        self.inner.borrow().streamed_tokens
+    }
+
     /// A batcher-served request completed. `coalesced` is whether it
     /// shared at least one decode step with another request;
     /// `generated_tokens` is its total sampled token count.
@@ -123,7 +152,10 @@ impl Metrics {
             .set("decode_steps", Json::Num(m.decode_steps as f64))
             .set("upload_bytes", Json::Num(m.upload_bytes as f64))
             .set("ctx_upload_bytes", Json::Num(m.ctx_upload_bytes as f64))
-            .set("cache_hit_tokens", Json::Num(m.cache_hit_tokens as f64));
+            .set("cache_hit_tokens", Json::Num(m.cache_hit_tokens as f64))
+            .set("streamed_tokens", Json::Num(m.streamed_tokens as f64))
+            .set("cancelled_requests", Json::Num(m.cancelled_requests as f64))
+            .set("cancel_freed_rows", Json::Num(m.cancel_freed_rows as f64));
         if !m.prefill_ms.is_empty() {
             j = j.set("prefill_ms", m.prefill_ms.summary().to_json());
         }
@@ -199,6 +231,20 @@ mod tests {
         assert_eq!(r.f64_of("cache_hit_tokens"), 12.0);
         assert_eq!(r.req("prefill_ms").f64_of("count"), 2.0);
         assert!((r.req("per_step_ms").f64_of("mean") - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_and_cancel_counters_aggregate() {
+        let m = Metrics::default();
+        m.observe_streamed_tokens(3);
+        m.observe_streamed_tokens(2);
+        m.observe_cancelled(4);
+        assert_eq!(m.streamed_tokens(), 5);
+        assert_eq!(m.cancelled_requests(), 1);
+        let r = m.report();
+        assert_eq!(r.f64_of("streamed_tokens"), 5.0);
+        assert_eq!(r.f64_of("cancelled_requests"), 1.0);
+        assert_eq!(r.f64_of("cancel_freed_rows"), 4.0);
     }
 
     #[test]

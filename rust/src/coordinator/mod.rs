@@ -11,6 +11,7 @@ pub mod ranker;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
+pub mod stream;
 
 pub use batcher::{BatchConfig, BatchJob, Batcher, JobSource, ScriptedSource};
 pub use engine::{wave_seed, Engine, EngineConfig, Prepared};
@@ -18,3 +19,4 @@ pub use ranker::rerank_top_k;
 pub use request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 pub use sampler::SamplerBatch;
 pub use scheduler::{ModePolicy, Scheduler, SchedulerConfig, Wave};
+pub use stream::{Cancelled, Canceller, StreamEvent, StreamHandle};

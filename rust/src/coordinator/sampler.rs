@@ -52,6 +52,20 @@ impl SamplerBatch {
         self.seqs.iter().all(|s| s.finished)
     }
 
+    /// Whether sampler `i` has finished (stop token or max_tokens). The
+    /// streaming emitters snapshot this before a step to tell newly
+    /// sampled tokens from re-fed feed tokens.
+    pub fn is_finished(&self, i: usize) -> bool {
+        self.seqs[i].finished
+    }
+
+    /// Overwrite `mask` with the per-row finished flags (scratch-reuse
+    /// variant of [`SamplerBatch::is_finished`] for the step loops).
+    pub fn finished_mask(&self, mask: &mut Vec<bool>) {
+        mask.clear();
+        mask.extend(self.seqs.iter().map(|s| s.finished));
+    }
+
     pub fn steps_taken(&self) -> usize {
         self.seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0)
     }

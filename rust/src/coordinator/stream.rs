@@ -1,0 +1,198 @@
+//! Step-boundary token streaming: the channel a `/generate?stream=1`
+//! request's tokens travel from the engine thread to its HTTP worker, and
+//! the cancel-on-disconnect signal that travels back.
+//!
+//! The engine/batcher side emits one [`StreamEvent`] per **newly sampled
+//! token** at every decode-step boundary (the prefix-end draw included),
+//! over a **bounded** per-request channel sized to the request's own token
+//! budget — the engine thread never blocks on a client. The HTTP worker
+//! side turns events into HTTP chunks; when a chunk write fails (client
+//! closed the socket, or a zero-window stall outlived the write timeout)
+//! it flips the shared cancel flag. The decode side checks the flag at
+//! every step boundary and retires the request exactly like a stop-token
+//! finish: KV leases released, wave row compacted out, prefix-cache pins
+//! dropped — a gone client stops costing decode within one step.
+//!
+//! Delivery is the only thing that differs from buffered mode: the
+//! streamed `(row, token)` sequence concatenates to bitwise the same
+//! per-completion token lists a buffered call returns (pinned by
+//! `tests/streaming.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// One newly sampled token. `row` is the sampler's index across the whole
+/// request (waves concatenated), i.e. the index of the completion this
+/// token belongs to in the final buffered result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamEvent {
+    pub row: usize,
+    pub token: i32,
+}
+
+/// The decode side's handle on one streaming request: a bounded token
+/// channel plus the disconnect flag. Clones share both.
+#[derive(Debug, Clone)]
+pub struct StreamHandle {
+    tx: SyncSender<StreamEvent>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl StreamHandle {
+    /// Build a handle + the receiver its HTTP worker drains. `capacity`
+    /// bounds in-flight events; size it to the request's token budget so
+    /// the engine never blocks (see [`StreamHandle::send`]).
+    pub fn channel(capacity: usize) -> (StreamHandle, Receiver<StreamEvent>) {
+        let (tx, rx) = std::sync::mpsc::sync_channel(capacity.max(1));
+        (StreamHandle { tx, cancelled: Arc::new(AtomicBool::new(false)) }, rx)
+    }
+
+    /// Non-blocking send. `false` flags a dead client: the receiver hung
+    /// up, or the channel is full (a client further behind than the
+    /// request's whole token budget — backpressure treated as disconnect).
+    /// Either way the handle marks itself cancelled so the decode side's
+    /// next boundary check retires the request.
+    pub fn send(&self, ev: StreamEvent) -> bool {
+        match self.tx.try_send(ev) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.cancel();
+                false
+            }
+        }
+    }
+
+    /// Mark the client gone (chunk write failed / reader hung up). The
+    /// decode side observes this at its next step boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Emit the tokens a sampler batch just drew: `toks[i]` is streamed as
+    /// `(row_base + i, tok)` unless `was_finished[i]` (the row had already
+    /// finished before this step, so `toks[i]` is a re-fed feed token, not
+    /// a sample). Returns how many events were delivered; stops early once
+    /// the client is known gone.
+    pub fn emit_sampled(&self, row_base: usize, was_finished: &[bool], toks: &[i32]) -> usize {
+        let mut sent = 0usize;
+        for (i, &tok) in toks.iter().enumerate() {
+            if was_finished.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            if !self.send(StreamEvent { row: row_base + i, token: tok }) {
+                break;
+            }
+            sent += 1;
+        }
+        sent
+    }
+}
+
+/// Cancel-only view of a [`StreamHandle`]: flips the shared disconnect
+/// flag without keeping the token channel's sender alive — the HTTP
+/// worker holds one of these while it drains the receiver, so the
+/// receiver still sees EOF once the decode side drops its handles.
+#[derive(Debug, Clone)]
+pub struct Canceller {
+    cancelled: Arc<AtomicBool>,
+}
+
+impl Canceller {
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+}
+
+impl StreamHandle {
+    pub fn canceller(&self) -> Canceller {
+        Canceller { cancelled: Arc::clone(&self.cancelled) }
+    }
+}
+
+/// The error a cancelled request resolves with. Detect it with
+/// `err.downcast_ref::<Cancelled>()` — the batcher and the solo wave loop
+/// both use it to tell "client gone" (count + free, don't log as failure)
+/// from real decode faults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled {
+    /// Wave rows the cancellation freed at the step boundary.
+    pub freed_rows: usize,
+}
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request cancelled: client disconnected ({} wave row{} freed)",
+            self.freed_rows,
+            if self.freed_rows == 1 { "" } else { "s" }
+        )
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sends_until_receiver_drops_then_cancels() {
+        let (h, rx) = StreamHandle::channel(8);
+        assert!(h.send(StreamEvent { row: 0, token: 5 }));
+        assert_eq!(rx.recv().unwrap(), StreamEvent { row: 0, token: 5 });
+        drop(rx);
+        assert!(!h.send(StreamEvent { row: 0, token: 6 }));
+        assert!(h.is_cancelled(), "failed send must flag the disconnect");
+    }
+
+    #[test]
+    fn full_channel_counts_as_disconnect() {
+        let (h, _rx) = StreamHandle::channel(1);
+        assert!(h.send(StreamEvent { row: 0, token: 1 }));
+        assert!(!h.send(StreamEvent { row: 0, token: 2 }), "bound exceeded");
+        assert!(h.is_cancelled());
+    }
+
+    #[test]
+    fn emit_skips_finished_rows_and_offsets_by_base() {
+        let (h, rx) = StreamHandle::channel(8);
+        let sent = h.emit_sampled(4, &[false, true, false], &[10, 11, 12]);
+        assert_eq!(sent, 2);
+        assert_eq!(rx.try_recv().unwrap(), StreamEvent { row: 4, token: 10 });
+        assert_eq!(rx.try_recv().unwrap(), StreamEvent { row: 6, token: 12 });
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn canceller_shares_the_flag_without_holding_the_sender() {
+        let (h, rx) = StreamHandle::channel(4);
+        let c = h.canceller();
+        assert!(!c.is_cancelled());
+        c.cancel();
+        assert!(h.is_cancelled(), "flag is shared");
+        // dropping the only StreamHandle closes the channel even while
+        // the Canceller lives on
+        assert!(h.send(StreamEvent { row: 0, token: 1 }));
+        drop(h);
+        assert_eq!(rx.try_recv().unwrap(), StreamEvent { row: 0, token: 1 });
+        assert!(rx.recv().is_err(), "sender must be gone");
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn cancelled_error_downcasts_through_anyhow() {
+        let err = anyhow::Error::new(Cancelled { freed_rows: 2 });
+        assert_eq!(err.downcast_ref::<Cancelled>().unwrap().freed_rows, 2);
+        assert!(format!("{err}").contains("client disconnected"));
+    }
+}

@@ -59,6 +59,7 @@ fn print_usage() {
          serve          --model pico-mq --addr 127.0.0.1:8077 [--mode auto|bifurcated|fused]\n\
          \x20              [--prefix-cache N] [--prefix-cache-bytes B] [--threads N]\n\
          \x20              [--batch-window-us U] [--batch-width W] [--backend native|pjrt]\n\
+         \x20              [--http-read-timeout-ms T] [--http-write-timeout-ms T] [--http-max-body B]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -80,7 +81,13 @@ fn print_usage() {
          for more arrivals (default $BIFURCATED_BATCH_WINDOW_US or 0);\n\
          --batch-width W caps the coalesced wave width (default: largest\n\
          batch bucket). Coalesced completions are bitwise-identical to\n\
-         serial execution."
+         serial execution. POST /generate with \"stream\": true (or\n\
+         ?stream=1) delivers chunked ndjson — one token per decode step —\n\
+         and a client disconnect cancels the request at the next step\n\
+         boundary. --http-read-timeout-ms bounds stalled request reads\n\
+         (408; default 10000, 0 disables), --http-write-timeout-ms bounds\n\
+         stalled chunk writes (treated as disconnect; default 30000), and\n\
+         --http-max-body caps request bodies (413; default 1 MiB)."
     );
 }
 
@@ -159,8 +166,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine_config(args),
         )?,
     };
-    info!("serving {model} on http://{addr}  (POST /generate, GET /health, GET /metrics)");
+    info!(
+        "serving {model} on http://{addr}  (POST /generate [?stream=1], GET /health, GET /metrics)"
+    );
     bifurcated_attn::server::build_server(client)
+        .with_read_timeout(std::time::Duration::from_millis(
+            args.usize_or("http-read-timeout-ms", 10_000) as u64,
+        ))
+        .with_write_timeout(std::time::Duration::from_millis(
+            args.usize_or("http-write-timeout-ms", 30_000) as u64,
+        ))
+        .with_max_body(args.usize_or("http-max-body", 1 << 20))
         .serve(&addr, args.usize_or("workers", 4), None)
         .context("http serve")
 }

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 use crate::coordinator::{
     rerank_top_k, BatchJob, Batcher, Engine, EngineConfig, GenerationRequest, JobSource,
-    ModePolicy, SamplingParams,
+    ModePolicy, SamplingParams, StreamHandle,
 };
 use crate::runtime::models::DecodeMode;
 use crate::runtime::Backend;
@@ -27,8 +27,12 @@ use crate::util::json::{parse as parse_json, Json};
 
 use super::http::{HttpResponse, HttpServer};
 
+/// Cap on any one request's stream-channel capacity (a pathological
+/// `n * max_tokens` must not allocate an unbounded queue).
+const MAX_STREAM_CAPACITY: usize = 65_536;
+
 enum Job {
-    Generate(GenerationRequest, usize, Sender<Result<Json, String>>),
+    Generate(GenerationRequest, usize, Option<StreamHandle>, Sender<Result<Json, String>>),
     Metrics(Sender<Json>),
 }
 
@@ -44,8 +48,9 @@ struct ChannelSource {
 impl ChannelSource {
     fn convert<B: Backend>(job: Job) -> BatchJob<B> {
         match job {
-            Job::Generate(req, rerank_k, tx) => BatchJob::Generate(
+            Job::Generate(req, rerank_k, stream, tx) => BatchJob::Generate(
                 req,
+                stream,
                 Box::new(move |res| {
                     let _ = tx.send(
                         res.map(|r| result_to_json(&r, rerank_k)).map_err(|e| format!("{e:#}")),
@@ -103,8 +108,25 @@ impl EngineClient {
 
     pub fn generate(&self, req: GenerationRequest, rerank_k: usize) -> Result<Json, String> {
         let (tx, rx) = channel();
-        self.send(Job::Generate(req, rerank_k, tx));
+        self.send(Job::Generate(req, rerank_k, None, tx));
         rx.recv().map_err(|_| "engine thread died".to_string())?
+    }
+
+    /// Submit a streaming request: tokens flow through `stream`'s paired
+    /// receiver at step boundaries; the returned channel resolves with
+    /// the final buffered result once the request retires. The caller
+    /// must NOT keep a [`StreamHandle`] clone — hold a
+    /// [`crate::coordinator::Canceller`] instead, so the event receiver
+    /// sees EOF when the engine side finishes.
+    pub fn generate_streaming(
+        &self,
+        req: GenerationRequest,
+        rerank_k: usize,
+        stream: StreamHandle,
+    ) -> Receiver<Result<Json, String>> {
+        let (tx, rx) = channel();
+        self.send(Job::Generate(req, rerank_k, Some(stream), tx));
+        rx
     }
 
     pub fn metrics(&self) -> Json {
@@ -211,8 +233,13 @@ fn result_to_json(r: &crate::coordinator::RequestResult, rerank_k: usize) -> Jso
     j
 }
 
-/// Parse the POST /generate body into a request.
-pub fn parse_generate_body(body: &str, next_id: u64) -> Result<(GenerationRequest, usize), String> {
+/// Parse the POST /generate body into a request. The third element is
+/// the `"stream": true` body flag (the `?stream=1` query flag ORs in at
+/// the route).
+pub fn parse_generate_body(
+    body: &str,
+    next_id: u64,
+) -> Result<(GenerationRequest, usize, bool), String> {
     let doc = parse_json(body).map_err(|e| format!("bad json: {e}"))?;
     let prompt = doc
         .get("prompt")
@@ -258,10 +285,19 @@ pub fn parse_generate_body(body: &str, next_id: u64) -> Result<(GenerationReques
         return Err("n must be >= 1".into());
     }
     let rerank_k = doc.get("rerank_top_k").and_then(|v| v.as_usize()).unwrap_or(0);
-    Ok((GenerationRequest { id: next_id, prompt, params }, rerank_k))
+    let stream = doc.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    Ok((GenerationRequest { id: next_id, prompt, params }, rerank_k, stream))
 }
 
 /// Build the HTTP routing table over an engine client.
+///
+/// `/generate` is a sink-style route: without `stream` it answers with
+/// the classic buffered JSON; with `"stream": true` in the body (or
+/// `?stream=1`) it switches to `Transfer-Encoding: chunked` ndjson —
+/// one `{"row":R,"token":T}` line per token at the step boundary that
+/// sampled it, then a final `{"done": <buffered result>}` line. A failed
+/// chunk write (client gone) cancels the request at the next step
+/// boundary via the shared disconnect flag.
 pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
     let next_id = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(1));
     let gen_client = std::sync::Arc::clone(&client);
@@ -271,15 +307,57 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
         .route("GET", "/metrics", move |_| {
             HttpResponse::json(200, met_client.metrics().to_string())
         })
-        .route("POST", "/generate", move |req| {
+        .route_streaming("POST", "/generate", move |req, sink| {
             let id = next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            match parse_generate_body(&req.body, id) {
-                Err(e) => HttpResponse::error(400, &e),
-                Ok((greq, rerank_k)) => match gen_client.generate(greq, rerank_k) {
+            let (greq, rerank_k, stream) = match parse_generate_body(&req.body, id) {
+                Err(e) => return Some(HttpResponse::error(400, &e)),
+                Ok(t) => t,
+            };
+            if !(stream || req.query_flag("stream")) {
+                return Some(match gen_client.generate(greq, rerank_k) {
                     Ok(j) => HttpResponse::json(200, j.to_string()),
                     Err(e) => HttpResponse::error(500, &e),
-                },
+                });
             }
+            // Bounded to the request's own token budget so the engine
+            // thread never blocks on this client (overflow = disconnect).
+            let cap = (greq.params.n.saturating_mul(greq.params.max_tokens))
+                .saturating_add(8)
+                .min(MAX_STREAM_CAPACITY);
+            let (handle, events) = StreamHandle::channel(cap);
+            let canceller = handle.canceller();
+            let reply = gen_client.generate_streaming(greq, rerank_k, handle);
+            if sink.begin(200, "application/x-ndjson").is_err() {
+                canceller.cancel();
+                return None;
+            }
+            let mut gone = false;
+            // recv() sees EOF once the engine side retires the request
+            // and drops its handles; keep draining after a dead write so
+            // the engine-side bounded channel never fills against us.
+            while let Ok(ev) = events.recv() {
+                if gone {
+                    continue;
+                }
+                let line = format!("{{\"row\":{},\"token\":{}}}\n", ev.row, ev.token);
+                if sink.chunk(&line).is_err() {
+                    canceller.cancel();
+                    gone = true;
+                }
+            }
+            let done = reply
+                .recv()
+                .map_err(|_| "engine thread died".to_string())
+                .and_then(|r| r);
+            if !gone {
+                let line = match done {
+                    Ok(j) => format!("{}\n", Json::obj().set("done", j)),
+                    Err(e) => format!("{}\n", Json::obj().set("error", Json::Str(e))),
+                };
+                let _ = sink.chunk(&line);
+                let _ = sink.finish();
+            }
+            None
         })
 }
 
@@ -289,23 +367,25 @@ mod tests {
 
     #[test]
     fn parse_generate_body_defaults() {
-        let (req, rk) = parse_generate_body(r#"{"prompt":"1+2="}"#, 7).unwrap();
+        let (req, rk, stream) = parse_generate_body(r#"{"prompt":"1+2="}"#, 7).unwrap();
         assert_eq!(req.id, 7);
         assert_eq!(req.prompt, "1+2=");
         assert_eq!(req.params.n, 1);
         assert_eq!(req.params.stop_token, Some(crate::corpus::SEMI));
         assert_eq!(rk, 0);
+        assert!(!stream, "buffered by default");
     }
 
     #[test]
     fn parse_generate_body_full() {
         let body = r#"{"prompt":"3+4=","n":16,"temperature":0.6,"top_p":0.9,
-                       "max_tokens":8,"seed":5,"rerank_top_k":3}"#;
-        let (req, rk) = parse_generate_body(body, 1).unwrap();
+                       "max_tokens":8,"seed":5,"rerank_top_k":3,"stream":true}"#;
+        let (req, rk, stream) = parse_generate_body(body, 1).unwrap();
         assert_eq!(req.params.n, 16);
         assert!((req.params.temperature - 0.6).abs() < 1e-6);
         assert_eq!(req.params.max_tokens, 8);
         assert_eq!(rk, 3);
+        assert!(stream);
     }
 
     #[test]
@@ -323,14 +403,15 @@ mod tests {
 
     #[test]
     fn parse_generate_body_stop_and_mode() {
-        let (req, _) =
+        let (req, _, _) =
             parse_generate_body(r#"{"prompt":"x","stop":9,"mode":"bifurcated"}"#, 1).unwrap();
         assert_eq!(req.params.stop_token, Some(9));
         assert_eq!(req.params.mode, Some(ModePolicy::Force(DecodeMode::Bifurcated)));
-        let (req, _) = parse_generate_body(r#"{"prompt":"x","stop":null,"mode":"auto"}"#, 1).unwrap();
+        let (req, _, _) =
+            parse_generate_body(r#"{"prompt":"x","stop":null,"mode":"auto"}"#, 1).unwrap();
         assert_eq!(req.params.stop_token, None);
         assert_eq!(req.params.mode, Some(ModePolicy::Auto));
-        let (req, _) = parse_generate_body(r#"{"prompt":"x","mode":"fused"}"#, 1).unwrap();
+        let (req, _, _) = parse_generate_body(r#"{"prompt":"x","mode":"fused"}"#, 1).unwrap();
         assert_eq!(req.params.mode, Some(ModePolicy::Force(DecodeMode::Fused)));
         assert_eq!(req.params.stop_token, Some(crate::corpus::SEMI));
     }
@@ -339,7 +420,7 @@ mod tests {
     fn native_engine_thread_serves_generate_and_metrics() {
         let client =
             spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
-        let (req, rk) =
+        let (req, rk, _) =
             parse_generate_body(r#"{"prompt":"1+2=","n":2,"max_tokens":3,"seed":1}"#, 1).unwrap();
         let res = client.generate(req, rk).unwrap();
         assert_eq!(res.req("completions").as_arr().unwrap().len(), 2);
@@ -355,13 +436,13 @@ mod tests {
         let client =
             spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
         let body = r#"{"prompt":"1+2=","n":8,"max_tokens":2,"mode":"bifurcated"}"#;
-        let (req, rk) = parse_generate_body(body, 1).unwrap();
+        let (req, rk, _) = parse_generate_body(body, 1).unwrap();
         let res = client.generate(req, rk).unwrap();
         assert_eq!(res.str_of("mode"), "bifurcated");
         // a warm request can still force the fused baseline; it reuses the
         // cached prefill (hit tokens > 0) but re-replicates the context
         let body = r#"{"prompt":"1+2=","n":8,"max_tokens":2,"mode":"fused"}"#;
-        let (req, rk) = parse_generate_body(body, 2).unwrap();
+        let (req, rk, _) = parse_generate_body(body, 2).unwrap();
         let res = client.generate(req, rk).unwrap();
         assert_eq!(res.str_of("mode"), "fused");
         assert!(res.req("timing").f64_of("cache_hit_tokens") > 0.0, "second request is warm");

@@ -1,0 +1,175 @@
+//! Minimal HTTP/1.1 **client-side** response reader (substrate — no
+//! reqwest offline): just enough to drive the real server from tests and
+//! `benches/loadgen.rs`. Reads a status line + headers, then either a
+//! Content-Length body or `Transfer-Encoding: chunked` frames one
+//! [`ClientResponse::next_chunk`] at a time — which is exactly what a
+//! TTFT measurement needs: the clock stops when the first chunk lands,
+//! not when the response completes.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Write one request with an optional body and `Connection: close`.
+pub fn send_request(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: loadgen\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+/// A parsed response head plus a reader positioned at the body.
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    reader: BufReader<TcpStream>,
+    content_length: usize,
+    chunked: bool,
+    done: bool,
+}
+
+impl ClientResponse {
+    /// Read the status line + headers off `stream`.
+    pub fn read_head(stream: TcpStream) -> std::io::Result<ClientResponse> {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line: {line:?}"),
+                )
+            })?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut hl = String::new();
+            reader.read_line(&mut hl)?;
+            let hl = hl.trim_end();
+            if hl.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = hl.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let chunked = headers
+            .get("transfer-encoding")
+            .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+        let content_length = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        Ok(ClientResponse { status, headers, reader, content_length, chunked, done: false })
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.chunked
+    }
+
+    /// Next chunk of a chunked response; `None` once the terminator (or
+    /// EOF) arrives. Must only be called on chunked responses.
+    pub fn next_chunk(&mut self) -> std::io::Result<Option<String>> {
+        debug_assert!(self.chunked);
+        if self.done {
+            return Ok(None);
+        }
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            // peer closed without the terminator; treat as end of stream
+            self.done = true;
+            return Ok(None);
+        }
+        let size = usize::from_str_radix(line.trim(), 16).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad chunk size line: {line:?}"),
+            )
+        })?;
+        if size == 0 {
+            let mut trailer = String::new();
+            let _ = self.reader.read_line(&mut trailer);
+            self.done = true;
+            return Ok(None);
+        }
+        let mut buf = vec![0u8; size + 2]; // chunk data + trailing CRLF
+        self.reader.read_exact(&mut buf)?;
+        buf.truncate(size);
+        Ok(Some(String::from_utf8_lossy(&buf).into_owned()))
+    }
+
+    /// Drain the whole body: concatenated chunks, or the Content-Length
+    /// body for buffered responses.
+    pub fn read_body(&mut self) -> std::io::Result<String> {
+        if self.chunked {
+            let mut out = String::new();
+            while let Some(c) = self.next_chunk()? {
+                out.push_str(&c);
+            }
+            Ok(out)
+        } else {
+            let mut buf = vec![0u8; self.content_length];
+            if self.content_length > 0 {
+                self.reader.read_exact(&mut buf)?;
+            }
+            Ok(String::from_utf8_lossy(&buf).into_owned())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::http::{connect_retry, HttpResponse, HttpServer, Shutdown};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn reads_buffered_and_chunked_responses() {
+        let server = HttpServer::new()
+            .route("GET", "/b", |_| HttpResponse::json(200, "{\"x\":1}".into()))
+            .route_streaming("GET", "/c", |_, sink| {
+                sink.begin(200, "text/plain").unwrap();
+                sink.chunk("one\n").unwrap();
+                sink.chunk("two\n").unwrap();
+                sink.finish().unwrap();
+                None
+            });
+        let shutdown = Shutdown::new();
+        let flag = Arc::clone(&shutdown);
+        let t = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", 2, Some(flag)).unwrap();
+        });
+        let addr = shutdown.wait_addr(Duration::from_secs(5)).unwrap();
+
+        let mut s = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        send_request(&mut s, "GET", "/b", "").unwrap();
+        let mut resp = ClientResponse::read_head(s).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(!resp.is_chunked());
+        assert_eq!(resp.read_body().unwrap(), "{\"x\":1}");
+
+        let mut s = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        send_request(&mut s, "GET", "/c", "").unwrap();
+        let mut resp = ClientResponse::read_head(s).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.is_chunked());
+        assert_eq!(resp.next_chunk().unwrap().as_deref(), Some("one\n"));
+        assert_eq!(resp.next_chunk().unwrap().as_deref(), Some("two\n"));
+        assert_eq!(resp.next_chunk().unwrap(), None);
+        assert_eq!(resp.next_chunk().unwrap(), None, "idempotent at end");
+
+        shutdown.trigger();
+        t.join().unwrap();
+    }
+}

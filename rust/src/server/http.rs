@@ -1,29 +1,57 @@
 //! Minimal HTTP/1.1 server (substrate — no hyper/axum offline).
 //!
-//! Just enough for a JSON serving API: request-line + headers parsing,
-//! Content-Length bodies, keep-alive off (Connection: close), and a
-//! routing table of `(method, path) -> handler`. Connections are handled
-//! on a small thread pool; handlers must be `Send + Sync`.
+//! Just enough for a JSON serving API: request-line + headers parsing
+//! (query strings split off the path), Content-Length bodies clamped to a
+//! configurable maximum (413 beyond it), socket read/write timeouts (408
+//! on a stalled request — a slowloris client can no longer park a pool
+//! worker forever), keep-alive off (Connection: close), and a routing
+//! table of `(method, path) -> handler`. Connections are handled on a
+//! small thread pool; handlers must be `Send + Sync`.
+//!
+//! Two handler shapes: buffered handlers return an [`HttpResponse`]
+//! (Content-Length framing), and streaming handlers drive a
+//! [`ChunkSink`] — `Transfer-Encoding: chunked`, one chunk per write,
+//! flushed eagerly so a token reaches the client at the step boundary
+//! that produced it. A chunk write to a gone client surfaces as an
+//! `Err`, which the `/generate` handler turns into a cancellation.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::util::threadpool::ThreadPool;
+
+/// Default cap on client-supplied bodies: one bogus `Content-Length`
+/// header must not allocate gigabytes.
+pub const DEFAULT_MAX_BODY: usize = 1 << 20;
+
+/// Default socket read timeout — how long a connected-but-silent client
+/// may hold a pool worker.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default socket write timeout — how long a zero-window client may
+/// stall a chunk write before streaming treats it as a disconnect.
+pub const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Shutdown handle for [`HttpServer::serve`]. The accept loop **blocks**
 /// in `accept()` — no sleep-polling, so a request's arrival latency is
 /// the kernel's, not a poll interval's (that latency budget now belongs
 /// to the continuous-batching admission window). [`Shutdown::trigger`]
 /// flips the flag and dials the listener once, waking the blocked accept
-/// immediately.
+/// immediately. The handle also publishes the **bound address** (so
+/// callers can bind port 0 and read the real port back instead of
+/// hard-coding one): [`Shutdown::wait_addr`] blocks until `serve` has
+/// bound.
 #[derive(Debug, Default)]
 pub struct Shutdown {
     flag: AtomicBool,
-    /// The bound address, recorded by `serve` so `trigger` can dial it.
+    /// The bound address, recorded by `serve` so `trigger` can dial it
+    /// and clients can discover a port-0 bind.
     addr: Mutex<Option<SocketAddr>>,
+    bound: Condvar,
 }
 
 impl Shutdown {
@@ -36,21 +64,11 @@ impl Shutdown {
     pub fn trigger(&self) {
         self.flag.store(true, Ordering::SeqCst);
         let addr = *self.addr.lock().unwrap();
-        if let Some(mut addr) = addr {
-            // A wildcard bind (0.0.0.0 / ::) is not a connectable
-            // destination on every platform; dial the loopback of the
-            // same family instead — it reaches the same listener.
-            if addr.ip().is_unspecified() {
-                let loopback = match addr {
-                    SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-                    SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-                };
-                addr.set_ip(loopback);
-            }
+        if let Some(addr) = addr {
             // The wake connection is dropped immediately; the accept loop
             // sees the flag before dispatching it. Errors are fine — if
             // the listener is already gone there is nothing to wake.
-            let _ = TcpStream::connect(addr);
+            let _ = TcpStream::connect(connectable(addr));
         }
     }
 
@@ -58,17 +76,88 @@ impl Shutdown {
         self.flag.load(Ordering::SeqCst)
     }
 
+    /// The address `serve` bound, if it has bound yet. For a wildcard
+    /// bind the IP is rewritten to the matching loopback so the result
+    /// is directly connectable.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.addr.lock().unwrap().map(connectable)
+    }
+
+    /// Block until `serve` has bound (or `timeout` passes) and return
+    /// the connectable address — the port-0 replacement for
+    /// sleep-then-hope in tests and benches.
+    pub fn wait_addr(&self, timeout: Duration) -> Option<SocketAddr> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.addr.lock().unwrap();
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.bound.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        g.map(connectable)
+    }
+
     fn bind_to(&self, addr: SocketAddr) {
         *self.addr.lock().unwrap() = Some(addr);
+        self.bound.notify_all();
+    }
+}
+
+/// A wildcard bind (0.0.0.0 / ::) is not a connectable destination on
+/// every platform; dialing the loopback of the same family reaches the
+/// same listener.
+fn connectable(mut addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let loopback = match addr {
+            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        };
+        addr.set_ip(loopback);
+    }
+    addr
+}
+
+/// Dial `addr`, retrying briefly — pairs with [`Shutdown::wait_addr`] so
+/// tests connect the moment the listener is up instead of sleeping a
+/// guessed interval first.
+pub fn connect_retry(addr: SocketAddr, timeout: Duration) -> std::io::Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
     }
 }
 
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
     pub method: String,
+    /// Path with any query string split off.
     pub path: String,
+    /// The raw query string after `?` (empty when absent).
+    pub query: String,
     pub headers: BTreeMap<String, String>,
     pub body: String,
+}
+
+impl HttpRequest {
+    /// True when the query string carries `key` as a truthy flag:
+    /// `?key`, `?key=1`, or `?key=true`.
+    pub fn query_flag(&self, key: &str) -> bool {
+        self.query.split('&').any(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            k == key && (v.is_empty() || v == "1" || v == "true")
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -76,6 +165,20 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: String,
     pub body: String,
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
 }
 
 impl HttpResponse {
@@ -91,15 +194,7 @@ impl HttpResponse {
     }
 
     fn status_text(&self) -> &'static str {
-        match self.status {
-            200 => "OK",
-            400 => "Bad Request",
-            404 => "Not Found",
-            405 => "Method Not Allowed",
-            500 => "Internal Server Error",
-            503 => "Service Unavailable",
-            _ => "Unknown",
-        }
+        status_text(self.status)
     }
 
     pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
@@ -115,21 +210,138 @@ impl HttpResponse {
     }
 }
 
-/// Parse one HTTP/1.1 request from a stream.
-pub fn parse_request(stream: &mut impl Read) -> std::io::Result<HttpRequest> {
+/// A streaming handler's write half: `Transfer-Encoding: chunked` over
+/// the connection, one flushed chunk per [`ChunkSink::chunk`] call so
+/// data reaches the client at the boundary that produced it. Errors are
+/// returned, not swallowed — a failed chunk write is how the `/generate`
+/// handler learns its client is gone.
+pub struct ChunkSink<'a> {
+    w: &'a mut dyn Write,
+    begun: bool,
+    finished: bool,
+}
+
+impl<'a> ChunkSink<'a> {
+    pub fn new(w: &'a mut dyn Write) -> ChunkSink<'a> {
+        ChunkSink { w, begun: false, finished: false }
+    }
+
+    /// Write the status line + chunked-framing headers. Must be called
+    /// exactly once, before any chunk.
+    pub fn begin(&mut self, status: u16, content_type: &str) -> std::io::Result<()> {
+        assert!(!self.begun, "ChunkSink::begin called twice");
+        write!(
+            self.w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status,
+            status_text(status),
+            content_type
+        )?;
+        self.w.flush()?;
+        self.begun = true;
+        Ok(())
+    }
+
+    /// Whether `begin` has run — past that point the response can no
+    /// longer fall back to buffered framing.
+    pub fn begun(&self) -> bool {
+        self.begun
+    }
+
+    /// Write one chunk and flush it out. Empty data is skipped (an empty
+    /// chunk is the terminator in chunked framing — that's `finish`).
+    pub fn chunk(&mut self, data: &str) -> std::io::Result<()> {
+        debug_assert!(self.begun && !self.finished);
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:X}\r\n{}\r\n", data.len(), data)?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (the zero-length chunk).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        debug_assert!(self.begun);
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Why a request failed to parse — each maps to its own status code.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Client-declared Content-Length beyond the server's max body.
+    TooLarge(usize),
+    /// The socket read timed out mid-request (slowloris or stalled peer).
+    Timeout,
+    /// Syntactically broken request.
+    Malformed(String),
+    /// Transport-level failure.
+    Io(std::io::Error),
+}
+
+impl ParseError {
+    pub fn to_response(&self) -> HttpResponse {
+        match self {
+            ParseError::TooLarge(n) => {
+                HttpResponse::error(413, &format!("body of {n} bytes exceeds the server limit"))
+            }
+            ParseError::Timeout => HttpResponse::error(408, "timed out reading the request"),
+            ParseError::Malformed(m) => HttpResponse::error(400, &format!("parse error: {m}")),
+            ParseError::Io(e) => HttpResponse::error(400, &format!("parse error: {e}")),
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::TooLarge(n) => write!(f, "body of {n} bytes exceeds the server limit"),
+            ParseError::Timeout => write!(f, "timed out reading the request"),
+            ParseError::Malformed(m) => write!(f, "malformed request: {m}"),
+            ParseError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn io_to_parse(e: std::io::Error) -> ParseError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ParseError::Timeout,
+        _ => ParseError::Io(e),
+    }
+}
+
+/// Parse one HTTP/1.1 request with the default body cap.
+pub fn parse_request(stream: &mut impl Read) -> Result<HttpRequest, ParseError> {
+    parse_request_limited(stream, DEFAULT_MAX_BODY)
+}
+
+/// Parse one HTTP/1.1 request, rejecting bodies declared larger than
+/// `max_body` **before** allocating for them.
+pub fn parse_request_limited(
+    stream: &mut impl Read,
+    max_body: usize,
+) -> Result<HttpRequest, ParseError> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    reader.read_line(&mut line).map_err(io_to_parse)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    if method.is_empty() || path.is_empty() {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad request line"));
+    let raw_path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || raw_path.is_empty() {
+        return Err(ParseError::Malformed("bad request line".into()));
     }
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (raw_path, String::new()),
+    };
     let mut headers = BTreeMap::new();
     loop {
         let mut hl = String::new();
-        reader.read_line(&mut hl)?;
+        reader.read_line(&mut hl).map_err(io_to_parse)?;
         let hl = hl.trim_end();
         if hl.is_empty() {
             break;
@@ -142,13 +354,17 @@ pub fn parse_request(stream: &mut impl Read) -> std::io::Result<HttpRequest> {
         .get("content-length")
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
+    if len > max_body {
+        return Err(ParseError::TooLarge(len));
+    }
     let mut body = vec![0u8; len];
     if len > 0 {
-        reader.read_exact(&mut body)?;
+        reader.read_exact(&mut body).map_err(io_to_parse)?;
     }
     Ok(HttpRequest {
         method,
         path,
+        query,
         headers,
         body: String::from_utf8_lossy(&body).into_owned(),
     })
@@ -156,8 +372,24 @@ pub fn parse_request(stream: &mut impl Read) -> std::io::Result<HttpRequest> {
 
 pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
 
+/// A sink-style handler: drives the connection itself through a
+/// [`ChunkSink`]. Returning `Some(resp)` before `begin` falls back to a
+/// buffered response (how `/generate` serves non-stream requests from
+/// the same route); returning `None` means the handler streamed (and
+/// finished) the response itself.
+pub type StreamHandler =
+    Arc<dyn Fn(&HttpRequest, &mut ChunkSink<'_>) -> Option<HttpResponse> + Send + Sync>;
+
+enum Route {
+    Buffered(Handler),
+    Streaming(StreamHandler),
+}
+
 pub struct HttpServer {
-    routes: BTreeMap<(String, String), Handler>,
+    routes: BTreeMap<(String, String), Route>,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    max_body: usize,
 }
 
 impl Default for HttpServer {
@@ -168,7 +400,32 @@ impl Default for HttpServer {
 
 impl HttpServer {
     pub fn new() -> Self {
-        HttpServer { routes: BTreeMap::new() }
+        HttpServer {
+            routes: BTreeMap::new(),
+            read_timeout: DEFAULT_READ_TIMEOUT,
+            write_timeout: DEFAULT_WRITE_TIMEOUT,
+            max_body: DEFAULT_MAX_BODY,
+        }
+    }
+
+    /// Socket read timeout per connection (slowloris bound). Zero means
+    /// no timeout.
+    pub fn with_read_timeout(mut self, t: Duration) -> Self {
+        self.read_timeout = t;
+        self
+    }
+
+    /// Socket write timeout per connection (zero-window streaming bound).
+    /// Zero means no timeout.
+    pub fn with_write_timeout(mut self, t: Duration) -> Self {
+        self.write_timeout = t;
+        self
+    }
+
+    /// Max accepted request-body size; larger declarations get a 413.
+    pub fn with_max_body(mut self, bytes: usize) -> Self {
+        self.max_body = bytes;
+        self
     }
 
     pub fn route(
@@ -178,13 +435,46 @@ impl HttpServer {
         handler: impl Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
     ) -> Self {
         self.routes
-            .insert((method.to_string(), path.to_string()), Arc::new(handler));
+            .insert((method.to_string(), path.to_string()), Route::Buffered(Arc::new(handler)));
         self
     }
 
+    /// Register a sink-style handler (see [`StreamHandler`]).
+    pub fn route_streaming(
+        mut self,
+        method: &str,
+        path: &str,
+        handler: impl Fn(&HttpRequest, &mut ChunkSink<'_>) -> Option<HttpResponse>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.routes
+            .insert((method.to_string(), path.to_string()), Route::Streaming(Arc::new(handler)));
+        self
+    }
+
+    /// In-memory dispatch (unit tests): streaming routes run against a
+    /// buffer sink; if the handler streamed, the raw chunked wire bytes
+    /// come back as the response body.
     pub fn dispatch(&self, req: &HttpRequest) -> HttpResponse {
         match self.routes.get(&(req.method.clone(), req.path.clone())) {
-            Some(h) => h(req),
+            Some(Route::Buffered(h)) => h(req),
+            Some(Route::Streaming(h)) => {
+                let mut buf: Vec<u8> = Vec::new();
+                let resp = {
+                    let mut sink = ChunkSink::new(&mut buf);
+                    h(req, &mut sink)
+                };
+                match resp {
+                    Some(resp) => resp,
+                    None => HttpResponse {
+                        status: 200,
+                        content_type: "application/octet-stream".into(),
+                        body: String::from_utf8_lossy(&buf).into_owned(),
+                    },
+                }
+            }
             None => {
                 if self.routes.keys().any(|(_, p)| p == &req.path) {
                     HttpResponse::error(405, "method not allowed")
@@ -199,8 +489,9 @@ impl HttpServer {
     /// stays **blocking** — accepted connections are handed to the pool
     /// with no sleep-polling in between, so arrival latency never eats
     /// into the batching admission window. `shutdown` lets tests (and
-    /// embedders) stop the loop: [`Shutdown::trigger`] wakes the blocked
-    /// accept with a throwaway connection.
+    /// embedders) stop the loop ([`Shutdown::trigger`] wakes the blocked
+    /// accept with a throwaway connection) and read the bound address
+    /// back ([`Shutdown::wait_addr`] — bind port 0, never collide).
     pub fn serve(
         self,
         addr: &str,
@@ -209,9 +500,9 @@ impl HttpServer {
     ) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(false)?;
-        crate::info!("http server listening on {addr}");
+        crate::info!("http server listening on {}", listener.local_addr()?);
         let pool = ThreadPool::new(workers);
-        let routes = Arc::new(self);
+        let server = Arc::new(self);
         if let Some(sd) = &shutdown {
             sd.bind_to(listener.local_addr()?);
             // A trigger that raced the bind dialed nothing; honor it now.
@@ -230,8 +521,8 @@ impl HttpServer {
             }
             match stream {
                 Ok(stream) => {
-                    let routes = Arc::clone(&routes);
-                    pool.execute(move || handle_conn(stream, &routes));
+                    let server = Arc::clone(&server);
+                    pool.execute(move || handle_conn(stream, &server));
                 }
                 Err(e) => crate::warn_!("accept error: {e}"),
             }
@@ -241,11 +532,51 @@ impl HttpServer {
 }
 
 fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
-    let resp = match parse_request(&mut stream) {
-        Ok(req) => server.dispatch(&req),
-        Err(e) => HttpResponse::error(400, &format!("parse error: {e}")),
+    // A stalled client gets 408 and its worker back instead of parking
+    // the pool; a zero-window client stalls a chunk write into an error
+    // the streaming handler treats as a disconnect.
+    if !server.read_timeout.is_zero() {
+        let _ = stream.set_read_timeout(Some(server.read_timeout));
+    }
+    if !server.write_timeout.is_zero() {
+        let _ = stream.set_write_timeout(Some(server.write_timeout));
+    }
+    let req = match parse_request_limited(&mut stream, server.max_body) {
+        Ok(req) => req,
+        Err(e) => {
+            let _ = e.to_response().write_to(&mut stream);
+            let _ = stream.flush();
+            return;
+        }
     };
-    let _ = resp.write_to(&mut stream);
+    match server.routes.get(&(req.method.clone(), req.path.clone())) {
+        Some(Route::Buffered(h)) => {
+            let _ = h(&req).write_to(&mut stream);
+        }
+        Some(Route::Streaming(h)) => {
+            let (resp, begun) = {
+                let mut sink = ChunkSink::new(&mut stream);
+                let resp = h(&req, &mut sink);
+                (resp, sink.begun())
+            };
+            if let Some(resp) = resp {
+                if !begun {
+                    let _ = resp.write_to(&mut stream);
+                }
+                // A handler that began streaming and still returned a
+                // response has a bug; the chunked stream already owns the
+                // wire, so the response is dropped.
+            }
+        }
+        None => {
+            let resp = if server.routes.keys().any(|(_, p)| p == &req.path) {
+                HttpResponse::error(405, "method not allowed")
+            } else {
+                HttpResponse::error(404, "not found")
+            };
+            let _ = resp.write_to(&mut stream);
+        }
+    }
     let _ = stream.flush();
 }
 
@@ -253,14 +584,26 @@ fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
 mod tests {
     use super::*;
 
+    fn mk(m: &str, p: &str) -> HttpRequest {
+        HttpRequest {
+            method: m.into(),
+            path: p.into(),
+            query: String::new(),
+            headers: BTreeMap::new(),
+            body: "abc".into(),
+        }
+    }
+
     #[test]
     fn parse_post_with_body() {
-        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"\"}";
+        let raw =
+            b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"\"}";
         let req = parse_request(&mut &raw[..]).unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/generate");
         assert_eq!(req.body, "{\"prompt\":\"\"}");
         assert_eq!(req.headers["host"], "x");
+        assert!(req.query.is_empty());
     }
 
     #[test]
@@ -272,16 +615,71 @@ mod tests {
     }
 
     #[test]
+    fn parse_splits_query_string() {
+        let raw = b"POST /generate?stream=1&x=2 HTTP/1.1\r\n\r\n";
+        let req = parse_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.query, "stream=1&x=2");
+        assert!(req.query_flag("stream"));
+        assert!(!req.query_flag("x")); // x=2 is not truthy
+        assert!(!req.query_flag("absent"));
+    }
+
+    #[test]
+    fn query_flag_accepts_bare_and_true() {
+        let raw = b"GET /p?a&b=true&c=0 HTTP/1.1\r\n\r\n";
+        let req = parse_request(&mut &raw[..]).unwrap();
+        assert!(req.query_flag("a"));
+        assert!(req.query_flag("b"));
+        assert!(!req.query_flag("c"));
+    }
+
+    #[test]
+    fn oversized_content_length_rejected_before_allocating() {
+        // 10 GiB declared; must fail fast with TooLarge, not allocate.
+        let raw = b"POST /g HTTP/1.1\r\nContent-Length: 10737418240\r\n\r\n";
+        let err = parse_request(&mut &raw[..]).unwrap_err();
+        match err {
+            ParseError::TooLarge(n) => assert_eq!(n, 10737418240),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        assert_eq!(err.to_response().status, 413);
+    }
+
+    #[test]
+    fn custom_body_limit_applies() {
+        let raw = b"POST /g HTTP/1.1\r\nContent-Length: 32\r\n\r\n0123456789abcdef0123456789abcdef";
+        assert!(matches!(
+            parse_request_limited(&mut &raw[..], 16),
+            Err(ParseError::TooLarge(32))
+        ));
+        let req = parse_request_limited(&mut &raw[..], 32).unwrap();
+        assert_eq!(req.body.len(), 32);
+    }
+
+    #[test]
+    fn chunk_sink_frames_and_terminates() {
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut sink = ChunkSink::new(&mut buf);
+            sink.begin(200, "application/x-ndjson").unwrap();
+            sink.chunk("hello\n").unwrap();
+            sink.chunk("").unwrap(); // skipped, not a terminator
+            sink.chunk("world!").unwrap();
+            sink.finish().unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Transfer-Encoding: chunked"), "{s}");
+        let body = s.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body, "6\r\nhello\n\r\n6\r\nworld!\r\n0\r\n\r\n");
+    }
+
+    #[test]
     fn dispatch_routes_and_404() {
         let s = HttpServer::new()
             .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
             .route("POST", "/gen", |r| HttpResponse::json(200, format!("{}", r.body.len())));
-        let mk = |m: &str, p: &str| HttpRequest {
-            method: m.into(),
-            path: p.into(),
-            headers: BTreeMap::new(),
-            body: "abc".into(),
-        };
         assert_eq!(s.dispatch(&mk("GET", "/health")).status, 200);
         assert_eq!(s.dispatch(&mk("GET", "/nope")).status, 404);
         assert_eq!(s.dispatch(&mk("GET", "/gen")).status, 405);
@@ -289,18 +687,50 @@ mod tests {
     }
 
     #[test]
-    fn end_to_end_over_tcp() {
+    fn dispatch_streaming_route_collects_chunks() {
+        let s = HttpServer::new().route_streaming("GET", "/s", |_, sink| {
+            sink.begin(200, "text/plain").unwrap();
+            sink.chunk("ab").unwrap();
+            sink.finish().unwrap();
+            None
+        });
+        let resp = s.dispatch(&mk("GET", "/s"));
+        assert_eq!(resp.status, 200);
+        assert!(resp.body.contains("2\r\nab\r\n0\r\n\r\n"), "{}", resp.body);
+    }
+
+    #[test]
+    fn streaming_route_can_fall_back_to_buffered() {
+        let s = HttpServer::new().route_streaming("GET", "/s", |_, _| {
+            Some(HttpResponse::json(200, "{\"buffered\":true}".into()))
+        });
+        let resp = s.dispatch(&mk("GET", "/s"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, "{\"buffered\":true}");
+    }
+
+    /// Spin up a server on port 0 and return (addr, shutdown, join).
+    fn spawn(
+        server: HttpServer,
+        workers: usize,
+    ) -> (SocketAddr, Arc<Shutdown>, std::thread::JoinHandle<()>) {
         let shutdown = Shutdown::new();
         let flag = Arc::clone(&shutdown);
-        let port = 34517;
         let t = std::thread::spawn(move || {
-            HttpServer::new()
-                .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
-                .serve(&format!("127.0.0.1:{port}"), 2, Some(flag))
-                .unwrap();
+            server.serve("127.0.0.1:0", workers, Some(flag)).unwrap();
         });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let addr = shutdown
+            .wait_addr(Duration::from_secs(5))
+            .expect("server never bound");
+        (addr, shutdown, t)
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let server = HttpServer::new()
+            .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()));
+        let (addr, shutdown, t) = spawn(server, 2);
+        let mut stream = connect_retry(addr, Duration::from_secs(5)).unwrap();
         stream
             .write_all(b"GET /health HTTP/1.1\r\nHost: t\r\n\r\n")
             .unwrap();
@@ -313,22 +743,93 @@ mod tests {
     }
 
     #[test]
+    fn streaming_end_to_end_over_tcp() {
+        let server = HttpServer::new().route_streaming("GET", "/s", |_, sink| {
+            sink.begin(200, "text/plain").unwrap();
+            sink.chunk("tok1\n").unwrap();
+            sink.chunk("tok2\n").unwrap();
+            sink.finish().unwrap();
+            None
+        });
+        let (addr, shutdown, t) = spawn(server, 1);
+        let mut stream = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        stream.write_all(b"GET /s HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("Transfer-Encoding: chunked"), "{buf}");
+        assert!(buf.contains("5\r\ntok1\n\r\n5\r\ntok2\n\r\n0\r\n\r\n"), "{buf}");
+        shutdown.trigger();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn slowloris_gets_408_and_frees_the_worker() {
+        // ONE worker: before the read timeout existed, the stalled
+        // connection would park it forever and the healthy request after
+        // it could never be served.
+        let server = HttpServer::new()
+            .with_read_timeout(Duration::from_millis(100))
+            .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()));
+        let (addr, shutdown, t) = spawn(server, 1);
+
+        // The slowloris: connects, sends half a request line, stalls.
+        let mut stalled = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        stalled.write_all(b"GET /heal").unwrap();
+
+        // A healthy request racing it must still succeed (after at most
+        // the 100ms timeout frees the worker).
+        let mut healthy = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        healthy
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        healthy
+            .write_all(b"GET /health HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        healthy.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+
+        // The stalled connection got its 408 (or a plain close).
+        stalled
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut sbuf = String::new();
+        let _ = stalled.read_to_string(&mut sbuf);
+        assert!(
+            sbuf.is_empty() || sbuf.starts_with("HTTP/1.1 408"),
+            "stalled conn saw: {sbuf}"
+        );
+        shutdown.trigger();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_body_gets_413_over_tcp() {
+        let server = HttpServer::new()
+            .with_max_body(64)
+            .route("POST", "/gen", |_| HttpResponse::json(200, "{}".into()));
+        let (addr, shutdown, t) = spawn(server, 1);
+        let mut stream = connect_retry(addr, Duration::from_secs(5)).unwrap();
+        stream
+            .write_all(b"POST /gen HTTP/1.1\r\nContent-Length: 1000000\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 413"), "{buf}");
+        shutdown.trigger();
+        t.join().unwrap();
+    }
+
+    #[test]
     fn shutdown_wakes_a_blocking_accept_promptly() {
         // The accept loop blocks (no sleep-polling), so the only thing
         // that may unblock it at shutdown is trigger()'s wake connection.
         // A generous bound still catches a regression to 5 ms polling only
         // statistically — the real assertion is that join() returns at
         // all without any client traffic.
-        let shutdown = Shutdown::new();
-        let flag = Arc::clone(&shutdown);
-        let port = 34519;
-        let t = std::thread::spawn(move || {
-            HttpServer::new()
-                .route("GET", "/health", |_| HttpResponse::json(200, "{}".into()))
-                .serve(&format!("127.0.0.1:{port}"), 1, Some(flag))
-                .unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        let server = HttpServer::new()
+            .route("GET", "/health", |_| HttpResponse::json(200, "{}".into()));
+        let (_addr, shutdown, t) = spawn(server, 1);
         let t0 = std::time::Instant::now();
         shutdown.trigger();
         t.join().unwrap();

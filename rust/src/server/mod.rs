@@ -2,9 +2,14 @@
 //! over the engine event-loop thread.
 
 pub mod api;
+pub mod client;
 pub mod http;
 
 #[cfg(feature = "pjrt")]
 pub use api::spawn_engine;
 pub use api::{build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, EngineClient};
-pub use http::{HttpRequest, HttpResponse, HttpServer, Shutdown};
+pub use client::{send_request, ClientResponse};
+pub use http::{
+    connect_retry, ChunkSink, HttpRequest, HttpResponse, HttpServer, ParseError, Shutdown,
+    StreamHandler,
+};

@@ -42,6 +42,7 @@ fn run_one(engine: &Engine<NativeBackend>, r: GenerationRequest) -> anyhow::Resu
         0,
         BatchJob::Generate(
             r,
+            None,
             Box::new(move |res| {
                 *sink.borrow_mut() = Some(res);
             }),
@@ -60,8 +61,8 @@ fn admission_window_coalesces_concurrent_api_calls() {
     let client = spawn_native_engine("pico-mq".into(), 0, cfg).unwrap();
 
     let body = r#"{"prompt":"10+2=12;11+3=","n":2,"max_tokens":4,"stop":null,"mode":"bifurcated"}"#;
-    let (r1, k1) = parse_generate_body(body, 1).unwrap();
-    let (r2, k2) = parse_generate_body(body, 2).unwrap();
+    let (r1, k1, _) = parse_generate_body(body, 1).unwrap();
+    let (r2, k2, _) = parse_generate_body(body, 2).unwrap();
     let c2 = std::sync::Arc::clone(&client);
     let t = std::thread::spawn(move || c2.generate(r2, k2).unwrap());
     let res1 = client.generate(r1, k1).unwrap();
@@ -135,6 +136,7 @@ fn pins_release_after_waves_drain() {
             at,
             BatchJob::Generate(
                 r,
+                None,
                 Box::new(move |res| {
                     sink.borrow_mut().push(res.unwrap());
                 }),
@@ -168,6 +170,7 @@ fn inspect_jobs_are_served_between_steps() {
         0,
         BatchJob::Generate(
             req(1, "10+2=12;11+3=14;12+4=", 2, Some(ModePolicy::Force(DecodeMode::Bifurcated))),
+            None,
             Box::new(move |res| {
                 res.unwrap();
                 *done2.borrow_mut() = true;

@@ -59,6 +59,7 @@ fn run_batched(
             at,
             BatchJob::Generate(
                 r,
+                None,
                 Box::new(move |res| {
                     sink.borrow_mut().insert(id, res.expect("batched request failed"));
                 }),

@@ -1,0 +1,450 @@
+//! Streaming delivery + cancel-on-disconnect, pinned end to end:
+//!
+//! * **Bitwise parity** — the `(row, token)` events a streamed request
+//!   emits concatenate to exactly the per-completion token lists the same
+//!   request (same id, so same `wave_seed`) returns buffered, on the solo
+//!   path, through the batcher, and over real HTTP chunked transfer.
+//! * **Cancel semantics** — flipping the disconnect flag retires the
+//!   request at the next step boundary: wave row compacted out, KV leases
+//!   and prefix-cache pins released, survivors bit-for-bit undisturbed,
+//!   and the `/metrics` cancel counters account for the freed rows.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use bifurcated_attn::coordinator::batcher::{BatchConfig, BatchJob, Batcher, ScriptedSource};
+use bifurcated_attn::coordinator::{
+    Cancelled, Engine, EngineConfig, GenerationRequest, ModePolicy, RequestResult, SamplingParams,
+    StreamEvent, StreamHandle,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::{NativeBackend, TokenizerInfo};
+use bifurcated_attn::server::{
+    build_server, connect_retry, send_request, spawn_native_engine, ClientResponse, Shutdown,
+};
+use bifurcated_attn::util::json;
+
+const PROMPT: &str = "10+2=12;11+3=14;12+4=";
+
+fn engine() -> Engine<NativeBackend> {
+    Engine::native("pico-mq", 0, EngineConfig::default()).unwrap()
+}
+
+fn req(id: u64, n: usize, max_tokens: usize, stop: Option<i32>) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: PROMPT.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens,
+            stop_token: stop,
+            seed: id,
+            mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+        },
+    }
+}
+
+/// Drain a closed event channel into per-completion token lists. Rows are
+/// request-global sampler indices, so this is exactly the reconstruction a
+/// streaming client performs.
+fn rows_from_events(rx: Receiver<StreamEvent>, n_rows: usize) -> Vec<Vec<i32>> {
+    let mut rows = vec![Vec::new(); n_rows];
+    for ev in rx.iter() {
+        assert!(ev.row < n_rows, "row {} out of range {n_rows}", ev.row);
+        rows[ev.row].push(ev.token);
+    }
+    rows
+}
+
+fn assert_rows_match(rows: &[Vec<i32>], oracle: &RequestResult, what: &str) {
+    assert_eq!(rows.len(), oracle.completions.len(), "{what}: row count");
+    for (i, c) in oracle.completions.iter().enumerate() {
+        assert_eq!(rows[i], c.tokens, "{what}: completion {i} token stream diverged");
+    }
+}
+
+#[test]
+fn solo_streamed_tokens_match_buffered_bitwise() {
+    // (n, max_tokens, stop): plain, stop-token early finishes (re-fed feed
+    // tokens must NOT be streamed), and a 40-row request spanning two
+    // waves (row numbering must concatenate across waves).
+    for (n, max_tokens, stop) in [(2usize, 6usize, None), (4, 8, Some(corpus::SEMI)), (40, 3, None)]
+    {
+        let r = req(1, n, max_tokens, stop);
+        let buffered = engine().generate(&r).unwrap();
+
+        let e = engine();
+        let mut prep = e.prepare(&r).unwrap();
+        let (handle, rx) = StreamHandle::channel(n * max_tokens + 8);
+        prep.stream = Some(handle);
+        let streamed = e.serve_prepared(prep).unwrap();
+
+        assert_eq!(
+            streamed.completions, buffered.completions,
+            "streaming must not perturb the buffered result (n={n}, stop={stop:?})"
+        );
+        let rows = rows_from_events(rx, n);
+        assert_rows_match(&rows, &buffered, &format!("solo n={n} stop={stop:?}"));
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        assert_eq!(e.metrics.streamed_tokens(), total, "metrics must count every event");
+        assert_eq!(e.metrics.cancelled_requests(), 0);
+    }
+}
+
+/// Serve scripted (release-point, request, sink) jobs through the batcher.
+fn run_batched(
+    engine: &Engine<NativeBackend>,
+    jobs: Vec<(usize, GenerationRequest, Option<StreamHandle>)>,
+) -> BTreeMap<u64, anyhow::Result<RequestResult>> {
+    let out: Rc<RefCell<BTreeMap<u64, anyhow::Result<RequestResult>>>> =
+        Rc::new(RefCell::new(BTreeMap::new()));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    for (at, r, stream) in jobs {
+        let id = r.id;
+        let sink = Rc::clone(&out);
+        src.push(
+            at,
+            BatchJob::Generate(
+                r,
+                stream,
+                Box::new(move |res| {
+                    sink.borrow_mut().insert(id, res);
+                }),
+            ),
+        );
+    }
+    Batcher::new(engine, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    Rc::try_unwrap(out).ok().expect("sink still shared").into_inner()
+}
+
+#[test]
+fn batched_streamed_tokens_match_buffered_bitwise() {
+    // Two same-prefix streaming requests coalesce into ONE wave; each must
+    // still see exactly its own rows, numbered request-locally, even with
+    // stop-token finishes compacting inside the other's lane.
+    let a = req(1, 2, 6, None);
+    let b = req(2, 4, 8, Some(corpus::SEMI));
+    let oracle_a = engine().generate(&a).unwrap();
+    let oracle_b = engine().generate(&b).unwrap();
+
+    let e = engine();
+    let (ha, rxa) = StreamHandle::channel(64);
+    let (hb, rxb) = StreamHandle::channel(64);
+    let mut results = run_batched(&e, vec![(0, a, Some(ha)), (0, b, Some(hb))]);
+
+    let got_a = results.remove(&1).unwrap().unwrap();
+    let got_b = results.remove(&2).unwrap().unwrap();
+    assert_eq!(got_a.completions, oracle_a.completions, "request 1 diverged");
+    assert_eq!(got_b.completions, oracle_b.completions, "request 2 diverged");
+
+    let rows_a = rows_from_events(rxa, 2);
+    let rows_b = rows_from_events(rxb, 4);
+    assert_rows_match(&rows_a, &oracle_a, "batched request 1");
+    assert_rows_match(&rows_b, &oracle_b, "batched request 2");
+
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.coalesced_requests, 2, "both must ride one wave");
+    assert_eq!(counters.waves, 1);
+    let total: usize = rows_a.iter().map(|r| r.len()).sum::<usize>()
+        + rows_b.iter().map(|r| r.len()).sum::<usize>();
+    assert_eq!(e.metrics.streamed_tokens(), total);
+}
+
+#[test]
+fn cancel_mid_wave_frees_resources_and_preserves_survivors() {
+    // Victim A and survivor B share a wave. A's client "disconnects" at a
+    // scripted step boundary (the Inspect job flips the cancel flag the
+    // HTTP worker would flip on a failed chunk write). A's lane must
+    // compact out mid-wave; B must finish bit-for-bit as if undisturbed.
+    let a = req(1, 2, 8, None);
+    let b = req(2, 2, 8, None);
+    let oracle_b = engine().generate(&b).unwrap();
+
+    let e = engine();
+    let (handle, rx) = StreamHandle::channel(64);
+    let cancel_at_boundary = handle.canceller();
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    let out: Rc<RefCell<BTreeMap<u64, anyhow::Result<RequestResult>>>> =
+        Rc::new(RefCell::new(BTreeMap::new()));
+    for (r, stream) in [(a, Some(handle)), (b, None)] {
+        let id = r.id;
+        let sink = Rc::clone(&out);
+        src.push(
+            0,
+            BatchJob::Generate(
+                r,
+                stream,
+                Box::new(move |res| {
+                    sink.borrow_mut().insert(id, res);
+                }),
+            ),
+        );
+    }
+    src.push(
+        3,
+        BatchJob::Inspect(Box::new(move |_: &Engine<NativeBackend>| cancel_at_boundary.cancel())),
+    );
+    Batcher::new(&e, BatchConfig { window_us: 0, max_wave_rows: 0 }).run(&mut src);
+    let mut results = Rc::try_unwrap(out).ok().expect("sink still shared").into_inner();
+
+    // (a) the victim resolves as Cancelled with its 2 rows handed back
+    let err = results.remove(&1).unwrap().unwrap_err();
+    let c = err.downcast_ref::<Cancelled>().expect("victim must resolve as Cancelled");
+    assert_eq!(c.freed_rows, 2);
+    // it streamed its first draws but was cut off well short of its budget
+    let events: Vec<StreamEvent> = rx.iter().collect();
+    assert!(
+        events.len() >= 2 && events.len() < 18,
+        "victim should stream a little then stop, got {} events",
+        events.len()
+    );
+
+    // (b) the survivor is bitwise-identical to an undisturbed run
+    let got_b = results.remove(&2).unwrap().unwrap();
+    assert_eq!(
+        got_b.completions, oracle_b.completions,
+        "survivor must be unaffected by the mid-wave cancellation"
+    );
+    assert_eq!(got_b.completions[0].tokens.len(), 8, "survivor ran its full budget");
+
+    // (c) metrics account for the cancellation and the freed rows
+    assert_eq!(e.metrics.cancelled_requests(), 1);
+    let report = e.metrics_report();
+    assert_eq!(report.f64_of("cancelled_requests"), 1.0);
+    assert_eq!(report.f64_of("cancel_freed_rows"), 2.0);
+    assert_eq!(e.metrics.streamed_tokens(), events.len());
+    let counters = e.metrics.batch_counters();
+    assert_eq!(counters.waves, 1);
+    assert_eq!(counters.coalesced_requests, 2);
+    assert_eq!(counters.peak_rows, 4, "the union held both requests before the cancel");
+
+    // (d) resource hygiene: leases gone, pins dropped, node evictable
+    let kv = e.kv.borrow().stats();
+    assert_eq!(kv.sequences, 0, "cancelled lane must return its KV leases");
+    e.kv.borrow().check_invariants().unwrap();
+    e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+    let evicted = {
+        let mut kv = e.kv.borrow_mut();
+        e.cache.borrow_mut().evict_lru(&mut kv)
+    };
+    assert!(evicted, "prefix node still pinned after the cancel");
+    assert_eq!(e.kv.borrow().stats().used_blocks, 0);
+}
+
+#[test]
+fn cancelling_a_parked_request_replies_and_leaves_no_trace() {
+    // A cancels before it can ever join a wave: B fills the admission
+    // first, and A's flag is already set when the batcher first looks at
+    // it. The sweep must retire it from the parked queue (0 rows freed).
+    let a = req(1, 2, 4, None);
+    let b = req(2, 2, 4, None);
+    let e = engine();
+    let (handle, rx) = StreamHandle::channel(64);
+    handle.canceller().cancel(); // client gone before admission
+    let mut results = run_batched(&e, vec![(0, b, None), (0, a, Some(handle))]);
+
+    // Depending on admission order A either never lanes (0 rows) or is cut
+    // at the first boundary (2 rows); both must resolve as Cancelled.
+    let err = results.remove(&1).unwrap().unwrap_err();
+    let c = err.downcast_ref::<Cancelled>().expect("parked victim must resolve as Cancelled");
+    assert!(c.freed_rows <= 2);
+    assert!(results.remove(&2).unwrap().is_ok(), "the other request must be served");
+    assert_eq!(e.metrics.cancelled_requests(), 1);
+    drop(rx);
+
+    let kv = e.kv.borrow().stats();
+    assert_eq!(kv.sequences, 0);
+    e.kv.borrow().check_invariants().unwrap();
+    e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+}
+
+#[test]
+fn solo_cancel_frees_lease_at_the_first_step_boundary() {
+    // The non-batcher wave loop honors the same flag: a pre-cancelled
+    // stream stops the request at the first boundary check with the KV
+    // lease returned and the request counted as cancelled, not failed.
+    let e = engine();
+    let r = req(1, 2, 8, None);
+    let mut prep = e.prepare(&r).unwrap();
+    let (handle, rx) = StreamHandle::channel(64);
+    handle.cancel();
+    prep.stream = Some(handle);
+    let err = e.serve_prepared(prep).unwrap_err();
+    let c = err.downcast_ref::<Cancelled>().expect("must fail as Cancelled");
+    assert_eq!(c.freed_rows, 2, "the whole wave's rows are handed back");
+
+    // the prefix-end draws may land before the boundary check; nothing more
+    let events: Vec<StreamEvent> = rx.iter().collect();
+    assert!(events.len() <= 2, "at most the first draws, got {}", events.len());
+
+    assert_eq!(e.metrics.cancelled_requests(), 1);
+    let kv = e.kv.borrow().stats();
+    assert_eq!(kv.sequences, 0, "lease must be returned on the cancel path");
+    e.kv.borrow().check_invariants().unwrap();
+    e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP end to end
+// ---------------------------------------------------------------------------
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    shutdown: std::sync::Arc<Shutdown>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    client: std::sync::Arc<bifurcated_attn::server::EngineClient>,
+}
+
+impl TestServer {
+    fn start() -> TestServer {
+        let client = spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let server = build_server(std::sync::Arc::clone(&client));
+        let shutdown = Shutdown::new();
+        let flag = std::sync::Arc::clone(&shutdown);
+        let thread = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", 4, Some(flag)).unwrap();
+        });
+        let addr = shutdown.wait_addr(Duration::from_secs(10)).expect("server never bound");
+        TestServer { addr, shutdown, thread: Some(thread), client }
+    }
+
+    fn post(&self, path: &str, body: &str) -> ClientResponse {
+        let mut s = connect_retry(self.addr, Duration::from_secs(5)).unwrap();
+        send_request(&mut s, "POST", path, body).unwrap();
+        ClientResponse::read_head(s).unwrap()
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.shutdown.trigger();
+        if let Some(t) = self.thread.take() {
+            // don't double-panic out of a failing test
+            let _ = t.join();
+        }
+    }
+}
+
+/// Parse one `{"row":R,"token":T}` ndjson line.
+fn parse_event(line: &str) -> Option<(usize, i32)> {
+    let j = json::parse(line).ok()?;
+    Some((j.get("row")?.as_usize()?, j.get("token")?.as_i64()? as i32))
+}
+
+#[test]
+fn http_streaming_is_chunked_and_reconstructs_the_buffered_result() {
+    let srv = TestServer::start();
+    let n = 2usize;
+    let body = format!(
+        r#"{{"prompt":"{PROMPT}","n":{n},"max_tokens":4,"stop":null,"mode":"bifurcated","stream":true}}"#
+    );
+    let mut resp = srv.post("/generate", &body);
+    assert_eq!(resp.status, 200);
+    assert!(resp.is_chunked(), "streaming response must use chunked transfer");
+    assert_eq!(resp.headers.get("content-type").map(String::as_str), Some("application/x-ndjson"));
+
+    let mut rows: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut done: Option<json::Json> = None;
+    let mut token_events = 0usize;
+    while let Some(chunk) = resp.next_chunk().unwrap() {
+        for line in chunk.lines().filter(|l| !l.is_empty()) {
+            if let Some((row, tok)) = parse_event(line) {
+                assert!(done.is_none(), "token events must precede the done chunk");
+                rows[row].push(tok);
+                token_events += 1;
+            } else {
+                let j = json::parse(line).expect("final chunk must be JSON");
+                assert!(j.get("error").is_none(), "engine error: {j}");
+                done = Some(j.get("done").expect("missing done payload").clone());
+            }
+        }
+    }
+    let done = done.expect("stream must end with a done chunk");
+    assert_eq!(token_events, n * 4, "every sampled token arrives exactly once");
+
+    // The streamed rows decode to exactly the buffered completions' text.
+    let tok = TokenizerInfo::builtin();
+    let comps = done.req("completions").as_arr().unwrap();
+    assert_eq!(comps.len(), n);
+    for (i, c) in comps.iter().enumerate() {
+        assert_eq!(
+            tok.decode(&rows[i]),
+            c.str_of("text"),
+            "completion {i}: streamed tokens must reconstruct the buffered text"
+        );
+    }
+
+    let met = srv.client.metrics();
+    assert!(met.f64_of("streamed_tokens") >= (n * 4) as f64);
+    assert_eq!(met.f64_of("cancelled_requests"), 0.0);
+}
+
+#[test]
+fn http_stream_query_flag_equals_body_flag() {
+    let srv = TestServer::start();
+    let body = format!(r#"{{"prompt":"{PROMPT}","n":1,"max_tokens":2,"stop":null}}"#);
+    let mut resp = srv.post("/generate?stream=1", &body);
+    assert_eq!(resp.status, 200);
+    assert!(resp.is_chunked(), "?stream=1 must stream without a body flag");
+    let text = resp.read_body().unwrap();
+    assert!(text.contains("\"done\""), "missing done chunk in: {text}");
+
+    // and without either flag the same route stays buffered
+    let mut resp = srv.post("/generate", &body);
+    assert_eq!(resp.status, 200);
+    assert!(!resp.is_chunked(), "no flag means buffered");
+    let j = json::parse(&resp.read_body().unwrap()).unwrap();
+    assert_eq!(j.req("completions").as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn http_disconnect_mid_stream_cancels_the_request() {
+    let srv = TestServer::start();
+    // A dropped client is only *observed* when a chunk write fails, so
+    // give the request enough budget that plenty of writes follow the
+    // disconnect. Retry a few times: a tiny request can win the race and
+    // finish before the failed write lands.
+    let body = format!(
+        r#"{{"prompt":"{PROMPT}","n":8,"max_tokens":32,"stop":null,"mode":"bifurcated","stream":true}}"#
+    );
+    let mut cancelled = false;
+    for _attempt in 0..10 {
+        let mut resp = srv.post("/generate", &body);
+        assert_eq!(resp.status, 200);
+        let first = resp.next_chunk().unwrap();
+        assert!(first.is_some(), "must stream at least one token before we hang up");
+        drop(resp); // client vanishes mid-stream
+
+        // the sweep lands at the next step boundary; give the engine a beat
+        for _ in 0..100 {
+            if srv.client.metrics().f64_of("cancelled_requests") >= 1.0 {
+                cancelled = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if cancelled {
+            break;
+        }
+    }
+    assert!(cancelled, "disconnect was never observed as a cancellation");
+
+    // the engine remains healthy: a fresh request still completes, and the
+    // cancelled request's rows were handed back
+    let mut resp = srv.post(
+        "/generate",
+        &format!(r#"{{"prompt":"{PROMPT}","n":1,"max_tokens":2,"stop":null}}"#),
+    );
+    assert_eq!(resp.status, 200);
+    let j = json::parse(&resp.read_body().unwrap()).unwrap();
+    assert_eq!(j.req("completions").as_arr().unwrap().len(), 1);
+    let met = srv.client.metrics();
+    assert!(met.f64_of("cancel_freed_rows") >= 1.0, "freed rows must be accounted");
+    assert_eq!(met.req("kv").f64_of("sequences"), 0.0, "no leaked decode leases");
+}
