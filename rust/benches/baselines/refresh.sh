@@ -1,0 +1,23 @@
+#!/usr/bin/env sh
+# Refresh the committed decode-throughput perf floor from a live run.
+#
+# Usage (from rust/ or anywhere):
+#   benches/baselines/refresh.sh [extra decode_throughput flags]
+#
+# Runs the --quick smoke on THIS machine and copies its flat grid over
+# benches/baselines/BENCH_decode.json, turning the gate's conservative
+# floor into a measured trajectory. Run it on a quiet machine (no other
+# load), then review the diff before committing: the >20% regression
+# gate will hold future runs to ~0.8x of whatever lands here. The
+# refreshed file replaces the hand-written `_comment` field with raw
+# measured output — re-add provenance notes in the commit message.
+set -eu
+cd "$(dirname "$0")/../.."
+cargo bench --bench decode_throughput -- --quick "$@"
+[ -s BENCH_decode.json ] || {
+    echo "refresh: bench wrote no BENCH_decode.json" >&2
+    exit 1
+}
+cp BENCH_decode.json benches/baselines/BENCH_decode.json
+echo "refresh: benches/baselines/BENCH_decode.json updated from this run"
+echo "refresh: review 'git diff benches/baselines/' and commit from a quiet machine"

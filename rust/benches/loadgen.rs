@@ -17,7 +17,9 @@
 //!
 //! Flags: `--quick`, `--threads N` (engine kernels), `--requests N`,
 //! `--concurrency C` (closed loop), `--open --rate R` (open loop,
-//! req/s), `--prefixes P`, `--zipf S`.
+//! req/s), `--prefixes P`, `--zipf S`, `--trace-out FILE` (dump the
+//! run's request/wave spans as a Chrome/Perfetto trace; enables
+//! lifecycle tracing unless `$BIFURCATED_TRACE` already did).
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -26,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use bifurcated_attn::bench::{bench_main, cli_threads, Cell, Table};
 use bifurcated_attn::coordinator::EngineConfig;
+use bifurcated_attn::observability::{self, chrome, recorder};
 use bifurcated_attn::server::{
     build_server, connect_retry, send_request, spawn_native_engine, ClientResponse, EngineClient,
     Shutdown,
@@ -284,6 +287,10 @@ fn main() {
         let prefixes = flag_num("--prefixes", if quick { 4 } else { 12 });
         let zipf_s = flag_num("--zipf", 1.0f64);
         let open_rate: Option<f64> = has_flag("--open").then(|| flag_num("--rate", 25.0f64));
+        let trace_out = flag_value("--trace-out");
+        if trace_out.is_some() && !observability::enabled() {
+            observability::set_level(1);
+        }
 
         let mut cfg = EngineConfig::default();
         cfg.threads = threads;
@@ -308,6 +315,15 @@ fn main() {
         let met = client.metrics();
         shutdown.trigger();
         let _ = srv_thread.join();
+
+        if let Some(path) = &trace_out {
+            let records = recorder::snapshot(0);
+            let doc = chrome::chrome_trace(&records, &recorder::tracks());
+            match std::fs::write(path, doc.to_string()) {
+                Ok(()) => eprintln!("[bench] trace ({} events) -> {path}", records.len()),
+                Err(e) => eprintln!("warn: could not write {path}: {e}"),
+            }
+        }
 
         // ---------------- gates ----------------
         if !stats.errors.is_empty() {

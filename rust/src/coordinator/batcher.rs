@@ -41,6 +41,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::kvcache::manager::SeqId;
+use crate::observability::flight::{self, RequestSummary};
+use crate::observability::recorder::{event, record_span_at};
+use crate::observability::span;
 use crate::runtime::backend::Backend;
 use crate::runtime::models::DecodeMode;
 use crate::runtime::HostTensor;
@@ -176,6 +179,40 @@ struct Pending<B: Backend> {
     started: Option<Instant>,
     peak_rows: usize,
     coalesced: bool,
+    /// When the request parked on its node queue (after prepare).
+    enqueued_at: Instant,
+    /// Enqueue → first decode step, stamped at first lane start.
+    queue_ms: f64,
+    /// Enqueue → wave launch (admission-window hold; stays 0 for
+    /// mid-wave joiners, who never waited on a window).
+    window_ms: f64,
+}
+
+/// Decode-mode label for the flight recorder.
+fn mode_str(m: DecodeMode) -> String {
+    match m {
+        DecodeMode::Bifurcated => "bifurcated",
+        DecodeMode::Fused => "fused",
+    }
+    .to_string()
+}
+
+/// The `/requests/recent` summary of a batched request's state so far.
+fn flight_of<B: Backend>(p: &Pending<B>, outcome: &'static str) -> RequestSummary {
+    let generated: usize = p.completions.iter().map(|c| c.tokens.len()).sum();
+    RequestSummary {
+        id: p.prep.id,
+        queue_ms: p.queue_ms,
+        window_ms: p.window_ms,
+        prefill_ms: p.prep.prefill_ms,
+        decode_steps: p.decode_steps as u64,
+        generated_tokens: generated as u64,
+        peak_rows: p.peak_rows as u64,
+        coalesced: p.coalesced,
+        cache_hit_tokens: p.prep.hit_len as u64,
+        mode: mode_str(p.prep.mode),
+        outcome,
+    }
 }
 
 /// One request-wave's rows inside the union batch: its own sampler,
@@ -212,6 +249,8 @@ impl Lane {
 
 /// The running union wave over one cache node's shared context.
 struct ActiveWave<B: Backend> {
+    /// Monotonic wave id, stamped on every trace span/event of this wave.
+    id: u64,
     node: usize,
     ctx: Rc<B::Ctx>,
     m_c_len: usize,
@@ -241,6 +280,7 @@ pub struct Batcher<'e, B: Backend> {
     deadlines: BTreeMap<usize, Instant>,
     active: Option<ActiveWave<B>>,
     next_key: u64,
+    next_wave_id: u64,
     ragged_ok: bool,
     cap: usize,
     /// Reusable per-step buffer of the lane keys touched by a step.
@@ -264,6 +304,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
             deadlines: BTreeMap::new(),
             active: None,
             next_key: 1,
+            next_wave_id: 1,
             cap,
             key_scratch: Vec::new(),
         }
@@ -312,7 +353,23 @@ impl<'e, B: Backend> Batcher<'e, B> {
         match job {
             BatchJob::Inspect(f) => f(self.engine),
             BatchJob::Generate(req, stream, reply) => match self.engine.prepare(&req) {
-                Err(e) => reply(Err(e)),
+                Err(e) => {
+                    flight::record(RequestSummary {
+                        id: req.id,
+                        queue_ms: 0.0,
+                        window_ms: 0.0,
+                        prefill_ms: 0.0,
+                        decode_steps: 0,
+                        generated_tokens: 0,
+                        peak_rows: 0,
+                        coalesced: false,
+                        cache_hit_tokens: 0,
+                        mode: "n/a".to_string(),
+                        outcome: "error",
+                    });
+                    crate::warn_req!(req.id, "prepare failed: {e:#}");
+                    reply(Err(e));
+                }
                 Ok(mut prep) => {
                     prep.stream = stream;
                     let coalescible = prep.node.is_some()
@@ -321,7 +378,46 @@ impl<'e, B: Backend> Batcher<'e, B> {
                     if !coalescible {
                         // Solo fallback — the same serve path `generate`
                         // composes.
-                        reply(self.engine.serve_prepared(prep));
+                        let (id, hit_len, mode) = (prep.id, prep.hit_len, prep.mode);
+                        let res = self.engine.serve_prepared(prep);
+                        flight::record(match &res {
+                            Ok(r) => RequestSummary {
+                                id,
+                                queue_ms: 0.0,
+                                window_ms: 0.0,
+                                prefill_ms: r.timing.prefill_ms,
+                                decode_steps: r.timing.decode_steps as u64,
+                                generated_tokens: r
+                                    .completions
+                                    .iter()
+                                    .map(|c| c.tokens.len())
+                                    .sum::<usize>()
+                                    as u64,
+                                peak_rows: 0,
+                                coalesced: false,
+                                cache_hit_tokens: hit_len as u64,
+                                mode: mode_str(mode),
+                                outcome: "ok",
+                            },
+                            Err(e) => RequestSummary {
+                                id,
+                                queue_ms: 0.0,
+                                window_ms: 0.0,
+                                prefill_ms: 0.0,
+                                decode_steps: 0,
+                                generated_tokens: 0,
+                                peak_rows: 0,
+                                coalesced: false,
+                                cache_hit_tokens: hit_len as u64,
+                                mode: mode_str(mode),
+                                outcome: if e.downcast_ref::<Cancelled>().is_some() {
+                                    "cancelled"
+                                } else {
+                                    "error"
+                                },
+                            },
+                        });
+                        reply(res);
                         return;
                     }
                     let node = prep.node.unwrap();
@@ -338,6 +434,9 @@ impl<'e, B: Backend> Batcher<'e, B> {
                             started: None,
                             peak_rows: 0,
                             coalesced: false,
+                            enqueued_at: Instant::now(),
+                            queue_ms: 0.0,
+                            window_ms: 0.0,
                         },
                     );
                     self.queues.entry(node).or_default().push_back(key);
@@ -380,7 +479,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// Open a union wave for `node`; the join phase of the first step
     /// pulls parked requests in.
     fn launch(&mut self, node: usize) {
-        self.deadlines.remove(&node);
+        let deadline = self.deadlines.remove(&node);
         let (ctx, m_c_len) = {
             let q = self.queues.get(&node).expect("launch of unknown node");
             let key = *q.front().expect("launch of empty queue");
@@ -401,7 +500,24 @@ impl<'e, B: Backend> Batcher<'e, B> {
         debug_assert_eq!(mode, DecodeMode::Bifurcated, "resident-node waves decode bifurcated");
         let (kd, vd) = self.engine.rt.zero_decode_cache(1);
         self.engine.metrics.observe_wave_launch();
+        let wid = self.next_wave_id;
+        self.next_wave_id += 1;
+        if let Some(due) = deadline {
+            // The admission-window hold this launch just paid.
+            let opened = due - Duration::from_micros(self.cfg.window_us);
+            let queued = self.queues[&node].len() as u64;
+            record_span_at("wave.window", false, 0, wid, opened, Instant::now(), [queued, 0, 0]);
+        }
+        event("wave.launch", 0, wid, [agg_rows as u64, 0, 0]);
+        crate::debug_!("wave {wid} launch: node={node} rows={agg_rows}");
+        let keys: Vec<u64> = self.queues[&node].iter().copied().collect();
+        for k in keys {
+            if let Some(p) = self.requests.get_mut(&k) {
+                p.window_ms = p.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            }
+        }
         self.active = Some(ActiveWave {
+            id: wid,
             node,
             ctx,
             m_c_len,
@@ -453,6 +569,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 return;
             }
         }
+        let mut sp_step = span("wave.step").wave(self.active.as_ref().map_or(0, |a| a.id));
         let (step, total, upload_before) = {
             let active = self.active.as_mut().expect("active wave vanished");
             if active.dirty {
@@ -521,6 +638,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
             (sweep_bytes, shared)
         };
         let step_bytes = self.engine.rt.upload_bytes() - upload_before;
+        sp_step.set_arg(0, total as u64);
+        sp_step.set_arg(1, sweep_bytes as u64);
+        sp_step.set_arg(2, step_bytes as u64);
+        drop(sp_step);
         self.engine.metrics.observe_wave_step(total, sweep_bytes, step_bytes);
         if streamed > 0 {
             self.engine.metrics.observe_streamed_tokens(streamed);
@@ -570,7 +691,9 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 if mid_wave {
                     self.engine.metrics.observe_mid_wave_join();
                 }
+                let req_id = self.requests[&key].prep.id;
                 let active = self.active.as_mut().unwrap();
+                event("wave.join", req_id, active.id, [lane.live as u64, 0, 0]);
                 active.lanes.push(lane);
                 active.dirty = true;
             }
@@ -593,7 +716,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
             let row_base: usize = p.prep.waves[..wi].iter().map(|w| w.live).sum();
             p.next_wave += 1;
             if p.started.is_none() {
-                p.started = Some(Instant::now());
+                let now = Instant::now();
+                p.started = Some(now);
+                p.queue_ms = (now - p.enqueued_at).as_secs_f64() * 1e3;
+                record_span_at("req.queue", true, p.prep.id, 0, p.enqueued_at, now, [0; 3]);
             }
             (
                 wave,
@@ -658,10 +784,13 @@ impl<'e, B: Backend> Batcher<'e, B> {
             }
         }
         let any = !retired.is_empty();
+        let wave_id = self.active.as_ref().map_or(0, |a| a.id);
         for lane in retired {
             for s in lane.seq_ids {
                 self.engine.kv.borrow_mut().finish_sequence(s);
             }
+            let req_id = self.requests.get(&lane.key).map_or(0, |p| p.prep.id);
+            event("wave.detach", req_id, wave_id, [lane.live as u64, 0, 0]);
             let more_waves = {
                 let p = self.requests.get_mut(&lane.key).expect("lane without request");
                 p.decode_steps += lane.steps;
@@ -709,6 +838,20 @@ impl<'e, B: Backend> Batcher<'e, B> {
             coalesced_peak_rows: p.peak_rows,
         };
         let generated: usize = p.completions.iter().map(|c| c.tokens.len()).sum();
+        flight::record(flight_of(&p, "ok"));
+        crate::observability::recorder::event_on_request_track(
+            "req.retire",
+            p.prep.id,
+            0,
+            [p.decode_steps as u64, generated as u64, 0],
+        );
+        crate::info_req!(
+            p.prep.id,
+            "complete: steps={} tokens={generated} coalesced={} peak_rows={}",
+            p.decode_steps,
+            p.coalesced,
+            p.peak_rows
+        );
         let result = RequestResult {
             id: p.prep.id,
             completions: p.completions,
@@ -726,6 +869,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// resources and reply with the error.
     fn fail_request(&mut self, key: u64, err: anyhow::Error) {
         let p = self.requests.remove(&key).expect("fail of unknown request");
+        flight::record(flight_of(&p, "error"));
+        crate::warn_req!(p.prep.id, "failed: {err:#}");
         self.engine.finish_prepared(p.prep);
         (p.reply)(Err(err));
         debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
@@ -770,6 +915,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
             }
         }
         let p = self.requests.remove(&key).expect("cancel of unknown request");
+        let wave_id = self.active.as_ref().map_or(0, |a| a.id);
+        event("wave.cancel", p.prep.id, wave_id, [freed_rows as u64, 0, 0]);
+        flight::record(flight_of(&p, "cancelled"));
+        crate::info_req!(p.prep.id, "cancelled: freed_rows={freed_rows}");
         self.engine.metrics.observe_cancelled(freed_rows);
         self.engine.finish_prepared(p.prep);
         (p.reply)(Err(anyhow::Error::new(Cancelled { freed_rows })));
@@ -787,6 +936,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 self.engine.kv.borrow_mut().finish_sequence(s);
             }
             if let Some(p) = self.requests.remove(&lane.key) {
+                flight::record(flight_of(&p, "error"));
+                crate::warn_req!(p.prep.id, "coalesced wave failed: {msg}");
                 self.engine.finish_prepared(p.prep);
                 (p.reply)(Err(anyhow::anyhow!("coalesced wave failed: {msg}")));
             }

@@ -34,6 +34,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::kvcache::manager::{ContextId, KvManager, SeqId};
+use crate::observability::span;
 use crate::prefixcache::PrefixCache;
 use crate::runtime::backend::{Backend, ContextView};
 use crate::runtime::models::DecodeMode;
@@ -200,8 +201,8 @@ impl<B: Backend> Engine<B> {
         Ok(ids)
     }
 
-    /// Request timings plus the KV-capacity and prefix-cache gauges —
-    /// what `/metrics` serves.
+    /// Request timings plus the KV-capacity, prefix-cache, and (when the
+    /// backend reports one) worker-pool gauges — what `/metrics` serves.
     pub fn metrics_report(&self) -> Json {
         let kv = self.kv.borrow().stats();
         let kv_json = Json::obj()
@@ -211,10 +212,15 @@ impl<B: Backend> Engine<B> {
             .set("used_blocks", Json::Num(kv.used_blocks as f64))
             .set("free_blocks", Json::Num(kv.free_blocks as f64))
             .set("used_bytes", Json::Num(kv.used_bytes as f64));
-        self.metrics
+        let mut rep = self
+            .metrics
             .report()
             .set("kv", kv_json)
-            .set("prefix_cache", self.cache.borrow().stats_json())
+            .set("prefix_cache", self.cache.borrow().stats_json());
+        if let Some(pool) = self.rt.runtime_stats() {
+            rep = rep.set("pool", pool);
+        }
+        rep
     }
 
     /// Evict one LRU unpinned prefix-cache node to relieve KV pressure.
@@ -351,6 +357,7 @@ impl<B: Backend> Engine<B> {
         let m_c_len = prompt_ids.len();
 
         // ---- cross-request prefix-cache lookup ----
+        let mut sp_lookup = span("engine.cache_lookup").req(req.id);
         let hit = self.cache.borrow_mut().lookup(&prompt_ids);
         if let Some(h) = &hit {
             self.cache.borrow_mut().pin(h.node);
@@ -358,6 +365,9 @@ impl<B: Backend> Engine<B> {
         }
         let hit_len = hit.as_ref().map_or(0, |h| h.matched);
         let full_hit = hit_len == m_c_len;
+        sp_lookup.set_arg(0, hit_len as u64);
+        sp_lookup.set_arg(1, m_c_len as u64);
+        drop(sp_lookup);
 
         let mode = self
             .scheduler
@@ -368,6 +378,8 @@ impl<B: Backend> Engine<B> {
         let mut ctx_upload_bytes = 0usize;
 
         // ---- context phase: reuse, extend, or prefill from scratch ----
+        let sp_prefill =
+            span("engine.prefill").req(req.id).arg(0, m_c_len as u64).arg(1, hit_len as u64);
         let t0 = Instant::now();
         let pre_logits: Vec<f32>;
         let kc: Rc<HostTensor>;
@@ -413,6 +425,7 @@ impl<B: Backend> Engine<B> {
                 if let Some(ctx_id) =
                     self.try_register_cached(m_c_len, kc.byte_size() + vc.byte_size())
                 {
+                    let mut sp_up = span("engine.upload").req(req.id);
                     let ctx = match self.rt.upload_context(&kc, &vc, m_c_len) {
                         Ok(c) => c,
                         Err(e) => {
@@ -420,6 +433,8 @@ impl<B: Backend> Engine<B> {
                             return Err(e);
                         }
                     };
+                    sp_up.set_arg(0, ctx.bytes() as u64);
+                    drop(sp_up);
                     ctx_upload_bytes += ctx.bytes();
                     let ctx = Rc::new(ctx);
                     let new_node = self.cache.borrow_mut().insert(
@@ -439,6 +454,7 @@ impl<B: Backend> Engine<B> {
             }
         }
         let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        drop(sp_prefill);
 
         // capacity accounting for requests not backed by a cache node:
         // context registered once (bifurcated) or per-replica (fused)
@@ -448,8 +464,10 @@ impl<B: Backend> Engine<B> {
             None => {
                 let id = self.register_active_evicting(m_c_len, mode, params.n)?;
                 if mode == DecodeMode::Bifurcated {
+                    let mut sp_up = span("engine.upload").req(req.id);
                     match self.rt.upload_context(&kc, &vc, m_c_len) {
                         Ok(c) => {
+                            sp_up.set_arg(0, c.bytes() as u64);
                             ctx_upload_bytes += c.bytes();
                             shared_ctx = Some(Rc::new(c));
                         }
@@ -464,6 +482,11 @@ impl<B: Backend> Engine<B> {
             }
         };
 
+        crate::debug_req!(
+            req.id,
+            "prepared: prompt_tokens={m_c_len} cache_hit_tokens={hit_len} mode={mode:?} waves={}",
+            waves.len()
+        );
         Ok(Prepared {
             id: req.id,
             params: params.clone(),
@@ -498,6 +521,11 @@ impl<B: Backend> Engine<B> {
         ctx: &B::Ctx,
     ) -> Result<(Vec<Completion>, usize)> {
         let vocab = self.rt.cfg().vocab;
+        let _sp = span("wave.solo")
+            .req(prep.id)
+            .wave(wi as u64 + 1)
+            .arg(0, wave.live as u64)
+            .arg(1, u64::from(prep.mode == DecodeMode::Fused));
         let seq_ids = self.lease_sequences(prep.lease_ctx, wave.live, prep.max_tokens)?;
         let mut sampler = SamplerBatch::new(
             wave.live,
@@ -571,7 +599,10 @@ impl<B: Backend> Engine<B> {
                     // fused baseline: re-materialize the broadcast per wave
                     let kc_rep = prep.kc.broadcast_at(1, wave.bucket);
                     let vc_rep = prep.vc.broadcast_at(1, wave.bucket);
+                    let mut sp_up = span("engine.upload").req(prep.id);
                     let c = self.rt.upload_context(&kc_rep, &vc_rep, prep.m_c_len)?;
+                    sp_up.set_arg(0, c.bytes() as u64);
+                    drop(sp_up);
                     ctx_upload_bytes += c.bytes();
                     ctx_storage = c;
                     &ctx_storage

@@ -1,10 +1,17 @@
 //! Serving metrics: request counters + latency histograms, plus the
 //! continuous-batching wave/coalescing counters the batcher feeds
 //! (`/metrics` serves them under `"batch"`).
+//!
+//! Latencies use the bounded [`LogHistogram`] — fixed log-spaced
+//! buckets, O(1) memory under sustained traffic (the raw-sample
+//! [`Histogram`](crate::util::histogram::Histogram) stays on the bench
+//! side where exact percentiles matter). Counts and means stay exact;
+//! the bucket tables surface in `/metrics` and render as real histogram
+//! families in `/metrics?format=prometheus`.
 
 use std::cell::RefCell;
 
-use crate::util::histogram::Histogram;
+use crate::util::histogram::LogHistogram;
 use crate::util::json::Json;
 
 #[derive(Debug, Default)]
@@ -28,9 +35,9 @@ struct Inner {
     /// Wave rows freed by those cancellations — decode capacity handed
     /// back to live requests instead of burned to max_tokens.
     cancel_freed_rows: usize,
-    prefill_ms: Histogram,
-    per_step_ms: Histogram,
-    total_ms: Histogram,
+    prefill_ms: LogHistogram,
+    per_step_ms: LogHistogram,
+    total_ms: LogHistogram,
     batch: BatchCounters,
 }
 
@@ -145,7 +152,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> Json {
-        let mut m = self.inner.borrow_mut();
+        let m = self.inner.borrow();
         let mut j = Json::obj()
             .set("requests", Json::Num(m.requests as f64))
             .set("completions", Json::Num(m.completions as f64))
@@ -156,15 +163,12 @@ impl Metrics {
             .set("streamed_tokens", Json::Num(m.streamed_tokens as f64))
             .set("cancelled_requests", Json::Num(m.cancelled_requests as f64))
             .set("cancel_freed_rows", Json::Num(m.cancel_freed_rows as f64));
-        if !m.prefill_ms.is_empty() {
-            j = j.set("prefill_ms", m.prefill_ms.summary().to_json());
-        }
-        if !m.per_step_ms.is_empty() {
-            j = j.set("per_step_ms", m.per_step_ms.summary().to_json());
-        }
-        if !m.total_ms.is_empty() {
-            j = j.set("total_ms", m.total_ms.summary().to_json());
-        }
+        // Always present (zeroed before the first request) so scrapers
+        // see a stable shape; `to_json` carries the bucket tables.
+        j = j
+            .set("prefill_ms", m.prefill_ms.to_json())
+            .set("per_step_ms", m.per_step_ms.to_json())
+            .set("total_ms", m.total_ms.to_json());
         let b = &m.batch;
         let ctx_bytes_per_token = if b.generated_tokens == 0 {
             0.0
@@ -231,6 +235,40 @@ mod tests {
         assert_eq!(r.f64_of("cache_hit_tokens"), 12.0);
         assert_eq!(r.req("prefill_ms").f64_of("count"), 2.0);
         assert!((r.req("per_step_ms").f64_of("mean") - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_is_safe_before_first_request() {
+        let m = Metrics::default();
+        let r = m.report();
+        // Histograms are present, zeroed, and the JSON parses (no NaN).
+        assert_eq!(r.req("prefill_ms").f64_of("count"), 0.0);
+        assert_eq!(r.req("total_ms").f64_of("p99"), 0.0);
+        crate::util::json::parse(&r.to_string()).unwrap();
+    }
+
+    #[test]
+    fn report_histograms_carry_buckets() {
+        let m = Metrics::default();
+        m.observe_request(
+            &Timing {
+                prefill_ms: 5.0,
+                decode_ms: 20.0,
+                decode_steps: 10,
+                waves: 1,
+                upload_bytes: 100,
+                step_upload_bytes: 40,
+                cache_hit_tokens: 0,
+                coalesced_peak_rows: 0,
+            },
+            1,
+        );
+        let r = m.report();
+        let buckets = r.req("prefill_ms").req("buckets").as_arr().unwrap();
+        assert!(!buckets.is_empty());
+        let total: f64 = buckets.iter().map(|b| b.f64_of("count")).sum();
+        assert_eq!(total, 1.0, "one prefill sample lands in exactly one bucket");
+        assert!((r.req("prefill_ms").f64_of("sum") - 5.0).abs() < 1e-9);
     }
 
     #[test]

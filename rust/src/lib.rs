@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod evalharness;
 pub mod kvcache;
+pub mod observability;
 pub mod prefixcache;
 pub mod runtime;
 pub mod scaling;

@@ -60,6 +60,7 @@ fn print_usage() {
          \x20              [--prefix-cache N] [--prefix-cache-bytes B] [--threads N]\n\
          \x20              [--batch-window-us U] [--batch-width W] [--backend native|pjrt]\n\
          \x20              [--http-read-timeout-ms T] [--http-write-timeout-ms T] [--http-max-body B]\n\
+         \x20              [--trace[=kernel]] [--trace-out FILE]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -87,7 +88,13 @@ fn print_usage() {
          boundary. --http-read-timeout-ms bounds stalled request reads\n\
          (408; default 10000, 0 disables), --http-write-timeout-ms bounds\n\
          stalled chunk writes (treated as disconnect; default 30000), and\n\
-         --http-max-body caps request bodies (413; default 1 MiB)."
+         --http-max-body caps request bodies (413; default 1 MiB).\n\
+         --trace records request/wave lifecycle spans (=kernel adds\n\
+         per-(layer,group) kernel phases); equivalently set\n\
+         $BIFURCATED_TRACE=1|2. Live spans: GET /trace?last=N\n\
+         (Chrome/Perfetto JSON); per-request summaries: GET\n\
+         /requests/recent; GET /metrics?format=prometheus emits text\n\
+         exposition. --trace-out FILE dumps the trace on server exit."
     );
 }
 
@@ -150,9 +157,33 @@ fn pjrt_engine(
     Ok(Engine::new(man.tokenizer.clone(), rt, engine_config(args)))
 }
 
+/// Parse `--trace` / `--trace=kernel` (or `--trace kernel`) into a
+/// recorder level. `BIFURCATED_TRACE` is honored independently by the
+/// recorder itself, so absence here leaves the env setting in force.
+fn trace_level(args: &Args) -> Option<u8> {
+    if let Some(v) = args.get("trace") {
+        return Some(match v {
+            "2" | "kernel" | "kernels" | "full" => 2,
+            _ => 1,
+        });
+    }
+    if args.has_flag("trace") {
+        Some(1)
+    } else {
+        None
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "pico-mq");
     let addr = args.str_or("addr", "127.0.0.1:8077");
+    let trace_out = args.get("trace-out").map(str::to_string);
+    match trace_level(args) {
+        Some(level) => bifurcated_attn::observability::set_level(level),
+        // --trace-out without --trace still wants a trace to dump.
+        None if trace_out.is_some() => bifurcated_attn::observability::set_level(1),
+        None => {}
+    }
     let client = match backend_kind(args)? {
         BackendKind::Native => bifurcated_attn::server::spawn_native_engine(
             model.clone(),
@@ -169,7 +200,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     info!(
         "serving {model} on http://{addr}  (POST /generate [?stream=1], GET /health, GET /metrics)"
     );
-    bifurcated_attn::server::build_server(client)
+    let served = bifurcated_attn::server::build_server(client)
         .with_read_timeout(std::time::Duration::from_millis(
             args.usize_or("http-read-timeout-ms", 10_000) as u64,
         ))
@@ -178,7 +209,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ))
         .with_max_body(args.usize_or("http-max-body", 1 << 20))
         .serve(&addr, args.usize_or("workers", 4), None)
-        .context("http serve")
+        .context("http serve");
+    if let Some(path) = trace_out {
+        write_trace(&path)?;
+    }
+    served
+}
+
+/// Dump everything the recorder holds as a Chrome/Perfetto trace file.
+fn write_trace(path: &str) -> Result<()> {
+    use bifurcated_attn::observability::{chrome, recorder};
+    let records = recorder::snapshot(0);
+    let doc = chrome::chrome_trace(&records, &recorder::tracks());
+    std::fs::write(path, doc.to_string()).with_context(|| format!("writing trace to {path}"))?;
+    info!("wrote {} trace events to {path}", records.len());
+    Ok(())
 }
 
 fn run_generate<B: Backend>(engine: &Engine<B>, args: &Args) -> Result<()> {

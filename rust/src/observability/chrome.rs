@@ -1,0 +1,175 @@
+//! Chrome trace-event JSON export (the "JSON Trace Event Format"),
+//! loadable in Perfetto (`ui.perfetto.dev`) and `chrome://tracing`.
+//!
+//! Spans render as `ph: "X"` complete events (start + duration, so
+//! begin/end pairing can't go wrong), instants as `ph: "i"`, and track
+//! names as `ph: "M"` thread_name metadata. Timestamps are microseconds
+//! since the trace epoch. Every event carries its request/wave ids plus
+//! span-specific args decoded by [`arg_keys`].
+
+use super::recorder::{RecordKind, SpanRecord, TRACK_REQ_BASE};
+use crate::util::json::Json;
+
+/// Human names for each span's `args` payload slots. Unnamed slots fall
+/// back to `a0`/`a1`/`a2` (only when non-zero).
+pub fn arg_keys(name: &str) -> &'static [&'static str] {
+    match name {
+        "wave.step" => &["rows", "sweep_bytes", "step_upload_bytes"],
+        "wave.launch" | "wave.solo" => &["rows", "mode"],
+        "wave.join" | "wave.detach" => &["rows"],
+        "wave.cancel" => &["freed_rows"],
+        "wave.window" => &["queued"],
+        "engine.cache_lookup" => &["hit_tokens", "prompt_tokens"],
+        "engine.prefill" => &["prompt_tokens", "cached_tokens"],
+        "engine.upload" => &["bytes"],
+        "req.serve" => &["stream"],
+        "req.retire" => &["steps", "tokens"],
+        "stream.emit" => &["row", "tokens"],
+        "http.parse" => &["body_bytes"],
+        "http.reply" => &["status", "bytes"],
+        "http.stream_write" => &["chunks", "bytes"],
+        "kern.score" | "kern.recomb" | "kern.value" | "kern.fused" => {
+            &["layer", "group", "rows"]
+        }
+        _ => &[],
+    }
+}
+
+fn arg_value(key: &str, v: u64) -> Json {
+    // Decode mode enums back to readable strings.
+    if key == "mode" {
+        return Json::Str(if v == 0 { "bifurcated" } else { "fused" }.to_string());
+    }
+    Json::Num(v as f64)
+}
+
+fn event_args(r: &SpanRecord) -> Json {
+    let mut args = Json::obj();
+    if r.req != 0 {
+        args = args.set("req", Json::Num(r.req as f64));
+    }
+    if r.wave != 0 {
+        args = args.set("wave", Json::Num(r.wave as f64));
+    }
+    let keys = arg_keys(r.name);
+    for (i, &v) in r.args.iter().enumerate() {
+        match keys.get(i) {
+            Some(&k) => args = args.set(k, arg_value(k, v)),
+            None if v != 0 => {
+                args = args.set(["a0", "a1", "a2"][i], Json::Num(v as f64));
+            }
+            None => {}
+        }
+    }
+    args
+}
+
+fn meta_thread_name(tid: u64, name: &str) -> Json {
+    Json::obj()
+        .set("name", Json::Str("thread_name".into()))
+        .set("ph", Json::Str("M".into()))
+        .set("pid", Json::Num(1.0))
+        .set("tid", Json::Num(tid as f64))
+        .set("args", Json::obj().set("name", Json::Str(name.to_string())))
+}
+
+/// Build the full trace document from a recorder snapshot plus the
+/// thread-track names. Request tracks present in `records` get synthetic
+/// `req N` names.
+pub fn chrome_trace(records: &[SpanRecord], tracks: &[(u64, String)]) -> Json {
+    let mut events = Vec::new();
+    for (tid, name) in tracks {
+        events.push(meta_thread_name(*tid, name));
+    }
+    let mut req_tracks: Vec<u64> =
+        records.iter().filter(|r| r.track >= TRACK_REQ_BASE).map(|r| r.track).collect();
+    req_tracks.sort_unstable();
+    req_tracks.dedup();
+    for t in req_tracks {
+        events.push(meta_thread_name(t, &format!("req {}", t - TRACK_REQ_BASE)));
+    }
+    for r in records {
+        let mut ev = Json::obj()
+            .set("name", Json::Str(r.name.to_string()))
+            .set("cat", Json::Str("bifurcated".into()))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(r.track as f64))
+            .set("ts", Json::Num(r.start_ns as f64 / 1000.0));
+        ev = match r.kind {
+            RecordKind::Span => ev
+                .set("ph", Json::Str("X".into()))
+                .set("dur", Json::Num(r.dur_ns as f64 / 1000.0)),
+            RecordKind::Instant => {
+                ev.set("ph", Json::Str("i".into())).set("s", Json::Str("t".into()))
+            }
+        };
+        events.push(ev.set("args", event_args(r)));
+    }
+    Json::obj()
+        .set("displayTimeUnit", Json::Str("ms".into()))
+        .set("traceEvents", Json::Arr(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn rec(
+        seq: u64,
+        track: u64,
+        start: u64,
+        dur: u64,
+        kind: RecordKind,
+        name: &'static str,
+    ) -> SpanRecord {
+        SpanRecord {
+            seq,
+            track,
+            start_ns: start,
+            dur_ns: dur,
+            kind,
+            name,
+            req: 3,
+            wave: 1,
+            args: [4, 0, 0],
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_and_names_args() {
+        let records = vec![
+            rec(1, 2, 1000, 5000, RecordKind::Span, "wave.step"),
+            rec(2, TRACK_REQ_BASE + 3, 500, 9000, RecordKind::Span, "req.serve"),
+            rec(3, 2, 2000, 0, RecordKind::Instant, "wave.join"),
+        ];
+        let doc = chrome_trace(&records, &[(2, "engine".to_string())]);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.str_of("displayTimeUnit"), "ms");
+        let evs = parsed.req("traceEvents").as_arr().unwrap();
+        // 2 metadata (engine + req 3) + 3 records
+        assert_eq!(evs.len(), 5);
+        let step = evs.iter().find(|e| e.str_or("name", "") == "wave.step").unwrap();
+        assert_eq!(step.str_of("ph"), "X");
+        assert_eq!(step.req("args").f64_of("rows"), 4.0);
+        assert_eq!(step.req("args").f64_of("req"), 3.0);
+        assert_eq!(step.f64_of("ts"), 1.0);
+        assert_eq!(step.f64_of("dur"), 5.0);
+        let meta = evs.iter().find(|e| {
+            e.str_or("name", "") == "thread_name"
+                && e.req("args").str_or("name", "").starts_with("req ")
+        });
+        assert!(meta.is_some(), "request track gets a thread_name record");
+    }
+
+    #[test]
+    fn mode_arg_decodes_to_string() {
+        let mut r = rec(1, 2, 0, 10, RecordKind::Span, "wave.launch");
+        r.args = [8, 1, 0];
+        let doc = chrome_trace(&[r], &[]);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let ev = parsed.req("traceEvents").idx(0).unwrap();
+        assert_eq!(ev.req("args").str_of("mode"), "fused");
+        assert_eq!(ev.req("args").f64_of("rows"), 8.0);
+    }
+}

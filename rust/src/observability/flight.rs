@@ -1,0 +1,117 @@
+//! Bounded per-request flight recorder: the last [`FLIGHT_CAP`] request
+//! summaries, always on (one mutex push per completed request), served
+//! by `GET /requests/recent` straight from the HTTP workers so it
+//! answers even while a wave is mid-flight.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+/// Summaries retained; the oldest fall off.
+pub const FLIGHT_CAP: usize = 256;
+
+#[derive(Clone, Debug)]
+pub struct RequestSummary {
+    pub id: u64,
+    /// Enqueue → first decode step of the request's own lane.
+    pub queue_ms: f64,
+    /// Enqueue → wave launch (admission-window hold; 0 for solo runs).
+    pub window_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_steps: u64,
+    pub generated_tokens: u64,
+    /// Widest wave this request ever shared (its own rows included).
+    pub peak_rows: u64,
+    /// Shared a wave with at least one other request.
+    pub coalesced: bool,
+    pub cache_hit_tokens: u64,
+    pub mode: String,
+    /// `"ok"`, `"error"`, or `"cancelled"`.
+    pub outcome: &'static str,
+}
+
+impl RequestSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", Json::Num(self.id as f64))
+            .set("queue_ms", Json::Num(self.queue_ms))
+            .set("window_ms", Json::Num(self.window_ms))
+            .set("prefill_ms", Json::Num(self.prefill_ms))
+            .set("decode_steps", Json::Num(self.decode_steps as f64))
+            .set("generated_tokens", Json::Num(self.generated_tokens as f64))
+            .set("peak_rows", Json::Num(self.peak_rows as f64))
+            .set("coalesced", Json::Bool(self.coalesced))
+            .set("cache_hit_tokens", Json::Num(self.cache_hit_tokens as f64))
+            .set("mode", Json::Str(self.mode.clone()))
+            .set("outcome", Json::Str(self.outcome.to_string()))
+    }
+}
+
+fn store() -> &'static Mutex<VecDeque<RequestSummary>> {
+    static S: OnceLock<Mutex<VecDeque<RequestSummary>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(VecDeque::with_capacity(FLIGHT_CAP)))
+}
+
+/// Record a finished (ok / failed / cancelled) request.
+pub fn record(s: RequestSummary) {
+    let mut q = store().lock().unwrap();
+    if q.len() == FLIGHT_CAP {
+        q.pop_front();
+    }
+    q.push_back(s);
+}
+
+/// The newest `last` summaries, newest first (`last == 0` → all).
+pub fn recent(last: usize) -> Vec<RequestSummary> {
+    let q = store().lock().unwrap();
+    let take = if last == 0 { q.len() } else { last.min(q.len()) };
+    q.iter().rev().take(take).cloned().collect()
+}
+
+/// JSON body for `GET /requests/recent`.
+pub fn recent_json(last: usize) -> Json {
+    let reqs = recent(last);
+    Json::obj()
+        .set("count", Json::Num(reqs.len() as f64))
+        .set("requests", Json::Arr(reqs.iter().map(|r| r.to_json()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(id: u64) -> RequestSummary {
+        RequestSummary {
+            id,
+            queue_ms: 1.0,
+            window_ms: 0.5,
+            prefill_ms: 2.0,
+            decode_steps: 4,
+            generated_tokens: 4,
+            peak_rows: 2,
+            coalesced: true,
+            cache_hit_tokens: 8,
+            mode: "bifurcated".to_string(),
+            outcome: "ok",
+        }
+    }
+
+    // The store is process-global and tests run concurrently, so use a
+    // distinctive id range and only assert on our own entries.
+    #[test]
+    fn bounded_and_newest_first() {
+        let base = 9_000_000u64;
+        for i in 0..(FLIGHT_CAP + 10) as u64 {
+            record(summary(base + i));
+        }
+        let all = recent(0);
+        assert!(all.len() <= FLIGHT_CAP);
+        let ours: Vec<u64> = all.iter().map(|r| r.id).filter(|&id| id >= base).collect();
+        // Newest of ours comes before older ones, and the newest id survived.
+        assert_eq!(ours[0], base + (FLIGHT_CAP + 10) as u64 - 1);
+        assert!(ours.windows(2).all(|w| w[0] > w[1]), "newest first");
+        let j = recent_json(5);
+        assert_eq!(j.req("requests").as_arr().unwrap().len(), 5);
+        assert_eq!(j.req("requests").idx(0).unwrap().str_of("outcome"), "ok");
+    }
+}

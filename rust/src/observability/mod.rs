@@ -1,0 +1,26 @@
+//! End-to-end observability: request tracing, kernel/pool profiling,
+//! and operator-facing exports.
+//!
+//! The paper's argument is a memory-IO accounting story — bifurcated
+//! attention wins because the shared-context sweep is paid once per
+//! decode step instead of once per row. This subsystem makes that
+//! accounting visible on live traffic instead of only in benches:
+//!
+//! * [`recorder`] — lock-light span recorder (per-thread bounded rings,
+//!   monotonic timestamps, request/wave-correlated spans; one relaxed
+//!   atomic load when disabled). Levels: `0` off, `1` lifecycle,
+//!   `2` +per-(layer, group) kernel phases. Enable with `--trace`,
+//!   `--trace=kernel`, or `BIFURCATED_TRACE=1|2`.
+//! * [`chrome`] — Chrome trace-event JSON export (`GET /trace?last=N`,
+//!   `--trace-out FILE`), loadable in Perfetto.
+//! * [`prometheus`] — `/metrics?format=prometheus` text exposition plus
+//!   the strict [`prometheus::validate`] round-trip checker CI runs.
+//! * [`flight`] — bounded always-on per-request flight recorder behind
+//!   `GET /requests/recent`.
+
+pub mod chrome;
+pub mod flight;
+pub mod prometheus;
+pub mod recorder;
+
+pub use recorder::{enabled, event, kspan, set_level, span};

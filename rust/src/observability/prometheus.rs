@@ -1,0 +1,225 @@
+//! Prometheus text exposition (version 0.0.4) rendered from the
+//! engine's `/metrics` JSON report.
+//!
+//! Every numeric leaf flattens to a `bifurcated_`-prefixed gauge
+//! (`kv.used_bytes` → `bifurcated_kv_used_bytes`); objects carrying a
+//! `"buckets"` array (the bounded [`LogHistogram`] report) render as a
+//! real Prometheus histogram with cumulative `_bucket{le="..."}` lines
+//! plus `_sum`/`_count`. [`validate`] is the round-trip checker used by
+//! the tests and the CI trace-validation job.
+//!
+//! [`LogHistogram`]: crate::util::histogram::LogHistogram
+
+use crate::util::json::Json;
+use std::collections::HashSet;
+
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            if i == 0 && c.is_ascii_digit() {
+                out.push('_');
+            }
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn emit_gauge(out: &mut String, seen: &mut HashSet<String>, name: &str, v: f64) {
+    if !seen.insert(name.to_string()) {
+        return; // flattening collision — keep the first, never duplicate
+    }
+    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", fmt_value(v)));
+}
+
+/// Emit one histogram family from a `LogHistogram` report object
+/// (`count` / `sum` / `buckets: [{le, count}]` plus summary scalars).
+fn emit_histogram(out: &mut String, seen: &mut HashSet<String>, name: &str, obj: &Json) {
+    if seen.insert(name.to_string()) {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cumulative = 0u64;
+        if let Some(buckets) = obj.get("buckets").and_then(|b| b.as_arr()) {
+            for b in buckets {
+                let le = match b.get("le") {
+                    Some(Json::Str(s)) => s.clone(),
+                    Some(Json::Num(n)) => fmt_value(*n),
+                    _ => continue,
+                };
+                cumulative += b.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0) as u64;
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+            }
+        }
+        let total = obj.get("count").and_then(|c| c.as_f64()).unwrap_or(cumulative as f64);
+        let sum = obj.get("sum").and_then(|s| s.as_f64()).unwrap_or(0.0);
+        out.push_str(&format!("{name}_sum {}\n", fmt_value(sum)));
+        out.push_str(&format!("{name}_count {}\n", fmt_value(total)));
+        seen.insert(format!("{name}_sum"));
+        seen.insert(format!("{name}_count"));
+    }
+    // Summary scalars (mean/percentiles) still export as plain gauges.
+    for (k, v) in obj.as_obj().unwrap_or(&[]) {
+        if k == "buckets" || k == "sum" || k == "count" {
+            continue;
+        }
+        if let Some(n) = v.as_f64() {
+            emit_gauge(out, seen, &format!("{name}_{}", sanitize(k)), n);
+        }
+    }
+}
+
+fn walk(out: &mut String, seen: &mut HashSet<String>, name: &str, v: &Json) {
+    match v {
+        Json::Num(n) => emit_gauge(out, seen, name, *n),
+        Json::Bool(b) => emit_gauge(out, seen, name, if *b { 1.0 } else { 0.0 }),
+        Json::Obj(kv) => {
+            if v.get("buckets").is_some() {
+                emit_histogram(out, seen, name, v);
+            } else {
+                for (k, child) in kv {
+                    walk(out, seen, &format!("{name}_{}", sanitize(k)), child);
+                }
+            }
+        }
+        // Strings and arrays have no exposition mapping.
+        Json::Null | Json::Str(_) | Json::Arr(_) => {}
+    }
+}
+
+/// Render the metrics report as Prometheus text exposition.
+pub fn render(metrics: &Json) -> String {
+    let mut out = String::new();
+    let mut seen = HashSet::new();
+    walk(&mut out, &mut seen, "bifurcated", metrics);
+    out
+}
+
+/// Strict checker for the exposition format: every non-comment line is
+/// `name{labels} value`, names are legal, values parse, and no
+/// (name, labels) sample repeats. Returns the number of samples.
+pub fn validate(text: &str) -> Result<usize, String> {
+    let mut samples = HashSet::new();
+    let mut typed = HashSet::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("line {ln}: TYPE without a name"))?;
+            let kind = it.next().ok_or_else(|| format!("line {ln}: TYPE without a kind"))?;
+            if !matches!(kind, "gauge" | "counter" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown TYPE kind '{kind}'"));
+            }
+            if !typed.insert(name.to_string()) {
+                return Err(format!("line {ln}: duplicate TYPE for '{name}'"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments (HELP etc.)
+        }
+        let (key, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {ln}: sample without a value: '{line}'"))?;
+        let (name, labels) = match key.split_once('{') {
+            Some((n, l)) => {
+                let l = l
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {ln}: unterminated label set"))?;
+                (n, l)
+            }
+            None => (key, ""),
+        };
+        if name.is_empty()
+            || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {ln}: illegal metric name '{name}'"));
+        }
+        let legal_value = value.parse::<f64>().is_ok()
+            || matches!(value, "+Inf" | "-Inf" | "NaN" | "Nan" | "nan");
+        if !legal_value {
+            return Err(format!("line {ln}: unparseable value '{value}' for '{name}'"));
+        }
+        if !samples.insert((name.to_string(), labels.to_string())) {
+            return Err(format!("line {ln}: duplicate sample '{key}'"));
+        }
+    }
+    if samples.is_empty() {
+        return Err("no samples in exposition".to_string());
+    }
+    Ok(samples.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn renders_nested_gauges() {
+        let m = json::parse(
+            r#"{"requests": 3, "kv": {"used_bytes": 1024, "blocks": 2}, "mode": "auto"}"#,
+        )
+        .unwrap();
+        let text = render(&m);
+        assert!(text.contains("bifurcated_requests 3\n"), "{text}");
+        assert!(text.contains("bifurcated_kv_used_bytes 1024\n"), "{text}");
+        assert!(text.contains("# TYPE bifurcated_kv_blocks gauge\n"), "{text}");
+        assert!(!text.contains("mode"), "strings are skipped: {text}");
+        assert!(validate(&text).unwrap() >= 3);
+    }
+
+    #[test]
+    fn renders_histograms_cumulatively() {
+        let m = json::parse(
+            r#"{"lat": {"count": 3, "sum": 6.5, "mean": 2.1666,
+                 "buckets": [{"le": 1, "count": 1}, {"le": 2, "count": 0},
+                             {"le": "+Inf", "count": 2}]}}"#,
+        )
+        .unwrap();
+        let text = render(&m);
+        assert!(text.contains("# TYPE bifurcated_lat histogram\n"), "{text}");
+        assert!(text.contains("bifurcated_lat_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("bifurcated_lat_bucket{le=\"2\"} 1\n"), "cumulative: {text}");
+        assert!(text.contains("bifurcated_lat_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("bifurcated_lat_sum 6.5\n"), "{text}");
+        assert!(text.contains("bifurcated_lat_count 3\n"), "{text}");
+        assert!(text.contains("bifurcated_lat_mean "), "{text}");
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_duplicates_and_garbage() {
+        assert!(validate("a 1\na 2\n").is_err(), "duplicate name");
+        assert!(validate("a{le=\"1\"} 1\na{le=\"2\"} 1\n").is_ok(), "distinct labels ok");
+        assert!(validate("9bad 1\n").is_err(), "name can't start with a digit");
+        assert!(validate("a notanumber\n").is_err(), "value must parse");
+        assert!(validate("").is_err(), "empty exposition");
+        assert!(validate("# TYPE a gauge\n# TYPE a gauge\na 1\n").is_err(), "dup TYPE");
+    }
+
+    #[test]
+    fn collision_keeps_first() {
+        let m = json::parse(r#"{"a": {"b": 1}, "a_b": 2}"#).unwrap();
+        let text = render(&m);
+        assert_eq!(text.matches("bifurcated_a_b ").count(), 1, "{text}");
+        validate(&text).unwrap();
+    }
+}

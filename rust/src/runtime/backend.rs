@@ -151,4 +151,11 @@ pub trait Backend {
     /// Cumulative host→device bytes moved so far — the memory-IO quantity
     /// the paper reasons about, kept visible for metrics on every backend.
     fn upload_bytes(&self) -> usize;
+
+    /// Backend-internal runtime counters for `/metrics` (the native
+    /// backend reports its worker-pool dispatch/busy profile here).
+    /// `None` — the default — means the backend has nothing to report.
+    fn runtime_stats(&self) -> Option<crate::util::json::Json> {
+        None
+    }
 }

@@ -408,6 +408,10 @@ impl Backend for NativeBackend {
     fn upload_bytes(&self) -> usize {
         self.upload_bytes.get()
     }
+
+    fn runtime_stats(&self) -> Option<crate::util::json::Json> {
+        self.exec.pool_stats()
+    }
 }
 
 impl NativeBackend {

@@ -40,6 +40,7 @@
 //! bitwise-identical across pool sizes and dispatchers — `tests` and
 //! `tests/threaded_determinism.rs` pin this.
 
+use crate::observability::kspan;
 use crate::runtime::manifest::ModelCfg;
 use crate::runtime::models::DecodeMode;
 use crate::util::prng::Pcg;
@@ -519,6 +520,7 @@ fn attend_bifurcated_batched(
     let sd_total: usize = d_pos.iter().map(|&dp| p * (dp + 1)).sum();
     for gi in 0..g {
         let cbase = (li * g + gi) * mc * kk; // shared [l, g, mc, k] layout
+        let sp = kspan("kern.score").arg(0, li as u64).arg(1, gi as u64).arg(2, b as u64);
         // Gather this group's query rows into [b·p, k] (contiguous per
         // batch row: heads g·p..(g+1)·p are adjacent in the q row).
         size_for_overwrite(qg, bp * kk);
@@ -552,6 +554,8 @@ fn attend_bifurcated_batched(
         for v in sd.iter_mut() {
             *v *= scale;
         }
+        drop(sp);
+        let sp = kspan("kern.recomb").arg(0, li as u64).arg(1, gi as u64).arg(2, b as u64);
         // Joint softmax across the partition boundary: shared max, then
         // exponentiate both partitions in place; denominators join by +.
         size_for_overwrite(denom, bp);
@@ -587,6 +591,8 @@ fn attend_bifurcated_batched(
             }
             off += p * md1;
         }
+        drop(sp);
+        let sp = kspan("kern.value").arg(0, li as u64).arg(1, gi as u64).arg(2, b as u64);
         // Numerators: context values again one batched GEMM, decode
         // values per sampler.
         size_for_overwrite(acc_c, bp * kk);
@@ -620,6 +626,7 @@ fn attend_bifurcated_batched(
                 }
             }
         }
+        drop(sp);
     }
 }
 
@@ -648,6 +655,7 @@ fn attend_fused_blocked(
     let AttnGeom { b, g, p, kk, mc, m_c_len, md, scale } = *geom;
     let hkk = g * p * kk;
     assert!(p <= 64, "per-group head count {p} exceeds the stack denominator buffer");
+    let sp = kspan("kern.fused").arg(0, li as u64).arg(1, g as u64).arg(2, b as u64);
     for bi in 0..b {
         let md1 = d_pos[bi] + 1;
         for gi in 0..g {
@@ -707,6 +715,7 @@ fn attend_fused_blocked(
             }
         }
     }
+    drop(sp);
 }
 
 /// One incremental decode step over `bucket` samplers sharing one context.

@@ -77,6 +77,20 @@ struct Job {
 // submitting thread is blocked in `run` (see `Job`); the Arcs are Send.
 unsafe impl Send for Job {}
 
+/// Always-on per-executor profiling counters (relaxed atomics — a few
+/// nanoseconds per job, cheap enough to never gate). Surfaced as the
+/// `pool` object in `/metrics` via [`WorkerPool::stats_json`].
+#[derive(Default)]
+struct WorkerStats {
+    /// Wall time spent inside `run_parts` actually executing parts.
+    busy_ns: AtomicU64,
+    /// Jobs this executor claimed at least one part of.
+    jobs: AtomicU64,
+    /// Times this worker expired its spin window and parked on the
+    /// condvar (submitter slot counts its `done_cv` parks).
+    parks: AtomicU64,
+}
+
 struct Shared {
     /// Bumped (under the `job` lock) once per published job; workers
     /// watch it to detect new work without taking the lock.
@@ -87,6 +101,12 @@ struct Shared {
     work_cv: Condvar,
     /// The submitter parks here waiting for the last parts to retire.
     done_cv: Condvar,
+    /// Parallel jobs published to the pool.
+    dispatches: AtomicU64,
+    /// `run` calls that stayed inline (`parts <= 1` or one thread).
+    serial_runs: AtomicU64,
+    /// Slot 0 is the submitting thread; slot `i` is `native-pool-{i}`.
+    worker_stats: Vec<WorkerStats>,
 }
 
 /// Long-lived std-only worker threads executing indexed jobs. Owned by
@@ -106,6 +126,7 @@ impl WorkerPool {
     /// `threads <= 1` runs everything inline. No threads are spawned
     /// until the first parallel [`WorkerPool::run`].
     pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
         WorkerPool {
             shared: Arc::new(Shared {
                 epoch: AtomicU64::new(0),
@@ -113,8 +134,11 @@ impl WorkerPool {
                 job: Mutex::new(None),
                 work_cv: Condvar::new(),
                 done_cv: Condvar::new(),
+                dispatches: AtomicU64::new(0),
+                serial_runs: AtomicU64::new(0),
+                worker_stats: (0..threads).map(|_| WorkerStats::default()).collect(),
             }),
-            threads: threads.max(1),
+            threads,
             workers: OnceLock::new(),
         }
     }
@@ -132,7 +156,7 @@ impl WorkerPool {
                     let sh = Arc::clone(&self.shared);
                     std::thread::Builder::new()
                         .name(format!("native-pool-{i}"))
-                        .spawn(move || worker_loop(&sh))
+                        .spawn(move || worker_loop(&sh, i))
                         .expect("spawn pool worker")
                 })
                 .collect()
@@ -146,11 +170,13 @@ impl WorkerPool {
     /// the kernels never nest: inner calls take [`Executor::Serial`]).
     pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
         if parts <= 1 || self.threads <= 1 {
+            self.shared.serial_runs.fetch_add(1, Ordering::Relaxed);
             for i in 0..parts {
                 f(i);
             }
             return;
         }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
         self.ensure_workers();
         // SAFETY: lifetime erasure only; `run` blocks until `done ==
         // parts`, after which no executor can claim a part, so `f` is
@@ -178,7 +204,7 @@ impl WorkerPool {
             self.shared.work_cv.notify_all();
         }
         // The submitter is executor 0: claim parts like any worker.
-        run_parts(&self.shared, &job);
+        run_parts(&self.shared, &job, 0);
         // Wait for parts claimed by workers to retire: spin through the
         // typical sub-microsecond tail, then park.
         let mut spins = 0u32;
@@ -187,6 +213,7 @@ impl WorkerPool {
                 std::hint::spin_loop();
                 spins += 1;
             } else {
+                self.shared.worker_stats[0].parks.fetch_add(1, Ordering::Relaxed);
                 let guard = self.shared.job.lock().unwrap();
                 let _g = self
                     .shared
@@ -202,6 +229,35 @@ impl WorkerPool {
         if let Some(p) = job.state.panic.lock().unwrap().take() {
             resume_unwind(p); // original payload: assert messages survive
         }
+    }
+
+    /// Profiling counters as the `pool` object for `/metrics`: dispatch
+    /// split plus per-executor busy time / jobs / parks.
+    pub fn stats_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let sh = &self.shared;
+        let workers: Vec<Json> = sh
+            .worker_stats
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let name = if i == 0 {
+                    "submitter".to_string()
+                } else {
+                    format!("native-pool-{i}")
+                };
+                Json::obj()
+                    .set("name", Json::Str(name))
+                    .set("busy_ns", Json::Num(w.busy_ns.load(Ordering::Relaxed) as f64))
+                    .set("jobs", Json::Num(w.jobs.load(Ordering::Relaxed) as f64))
+                    .set("parks", Json::Num(w.parks.load(Ordering::Relaxed) as f64))
+            })
+            .collect();
+        Json::obj()
+            .set("threads", Json::Num(self.threads as f64))
+            .set("dispatches", Json::Num(sh.dispatches.load(Ordering::Relaxed) as f64))
+            .set("serial_runs", Json::Num(sh.serial_runs.load(Ordering::Relaxed) as f64))
+            .set("workers", Json::Arr(workers))
     }
 }
 
@@ -227,12 +283,19 @@ impl Drop for WorkerPool {
 /// Claim and execute parts of `job` until the counter is exhausted.
 /// Panics inside a part are caught so the pool survives (and the
 /// submitter re-raises); the part still counts as done so nobody blocks.
-fn run_parts(shared: &Shared, job: &Job) {
+/// `slot` indexes this executor's profiling counters (0 = submitter).
+fn run_parts(shared: &Shared, job: &Job, slot: usize) {
+    let mut started: Option<std::time::Instant> = None;
     loop {
         let i = job.state.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.parts {
+            if let (Some(t0), Some(stats)) = (started, shared.worker_stats.get(slot)) {
+                stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.jobs.fetch_add(1, Ordering::Relaxed);
+            }
             return;
         }
+        started.get_or_insert_with(std::time::Instant::now);
         // SAFETY: a *claimed* part pins the submitter inside `run` (done
         // cannot reach parts until this part retires below), so the
         // borrow behind `f` is alive. The raw pointer is only turned
@@ -254,7 +317,7 @@ fn run_parts(shared: &Shared, job: &Job) {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, slot: usize) {
     let mut seen = 0u64;
     loop {
         // Spin first (dense decode streams publish the next job within
@@ -276,6 +339,9 @@ fn worker_loop(shared: &Shared) {
                     std::hint::spin_loop();
                 }
             } else {
+                if let Some(stats) = shared.worker_stats.get(slot) {
+                    stats.parks.fetch_add(1, Ordering::Relaxed);
+                }
                 let guard = shared.job.lock().unwrap();
                 let _g = shared
                     .work_cv
@@ -289,7 +355,7 @@ fn worker_loop(shared: &Shared) {
         seen = shared.epoch.load(Ordering::Acquire);
         let job = shared.job.lock().unwrap().clone();
         if let Some(job) = job {
-            run_parts(shared, &job);
+            run_parts(shared, &job, slot);
         }
     }
 }
@@ -354,6 +420,14 @@ impl Executor {
             }
             Executor::Pool(p) => p.run(parts, f),
             Executor::ScopedReference(_) => scoped_reference::run(parts, f),
+        }
+    }
+
+    /// Pool profiling counters (`None` for dispatchers with no pool).
+    pub fn pool_stats(&self) -> Option<crate::util::json::Json> {
+        match self {
+            Executor::Pool(p) => Some(p.stats_json()),
+            Executor::Serial | Executor::ScopedReference(_) => None,
         }
     }
 }
@@ -466,6 +540,33 @@ mod tests {
         assert!(ex.par_min_macs_for(32) < ex.par_min_macs_for(2));
         assert_eq!(Executor::Serial.par_min_macs_for(64), usize::MAX);
         assert_eq!(Executor::ScopedReference(0).threads(), 1);
+    }
+
+    #[test]
+    fn stats_track_dispatches_and_busy_time() {
+        let pool = WorkerPool::new(3);
+        pool.run(1, &|_| {}); // inline: no dispatch
+        for _ in 0..4 {
+            pool.run(6, &|_| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            });
+        }
+        let j = pool.stats_json();
+        assert_eq!(j.f64_of("threads"), 3.0);
+        assert_eq!(j.f64_of("serial_runs"), 1.0);
+        assert_eq!(j.f64_of("dispatches"), 4.0);
+        let workers = j.req("workers").as_arr().unwrap();
+        assert_eq!(workers.len(), 3);
+        assert_eq!(workers[0].str_of("name"), "submitter");
+        assert_eq!(workers[1].str_of("name"), "native-pool-1");
+        // Every job's parts were claimed by someone, and part execution
+        // (50 µs sleeps) shows up as busy time.
+        let jobs: f64 = workers.iter().map(|w| w.f64_of("jobs")).sum();
+        let busy: f64 = workers.iter().map(|w| w.f64_of("busy_ns")).sum();
+        assert!(jobs >= 4.0, "jobs {jobs}");
+        assert!(busy > 0.0, "busy_ns {busy}");
+        assert!(Executor::Serial.pool_stats().is_none());
+        assert!(Executor::with_threads(2).pool_stats().is_some());
     }
 
     #[test]

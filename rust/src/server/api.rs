@@ -21,6 +21,7 @@ use crate::coordinator::{
     rerank_top_k, BatchJob, Batcher, Engine, EngineConfig, GenerationRequest, JobSource,
     ModePolicy, SamplingParams, StreamHandle,
 };
+use crate::observability::{chrome, event, flight, prometheus, recorder, span};
 use crate::runtime::models::DecodeMode;
 use crate::runtime::Backend;
 use crate::util::json::{parse as parse_json, Json};
@@ -304,8 +305,23 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
     let met_client = std::sync::Arc::clone(&client);
     HttpServer::new()
         .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
-        .route("GET", "/metrics", move |_| {
-            HttpResponse::json(200, met_client.metrics().to_string())
+        .route("GET", "/metrics", move |req| {
+            let m = met_client.metrics();
+            if req.query_param("format") == Some("prometheus") {
+                HttpResponse::text(200, prometheus::render(&m))
+            } else {
+                HttpResponse::json(200, m.to_string())
+            }
+        })
+        .route("GET", "/trace", |req| {
+            let last = req.query_param("last").and_then(|v| v.parse::<usize>().ok()).unwrap_or(0);
+            let records = recorder::snapshot(last);
+            let doc = chrome::chrome_trace(&records, &recorder::tracks());
+            HttpResponse::json(200, doc.to_string())
+        })
+        .route("GET", "/requests/recent", |req| {
+            let last = req.query_param("last").and_then(|v| v.parse::<usize>().ok()).unwrap_or(0);
+            HttpResponse::json(200, flight::recent_json(last).to_string())
         })
         .route_streaming("POST", "/generate", move |req, sink| {
             let id = next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
@@ -313,7 +329,9 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 Err(e) => return Some(HttpResponse::error(400, &e)),
                 Ok(t) => t,
             };
-            if !(stream || req.query_flag("stream")) {
+            let streaming = stream || req.query_flag("stream");
+            let _sp = span("req.serve").req(id).on_request_track().arg(0, u64::from(streaming));
+            if !streaming {
                 return Some(match gen_client.generate(greq, rerank_k) {
                     Ok(j) => HttpResponse::json(200, j.to_string()),
                     Err(e) => HttpResponse::error(500, &e),
@@ -343,6 +361,8 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 if sink.chunk(&line).is_err() {
                     canceller.cancel();
                     gone = true;
+                } else {
+                    event("stream.emit", id, 0, [ev.row as u64, 1, 0]);
                 }
             }
             let done = reply

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::observability::{event, span};
 use crate::util::threadpool::ThreadPool;
 
 /// Default cap on client-supplied bodies: one bogus `Content-Length`
@@ -158,6 +159,19 @@ impl HttpRequest {
             k == key && (v.is_empty() || v == "1" || v == "true")
         })
     }
+
+    /// The query string's value for `key` — `None` when absent,
+    /// `Some("")` for a bare `?key`.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            if k == key {
+                Some(v)
+            } else {
+                None
+            }
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -184,6 +198,11 @@ fn status_text(status: u16) -> &'static str {
 impl HttpResponse {
     pub fn json(status: u16, body: String) -> Self {
         HttpResponse { status, content_type: "application/json".into(), body }
+    }
+
+    /// Plain-text response (Prometheus exposition format 0.0.4).
+    pub fn text(status: u16, body: String) -> Self {
+        HttpResponse { status, content_type: "text/plain; version=0.0.4".into(), body }
     }
 
     pub fn error(status: u16, msg: &str) -> Self {
@@ -219,11 +238,19 @@ pub struct ChunkSink<'a> {
     w: &'a mut dyn Write,
     begun: bool,
     finished: bool,
+    /// Chunks and payload bytes written so far (observability counters).
+    chunks: u64,
+    bytes: u64,
 }
 
 impl<'a> ChunkSink<'a> {
     pub fn new(w: &'a mut dyn Write) -> ChunkSink<'a> {
-        ChunkSink { w, begun: false, finished: false }
+        ChunkSink { w, begun: false, finished: false, chunks: 0, bytes: 0 }
+    }
+
+    /// `(chunks, payload bytes)` successfully written so far.
+    pub fn written(&self) -> (u64, u64) {
+        (self.chunks, self.bytes)
     }
 
     /// Write the status line + chunked-framing headers. Must be called
@@ -256,7 +283,10 @@ impl<'a> ChunkSink<'a> {
             return Ok(());
         }
         write!(self.w, "{:X}\r\n{}\r\n", data.len(), data)?;
-        self.w.flush()
+        self.w.flush()?;
+        self.chunks += 1;
+        self.bytes += data.len() as u64;
+        Ok(())
     }
 
     /// Terminate the stream (the zero-length chunk).
@@ -532,6 +562,7 @@ impl HttpServer {
 }
 
 fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
+    event("http.accept", 0, 0, [0; 3]);
     // A stalled client gets 408 and its worker back instead of parking
     // the pool; a zero-window client stalls a chunk write into an error
     // the streaming handler treats as a disconnect.
@@ -541,6 +572,7 @@ fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
     if !server.write_timeout.is_zero() {
         let _ = stream.set_write_timeout(Some(server.write_timeout));
     }
+    let mut sp_parse = span("http.parse");
     let req = match parse_request_limited(&mut stream, server.max_body) {
         Ok(req) => req,
         Err(e) => {
@@ -549,18 +581,32 @@ fn handle_conn(mut stream: TcpStream, server: &HttpServer) {
             return;
         }
     };
+    sp_parse.set_arg(0, req.body.len() as u64);
+    drop(sp_parse);
     match server.routes.get(&(req.method.clone(), req.path.clone())) {
         Some(Route::Buffered(h)) => {
-            let _ = h(&req).write_to(&mut stream);
+            let resp = h(&req);
+            let mut sp = span("http.reply");
+            sp.set_arg(0, resp.status as u64);
+            sp.set_arg(1, resp.body.len() as u64);
+            let _ = resp.write_to(&mut stream);
         }
         Some(Route::Streaming(h)) => {
-            let (resp, begun) = {
+            let mut sp = span("http.stream_write");
+            let (resp, begun, chunks, bytes) = {
                 let mut sink = ChunkSink::new(&mut stream);
                 let resp = h(&req, &mut sink);
-                (resp, sink.begun())
+                let (chunks, bytes) = sink.written();
+                (resp, sink.begun(), chunks, bytes)
             };
+            sp.set_arg(0, chunks);
+            sp.set_arg(1, bytes);
+            drop(sp);
             if let Some(resp) = resp {
                 if !begun {
+                    let mut sp = span("http.reply");
+                    sp.set_arg(0, resp.status as u64);
+                    sp.set_arg(1, resp.body.len() as u64);
                     let _ = resp.write_to(&mut stream);
                 }
                 // A handler that began streaming and still returned a

@@ -1,7 +1,17 @@
 //! Latency statistics: percentile summaries over recorded samples.
 //!
-//! Used by the bench harness and the engine's per-request metrics. Keeps
-//! raw samples (bench scales here are thousands of points, not millions).
+//! Two representations:
+//!
+//! * [`Histogram`] — keeps raw `f64` samples. For the bench harness,
+//!   where scales are thousands of points and exact percentiles matter.
+//! * [`LogHistogram`] — fixed log-spaced buckets (factor √2 per bucket,
+//!   1 µs … ~71 min in milliseconds), O(1) memory forever. For the
+//!   serving path, where traffic is unbounded: count/sum/min/max are
+//!   exact (so means are exact), percentiles are bucket upper-bound
+//!   estimates within one √2 bucket of truth.
+//!
+//! Both return a zeroed [`Summary`] (and `NaN` percentiles) when empty
+//! instead of panicking, so `/metrics` is safe before the first request.
 
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {
@@ -56,9 +66,11 @@ impl Histogram {
         }
     }
 
-    /// Percentile via nearest-rank (q in [0, 1]).
+    /// Percentile via nearest-rank (q in [0, 1]). `NaN` when empty.
     pub fn percentile(&mut self, q: f64) -> f64 {
-        assert!(!self.samples.is_empty(), "percentile of empty histogram");
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.ensure_sorted();
         let n = self.samples.len();
         let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
@@ -72,8 +84,11 @@ impl Histogram {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Percentile summary; all-zero (not a panic) when empty.
     pub fn summary(&mut self) -> Summary {
-        assert!(!self.samples.is_empty(), "summary of empty histogram");
+        if self.samples.is_empty() {
+            return Summary::empty();
+        }
         self.ensure_sorted();
         let n = self.samples.len();
         let mean = self.mean();
@@ -93,6 +108,15 @@ impl Histogram {
 }
 
 impl Summary {
+    /// The summary of zero samples: all fields zero.
+    pub fn empty() -> Summary {
+        Summary { count: 0, mean: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0, std: 0.0 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.count == 0
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj()
@@ -104,6 +128,151 @@ impl Summary {
             .set("p99", Json::Num(self.p99))
             .set("max", Json::Num(self.max))
             .set("std", Json::Num(self.std))
+    }
+}
+
+/// Log-spaced bucket count: bounds run `0.001 · (√2)^i` for
+/// `i in 0..LOG_BUCKETS` (milliseconds: 1 µs up to ≈ 71 min), with one
+/// implicit `+Inf` overflow bucket above.
+pub const LOG_BUCKETS: usize = 64;
+
+fn log_bucket_bound(i: usize) -> f64 {
+    1.0e-3 * 2f64.powf(i as f64 / 2.0)
+}
+
+/// Bounded latency histogram for the serving path: fixed log-spaced
+/// buckets, so memory stays O(1) under unbounded traffic. `count`,
+/// `sum` (hence `mean`), `std`, `min`, and `max` are exact; percentiles
+/// are estimated as the upper bound of the covering bucket, clamped to
+/// the observed `[min, max]` — at most one √2 bucket from truth.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: [u64; LOG_BUCKETS],
+    overflow: u64,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; LOG_BUCKETS],
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        let idx = if v <= log_bucket_bound(0) {
+            0
+        } else {
+            (2.0 * (v / 1.0e-3).log2()).ceil() as usize
+        };
+        if idx < LOG_BUCKETS {
+            self.counts[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_secs_f64() * 1e3); // milliseconds
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Nearest-rank percentile estimate (q in [0, 1]). `NaN` when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return log_bucket_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Same shape as [`Histogram::summary`]; all-zero when empty.
+    pub fn summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary::empty();
+        }
+        let mean = self.mean();
+        let var = (self.sum_sq / self.count as f64 - mean * mean).max(0.0);
+        Summary {
+            count: self.count as usize,
+            mean,
+            min: self.min,
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+            max: self.max,
+            std: var.sqrt(),
+        }
+    }
+
+    /// Summary JSON extended with the exact `sum` and the bucket table
+    /// (trimmed to the occupied prefix, plus the `+Inf` overflow) — the
+    /// shape `observability::prometheus` renders as a histogram family.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let last = (0..LOG_BUCKETS).rev().find(|&i| self.counts[i] > 0);
+        let mut buckets: Vec<Json> = Vec::new();
+        if let Some(last) = last {
+            for i in 0..=last {
+                buckets.push(
+                    Json::obj()
+                        .set("le", Json::Num(log_bucket_bound(i)))
+                        .set("count", Json::Num(self.counts[i] as f64)),
+                );
+            }
+        }
+        buckets.push(
+            Json::obj()
+                .set("le", Json::Str("+Inf".into()))
+                .set("count", Json::Num(self.overflow as f64)),
+        );
+        self.summary()
+            .to_json()
+            .set("sum", Json::Num(self.sum))
+            .set("buckets", Json::Arr(buckets))
     }
 }
 
@@ -157,5 +326,74 @@ mod tests {
         assert_eq!(h.percentile(0.0), 1.0);
         h.record(0.5); // invalidates sort
         assert_eq!(h.percentile(0.0), 0.5);
+    }
+
+    #[test]
+    fn empty_histograms_do_not_panic() {
+        let mut h = Histogram::new();
+        assert!(h.percentile(0.5).is_nan());
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+        let lh = LogHistogram::new();
+        assert!(lh.percentile(0.5).is_nan());
+        assert_eq!(lh.summary().count, 0);
+        // JSON of the empty histogram parses (no NaN/Inf leaks).
+        let j = lh.to_json();
+        crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(j.f64_of("count"), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_exact_moments_estimated_percentiles() {
+        let mut lh = LogHistogram::new();
+        let mut raw = Histogram::new();
+        for i in 1..=1000 {
+            let v = i as f64 * 0.1; // 0.1 .. 100.0 ms
+            lh.record(v);
+            raw.record(v);
+        }
+        let s = lh.summary();
+        let r = raw.summary();
+        assert_eq!(s.count, 1000);
+        assert!((s.mean - r.mean).abs() < 1e-9, "mean is exact");
+        assert!((s.std - r.std).abs() < 1e-6, "std from exact moments");
+        assert_eq!(s.min, r.min);
+        assert_eq!(s.max, r.max);
+        // Percentile estimates are within one √2 bucket of truth.
+        for (est, truth) in [(s.p50, r.p50), (s.p90, r.p90), (s.p99, r.p99)] {
+            assert!(
+                est >= truth * 0.999 && est <= truth * 2f64.sqrt() * 1.001,
+                "estimate {est} vs truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_memory_is_bounded() {
+        let mut lh = LogHistogram::new();
+        for i in 0..200_000 {
+            lh.record((i % 977) as f64);
+        }
+        assert_eq!(lh.len(), 200_000);
+        // Representation is a fixed array regardless of sample count.
+        assert!(std::mem::size_of::<LogHistogram>() < 800);
+        let s = lh.summary();
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 976.0);
+    }
+
+    #[test]
+    fn log_histogram_overflow_bucket() {
+        let mut lh = LogHistogram::new();
+        lh.record(1.0e10); // beyond the last bound
+        lh.record(1.0);
+        let j = lh.to_json();
+        let buckets = j.req("buckets").as_arr().unwrap();
+        let last = buckets.last().unwrap();
+        assert_eq!(last.str_of("le"), "+Inf");
+        assert_eq!(last.f64_of("count"), 1.0);
+        assert_eq!(j.f64_of("count"), 2.0);
+        assert_eq!(lh.percentile(1.0), 1.0e10);
     }
 }

@@ -44,6 +44,16 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Request-correlated log line: stamps `req=<id>` ahead of the message
+/// so every engine/batcher line for a request greps together with its
+/// trace spans and `/requests/recent` entry.
+pub fn log_req(l: Level, target: &str, req: u64, msg: std::fmt::Arguments<'_>) {
+    if l > level() {
+        return;
+    }
+    log(l, target, format_args!("req={req} {msg}"));
+}
+
 pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if l > level() {
         return;
@@ -74,6 +84,24 @@ macro_rules! error {
 #[macro_export]
 macro_rules! debug_ {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+/// `info_req!(request_id, "...")` — info line stamped `req=<id>`.
+#[macro_export]
+macro_rules! info_req {
+    ($id:expr, $($arg:tt)*) => { $crate::util::logging::log_req($crate::util::logging::Level::Info, module_path!(), $id, format_args!($($arg)*)) };
+}
+
+/// `debug_req!(request_id, "...")` — debug line stamped `req=<id>`.
+#[macro_export]
+macro_rules! debug_req {
+    ($id:expr, $($arg:tt)*) => { $crate::util::logging::log_req($crate::util::logging::Level::Debug, module_path!(), $id, format_args!($($arg)*)) };
+}
+
+/// `warn_req!(request_id, "...")` — warn line stamped `req=<id>`.
+#[macro_export]
+macro_rules! warn_req {
+    ($id:expr, $($arg:tt)*) => { $crate::util::logging::log_req($crate::util::logging::Level::Warn, module_path!(), $id, format_args!($($arg)*)) };
 }
 
 #[cfg(test)]

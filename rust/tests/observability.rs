@@ -1,0 +1,264 @@
+//! End-to-end observability: the tracing recorder, Chrome/Perfetto trace
+//! export, Prometheus text exposition, and the flight recorder, all
+//! exercised through the real HTTP server.
+//!
+//! Tests in this binary share one process-global recorder and flight
+//! recorder, and run concurrently — so each test asserts on *presence and
+//! shape* (its own spans exist and are well-formed), never on exclusive
+//! counts, and fingerprints its own requests by a distinctive sampling
+//! shape rather than by request id (each server numbers ids from 1).
+
+use std::time::Duration;
+
+use bifurcated_attn::coordinator::EngineConfig;
+use bifurcated_attn::observability::{self, prometheus};
+use bifurcated_attn::server::{
+    build_server, connect_retry, send_request, spawn_native_engine, ClientResponse, Shutdown,
+};
+use bifurcated_attn::util::json;
+
+const PROMPT: &str = "10+2=12;11+3=14;12+4=";
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    shutdown: std::sync::Arc<Shutdown>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(cfg: EngineConfig) -> TestServer {
+        let client = spawn_native_engine("pico-mq".into(), 0, cfg).unwrap();
+        let server = build_server(client);
+        let shutdown = Shutdown::new();
+        let flag = std::sync::Arc::clone(&shutdown);
+        let thread = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", 4, Some(flag)).unwrap();
+        });
+        let addr = shutdown.wait_addr(Duration::from_secs(10)).expect("server never bound");
+        TestServer { addr, shutdown, thread: Some(thread) }
+    }
+
+    fn request(&self, method: &str, path: &str, body: &str) -> ClientResponse {
+        let mut s = connect_retry(self.addr, Duration::from_secs(5)).unwrap();
+        send_request(&mut s, method, path, body).unwrap();
+        ClientResponse::read_head(s).unwrap()
+    }
+
+    fn post(&self, path: &str, body: &str) -> ClientResponse {
+        self.request("POST", path, body)
+    }
+
+    fn get(&self, path: &str) -> ClientResponse {
+        self.request("GET", path, "")
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.shutdown.trigger();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn gen_body(n: usize, max_tokens: usize, stream: bool) -> String {
+    format!(
+        r#"{{"prompt":"{PROMPT}","n":{n},"max_tokens":{max_tokens},"stop":null,"mode":"bifurcated","stream":{stream}}}"#
+    )
+}
+
+/// Names present in a trace document's events.
+fn span_names(doc: &json::Json) -> Vec<String> {
+    doc.req("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.str_or("name", ""))
+        .collect()
+}
+
+#[test]
+fn streamed_request_trace_covers_the_full_lifecycle() {
+    observability::set_level(2);
+    let mut cfg = EngineConfig::default();
+    cfg.batching.window_us = 2000; // exercise the admission-window span
+    let srv = TestServer::start(cfg);
+
+    // Two concurrent same-prefix streaming requests: queue park, window
+    // hold, wave launch, per-step spans, stream emits, retire.
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = srv.addr;
+            std::thread::spawn(move || {
+                let mut s = connect_retry(addr, Duration::from_secs(5)).unwrap();
+                send_request(&mut s, "POST", "/generate", &gen_body(2, 4, true)).unwrap();
+                let mut resp = ClientResponse::read_head(s).unwrap();
+                assert_eq!(resp.status, 200);
+                let text = resp.read_body().unwrap();
+                assert!(text.contains("\"done\""), "missing done chunk in: {text}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut resp = srv.get("/trace");
+    assert_eq!(resp.status, 200);
+    let doc = json::parse(&resp.read_body().unwrap()).expect("/trace must return valid JSON");
+    assert_eq!(doc.str_of("displayTimeUnit"), "ms");
+    let events = doc.req("traceEvents").as_arr().unwrap();
+    assert!(!events.is_empty(), "trace must hold events");
+
+    // Chrome trace-event well-formedness: every event names itself, sits
+    // on a (pid, tid) track, and is a complete span, instant, or metadata
+    // record with the matching required fields.
+    for ev in events {
+        assert!(!ev.str_of("name").is_empty());
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        match ev.str_of("ph").as_str() {
+            "X" => {
+                assert!(ev.f64_of("dur") >= 0.0);
+                assert!(ev.f64_of("ts") >= 0.0);
+            }
+            "i" => assert_eq!(ev.str_of("s"), "t"),
+            "M" => assert_eq!(ev.str_of("name"), "thread_name"),
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+
+    // Full lifecycle coverage: accept -> parse -> serve -> queue -> window
+    // -> prefill -> wave steps -> stream emit -> retire -> stream write,
+    // plus level-2 kernel phases.
+    let names = span_names(&doc);
+    for required in [
+        "http.accept",
+        "http.parse",
+        "req.serve",
+        "req.queue",
+        "wave.window",
+        "wave.launch",
+        "engine.cache_lookup",
+        "engine.prefill",
+        "engine.upload",
+        "wave.step",
+        "stream.emit",
+        "req.retire",
+        "http.stream_write",
+        "kern.score",
+        "kern.recomb",
+        "kern.value",
+    ] {
+        assert!(names.iter().any(|n| n == required), "trace is missing span {required:?}");
+    }
+
+    // Each wave.step carries the paper's per-step context sweep volume.
+    let step = events
+        .iter()
+        .find(|e| e.str_or("name", "") == "wave.step")
+        .expect("wave.step span present");
+    let args = step.req("args");
+    assert!(args.f64_of("rows") >= 1.0);
+    assert!(args.f64_of("sweep_bytes") > 0.0, "sweep_bytes must be recorded per step");
+
+    // ?last=N bounds the snapshot.
+    let mut resp = srv.get("/trace?last=5");
+    let doc = json::parse(&resp.read_body().unwrap()).unwrap();
+    let n_spans = doc
+        .req("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.str_or("ph", "") != "M")
+        .count();
+    assert!(n_spans <= 5, "?last=5 returned {n_spans} records");
+}
+
+#[test]
+fn metrics_and_trace_answer_mid_stream() {
+    // Level 2, same as the lifecycle test: these tests run concurrently
+    // against one process-global recorder, so no test may LOWER the level.
+    observability::set_level(2);
+    // threads: 2 — the serial executor has no worker pool to report.
+    let srv = TestServer::start(EngineConfig { threads: 2, ..EngineConfig::default() });
+
+    // Open a long streaming request, then hit the introspection routes
+    // from separate connections while the wave is still decoding.
+    let mut stream_resp = srv.post("/generate", &gen_body(4, 48, true));
+    assert_eq!(stream_resp.status, 200);
+    assert!(stream_resp.next_chunk().unwrap().is_some(), "first token chunk");
+
+    let mut m = srv.get("/metrics");
+    assert_eq!(m.status, 200);
+    let met = json::parse(&m.read_body().unwrap()).unwrap();
+    assert!(met.get("kv").is_some() && met.get("prefix_cache").is_some());
+    // The native backend surfaces its worker-pool profile.
+    let pool = met.get("pool").expect("native backend must report pool stats");
+    assert!(pool.f64_of("threads") >= 1.0);
+    assert!(pool.get("workers").and_then(|w| w.as_arr()).is_some());
+
+    let mut t = srv.get("/trace?last=100");
+    assert_eq!(t.status, 200);
+    assert!(json::parse(&t.read_body().unwrap()).is_ok(), "mid-wave /trace must parse");
+
+    // Drain the stream so the server retires cleanly before shutdown.
+    while stream_resp.next_chunk().unwrap().is_some() {}
+}
+
+#[test]
+fn prometheus_exposition_round_trips_the_validator() {
+    let srv = TestServer::start(EngineConfig::default());
+    let mut resp = srv.post("/generate", &gen_body(2, 3, false));
+    assert_eq!(resp.status, 200);
+    let _ = resp.read_body().unwrap();
+
+    let mut resp = srv.get("/metrics?format=prometheus");
+    assert_eq!(resp.status, 200);
+    assert_eq!(
+        resp.headers.get("content-type").map(String::as_str),
+        Some("text/plain; version=0.0.4"),
+        "prometheus exposition must declare its version"
+    );
+    let text = resp.read_body().unwrap();
+    let samples = prometheus::validate(&text)
+        .unwrap_or_else(|e| panic!("invalid prometheus exposition: {e}\n---\n{text}"));
+    assert!(samples > 10, "expected a real metric family set, got {samples} samples");
+    assert!(text.contains("bifurcated_"), "metrics must carry the bifurcated_ prefix");
+
+    // The default format stays JSON.
+    let mut resp = srv.get("/metrics");
+    assert_eq!(resp.status, 200);
+    assert!(json::parse(&resp.read_body().unwrap()).is_ok());
+}
+
+#[test]
+fn flight_recorder_reports_finished_requests() {
+    let srv = TestServer::start(EngineConfig::default());
+    // Fingerprint this test's request by its sampling shape (3 rows x 7
+    // tokens): request ids restart at 1 per server, so they collide across
+    // the concurrently-running tests in this binary.
+    let mut resp = srv.post("/generate", &gen_body(3, 7, false));
+    assert_eq!(resp.status, 200);
+    let served = json::parse(&resp.read_body().unwrap()).unwrap();
+    assert!(served.get("id").is_some(), "responses must echo the request id");
+
+    let mut resp = srv.get("/requests/recent");
+    assert_eq!(resp.status, 200);
+    let doc = json::parse(&resp.read_body().unwrap()).unwrap();
+    let reqs = doc.req("requests").as_arr().unwrap();
+    assert_eq!(doc.f64_of("count"), reqs.len() as f64);
+    let mine = reqs
+        .iter()
+        .find(|r| r.str_or("outcome", "") == "ok" && r.f64_of("generated_tokens") == 21.0)
+        .expect("finished request must appear in /requests/recent");
+    assert_eq!(mine.str_of("mode"), "bifurcated");
+    assert!(mine.f64_of("decode_steps") >= 7.0);
+    assert!(mine.f64_of("prefill_ms") > 0.0);
+    assert!(mine.get("queue_ms").is_some() && mine.get("window_ms").is_some());
+
+    // ?last=1 truncates to the newest entry.
+    let mut resp = srv.get("/requests/recent?last=1");
+    let doc = json::parse(&resp.read_body().unwrap()).unwrap();
+    assert_eq!(doc.req("requests").as_arr().unwrap().len(), 1);
+}
