@@ -89,6 +89,7 @@ fn run_scenario(width: usize, threads: usize) -> ScenarioResult {
                 stop_token: None,
                 seed: i as u64,
                 mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+                deadline_ms: None,
             },
         };
         let sink = Rc::clone(&results);

@@ -20,6 +20,15 @@
 //! req/s), `--prefixes P`, `--zipf S`, `--trace-out FILE` (dump the
 //! run's request/wave spans as a Chrome/Perfetto trace; enables
 //! lifecycle tracing unless `$BIFURCATED_TRACE` already did).
+//!
+//! `--overload` switches to the overload-control harness instead: phase 1
+//! measures the unloaded floor (closed loop, one worker), phase 2 bounds
+//! the admission queue and drives an open-loop arrival rate far past
+//! capacity at one popular prefix. The run fails (exit 1) unless every
+//! shed is a fast 429 **with** `Retry-After` (median shed latency below
+//! the p50 inter-token step), the server never holds more requests than
+//! the configured bound (`peak_inflight`), and survivors' p99 TTFT stays
+//! within 2x the unloaded floor. Writes `BENCH_overload.json`.
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -122,6 +131,11 @@ fn stream_once(addr: std::net::SocketAddr, prompt: &str, n: usize) -> Result<Obs
     if resp.status != 200 {
         return Err(format!("status {}: {}", resp.status, resp.read_body().unwrap_or_default()));
     }
+    read_stream(&mut resp, t0)
+}
+
+/// Drain one 200 chunked-ndjson stream, timing tokens at the socket.
+fn read_stream(resp: &mut ClientResponse, t0: Instant) -> Result<Obs, String> {
     let mut ttft_ms = None;
     let mut inter_token_ms = Vec::new();
     let mut tokens = 0usize;
@@ -155,6 +169,49 @@ fn stream_once(addr: std::net::SocketAddr, prompt: &str, n: usize) -> Result<Obs
         inter_token_ms,
         tokens,
     })
+}
+
+/// Outcome of one request under deliberate overload.
+enum OverloadOutcome {
+    Served(Obs),
+    Shed { latency_ms: f64, retry_after_s: Option<u64> },
+    Failed(String),
+}
+
+/// Like [`stream_once`], but a 429 is an *expected* outcome: report its
+/// socket latency and `Retry-After` instead of treating it as an error.
+fn overload_once(addr: std::net::SocketAddr, prompt: &str, n: usize) -> OverloadOutcome {
+    let body =
+        format!(r#"{{"prompt":"{prompt}","n":{n},"max_tokens":8,"stop":null,"stream":true}}"#);
+    let t0 = Instant::now();
+    let mut s = match connect_retry(addr, Duration::from_secs(10)) {
+        Ok(s) => s,
+        Err(e) => return OverloadOutcome::Failed(format!("connect: {e}")),
+    };
+    if let Err(e) = send_request(&mut s, "POST", "/generate", &body) {
+        return OverloadOutcome::Failed(format!("send: {e}"));
+    }
+    let mut resp = match ClientResponse::read_head(s) {
+        Ok(r) => r,
+        Err(e) => return OverloadOutcome::Failed(format!("head: {e}")),
+    };
+    match resp.status {
+        200 => match read_stream(&mut resp, t0) {
+            Ok(o) => OverloadOutcome::Served(o),
+            Err(e) => OverloadOutcome::Failed(e),
+        },
+        429 => {
+            let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let retry_after_s =
+                resp.headers.get("retry-after").and_then(|v| v.parse::<u64>().ok());
+            let _ = resp.read_body();
+            OverloadOutcome::Shed { latency_ms, retry_after_s }
+        }
+        other => OverloadOutcome::Failed(format!(
+            "status {other}: {}",
+            resp.read_body().unwrap_or_default()
+        )),
+    }
 }
 
 /// The deliberate mis-behaver: start a big streaming request, read ONE
@@ -278,9 +335,203 @@ fn issue_thread(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Overload-control harness (--overload)
+// ---------------------------------------------------------------------------
+
+fn run_overload(quick: bool, threads: usize, gate_err: &mut Option<String>) -> Vec<Table> {
+    let floor_requests = flag_num("--requests", if quick { 6 } else { 16 });
+    let overload_requests = if quick { 40 } else { 120 };
+    let rate = flag_num("--rate", if quick { 150.0f64 } else { 250.0 });
+    let bound = flag_num("--max-queue-depth", if quick { 2usize } else { 4 });
+
+    let mut cfg = EngineConfig::default();
+    cfg.threads = threads;
+    let client = spawn_native_engine("pico-mq".into(), 0, cfg).expect("engine");
+    let server = build_server(Arc::clone(&client));
+    let shutdown = Shutdown::new();
+    let flag = Arc::clone(&shutdown);
+    let http_workers = bound + 8;
+    let srv_thread = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", http_workers, Some(flag)).expect("serve");
+    });
+    let addr = shutdown.wait_addr(Duration::from_secs(10)).expect("server never bound");
+
+    // One popular prefix: overload concentrates on the shared-context wave.
+    let mut wl_rng = Pcg::new(7);
+    let workload = Arc::new(Workload::new(1, 1.0, &mut wl_rng));
+
+    // -------- phase 1: unloaded floor (closed loop, one worker) --------
+    let mut floor = run_load(addr, Arc::clone(&workload), floor_requests, 1, None);
+    if !floor.errors.is_empty() {
+        *gate_err = Some(format!("floor phase failed: {}", floor.errors[0]));
+        shutdown.trigger();
+        let _ = srv_thread.join();
+        return vec![];
+    }
+    let (floor_ttft, floor_inter) = (floor.ttft.summary(), floor.inter.summary());
+
+    // -------- phase 2: bounded queue, arrivals far past capacity --------
+    client.gate().configure(bound, 0.0, 0.0, 5_000);
+    let outcomes: Arc<Mutex<Vec<OverloadOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let interval = Duration::from_secs_f64(1.0 / rate.max(0.1));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..overload_requests {
+        let due = interval * i as u32;
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let wl = Arc::clone(&workload);
+        let out = Arc::clone(&outcomes);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg::new(0x0ead ^ (i as u64).wrapping_mul(0x9E37_79B9));
+            let n = [1usize, 2, 4][rng.below(3)];
+            let res = overload_once(addr, &wl.prompts[0], n);
+            out.lock().unwrap().push(res);
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let peak_inflight = client.gate().peak_inflight();
+    let shed_requests = client.gate().shed_requests();
+    shutdown.trigger();
+    let _ = srv_thread.join();
+
+    let mut served_ttft = Histogram::new();
+    let mut served_total = Histogram::new();
+    let mut shed_lat = Histogram::new();
+    let (mut served, mut sheds, mut missing_retry_after) = (0usize, 0usize, 0usize);
+    let mut failures: Vec<String> = Vec::new();
+    for o in Arc::try_unwrap(outcomes).ok().expect("outcomes shared").into_inner().unwrap() {
+        match o {
+            OverloadOutcome::Served(obs) => {
+                served += 1;
+                served_ttft.record(obs.ttft_ms);
+                served_total.record(obs.total_ms);
+            }
+            OverloadOutcome::Shed { latency_ms, retry_after_s } => {
+                sheds += 1;
+                shed_lat.record(latency_ms);
+                if retry_after_s.is_none() {
+                    missing_retry_after += 1;
+                }
+            }
+            OverloadOutcome::Failed(e) => failures.push(e),
+        }
+    }
+
+    // ---------------- gates ----------------
+    let step_ms = floor_inter.p50.max(1.0);
+    let ttft_floor = 2.0 * floor_ttft.p99.max(25.0);
+    if !failures.is_empty() {
+        *gate_err = Some(format!(
+            "{} request(s) neither served nor shed; first: {}",
+            failures.len(),
+            failures[0]
+        ));
+    } else if sheds == 0 {
+        *gate_err = Some("overload never triggered shedding (raise --rate?)".into());
+    } else if missing_retry_after > 0 {
+        *gate_err = Some(format!("{missing_retry_after} shed response(s) lacked Retry-After"));
+    } else if shed_lat.summary().p50 >= step_ms {
+        *gate_err = Some(format!(
+            "sheds are not cheap: p50 shed latency {:.2} ms >= p50 wave step {:.2} ms",
+            shed_lat.summary().p50,
+            step_ms
+        ));
+    } else if peak_inflight > bound {
+        *gate_err = Some(format!(
+            "admission bound violated: peak_inflight {peak_inflight} > --max-queue-depth {bound}"
+        ));
+    } else if served == 0 {
+        *gate_err = Some("every request was shed; nothing survived to measure".into());
+    } else if served_ttft.summary().p99 > ttft_floor {
+        *gate_err = Some(format!(
+            "survivor p99 TTFT {:.2} ms exceeds 2x unloaded floor {:.2} ms",
+            served_ttft.summary().p99,
+            ttft_floor
+        ));
+    }
+
+    // ---------------- report ----------------
+    let mut t = Table::new(
+        &format!(
+            "Overload control: {overload_requests} arrivals @ {rate:.0} req/s, queue bound \
+             {bound} (floor: {floor_requests} unloaded; pico-mq, {threads} threads)"
+        ),
+        &["metric", "count", "p50 ms", "p99 ms", "max ms"],
+    )
+    .with_note(
+        "sheds must be fast 429s with Retry-After, in-flight depth must respect the bound, \
+         and survivors must keep near-floor TTFT",
+    );
+    for (name, s) in [
+        ("floor ttft", &floor_ttft),
+        ("floor inter-token", &floor_inter),
+        ("survivor ttft", &served_ttft.summary()),
+        ("shed latency", &shed_lat.summary()),
+    ] {
+        t.row(vec![
+            Cell::Str(name.into()),
+            Cell::Num(s.count as f64),
+            Cell::Ms(s.p50),
+            Cell::Ms(s.p99),
+            Cell::Ms(s.max),
+        ]);
+    }
+    let mut c = Table::new(
+        "Admission accounting after the run",
+        &["served", "shed (client)", "shed (server)", "peak in-flight", "bound", "failures"],
+    );
+    c.row(vec![
+        Cell::Num(served as f64),
+        Cell::Num(sheds as f64),
+        Cell::Num(shed_requests as f64),
+        Cell::Num(peak_inflight as f64),
+        Cell::Num(bound as f64),
+        Cell::Num(failures.len() as f64),
+    ]);
+
+    let flat = Json::obj()
+        .set("model", Json::Str("pico-mq".into()))
+        .set("threads", Json::Num(threads as f64))
+        .set("rate_rps", Json::Num(rate))
+        .set("arrivals", Json::Num(overload_requests as f64))
+        .set("max_queue_depth", Json::Num(bound as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("floor_ttft_ms", floor_ttft.to_json())
+        .set("floor_inter_token_ms", floor_inter.to_json())
+        .set("survivor_ttft_ms", served_ttft.summary().to_json())
+        .set("survivor_total_ms", served_total.summary().to_json())
+        .set("shed_latency_ms", shed_lat.summary().to_json())
+        .set("served", Json::Num(served as f64))
+        .set("shed_client", Json::Num(sheds as f64))
+        .set("shed_server", Json::Num(shed_requests as f64))
+        .set("peak_inflight", Json::Num(peak_inflight as f64))
+        .set("failures", Json::Num(failures.len() as f64));
+    if let Err(e) = std::fs::write("BENCH_overload.json", flat.to_string_pretty()) {
+        eprintln!("warn: could not write BENCH_overload.json: {e}");
+    } else {
+        eprintln!("[bench] flat grid -> BENCH_overload.json");
+    }
+    let _ = std::io::stderr().flush();
+    vec![t, c]
+}
+
 fn main() {
     let threads = cli_threads();
     let mut gate_err: Option<String> = None;
+    if has_flag("--overload") {
+        bench_main("loadgen_overload", |quick| run_overload(quick, threads, &mut gate_err));
+        if let Some(e) = gate_err {
+            eprintln!("[bench] OVERLOAD SLO VIOLATION: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     bench_main("loadgen", |quick| {
         let requests = flag_num("--requests", if quick { 12 } else { 48 });
         let concurrency = flag_num("--concurrency", if quick { 3 } else { 6 });

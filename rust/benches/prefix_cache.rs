@@ -81,6 +81,7 @@ fn req(id: u64, prompt: &str) -> GenerationRequest {
             stop_token: None,
             seed: id,
             mode: None,
+            deadline_ms: None,
         },
     }
 }

@@ -1,0 +1,326 @@
+//! Admission control: bounded queue depth, KV-pressure load shedding,
+//! brownout degradation, and shutdown draining.
+//!
+//! The gate sits between the HTTP workers and the engine thread. HTTP
+//! workers consult it *before* enqueueing a job, so an overloaded
+//! server answers 429/503 in microseconds instead of parking the
+//! connection behind a decode backlog. It is all atomics — the engine
+//! thread publishes KV pressure and cadence EWMAs into it at step
+//! boundaries, and any worker reads them lock-free. Knobs default to
+//! permissive (0 = disabled) and are set once at startup from the
+//! `--max-queue-depth` / `--shed-kv-watermark` / `--brownout` /
+//! `--drain-timeout-ms` flags via [`AdmissionGate::configure`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// EWMA smoothing factor for request/step cadence (fixed-point /1000).
+const EWMA_ALPHA_MILLI: u64 = 250;
+
+/// Floor for `Retry-After` suggestions before any cadence is observed.
+const MIN_RETRY_AFTER_MS: u64 = 1000;
+
+/// Outcome of [`AdmissionGate::try_admit`].
+pub enum Admission {
+    /// Admitted; drop the ticket when the request finishes (any path).
+    Admit(Ticket),
+    /// Turned away by the queue bound or KV watermark — answer 429.
+    Shed { retry_after_ms: u64, queue_depth: usize },
+    /// Server is draining for shutdown — answer 503.
+    Draining,
+}
+
+/// RAII in-flight slot: decrements the gate's depth on drop so error
+/// paths can't leak admission slots.
+pub struct Ticket {
+    gate: Arc<AdmissionGate>,
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.gate.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[derive(Default)]
+pub struct AdmissionGate {
+    /// Max requests in flight (admitted, not yet replied). 0 = unbounded.
+    max_queue_depth: AtomicUsize,
+    /// Shed when KV pressure (per mille) reaches this. 0 = disabled.
+    shed_watermark_milli: AtomicUsize,
+    /// Brownout (clamp max_tokens / wave width) from this pressure
+    /// (per mille). 0 = disabled.
+    brownout_milli: AtomicUsize,
+    /// Bound on the shutdown drain, consumed by the batcher/server.
+    drain_timeout_ms: AtomicU64,
+    draining: AtomicBool,
+    inflight: AtomicUsize,
+    peak_inflight: AtomicUsize,
+    /// Engine-published KV pressure, per mille of non-reclaimable blocks.
+    kv_pressure_milli: AtomicUsize,
+    /// EWMA of wall ms per completed request, fixed-point ×1000.
+    request_us_ewma: AtomicU64,
+    /// EWMA of wall ms per coalesced decode step, fixed-point ×1000.
+    step_us_ewma: AtomicU64,
+    shed_requests: AtomicU64,
+    drain_rejected: AtomicU64,
+    brownout_clamps: AtomicU64,
+}
+
+impl AdmissionGate {
+    pub fn new() -> Arc<AdmissionGate> {
+        Arc::new(AdmissionGate::default())
+    }
+
+    /// Set every knob at once (startup). Watermarks are fractions in
+    /// [0, 1]; 0 disables.
+    pub fn configure(
+        &self,
+        max_queue_depth: usize,
+        shed_kv_watermark: f64,
+        brownout: f64,
+        drain_timeout_ms: u64,
+    ) {
+        self.max_queue_depth.store(max_queue_depth, Ordering::SeqCst);
+        self.shed_watermark_milli.store(to_milli(shed_kv_watermark), Ordering::SeqCst);
+        self.brownout_milli.store(to_milli(brownout), Ordering::SeqCst);
+        self.drain_timeout_ms.store(drain_timeout_ms, Ordering::SeqCst);
+    }
+
+    /// Gate one incoming request. On `Admit` the in-flight count is
+    /// held until the returned ticket drops.
+    pub fn try_admit(self: &Arc<Self>) -> Admission {
+        if self.draining.load(Ordering::SeqCst) {
+            self.drain_rejected.fetch_add(1, Ordering::SeqCst);
+            return Admission::Draining;
+        }
+        let depth = self.inflight.load(Ordering::SeqCst);
+        let max = self.max_queue_depth.load(Ordering::SeqCst);
+        let over_depth = max > 0 && depth >= max;
+        let watermark = self.shed_watermark_milli.load(Ordering::SeqCst);
+        let over_kv =
+            watermark > 0 && self.kv_pressure_milli.load(Ordering::SeqCst) >= watermark;
+        if over_depth || over_kv {
+            self.shed_requests.fetch_add(1, Ordering::SeqCst);
+            return Admission::Shed { retry_after_ms: self.retry_after_ms(), queue_depth: depth };
+        }
+        let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_inflight.fetch_max(now, Ordering::SeqCst);
+        Admission::Admit(Ticket { gate: Arc::clone(self) })
+    }
+
+    /// Suggested client back-off: the backlog ahead of a retrying
+    /// client times the observed per-request cadence, floored so cold
+    /// servers don't advertise a zero wait.
+    pub fn retry_after_ms(&self) -> u64 {
+        let depth = self.inflight.load(Ordering::SeqCst) as u64;
+        let req_ms = self.request_us_ewma.load(Ordering::SeqCst) / 1000;
+        ((depth + 1) * req_ms).max(MIN_RETRY_AFTER_MS)
+    }
+
+    /// Engine thread: publish current KV pressure (fraction in [0, 1]).
+    pub fn publish_kv_pressure(&self, pressure: f64) {
+        self.kv_pressure_milli.store(to_milli(pressure), Ordering::SeqCst);
+    }
+
+    /// Engine thread: fold one completed request's wall ms into the EWMA.
+    pub fn observe_request_ms(&self, ms: f64) {
+        ewma_update(&self.request_us_ewma, ms);
+    }
+
+    /// Engine thread: fold one coalesced decode step's wall ms into the EWMA.
+    pub fn observe_step_ms(&self, ms: f64) {
+        ewma_update(&self.step_us_ewma, ms);
+    }
+
+    /// True while KV pressure sits at/above the brownout watermark.
+    pub fn brownout_active(&self) -> bool {
+        let b = self.brownout_milli.load(Ordering::SeqCst);
+        b > 0 && self.kv_pressure_milli.load(Ordering::SeqCst) >= b
+    }
+
+    /// Brownout degradation: halve a budget (tokens or wave width),
+    /// keeping at least 1. Counted so `/metrics` shows brownout bite.
+    pub fn brownout_clamp(&self, budget: usize) -> usize {
+        let clamped = (budget / 2).max(1);
+        if clamped < budget {
+            self.brownout_clamps.fetch_add(1, Ordering::SeqCst);
+        }
+        clamped
+    }
+
+    /// Flip into drain mode: new requests get 503, the batcher finishes
+    /// in-flight waves (bounded by `drain_timeout_ms`) and fails parked
+    /// requests with `ShuttingDown`.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub fn drain_timeout_ms(&self) -> u64 {
+        self.drain_timeout_ms.load(Ordering::SeqCst)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn shed_requests(&self) -> u64 {
+        self.shed_requests.load(Ordering::SeqCst)
+    }
+
+    pub fn peak_inflight(&self) -> usize {
+        self.peak_inflight.load(Ordering::SeqCst)
+    }
+
+    /// `admission` object merged into the `/metrics` report by the HTTP
+    /// layer (the engine-side `Metrics` is single-threaded; these
+    /// counters live gate-side so shedding needs no engine round-trip).
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj()
+            .set("max_queue_depth", Json::Num(self.max_queue_depth.load(Ordering::SeqCst) as f64))
+            .set(
+                "shed_kv_watermark",
+                Json::Num(self.shed_watermark_milli.load(Ordering::SeqCst) as f64 / 1000.0),
+            )
+            .set("brownout", Json::Num(self.brownout_milli.load(Ordering::SeqCst) as f64 / 1000.0))
+            .set("inflight", Json::Num(self.inflight.load(Ordering::SeqCst) as f64))
+            .set("peak_inflight", Json::Num(self.peak_inflight.load(Ordering::SeqCst) as f64))
+            .set(
+                "kv_pressure",
+                Json::Num(self.kv_pressure_milli.load(Ordering::SeqCst) as f64 / 1000.0),
+            )
+            .set(
+                "request_ms_ewma",
+                Json::Num(self.request_us_ewma.load(Ordering::SeqCst) as f64 / 1000.0),
+            )
+            .set("step_ms_ewma", Json::Num(self.step_us_ewma.load(Ordering::SeqCst) as f64 / 1000.0))
+            .set("shed_requests", Json::Num(self.shed_requests.load(Ordering::SeqCst) as f64))
+            .set("drain_rejected", Json::Num(self.drain_rejected.load(Ordering::SeqCst) as f64))
+            .set("brownout_clamps", Json::Num(self.brownout_clamps.load(Ordering::SeqCst) as f64))
+            .set("draining", Json::Bool(self.draining.load(Ordering::SeqCst)))
+    }
+}
+
+fn to_milli(fraction: f64) -> usize {
+    (fraction.clamp(0.0, 1.0) * 1000.0).round() as usize
+}
+
+/// CAS-free EWMA update: last-writer-wins is fine — only the engine
+/// thread writes these.
+fn ewma_update(cell: &AtomicU64, ms: f64) {
+    let sample_us = (ms * 1000.0).max(0.0) as u64;
+    let old = cell.load(Ordering::SeqCst);
+    let new = if old == 0 {
+        sample_us
+    } else {
+        (old * (1000 - EWMA_ALPHA_MILLI) + sample_us * EWMA_ALPHA_MILLI) / 1000
+    };
+    cell.store(new, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn depth(g: &Arc<AdmissionGate>) -> usize {
+        g.inflight()
+    }
+
+    #[test]
+    fn unconfigured_gate_admits_everything() {
+        let g = AdmissionGate::new();
+        let tickets: Vec<_> = (0..64)
+            .map(|_| match g.try_admit() {
+                Admission::Admit(t) => t,
+                _ => panic!("permissive default must admit"),
+            })
+            .collect();
+        assert_eq!(depth(&g), 64);
+        drop(tickets);
+        assert_eq!(depth(&g), 0);
+        assert_eq!(g.peak_inflight(), 64);
+    }
+
+    #[test]
+    fn queue_bound_sheds_and_tickets_release_slots() {
+        let g = AdmissionGate::new();
+        g.configure(2, 0.0, 0.0, 0);
+        let t1 = match g.try_admit() {
+            Admission::Admit(t) => t,
+            _ => panic!(),
+        };
+        let _t2 = match g.try_admit() {
+            Admission::Admit(t) => t,
+            _ => panic!(),
+        };
+        match g.try_admit() {
+            Admission::Shed { queue_depth, retry_after_ms } => {
+                assert_eq!(queue_depth, 2);
+                assert!(retry_after_ms >= MIN_RETRY_AFTER_MS);
+            }
+            _ => panic!("third request must shed at depth 2"),
+        }
+        assert_eq!(g.shed_requests(), 1);
+        drop(t1);
+        assert!(matches!(g.try_admit(), Admission::Admit(_)), "freed slot re-admits");
+    }
+
+    #[test]
+    fn kv_watermark_sheds_until_pressure_drops() {
+        let g = AdmissionGate::new();
+        g.configure(0, 0.8, 0.0, 0);
+        g.publish_kv_pressure(0.85);
+        assert!(matches!(g.try_admit(), Admission::Shed { .. }));
+        g.publish_kv_pressure(0.5);
+        assert!(matches!(g.try_admit(), Admission::Admit(_)));
+    }
+
+    #[test]
+    fn brownout_clamps_between_watermark_and_shed() {
+        let g = AdmissionGate::new();
+        g.configure(0, 0.9, 0.6, 0);
+        g.publish_kv_pressure(0.7);
+        assert!(g.brownout_active());
+        assert!(matches!(g.try_admit(), Admission::Admit(_)), "brownout still admits");
+        assert_eq!(g.brownout_clamp(16), 8);
+        assert_eq!(g.brownout_clamp(1), 1, "never clamps to zero");
+        assert_eq!(g.snapshot_json().get("brownout_clamps").and_then(Json::as_f64), Some(1.0));
+        g.publish_kv_pressure(0.2);
+        assert!(!g.brownout_active());
+    }
+
+    #[test]
+    fn draining_rejects_with_503_class() {
+        let g = AdmissionGate::new();
+        g.configure(0, 0.0, 0.0, 250);
+        assert!(!g.is_draining());
+        g.begin_drain();
+        assert!(matches!(g.try_admit(), Admission::Draining));
+        assert_eq!(g.drain_timeout_ms(), 250);
+        assert_eq!(g.snapshot_json().get("drain_rejected").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn retry_after_scales_with_observed_cadence_and_depth() {
+        let g = AdmissionGate::new();
+        assert_eq!(g.retry_after_ms(), MIN_RETRY_AFTER_MS, "cold gate uses the floor");
+        for _ in 0..64 {
+            g.observe_request_ms(2000.0);
+        }
+        let _t1 = match g.try_admit() {
+            Admission::Admit(t) => t,
+            _ => panic!(),
+        };
+        let suggestion = g.retry_after_ms();
+        assert!(
+            (3000..=5000).contains(&suggestion),
+            "2 queued × ~2000ms cadence, got {suggestion}"
+        );
+    }
+}

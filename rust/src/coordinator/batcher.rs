@@ -36,6 +36,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -48,7 +49,9 @@ use crate::runtime::backend::Backend;
 use crate::runtime::models::DecodeMode;
 use crate::runtime::HostTensor;
 
-use super::engine::{wave_seed, Engine, Prepared};
+use super::admission::AdmissionGate;
+use super::engine::{deadline_expiry, wave_seed, Engine, Prepared};
+use super::errors::{contain_panic, DeadlineExceeded, ShuttingDown, WaveFault};
 use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 use super::sampler::SamplerBatch;
 use super::stream::{Cancelled, StreamHandle};
@@ -56,6 +59,12 @@ use super::stream::{Cancelled, StreamHandle};
 /// How long the batcher sleeps when fully idle before re-checking for
 /// shutdown (no correctness impact — arrivals interrupt the wait).
 const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// Default wall bound on graceful drain when the gate carries none.
+const DEFAULT_DRAIN_TIMEOUT: Duration = Duration::from_millis(5000);
+
+/// EWMA weight for the batcher's per-request service-time estimate.
+const REQUEST_EWMA_ALPHA: f64 = 0.25;
 
 /// Continuous-batching knobs. Defaults: window from the
 /// `BIFURCATED_BATCH_WINDOW_US` env var (0 when unset — coalesce whatever
@@ -197,8 +206,21 @@ fn mode_str(m: DecodeMode) -> String {
     .to_string()
 }
 
+/// Signed deadline slack right now: positive = budget remaining,
+/// negative = blown; `None` when the request carries no deadline.
+fn slack_ms(deadline: Option<Instant>) -> Option<f64> {
+    deadline.map(|dl| {
+        let now = Instant::now();
+        if now <= dl {
+            (dl - now).as_secs_f64() * 1e3
+        } else {
+            -((now - dl).as_secs_f64() * 1e3)
+        }
+    })
+}
+
 /// The `/requests/recent` summary of a batched request's state so far.
-fn flight_of<B: Backend>(p: &Pending<B>, outcome: &'static str) -> RequestSummary {
+fn flight_of<B: Backend>(p: &Pending<B>, outcome: &'static str, reason: &str) -> RequestSummary {
     let generated: usize = p.completions.iter().map(|c| c.tokens.len()).sum();
     RequestSummary {
         id: p.prep.id,
@@ -212,6 +234,8 @@ fn flight_of<B: Backend>(p: &Pending<B>, outcome: &'static str) -> RequestSummar
         cache_hit_tokens: p.prep.hit_len as u64,
         mode: mode_str(p.prep.mode),
         outcome,
+        reason: reason.to_string(),
+        deadline_slack_ms: slack_ms(p.prep.deadline),
     }
 }
 
@@ -285,6 +309,15 @@ pub struct Batcher<'e, B: Backend> {
     cap: usize,
     /// Reusable per-step buffer of the lane keys touched by a step.
     key_scratch: Vec<u64>,
+    /// Shared admission gate (shedding, brownout, drain); `None` for
+    /// gate-less embedded runs (tests, benches) — everything deadline- and
+    /// fault-related still works without one.
+    gate: Option<Arc<AdmissionGate>>,
+    /// EWMA of wall ms per completed batched request — the service-time
+    /// estimate behind the admission-time deadline check.
+    avg_request_ms: f64,
+    /// Stamped at the first scheduling round that saw the gate draining.
+    drain_started: Option<Instant>,
 }
 
 impl<'e, B: Backend> Batcher<'e, B> {
@@ -307,7 +340,18 @@ impl<'e, B: Backend> Batcher<'e, B> {
             next_wave_id: 1,
             cap,
             key_scratch: Vec::new(),
+            gate: None,
+            avg_request_ms: 0.0,
+            drain_started: None,
         }
+    }
+
+    /// Attach the server's admission gate: the batcher publishes KV
+    /// pressure and step/request timings to it, honors its drain signal,
+    /// and halves wave width under brownout.
+    pub fn with_gate(mut self, gate: Arc<AdmissionGate>) -> Self {
+        self.gate = Some(gate);
+        self
     }
 
     /// Serve jobs until the source closes and every admitted request has
@@ -316,6 +360,9 @@ impl<'e, B: Backend> Batcher<'e, B> {
         loop {
             for job in source.poll() {
                 self.admit(job);
+            }
+            if self.drain_tick() {
+                return;
             }
             if self.active.is_some() {
                 self.tick();
@@ -347,12 +394,98 @@ impl<'e, B: Backend> Batcher<'e, B> {
         !self.requests.is_empty()
     }
 
+    /// Graceful-shutdown drain. Once the gate signals draining: parked
+    /// requests that never started a lane get a fast typed
+    /// [`ShuttingDown`] (the server maps it to 503), in-flight waves keep
+    /// stepping to completion, and past the drain bound the wave itself is
+    /// abandoned. Returns true when the batcher should exit.
+    fn drain_tick(&mut self) -> bool {
+        let Some(gate) = self.gate.clone() else { return false };
+        if !gate.is_draining() {
+            return false;
+        }
+        let started = *self.drain_started.get_or_insert_with(|| {
+            crate::warn_!(
+                "drain: shutting down with {} request(s) admitted",
+                self.requests.len()
+            );
+            Instant::now()
+        });
+        let laned: Vec<u64> = self
+            .active
+            .as_ref()
+            .map_or(Vec::new(), |a| a.lanes.iter().map(|l| l.key).collect());
+        let parked: Vec<u64> =
+            self.requests.keys().copied().filter(|k| !laned.contains(k)).collect();
+        for key in parked {
+            self.shutdown_request(key);
+        }
+        let timeout = match gate.drain_timeout_ms() {
+            0 => DEFAULT_DRAIN_TIMEOUT,
+            ms => Duration::from_millis(ms),
+        };
+        if self.active.is_some() && started.elapsed() > timeout {
+            crate::warn_!("drain timeout: abandoning the in-flight wave");
+            self.fail_active(anyhow::Error::new(ShuttingDown));
+        }
+        !self.has_work()
+    }
+
+    /// Retire one never-started request during drain with a typed 503.
+    fn shutdown_request(&mut self, key: u64) {
+        for q in self.queues.values_mut() {
+            q.retain(|&k| k != key);
+        }
+        let p = self.requests.remove(&key).expect("shutdown of unknown request");
+        flight::record(flight_of(&p, "shed", "server shutting down"));
+        crate::info_req!(p.prep.id, "rejected: server draining");
+        self.engine.finish_prepared(p.prep);
+        (p.reply)(Err(anyhow::Error::new(ShuttingDown)));
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
     /// Admit one job: prepare it, then park it on its cache node's queue
     /// (coalescible) or serve it on the classic solo path right away.
     pub fn admit(&mut self, job: BatchJob<B>) {
         match job {
             BatchJob::Inspect(f) => f(self.engine),
-            BatchJob::Generate(req, stream, reply) => match self.engine.prepare(&req) {
+            BatchJob::Generate(req, stream, reply) => {
+                // Admission-time deadline check: when the backlog already
+                // makes the budget unmeetable (estimated from the EWMA of
+                // completed-request service time), reject immediately —
+                // the client gets its 504 now instead of after queueing.
+                if let Some(budget) = req.params.deadline_ms {
+                    let backlog_ms = self.requests.len() as f64 * self.avg_request_ms;
+                    if budget == 0 || (self.avg_request_ms > 0.0 && (budget as f64) < backlog_ms) {
+                        let reason = format!(
+                            "unmeetable at admission: {budget} ms budget < ~{backlog_ms:.0} ms backlog"
+                        );
+                        flight::record(RequestSummary {
+                            id: req.id,
+                            queue_ms: 0.0,
+                            window_ms: 0.0,
+                            prefill_ms: 0.0,
+                            decode_steps: 0,
+                            generated_tokens: 0,
+                            peak_rows: 0,
+                            coalesced: false,
+                            cache_hit_tokens: 0,
+                            mode: "n/a".to_string(),
+                            outcome: "deadline",
+                            reason: reason.clone(),
+                            deadline_slack_ms: Some(budget as f64 - backlog_ms),
+                        });
+                        crate::info_req!(req.id, "rejected: {reason}");
+                        self.engine.metrics.observe_deadline_expired(0);
+                        reply(Err(anyhow::Error::new(DeadlineExceeded {
+                            elapsed_ms: 0,
+                            freed_rows: 0,
+                        })
+                        .context(reason)));
+                        return;
+                    }
+                }
+                match self.engine.prepare(&req) {
                 Err(e) => {
                     flight::record(RequestSummary {
                         id: req.id,
@@ -366,6 +499,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
                         cache_hit_tokens: 0,
                         mode: "n/a".to_string(),
                         outcome: "error",
+                        reason: format!("prepare failed: {e:#}"),
+                        deadline_slack_ms: None,
                     });
                     crate::warn_req!(req.id, "prepare failed: {e:#}");
                     reply(Err(e));
@@ -378,8 +513,10 @@ impl<'e, B: Backend> Batcher<'e, B> {
                     if !coalescible {
                         // Solo fallback — the same serve path `generate`
                         // composes.
-                        let (id, hit_len, mode) = (prep.id, prep.hit_len, prep.mode);
+                        let (id, hit_len, mode, deadline) =
+                            (prep.id, prep.hit_len, prep.mode, prep.deadline);
                         let res = self.engine.serve_prepared(prep);
+                        let slack = slack_ms(deadline);
                         flight::record(match &res {
                             Ok(r) => RequestSummary {
                                 id,
@@ -398,6 +535,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
                                 cache_hit_tokens: hit_len as u64,
                                 mode: mode_str(mode),
                                 outcome: "ok",
+                                reason: String::new(),
+                                deadline_slack_ms: slack,
                             },
                             Err(e) => RequestSummary {
                                 id,
@@ -412,9 +551,15 @@ impl<'e, B: Backend> Batcher<'e, B> {
                                 mode: mode_str(mode),
                                 outcome: if e.downcast_ref::<Cancelled>().is_some() {
                                     "cancelled"
+                                } else if e.downcast_ref::<DeadlineExceeded>().is_some() {
+                                    "deadline"
+                                } else if e.downcast_ref::<WaveFault>().is_some() {
+                                    "fault"
                                 } else {
                                     "error"
                                 },
+                                reason: format!("{e:#}"),
+                                deadline_slack_ms: slack,
                             },
                         });
                         reply(res);
@@ -446,7 +591,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
                         self.deadlines.entry(node).or_insert_with(|| Instant::now() + window);
                     }
                 }
-            },
+            } }
         }
     }
 
@@ -454,13 +599,24 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// advance the running wave by one decode step (joins and detaches
     /// happen at this boundary). Returns true while work remains.
     pub fn tick(&mut self) -> bool {
+        // Step boundary: requests whose streaming client disconnected or
+        // whose deadline lapsed retire first — parked or laned — so
+        // neither pays for another decode step. This bounds both the
+        // cancellation and the deadline-expiry latency to one step.
+        self.sweep_cancelled();
+        self.sweep_expired();
         if self.active.is_none() {
             match self.next_due() {
                 Some((node, _)) => self.launch(node),
                 None => return self.has_work(),
             }
         }
+        let t0 = Instant::now();
         self.step_active();
+        if let Some(gate) = &self.gate {
+            gate.observe_step_ms(t0.elapsed().as_secs_f64() * 1e3);
+            gate.publish_kv_pressure(self.engine.kv.borrow().pressure());
+        }
         self.has_work()
     }
 
@@ -536,10 +692,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// finished ones, rebuild the union caches if the composition changed,
     /// then run one (possibly ragged) decode step for everyone.
     fn step_active(&mut self) {
-        // Step boundary: requests whose streaming client disconnected are
-        // retired first — parked or laned — so a gone client never pays
-        // for another decode step.
-        self.sweep_cancelled();
+        // Cancellation and deadline sweeps already ran in `tick`.
         // Join/retire until stable: joining can surface lanes that finish
         // on their first (prefix-logits) draw, and retiring those frees
         // width for the next parked request or a multi-wave successor.
@@ -583,10 +736,20 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 active.pos.extend(std::iter::repeat(lane.d_pos).take(lane.live));
             }
             let upload_before = self.engine.rt.upload_bytes();
-            let step = self
-                .engine
-                .rt
-                .decode_multi(
+            // The decode call is the innermost fault boundary: a panic or
+            // error here leaves the union kd/vd untouched (new caches are
+            // committed only on success below), which is what makes
+            // per-lane containment bitwise-safe.
+            let engine = self.engine;
+            let step = contain_panic(|| {
+                if let Some(ms) = crate::util::failpoint::check("decode_slow") {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                crate::fail!("decode_err");
+                if crate::util::failpoint::check("decode_panic").is_some() {
+                    panic!("failpoint decode_panic injected");
+                }
+                engine.rt.decode_multi(
                     active.mode,
                     active.bucket,
                     &active.toks,
@@ -595,13 +758,15 @@ impl<'e, B: Backend> Batcher<'e, B> {
                     &active.kd,
                     &active.vd,
                 )
-                .with_context(|| format!("coalesced decode step over node {}", active.node));
+            })
+            .with_context(|| format!("coalesced decode step over node {}", active.node));
             (step, total, upload_before)
         };
         let out = match step {
             Ok(o) => o,
             Err(e) => {
-                self.fail_active(e);
+                drop(sp_step);
+                self.contain_wave_fault(e);
                 return;
             }
         };
@@ -663,6 +828,13 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// first step (all lanes still at position 0).
     fn join_ready(&mut self) {
         let Some(node) = self.active.as_ref().map(|a| a.node) else { return };
+        // Brownout halves the width budget for *additional* joins before
+        // the gate starts shedding outright; a lone over-wide wave still
+        // runs (waves are never split).
+        let cap = match &self.gate {
+            Some(g) if g.brownout_active() => (self.cap / 2).max(1),
+            _ => self.cap,
+        };
         loop {
             let candidate = {
                 let active = self.active.as_ref().unwrap();
@@ -674,7 +846,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 let wave = p.prep.waves[p.next_wave];
                 let fits = active.lanes.is_empty()
                     || ((self.ragged_ok || active.lanes.iter().all(|l| l.d_pos == 0))
-                        && total + wave.live <= self.cap);
+                        && total + wave.live <= cap);
                 if fits {
                     Some(key)
                 } else {
@@ -838,7 +1010,18 @@ impl<'e, B: Backend> Batcher<'e, B> {
             coalesced_peak_rows: p.peak_rows,
         };
         let generated: usize = p.completions.iter().map(|c| c.tokens.len()).sum();
-        flight::record(flight_of(&p, "ok"));
+        // Service time feeds the admission-time deadline estimate and the
+        // gate's Retry-After derivation.
+        let total_ms = timing.prefill_ms + timing.decode_ms;
+        self.avg_request_ms = if self.avg_request_ms == 0.0 {
+            total_ms
+        } else {
+            (1.0 - REQUEST_EWMA_ALPHA) * self.avg_request_ms + REQUEST_EWMA_ALPHA * total_ms
+        };
+        if let Some(gate) = &self.gate {
+            gate.observe_request_ms(total_ms);
+        }
+        flight::record(flight_of(&p, "ok", ""));
         crate::observability::recorder::event_on_request_track(
             "req.retire",
             p.prep.id,
@@ -869,7 +1052,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
     /// resources and reply with the error.
     fn fail_request(&mut self, key: u64, err: anyhow::Error) {
         let p = self.requests.remove(&key).expect("fail of unknown request");
-        flight::record(flight_of(&p, "error"));
+        flight::record(flight_of(&p, "error", &format!("{err:#}")));
         crate::warn_req!(p.prep.id, "failed: {err:#}");
         self.engine.finish_prepared(p.prep);
         (p.reply)(Err(err));
@@ -892,6 +1075,61 @@ impl<'e, B: Backend> Batcher<'e, B> {
         for key in cancelled {
             self.cancel_request(key);
         }
+    }
+
+    /// Retire every request whose deadline has lapsed — parked or laned.
+    /// Called at each step boundary, so expiry latency is at most one
+    /// decode step.
+    fn sweep_expired(&mut self) {
+        if self.requests.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .requests
+            .iter()
+            .filter(|(_, p)| p.prep.deadline.is_some_and(|dl| now >= dl))
+            .map(|(&k, _)| k)
+            .collect();
+        for key in expired {
+            self.expire_request(key);
+        }
+    }
+
+    /// Expire one request past its deadline, exactly like a cancel: its
+    /// live lane (if any) compacts out of the union with its sequences
+    /// returned, parked entries leave their queues, lease + pins release,
+    /// and the reply resolves with a downcastable [`DeadlineExceeded`].
+    fn expire_request(&mut self, key: u64) {
+        for q in self.queues.values_mut() {
+            q.retain(|&k| k != key);
+        }
+        let mut freed_rows = 0usize;
+        if let Some(active) = self.active.as_mut() {
+            if let Some(i) = active.lanes.iter().position(|l| l.key == key) {
+                let lane = active.lanes.remove(i);
+                active.dirty = true;
+                freed_rows = lane.live;
+                for s in lane.seq_ids {
+                    self.engine.kv.borrow_mut().finish_sequence(s);
+                }
+            }
+        }
+        let p = self.requests.remove(&key).expect("expire of unknown request");
+        let err = deadline_expiry(&p.prep, freed_rows).unwrap_or_else(|| {
+            anyhow::Error::new(DeadlineExceeded {
+                elapsed_ms: p.prep.params.deadline_ms.unwrap_or(0),
+                freed_rows,
+            })
+        });
+        let wave_id = self.active.as_ref().map_or(0, |a| a.id);
+        event("wave.deadline", p.prep.id, wave_id, [freed_rows as u64, 0, 0]);
+        flight::record(flight_of(&p, "deadline", &format!("{err}")));
+        crate::info_req!(p.prep.id, "deadline expired: freed_rows={freed_rows}");
+        self.engine.metrics.observe_deadline_expired(freed_rows);
+        self.engine.finish_prepared(p.prep);
+        (p.reply)(Err(err));
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
     }
 
     /// Cancel one request exactly like a stop-token finish would retire
@@ -917,7 +1155,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
         let p = self.requests.remove(&key).expect("cancel of unknown request");
         let wave_id = self.active.as_ref().map_or(0, |a| a.id);
         event("wave.cancel", p.prep.id, wave_id, [freed_rows as u64, 0, 0]);
-        flight::record(flight_of(&p, "cancelled"));
+        flight::record(flight_of(&p, "cancelled", "streaming client disconnected"));
         crate::info_req!(p.prep.id, "cancelled: freed_rows={freed_rows}");
         self.engine.metrics.observe_cancelled(freed_rows);
         self.engine.finish_prepared(p.prep);
@@ -925,24 +1163,211 @@ impl<'e, B: Backend> Batcher<'e, B> {
         debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
     }
 
-    /// A decode step failed: every lane in the union fails with it (their
-    /// sequences returned, their requests answered), the wave closes, and
-    /// still-parked requests stay queued for a fresh launch.
+    /// Abandon the in-flight wave wholesale (drain timeout, or a failure
+    /// containment cannot narrow): every lane fails with a typed error,
+    /// sequences return, the wave closes, and still-parked requests stay
+    /// queued for a fresh launch.
     fn fail_active(&mut self, err: anyhow::Error) {
         let Some(active) = self.active.take() else { return };
         let msg = format!("{err:#}");
+        let shutdown = err.downcast_ref::<ShuttingDown>().is_some();
         for lane in active.lanes {
             for s in lane.seq_ids {
                 self.engine.kv.borrow_mut().finish_sequence(s);
             }
             if let Some(p) = self.requests.remove(&lane.key) {
-                flight::record(flight_of(&p, "error"));
+                let (outcome, e): (&'static str, anyhow::Error) = if shutdown {
+                    ("shed", anyhow::Error::new(ShuttingDown))
+                } else {
+                    self.engine.metrics.observe_wave_fault();
+                    ("fault", anyhow::Error::new(WaveFault { message: msg.clone() }))
+                };
+                flight::record(flight_of(&p, outcome, &msg));
                 crate::warn_req!(p.prep.id, "coalesced wave failed: {msg}");
                 self.engine.finish_prepared(p.prep);
-                (p.reply)(Err(anyhow::anyhow!("coalesced wave failed: {msg}")));
+                (p.reply)(Err(e));
             }
         }
         debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// A union decode step faulted — error or contained panic. Instead of
+    /// failing every co-batched request (the pre-containment behavior),
+    /// re-run the step lane by lane over the *intact* union caches: new
+    /// kd/vd are committed only on success, so each lane's rows still hold
+    /// exactly what a solo run would at this position. Lanes whose
+    /// isolated step also faults retire with a typed [`WaveFault`];
+    /// survivors' outputs stay bitwise-identical to an undisturbed run.
+    fn contain_wave_fault(&mut self, err: anyhow::Error) {
+        let Some(mut active) = self.active.take() else { return };
+        let msg = format!("{err:#}");
+        crate::warn_!(
+            "wave {} step faulted ({msg}); isolating {} lane(s)",
+            active.id,
+            active.lanes.len()
+        );
+        self.engine.metrics.observe_contained_wave_step();
+        let vocab = self.engine.rt.cfg().vocab;
+        let wave_id = active.id;
+        let lanes = std::mem::take(&mut active.lanes);
+        let mut survivors: Vec<(Lane, HostTensor, HostTensor, usize)> = Vec::new();
+        let mut streamed = 0usize;
+        let mut isolated_sweeps = 0usize;
+        for mut lane in lanes {
+            match Self::isolated_lane_step(self.engine, &active, &mut lane, vocab) {
+                Ok((kd, vd, bucket, sent)) => {
+                    streamed += sent;
+                    isolated_sweeps += 1;
+                    survivors.push((lane, kd, vd, bucket));
+                }
+                Err(lane_err) => {
+                    for s in lane.seq_ids {
+                        self.engine.kv.borrow_mut().finish_sequence(s);
+                    }
+                    let req_id = self.requests.get(&lane.key).map_or(0, |p| p.prep.id);
+                    event("wave.fault", req_id, wave_id, [lane.live as u64, 0, 0]);
+                    if let Some(p) = self.requests.remove(&lane.key) {
+                        let reason = format!("{lane_err:#}");
+                        flight::record(flight_of(&p, "fault", &reason));
+                        crate::warn_req!(p.prep.id, "wave fault: {reason}");
+                        self.engine.metrics.observe_wave_fault();
+                        self.engine.finish_prepared(p.prep);
+                        (p.reply)(Err(anyhow::Error::new(WaveFault { message: reason })));
+                    }
+                }
+            }
+        }
+        if survivors.is_empty() {
+            // Every lane faulted; the wave closes. Parked requests stay
+            // queued and relaunch fresh.
+            let node = active.node;
+            let empty = match self.queues.get(&node) {
+                Some(q) => q.is_empty(),
+                None => true,
+            };
+            if empty {
+                self.queues.remove(&node);
+            }
+            debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+            return;
+        }
+        // Reassemble the union caches from the survivors' solo caches —
+        // the mirror image of the seeding in `isolated_lane_step`.
+        let total: usize = survivors.iter().map(|(l, ..)| l.live).sum();
+        let bucket = self
+            .engine
+            .rt
+            .bucket_for(total)
+            .expect("surviving width fit the union before the fault");
+        let (mut kd, mut vd) = self.engine.rt.zero_decode_cache(bucket);
+        let c = self.engine.rt.cfg();
+        let chunk = c.g * c.m_d_max * c.k;
+        {
+            let kdst = kd.f32s_mut();
+            let vdst = vd.f32s_mut();
+            let mut new_r0 = 0usize;
+            for (lane, skd, svd, sbucket) in survivors.iter_mut() {
+                let ksrc = skd.f32s();
+                let vsrc = svd.f32s();
+                for li in 0..c.l {
+                    // Lane rows sit at offset 0 in their solo caches.
+                    let src = (li * *sbucket) * chunk;
+                    let dst = (li * bucket + new_r0) * chunk;
+                    let n = lane.live * chunk;
+                    kdst[dst..dst + n].copy_from_slice(&ksrc[src..src + n]);
+                    vdst[dst..dst + n].copy_from_slice(&vsrc[src..src + n]);
+                }
+                lane.r0 = new_r0;
+                new_r0 += lane.live;
+            }
+        }
+        active.kd = kd;
+        active.vd = vd;
+        active.bucket = bucket;
+        active.dirty = false;
+        active.lanes = survivors.into_iter().map(|(l, ..)| l).collect();
+        // Accounting: each isolated lane paid its own context sweep this
+        // step (containment trades the amortization away for the step).
+        let sweep_bytes = 2 * c.l * c.g * active.m_c_len * c.k * 4;
+        let shared = active.lanes.len() > 1;
+        self.key_scratch.clear();
+        self.key_scratch.extend(active.lanes.iter().map(|l| l.key));
+        self.active = Some(active);
+        self.engine.metrics.observe_wave_step(total, isolated_sweeps * sweep_bytes, 0);
+        if streamed > 0 {
+            self.engine.metrics.observe_streamed_tokens(streamed);
+        }
+        for key in &self.key_scratch {
+            if let Some(p) = self.requests.get_mut(key) {
+                p.peak_rows = p.peak_rows.max(total);
+                if shared {
+                    p.coalesced = true;
+                }
+            }
+        }
+        self.retire_finished();
+        debug_assert!(self.engine.kv.borrow().check_invariants().is_ok());
+    }
+
+    /// Run one lane's decode step alone, seeded from the union caches the
+    /// failed step left untouched. On success the lane's sampler, stream,
+    /// and depth advance exactly as the union step would have, and the
+    /// lane's new solo caches come back for union reassembly.
+    fn isolated_lane_step(
+        engine: &Engine<B>,
+        active: &ActiveWave<B>,
+        lane: &mut Lane,
+        vocab: usize,
+    ) -> Result<(HostTensor, HostTensor, usize, usize)> {
+        let bucket = engine.rt.bucket_for(lane.live).context("isolated lane bucket")?;
+        let (mut kd, mut vd) = engine.rt.zero_decode_cache(bucket);
+        let c = engine.rt.cfg();
+        let chunk = c.g * c.m_d_max * c.k;
+        if lane.d_pos > 0 {
+            let ksrc = active.kd.f32s();
+            let vsrc = active.vd.f32s();
+            let kdst = kd.f32s_mut();
+            let vdst = vd.f32s_mut();
+            for li in 0..c.l {
+                let src = (li * active.bucket + lane.r0) * chunk;
+                let dst = (li * bucket) * chunk;
+                let n = lane.live * chunk;
+                kdst[dst..dst + n].copy_from_slice(&ksrc[src..src + n]);
+                vdst[dst..dst + n].copy_from_slice(&vsrc[src..src + n]);
+            }
+        }
+        let pos: Vec<usize> = vec![lane.d_pos; lane.live];
+        let out = contain_panic(|| {
+            if let Some(ms) = crate::util::failpoint::check("decode_slow") {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            crate::fail!("decode_err");
+            if crate::util::failpoint::check("decode_panic").is_some() {
+                panic!("failpoint decode_panic injected");
+            }
+            engine.rt.decode_multi(
+                active.mode,
+                bucket,
+                &lane.tokens,
+                &pos,
+                &active.ctx,
+                &kd,
+                &vd,
+            )
+        })
+        .with_context(|| format!("isolated decode step over node {}", active.node))?;
+        let rows = &out.logits.f32s()[..lane.live * vocab];
+        let sent = if let Some(h) = &lane.stream {
+            lane.sampler.finished_mask(&mut lane.mask);
+            lane.tokens = lane.sampler.step(rows);
+            h.emit_sampled(lane.row_base, &lane.mask, &lane.tokens)
+        } else {
+            lane.tokens = lane.sampler.step(rows);
+            0
+        };
+        lane.d_pos += 1;
+        lane.steps += 1;
+        Ok((out.kd, out.vd, bucket, sent))
     }
 
     /// Re-lay the union decode caches after a composition change: a fresh

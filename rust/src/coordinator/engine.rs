@@ -29,7 +29,7 @@
 //! the PJRT artifact runtime.
 
 use std::rc::Rc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -43,6 +43,7 @@ use crate::runtime::{HostTensor, TokenizerInfo};
 use crate::util::json::Json;
 
 use super::batcher::BatchConfig;
+use super::errors::{contain_panic, DeadlineExceeded, WaveFault};
 use super::request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 use super::sampler::SamplerBatch;
 use super::scheduler::{Scheduler, SchedulerConfig, Wave};
@@ -103,6 +104,23 @@ pub fn wave_seed(id: u64, wi: usize) -> u64 {
     id.wrapping_mul(0x9E37_79B9).wrapping_add(wi as u64)
 }
 
+/// `Some(DeadlineExceeded)` once `prep`'s deadline has lapsed — shared by
+/// the solo wave loop and the batcher's expiry sweep so both report the
+/// same elapsed accounting (budget + overshoot).
+pub(crate) fn deadline_expiry<B: Backend>(
+    prep: &Prepared<B>,
+    freed_rows: usize,
+) -> Option<anyhow::Error> {
+    let dl = prep.deadline?;
+    let now = Instant::now();
+    if now < dl {
+        return None;
+    }
+    let budget = prep.params.deadline_ms.unwrap_or(0);
+    let over = now.duration_since(dl).as_millis() as u64;
+    Some(anyhow::Error::new(DeadlineExceeded { elapsed_ms: budget + over, freed_rows }))
+}
+
 /// A request past its context phase: prompt tokenized, prefix cache
 /// consulted, prefill/extend done, capacity registered, shared context
 /// resident (bifurcated modes). Decode it with [`Engine::run_prepared`]
@@ -146,6 +164,10 @@ pub struct Prepared<B: Backend> {
     /// checked at every step boundary (client disconnect retires the
     /// request like a stop-token finish). `None` buffers as before.
     pub stream: Option<StreamHandle>,
+    /// Absolute expiry instant when the request carries a `deadline_ms`
+    /// budget — checked at every step boundary (solo and batched), so
+    /// expiry costs at most one decode step.
+    pub deadline: Option<Instant>,
     pub prefill_ms: f64,
     /// Context K_c/V_c bytes uploaded during preparation.
     pub ctx_upload_bytes: usize,
@@ -211,7 +233,8 @@ impl<B: Backend> Engine<B> {
             .set("sequences", Json::Num(kv.sequences as f64))
             .set("used_blocks", Json::Num(kv.used_blocks as f64))
             .set("free_blocks", Json::Num(kv.free_blocks as f64))
-            .set("used_bytes", Json::Num(kv.used_bytes as f64));
+            .set("used_bytes", Json::Num(kv.used_bytes as f64))
+            .set("pressure", Json::Num(self.kv.borrow().pressure()));
         let mut rep = self
             .metrics
             .report()
@@ -323,6 +346,10 @@ impl<B: Backend> Engine<B> {
             Err(e) => {
                 if let Some(c) = e.downcast_ref::<Cancelled>() {
                     self.metrics.observe_cancelled(c.freed_rows);
+                } else if let Some(d) = e.downcast_ref::<DeadlineExceeded>() {
+                    self.metrics.observe_deadline_expired(d.freed_rows);
+                } else if e.downcast_ref::<WaveFault>().is_some() {
+                    self.metrics.observe_wave_fault();
                 }
             }
         }
@@ -352,6 +379,8 @@ impl<B: Backend> Engine<B> {
     fn prepare_pinned(&self, req: &GenerationRequest, pins: &mut Vec<usize>) -> Result<Prepared<B>> {
         let params = &req.params;
         anyhow::ensure!(params.n >= 1, "n must be >= 1");
+        // The deadline anchor: prefill and queueing both spend the budget.
+        let deadline = params.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         let max_tokens = params.max_tokens.min(self.rt.cfg().m_d_max);
         let prompt_ids = self.tokenize_prompt(&req.prompt)?;
         let m_c_len = prompt_ids.len();
@@ -373,6 +402,10 @@ impl<B: Backend> Engine<B> {
             .scheduler
             .pick_mode_with(params.mode, params.n, m_c_len, hit_len);
         let waves = self.scheduler.plan_waves(params.n);
+
+        // Chaos site: simulate prefill allocation failure after the cache
+        // lookup, so the error path also exercises pin rollback.
+        crate::fail!("prefill_oom");
 
         let upload_before = self.rt.upload_bytes();
         let mut ctx_upload_bytes = 0usize;
@@ -504,6 +537,7 @@ impl<B: Backend> Engine<B> {
             node,
             pins: std::mem::take(pins),
             stream: None,
+            deadline,
             prefill_ms,
             ctx_upload_bytes,
             upload_before,
@@ -554,10 +588,21 @@ impl<B: Backend> Engine<B> {
                 if prep.stream.as_ref().is_some_and(|h| h.is_cancelled()) {
                     return Err(anyhow::Error::new(Cancelled { freed_rows: wave.live }));
                 }
-                let out = self
-                    .rt
-                    .decode(prep.mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
-                    .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
+                // ... and a lapsed deadline stops here too, ≤ one step late
+                if let Some(err) = deadline_expiry(prep, wave.live) {
+                    return Err(err);
+                }
+                let out = contain_panic(|| {
+                    if let Some(ms) = crate::util::failpoint::check("decode_slow") {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    crate::fail!("decode_err");
+                    if crate::util::failpoint::check("decode_panic").is_some() {
+                        panic!("failpoint decode_panic injected");
+                    }
+                    self.rt.decode(prep.mode, wave.bucket, &tokens, d_pos, ctx, &kd, &vd)
+                })
+                .with_context(|| format!("decode step {d_pos} wave {wi}"))?;
                 let live_logits = &out.logits.f32s()[..wave.live * vocab];
                 if let Some(h) = &prep.stream {
                     sampler.finished_mask(&mut mask);

@@ -1,0 +1,152 @@
+//! Typed serving errors, downcastable through `anyhow` chains.
+//!
+//! The engine/batcher retire requests with `anyhow::Error`; the HTTP
+//! layer downcasts to pick a status code (`server::api`), so each
+//! overload/fault outcome gets a dedicated concrete type here —
+//! mirroring [`crate::coordinator::stream::Cancelled`] from the
+//! streaming PR. `anyhow::Error::downcast_ref` walks the whole context
+//! chain, so wrapping these with `.context(...)` keeps them reachable.
+
+use std::fmt;
+
+/// Retired because the request's `deadline_ms` budget lapsed — at
+/// admission (`elapsed_ms == 0`, unmeetable backlog) or at a decode
+/// step boundary. Maps to HTTP 504.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    /// Milliseconds elapsed since the deadline anchor when retired.
+    pub elapsed_ms: u64,
+    /// Wave rows freed at the boundary that retired the request
+    /// (0 when it never held a lane).
+    pub freed_rows: usize,
+}
+
+impl fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "deadline exceeded after {} ms ({} wave rows freed)",
+            self.elapsed_ms, self.freed_rows
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Rejected at admission by the load-shedding gate (queue bound or
+/// KV-pressure watermark). Maps to HTTP 429 + `Retry-After`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shed {
+    /// Suggested client back-off, derived from observed request cadence.
+    pub retry_after_ms: u64,
+    /// In-flight depth observed when the request was turned away.
+    pub queue_depth: usize,
+}
+
+impl fmt::Display for Shed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request shed: server overloaded ({} in flight, retry after {} ms)",
+            self.queue_depth, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for Shed {}
+
+/// Rejected or abandoned because the server is draining for shutdown.
+/// Maps to HTTP 503.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShuttingDown;
+
+impl fmt::Display for ShuttingDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "server shutting down before request completed")
+    }
+}
+
+impl std::error::Error for ShuttingDown {}
+
+/// The request's decode work errored or panicked and the fault was
+/// contained to this request (co-batched lanes continue). Maps to
+/// HTTP 500.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaveFault {
+    /// The underlying error display or panic payload.
+    pub message: String,
+}
+
+impl fmt::Display for WaveFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wave fault: {}", self.message)
+    }
+}
+
+impl std::error::Error for WaveFault {}
+
+/// Run `f`, converting a panic into `Err(WaveFault)` so the normal
+/// error plumbing (lease return, lane compaction, typed 500) handles
+/// it. Used at the innermost decode call — catching any higher up
+/// would unwind past lease/pin bookkeeping and leak rows.
+pub fn contain_panic<T>(f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    // The engine's state is only mutated after a step returns Ok, so
+    // observing it past a mid-step unwind is sound — hence the
+    // AssertUnwindSafe. The process panic hook is left alone (it is
+    // global; swapping it would race parallel test threads), so a
+    // contained panic still prints one hook line before conversion.
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let message = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow::Error::new(WaveFault { message }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn typed_errors_downcast_through_context_chains() {
+        let e = anyhow::Error::new(DeadlineExceeded { elapsed_ms: 120, freed_rows: 2 })
+            .context("decode step");
+        let d = e.downcast_ref::<DeadlineExceeded>().expect("downcast through context");
+        assert_eq!(d.elapsed_ms, 120);
+        assert_eq!(d.freed_rows, 2);
+
+        let e = anyhow::Error::new(Shed { retry_after_ms: 1500, queue_depth: 7 });
+        assert_eq!(e.downcast_ref::<Shed>().unwrap().queue_depth, 7);
+        assert!(format!("{e}").contains("retry after 1500 ms"));
+
+        let e = anyhow::Error::new(ShuttingDown);
+        assert!(e.downcast_ref::<ShuttingDown>().is_some());
+    }
+
+    #[test]
+    fn contain_panic_passes_ok_and_err_through() {
+        assert_eq!(contain_panic(|| Ok(41 + 1)).unwrap(), 42);
+        let e = contain_panic::<()>(|| anyhow::bail!("plain error")).unwrap_err();
+        assert!(e.downcast_ref::<WaveFault>().is_none(), "Err is not a fault");
+        assert_eq!(format!("{e}"), "plain error");
+    }
+
+    #[test]
+    fn contain_panic_converts_panics_to_wave_faults() {
+        let e = contain_panic::<()>(|| panic!("kernel exploded")).unwrap_err();
+        let f = e.downcast_ref::<WaveFault>().expect("panic becomes WaveFault");
+        assert_eq!(f.message, "kernel exploded");
+
+        let msg = format!("boom {}", 7);
+        let e = contain_panic::<()>(|| std::panic::panic_any(msg.clone())).unwrap_err();
+        assert_eq!(e.downcast_ref::<WaveFault>().unwrap().message, "boom 7");
+    }
+}

@@ -35,6 +35,17 @@ struct Inner {
     /// Wave rows freed by those cancellations — decode capacity handed
     /// back to live requests instead of burned to max_tokens.
     cancel_freed_rows: usize,
+    /// Requests retired because their `deadline_ms` budget lapsed —
+    /// at admission (unmeetable backlog) or at a step boundary.
+    deadline_expired: usize,
+    /// Wave rows freed by deadline expiries at step boundaries.
+    deadline_freed_rows: usize,
+    /// Requests retired by a contained wave fault (decode error or
+    /// panic isolated to the offending request).
+    wave_faults: usize,
+    /// Union decode steps that faulted and went through per-lane
+    /// isolation — counts containment events, not victims.
+    contained_wave_steps: usize,
     prefill_ms: LogHistogram,
     per_step_ms: LogHistogram,
     total_ms: LogHistogram,
@@ -123,6 +134,36 @@ impl Metrics {
         m.cancel_freed_rows += freed_rows;
     }
 
+    /// A request's deadline lapsed, freeing `freed_rows` decode rows
+    /// (0 when rejected at admission before leasing any).
+    pub fn observe_deadline_expired(&self, freed_rows: usize) {
+        let mut m = self.inner.borrow_mut();
+        m.deadline_expired += 1;
+        m.deadline_freed_rows += freed_rows;
+    }
+
+    /// A request was retired by a contained wave fault.
+    pub fn observe_wave_fault(&self) {
+        self.inner.borrow_mut().wave_faults += 1;
+    }
+
+    /// A union decode step faulted and was re-run lane-by-lane.
+    pub fn observe_contained_wave_step(&self) {
+        self.inner.borrow_mut().contained_wave_steps += 1;
+    }
+
+    pub fn deadline_expired(&self) -> usize {
+        self.inner.borrow().deadline_expired
+    }
+
+    pub fn wave_faults(&self) -> usize {
+        self.inner.borrow().wave_faults
+    }
+
+    pub fn contained_wave_steps(&self) -> usize {
+        self.inner.borrow().contained_wave_steps
+    }
+
     pub fn cancelled_requests(&self) -> usize {
         self.inner.borrow().cancelled_requests
     }
@@ -162,7 +203,11 @@ impl Metrics {
             .set("cache_hit_tokens", Json::Num(m.cache_hit_tokens as f64))
             .set("streamed_tokens", Json::Num(m.streamed_tokens as f64))
             .set("cancelled_requests", Json::Num(m.cancelled_requests as f64))
-            .set("cancel_freed_rows", Json::Num(m.cancel_freed_rows as f64));
+            .set("cancel_freed_rows", Json::Num(m.cancel_freed_rows as f64))
+            .set("deadline_expired", Json::Num(m.deadline_expired as f64))
+            .set("deadline_freed_rows", Json::Num(m.deadline_freed_rows as f64))
+            .set("wave_faults", Json::Num(m.wave_faults as f64))
+            .set("contained_wave_steps", Json::Num(m.contained_wave_steps as f64));
         // Always present (zeroed before the first request) so scrapers
         // see a stable shape; `to_json` carries the bucket tables.
         j = j
@@ -283,6 +328,23 @@ mod tests {
         assert_eq!(r.f64_of("streamed_tokens"), 5.0);
         assert_eq!(r.f64_of("cancelled_requests"), 1.0);
         assert_eq!(r.f64_of("cancel_freed_rows"), 4.0);
+    }
+
+    #[test]
+    fn overload_and_fault_counters_aggregate() {
+        let m = Metrics::default();
+        m.observe_deadline_expired(0); // admission-time rejection
+        m.observe_deadline_expired(3); // step-boundary expiry
+        m.observe_contained_wave_step();
+        m.observe_wave_fault();
+        assert_eq!(m.deadline_expired(), 2);
+        assert_eq!(m.wave_faults(), 1);
+        assert_eq!(m.contained_wave_steps(), 1);
+        let r = m.report();
+        assert_eq!(r.f64_of("deadline_expired"), 2.0);
+        assert_eq!(r.f64_of("deadline_freed_rows"), 3.0);
+        assert_eq!(r.f64_of("wave_faults"), 1.0);
+        assert_eq!(r.f64_of("contained_wave_steps"), 1.0);
     }
 
     #[test]

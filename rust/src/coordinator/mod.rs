@@ -4,8 +4,10 @@
 //! workload-based bifurcation switch, temperature/top-p samplers with
 //! mean-log-p tracking, and the reranker.
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
+pub mod errors;
 pub mod metrics;
 pub mod ranker;
 pub mod request;
@@ -13,8 +15,10 @@ pub mod sampler;
 pub mod scheduler;
 pub mod stream;
 
+pub use admission::{Admission, AdmissionGate, Ticket};
 pub use batcher::{BatchConfig, BatchJob, Batcher, JobSource, ScriptedSource};
 pub use engine::{wave_seed, Engine, EngineConfig, Prepared};
+pub use errors::{contain_panic, DeadlineExceeded, Shed, ShuttingDown, WaveFault};
 pub use ranker::rerank_top_k;
 pub use request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 pub use sampler::SamplerBatch;

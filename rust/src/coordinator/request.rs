@@ -15,6 +15,11 @@ pub struct SamplingParams {
     pub seed: u64,
     /// Per-request decode-mode override; None inherits the engine policy.
     pub mode: Option<super::scheduler::ModePolicy>,
+    /// Wall-clock budget in ms from admission; the batcher rejects
+    /// unmeetable budgets up front (504) and retires the request with
+    /// `DeadlineExceeded` at the first step boundary past expiry.
+    /// None = no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for SamplingParams {
@@ -27,6 +32,7 @@ impl Default for SamplingParams {
             stop_token: None,
             seed: 0,
             mode: None,
+            deadline_ms: None,
         }
     }
 }

@@ -145,6 +145,7 @@ mod tests {
             stop_token: Some(14),
             seed: 1,
             mode: None,
+            deadline_ms: None,
         }
     }
 
@@ -219,6 +220,7 @@ mod tests {
             seed: 3,
             n: 1,
             mode: None,
+            deadline_ms: None,
         };
         let mut sb = SamplerBatch::new(1, p, 2, 0);
         sb.first_tokens(&[0.0, 0.0]);

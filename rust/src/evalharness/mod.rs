@@ -83,6 +83,7 @@ pub fn run_suite<B: Backend>(engine: &Engine<B>, cfg: &SuiteConfig) -> Result<Su
                 stop_token: Some(corpus::SEMI),
                 seed: cfg.seed.wrapping_add(i as u64),
                 mode: None,
+                deadline_ms: None,
             },
         };
         let res = engine.generate(&req)?;

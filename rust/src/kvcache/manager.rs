@@ -130,6 +130,14 @@ impl KvManager {
 
     /// Lease the context for one sampler and allocate its decode slot.
     pub fn start_sequence(&mut self, ctx: ContextId, m_d_cap: usize) -> Result<SeqId, AllocError> {
+        if crate::util::failpoint::check("lease_oom").is_some() {
+            // Chaos injection: report exhaustion exactly as the allocator
+            // would, exercising the engine's evict-and-retry path.
+            return Err(AllocError {
+                requested_blocks: m_d_cap.div_ceil(self.alloc.block_tokens().max(1)),
+                free_blocks: 0,
+            });
+        }
         let blocks = self.alloc.alloc(m_d_cap)?;
         let state = self.contexts.get_mut(&ctx).expect("unknown context");
         state.leases += 1;
@@ -216,6 +224,25 @@ impl KvManager {
             free_blocks: self.alloc.free_blocks(),
             used_bytes: self.alloc.used_blocks() * self.alloc.block_tokens() * self.kv_bytes_per_token,
         }
+    }
+
+    /// Fraction of KV blocks that are neither free nor reclaimable by
+    /// prefix-cache eviction (cached contexts with zero live leases
+    /// count as reclaimable). 0.0 = idle, 1.0 = hard-committed full —
+    /// the input to the load-shedding/brownout watermarks.
+    pub fn pressure(&self) -> f64 {
+        let used = self.alloc.used_blocks();
+        let total = used + self.alloc.free_blocks();
+        if total == 0 {
+            return 1.0;
+        }
+        let evictable: usize = self
+            .contexts
+            .values()
+            .filter(|c| c.class == ContextClass::Cached && c.leases == 0)
+            .map(|c| c.blocks.len())
+            .sum();
+        used.saturating_sub(evictable) as f64 / total as f64
     }
 
     /// Whole-manager invariant (propcheck target): block accounting is
@@ -346,6 +373,41 @@ mod tests {
         }
         m.release_context(ctx);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_discounts_evictable_cached_contexts() {
+        let mut m = mgr(); // 1024 blocks
+        assert_eq!(m.pressure(), 0.0);
+        // active context: committed pressure
+        let active = m.register_context(160, DecodeMode::Bifurcated, 1).unwrap(); // 10 blocks
+        assert!((m.pressure() - 10.0 / 1024.0).abs() < 1e-12);
+        // unleased cached context: occupies blocks but is reclaimable
+        let cached = m.register_cached_context(160).unwrap();
+        assert!((m.pressure() - 10.0 / 1024.0).abs() < 1e-12, "evictable node adds no pressure");
+        // leasing the cached node pins it -> pressure includes it + the slot
+        let s = m.start_sequence(cached, 16).unwrap();
+        assert!((m.pressure() - 21.0 / 1024.0).abs() < 1e-12);
+        m.finish_sequence(s);
+        m.release_context(cached);
+        m.release_context(active);
+        assert_eq!(m.pressure(), 0.0);
+    }
+
+    #[test]
+    fn lease_oom_failpoint_injects_exhaustion() {
+        crate::util::failpoint::set("lease_oom=1@2");
+        let mut m = mgr();
+        let ctx = m.register_context(32, DecodeMode::Bifurcated, 1).unwrap();
+        let s1 = m.start_sequence(ctx, 16).expect("hit 1 not in window");
+        let e = m.start_sequence(ctx, 16).expect_err("hit 2 injected");
+        assert_eq!(e.free_blocks, 0);
+        m.check_invariants().unwrap();
+        let s3 = m.start_sequence(ctx, 16).expect("window closed");
+        m.finish_sequence(s1);
+        m.finish_sequence(s3);
+        m.release_context(ctx);
+        crate::util::failpoint::clear();
     }
 
     #[test]

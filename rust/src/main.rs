@@ -60,7 +60,8 @@ fn print_usage() {
          \x20              [--prefix-cache N] [--prefix-cache-bytes B] [--threads N]\n\
          \x20              [--batch-window-us U] [--batch-width W] [--backend native|pjrt]\n\
          \x20              [--http-read-timeout-ms T] [--http-write-timeout-ms T] [--http-max-body B]\n\
-         \x20              [--trace[=kernel]] [--trace-out FILE]\n\
+         \x20              [--max-queue-depth N] [--shed-kv-watermark F] [--brownout F]\n\
+         \x20              [--drain-timeout-ms T] [--trace[=kernel]] [--trace-out FILE]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -89,6 +90,16 @@ fn print_usage() {
          (408; default 10000, 0 disables), --http-write-timeout-ms bounds\n\
          stalled chunk writes (treated as disconnect; default 30000), and\n\
          --http-max-body caps request bodies (413; default 1 MiB).\n\
+         Overload control: --max-queue-depth N sheds requests past N in\n\
+         flight (429 + Retry-After; 0 = unbounded), --shed-kv-watermark F\n\
+         sheds when non-reclaimable KV pressure exceeds fraction F (0 =\n\
+         off), --brownout F clamps max_tokens and halves wave width above\n\
+         pressure F before shedding kicks in (0 = off). Requests may carry\n\
+         \"deadline_ms\": unmeetable deadlines are rejected at admission\n\
+         and expired requests retire at the next step boundary (504);\n\
+         co-batched survivors are unaffected. POST /admin/shutdown drains\n\
+         gracefully: in-flight waves finish (bounded by --drain-timeout-ms,\n\
+         default 5000), parked requests get 503.\n\
          --trace records request/wave lifecycle spans (=kernel adds\n\
          per-(layer,group) kernel phases); equivalently set\n\
          $BIFURCATED_TRACE=1|2. Live spans: GET /trace?last=N\n\
@@ -200,7 +211,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     info!(
         "serving {model} on http://{addr}  (POST /generate [?stream=1], GET /health, GET /metrics)"
     );
+    // Overload-control knobs live on the shared admission gate: 0 keeps a
+    // knob disabled (permissive defaults), watermarks are fractions of
+    // non-reclaimable KV blocks.
+    client.gate().configure(
+        args.usize_or("max-queue-depth", 0),
+        args.f64_or("shed-kv-watermark", 0.0),
+        args.f64_or("brownout", 0.0),
+        args.usize_or("drain-timeout-ms", 5_000) as u64,
+    );
+    let shutdown = bifurcated_attn::server::Shutdown::new();
+    let sd = std::sync::Arc::clone(&shutdown);
+    let drain_client = std::sync::Arc::clone(&client);
     let served = bifurcated_attn::server::build_server(client)
+        .route("POST", "/admin/shutdown", move |_| {
+            // Reply 200, then the accept loop (woken by trigger) runs the
+            // graceful drain: in-flight waves finish (bounded by
+            // --drain-timeout-ms), parked requests get 503.
+            sd.trigger();
+            bifurcated_attn::server::HttpResponse::json(200, "{\"draining\":true}".into())
+        })
+        .with_drain(move || drain_client.drain())
         .with_read_timeout(std::time::Duration::from_millis(
             args.usize_or("http-read-timeout-ms", 10_000) as u64,
         ))
@@ -208,7 +239,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_or("http-write-timeout-ms", 30_000) as u64,
         ))
         .with_max_body(args.usize_or("http-max-body", 1 << 20))
-        .serve(&addr, args.usize_or("workers", 4), None)
+        .serve(&addr, args.usize_or("workers", 4), Some(shutdown))
         .context("http serve");
     if let Some(path) = trace_out {
         write_trace(&path)?;
@@ -238,6 +269,7 @@ fn run_generate<B: Backend>(engine: &Engine<B>, args: &Args) -> Result<()> {
             stop_token: Some(corpus::SEMI),
             seed: args.usize_or("seed", 0) as u64,
             mode: None,
+            deadline_ms: None,
         },
     };
     let res = engine.generate(&req)?;

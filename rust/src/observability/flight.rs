@@ -26,8 +26,15 @@ pub struct RequestSummary {
     pub coalesced: bool,
     pub cache_hit_tokens: u64,
     pub mode: String,
-    /// `"ok"`, `"error"`, or `"cancelled"`.
+    /// `"ok"`, `"error"`, `"cancelled"`, `"shed"`, `"deadline"`, or
+    /// `"fault"`.
     pub outcome: &'static str,
+    /// Why the request retired the way it did — the retiring error's
+    /// display for non-ok outcomes, empty for `"ok"`.
+    pub reason: String,
+    /// Deadline budget minus elapsed at retire (negative = blown);
+    /// `None` when the request carried no deadline.
+    pub deadline_slack_ms: Option<f64>,
 }
 
 impl RequestSummary {
@@ -44,6 +51,11 @@ impl RequestSummary {
             .set("cache_hit_tokens", Json::Num(self.cache_hit_tokens as f64))
             .set("mode", Json::Str(self.mode.clone()))
             .set("outcome", Json::Str(self.outcome.to_string()))
+            .set("reason", Json::Str(self.reason.clone()))
+            .set(
+                "deadline_slack_ms",
+                self.deadline_slack_ms.map(Json::Num).unwrap_or(Json::Null),
+            )
     }
 }
 
@@ -93,7 +105,22 @@ mod tests {
             cache_hit_tokens: 8,
             mode: "bifurcated".to_string(),
             outcome: "ok",
+            reason: String::new(),
+            deadline_slack_ms: None,
         }
+    }
+
+    #[test]
+    fn reason_and_slack_serialize() {
+        let mut s = summary(1);
+        s.outcome = "deadline";
+        s.reason = "deadline exceeded after 120 ms (2 wave rows freed)".into();
+        s.deadline_slack_ms = Some(-20.0);
+        let j = s.to_json();
+        assert_eq!(j.str_of("outcome"), "deadline");
+        assert!(j.str_of("reason").contains("120 ms"));
+        assert_eq!(j.req("deadline_slack_ms").as_f64(), Some(-20.0));
+        assert!(matches!(summary(2).to_json().req("deadline_slack_ms"), Json::Null));
     }
 
     // The store is process-global and tests run concurrently, so use a

@@ -14,12 +14,13 @@
 //! boundaries, so they never wait for an in-flight wave to drain.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    rerank_top_k, BatchJob, Batcher, Engine, EngineConfig, GenerationRequest, JobSource,
-    ModePolicy, SamplingParams, StreamHandle,
+    rerank_top_k, Admission, AdmissionGate, BatchJob, Batcher, Cancelled, DeadlineExceeded,
+    Engine, EngineConfig, GenerationRequest, JobSource, ModePolicy, SamplingParams, Shed,
+    ShuttingDown, StreamHandle, WaveFault,
 };
 use crate::observability::{chrome, event, flight, prometheus, recorder, span};
 use crate::runtime::models::DecodeMode;
@@ -32,8 +33,71 @@ use super::http::{HttpResponse, HttpServer};
 /// `n * max_tokens` must not allocate an unbounded queue).
 const MAX_STREAM_CAPACITY: usize = 65_536;
 
+/// Typed HTTP-facing request error: the engine's anyhow chains downcast
+/// to the status the client should see — 499 client cancel, 504 deadline,
+/// 429 shed (with Retry-After), 503 draining, 500 wave fault / internal.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub status: u16,
+    pub message: String,
+    /// Retry-After hint, carried by 429s.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ApiError {
+    pub fn new(status: u16, message: impl Into<String>) -> ApiError {
+        ApiError { status, message: message.into(), retry_after_ms: None }
+    }
+
+    /// Map an engine-side error chain onto the wire status.
+    pub fn from_engine(e: &anyhow::Error) -> ApiError {
+        let message = format!("{e:#}");
+        if e.downcast_ref::<Cancelled>().is_some() {
+            ApiError::new(499, message)
+        } else if e.downcast_ref::<DeadlineExceeded>().is_some() {
+            ApiError::new(504, message)
+        } else if let Some(s) = e.downcast_ref::<Shed>() {
+            ApiError { status: 429, message, retry_after_ms: Some(s.retry_after_ms) }
+        } else if e.downcast_ref::<ShuttingDown>().is_some() {
+            ApiError::new(503, message)
+        } else if e.downcast_ref::<WaveFault>().is_some() {
+            ApiError::new(500, message)
+        } else {
+            ApiError::new(500, message)
+        }
+    }
+
+    /// Render as a buffered JSON error response (Retry-After in whole
+    /// seconds, rounded up, when present).
+    pub fn to_response(&self) -> HttpResponse {
+        let resp = HttpResponse::error(self.status, &self.message);
+        match self.retry_after_ms {
+            Some(ms) => resp.with_header("Retry-After", format!("{}", ms.div_ceil(1000).max(1))),
+            None => resp,
+        }
+    }
+
+    /// The final ndjson line of a streaming response that failed.
+    fn to_stream_line(&self) -> String {
+        format!(
+            "{}\n",
+            Json::obj()
+                .set("error", Json::Str(self.message.clone()))
+                .set("status", Json::Num(self.status as f64))
+        )
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.status, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
 enum Job {
-    Generate(GenerationRequest, usize, Option<StreamHandle>, Sender<Result<Json, String>>),
+    Generate(GenerationRequest, usize, Option<StreamHandle>, Sender<Result<Json, ApiError>>),
     Metrics(Sender<Json>),
 }
 
@@ -54,7 +118,8 @@ impl ChannelSource {
                 stream,
                 Box::new(move |res| {
                     let _ = tx.send(
-                        res.map(|r| result_to_json(&r, rerank_k)).map_err(|e| format!("{e:#}")),
+                        res.map(|r| result_to_json(&r, rerank_k))
+                            .map_err(|e| ApiError::from_engine(&e)),
                     );
                 }),
             ),
@@ -100,6 +165,9 @@ impl<B: Backend> JobSource<B> for ChannelSource {
 /// Cloneable handle HTTP workers use to reach the engine thread.
 pub struct EngineClient {
     tx: Mutex<Sender<Job>>,
+    /// Overload-control state shared with the batcher: admission counters,
+    /// shed watermarks, brownout, drain signal.
+    gate: Arc<AdmissionGate>,
 }
 
 impl EngineClient {
@@ -107,10 +175,31 @@ impl EngineClient {
         self.tx.lock().unwrap().send(job).expect("engine thread died");
     }
 
-    pub fn generate(&self, req: GenerationRequest, rerank_k: usize) -> Result<Json, String> {
+    /// The admission gate shared with the engine thread.
+    pub fn gate(&self) -> &Arc<AdmissionGate> {
+        &self.gate
+    }
+
+    /// Graceful drain: flip the gate (the batcher fails parked requests
+    /// with 503 and finishes in-flight waves), then wait — bounded by the
+    /// configured drain timeout plus a small grace — for in-flight
+    /// requests to retire.
+    pub fn drain(&self) {
+        self.gate.begin_drain();
+        let ms = match self.gate.drain_timeout_ms() {
+            0 => 5000,
+            ms => ms,
+        };
+        let deadline = Instant::now() + Duration::from_millis(ms) + Duration::from_millis(250);
+        while self.gate.inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    pub fn generate(&self, req: GenerationRequest, rerank_k: usize) -> Result<Json, ApiError> {
         let (tx, rx) = channel();
         self.send(Job::Generate(req, rerank_k, None, tx));
-        rx.recv().map_err(|_| "engine thread died".to_string())?
+        rx.recv().map_err(|_| ApiError::new(500, "engine thread died"))?
     }
 
     /// Submit a streaming request: tokens flow through `stream`'s paired
@@ -124,7 +213,7 @@ impl EngineClient {
         req: GenerationRequest,
         rerank_k: usize,
         stream: StreamHandle,
-    ) -> Receiver<Result<Json, String>> {
+    ) -> Receiver<Result<Json, ApiError>> {
         let (tx, rx) = channel();
         self.send(Job::Generate(req, rerank_k, Some(stream), tx));
         rx
@@ -147,6 +236,8 @@ where
 {
     let (tx, rx) = channel::<Job>();
     let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+    let gate = AdmissionGate::new();
+    let engine_gate = Arc::clone(&gate);
     std::thread::Builder::new()
         .name("engine".into())
         .spawn(move || {
@@ -164,13 +255,13 @@ where
             // concurrent requests coalesce into shared decode waves.
             let batching = engine.batching.clone();
             let mut source = ChannelSource { rx, closed: false };
-            Batcher::new(&engine, batching).run(&mut source);
+            Batcher::new(&engine, batching).with_gate(engine_gate).run(&mut source);
         })?;
     ready_rx
         .recv()
         .map_err(|_| anyhow::anyhow!("engine thread exited during init"))?
         .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
-    Ok(std::sync::Arc::new(EngineClient { tx: Mutex::new(tx) }))
+    Ok(std::sync::Arc::new(EngineClient { tx: Mutex::new(tx), gate }))
 }
 
 /// Spawn a native-backend engine (the default: no artifacts required).
@@ -272,6 +363,17 @@ pub fn parse_generate_body(
             None => return Err("'mode' must be a string (auto|bifurcated|fused)".into()),
         },
     };
+    // optional "deadline_ms": wall-clock budget from admission; the
+    // engine rejects or retires the request once it lapses (504). Insist
+    // on an exact non-negative integer — a fractional or bogus budget is
+    // a client bug worth surfacing, not truncating.
+    let deadline_ms = match doc.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => match v.as_f64() {
+            Some(f) if f.fract() == 0.0 && (0.0..=2f64.powi(53)).contains(&f) => Some(f as u64),
+            _ => return Err("'deadline_ms' must be a non-negative integer or null".into()),
+        },
+    };
     let d = SamplingParams::default();
     let params = SamplingParams {
         n: doc.get("n").and_then(|v| v.as_usize()).unwrap_or(1),
@@ -281,6 +383,7 @@ pub fn parse_generate_body(
         stop_token,
         seed: doc.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
         mode,
+        deadline_ms,
     };
     if params.n == 0 {
         return Err("n must be >= 1".into());
@@ -306,7 +409,12 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
     HttpServer::new()
         .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
         .route("GET", "/metrics", move |req| {
-            let m = met_client.metrics();
+            // The admission gate lives server-side (the engine Metrics
+            // cell is thread-local to the engine); merge its snapshot in
+            // so shedding and brownout are observable at /metrics too.
+            let m = met_client
+                .metrics()
+                .set("admission", met_client.gate().snapshot_json());
             if req.query_param("format") == Some("prometheus") {
                 HttpResponse::text(200, prometheus::render(&m))
             } else {
@@ -325,16 +433,58 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
         })
         .route_streaming("POST", "/generate", move |req, sink| {
             let id = next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            let (greq, rerank_k, stream) = match parse_generate_body(&req.body, id) {
+            // Load shedding happens here, before the request touches the
+            // engine channel: past the queue bound or the KV-pressure
+            // watermark the client gets an immediate 429 with a
+            // Retry-After derived from observed service cadence. The
+            // ticket rides the whole handler scope (including the
+            // streaming drain loop), so inflight tracks reality.
+            let _ticket = match gen_client.gate().try_admit() {
+                Admission::Admit(t) => t,
+                Admission::Shed { retry_after_ms, queue_depth } => {
+                    flight::record(flight::RequestSummary {
+                        id,
+                        queue_ms: 0.0,
+                        window_ms: 0.0,
+                        prefill_ms: 0.0,
+                        decode_steps: 0,
+                        generated_tokens: 0,
+                        peak_rows: 0,
+                        coalesced: false,
+                        cache_hit_tokens: 0,
+                        mode: "n/a".to_string(),
+                        outcome: "shed",
+                        reason: format!("overloaded: queue depth {queue_depth}"),
+                        deadline_slack_ms: None,
+                    });
+                    event("req.shed", id, 0, [queue_depth as u64, retry_after_ms, 0]);
+                    let e = ApiError {
+                        status: 429,
+                        message: format!(
+                            "overloaded: {queue_depth} requests in flight; retry in {retry_after_ms} ms"
+                        ),
+                        retry_after_ms: Some(retry_after_ms),
+                    };
+                    return Some(e.to_response());
+                }
+                Admission::Draining => {
+                    return Some(ApiError::new(503, "server shutting down").to_response());
+                }
+            };
+            let (mut greq, rerank_k, stream) = match parse_generate_body(&req.body, id) {
                 Err(e) => return Some(HttpResponse::error(400, &e)),
                 Ok(t) => t,
             };
+            // Brownout: clamp the token budget before shedding outright.
+            if gen_client.gate().brownout_active() {
+                greq.params.max_tokens = gen_client.gate().brownout_clamp(greq.params.max_tokens);
+            }
             let streaming = stream || req.query_flag("stream");
             let _sp = span("req.serve").req(id).on_request_track().arg(0, u64::from(streaming));
             if !streaming {
                 return Some(match gen_client.generate(greq, rerank_k) {
                     Ok(j) => HttpResponse::json(200, j.to_string()),
-                    Err(e) => HttpResponse::error(500, &e),
+                    Err(e) => e.to_response(),
                 });
             }
             // Bounded to the request's own token budget so the engine
@@ -367,12 +517,12 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
             }
             let done = reply
                 .recv()
-                .map_err(|_| "engine thread died".to_string())
+                .map_err(|_| ApiError::new(500, "engine thread died"))
                 .and_then(|r| r);
             if !gone {
                 let line = match done {
                     Ok(j) => format!("{}\n", Json::obj().set("done", j)),
-                    Err(e) => format!("{}\n", Json::obj().set("error", Json::Str(e))),
+                    Err(e) => e.to_stream_line(),
                 };
                 let _ = sink.chunk(&line);
                 let _ = sink.finish();
@@ -449,6 +599,113 @@ mod tests {
         // /metrics now carries the KV-capacity and prefix-cache gauges
         assert!(met.req("kv").f64_of("free_blocks") > 0.0);
         assert_eq!(met.req("prefix_cache").f64_of("misses"), 1.0);
+    }
+
+    #[test]
+    fn deadline_ms_parses_exact_integer_only() {
+        let (req, _, _) = parse_generate_body(r#"{"prompt":"x","deadline_ms":250}"#, 1).unwrap();
+        assert_eq!(req.params.deadline_ms, Some(250));
+        let (req, _, _) = parse_generate_body(r#"{"prompt":"x","deadline_ms":null}"#, 1).unwrap();
+        assert_eq!(req.params.deadline_ms, None);
+        let (req, _, _) = parse_generate_body(r#"{"prompt":"x"}"#, 1).unwrap();
+        assert_eq!(req.params.deadline_ms, None);
+        assert!(parse_generate_body(r#"{"prompt":"x","deadline_ms":1.5}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","deadline_ms":-2}"#, 1).is_err());
+        assert!(parse_generate_body(r#"{"prompt":"x","deadline_ms":"soon"}"#, 1).is_err());
+    }
+
+    #[test]
+    fn api_error_maps_typed_engine_errors() {
+        let e = anyhow::Error::new(DeadlineExceeded { elapsed_ms: 10, freed_rows: 0 })
+            .context("decode step 3");
+        assert_eq!(ApiError::from_engine(&e).status, 504);
+        let e = anyhow::Error::new(Shed { retry_after_ms: 2500, queue_depth: 3 });
+        let a = ApiError::from_engine(&e);
+        assert_eq!(a.status, 429);
+        assert_eq!(a.retry_after_ms, Some(2500));
+        assert_eq!(a.to_response().header("Retry-After"), Some("3"), "seconds, rounded up");
+        assert_eq!(ApiError::from_engine(&anyhow::Error::new(ShuttingDown)).status, 503);
+        let fault = anyhow::Error::new(WaveFault { message: "kaboom".into() });
+        assert_eq!(ApiError::from_engine(&fault).status, 500);
+        let cancel = anyhow::Error::new(Cancelled { freed_rows: 1 });
+        assert_eq!(ApiError::from_engine(&cancel).status, 499);
+        assert_eq!(ApiError::from_engine(&anyhow::anyhow!("misc")).status, 500);
+    }
+
+    fn post_generate(body: &str) -> crate::server::http::HttpRequest {
+        crate::server::http::HttpRequest {
+            method: "POST".into(),
+            path: "/generate".into(),
+            query: String::new(),
+            headers: Default::default(),
+            body: body.into(),
+        }
+    }
+
+    #[test]
+    fn gate_sheds_brownouts_and_drains_end_to_end() {
+        let client =
+            spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let server = build_server(Arc::clone(&client));
+        let body = r#"{"prompt":"1+2=","max_tokens":2}"#;
+
+        // Depth bound 1 + one held ticket → immediate 429 with Retry-After.
+        client.gate().configure(1, 0.0, 0.0, 100);
+        let held = match client.gate().try_admit() {
+            Admission::Admit(t) => t,
+            _ => panic!("first slot must admit"),
+        };
+        let resp = server.dispatch(&post_generate(body));
+        assert_eq!(resp.status, 429, "{}", resp.body);
+        assert!(resp.header("Retry-After").is_some(), "429 must carry Retry-After");
+        drop(held);
+        let resp = server.dispatch(&post_generate(body));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+
+        // Brownout: past the watermark, max_tokens is halved.
+        client.gate().configure(0, 0.0, 0.5, 100);
+        client.gate().publish_kv_pressure(0.75);
+        let resp = server.dispatch(&post_generate(r#"{"prompt":"1+2=","max_tokens":8}"#));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let done = parse_json(&resp.body).unwrap();
+        assert!(
+            done.req("timing").f64_of("decode_steps") <= 4.0,
+            "brownout must clamp the token budget: {}",
+            resp.body
+        );
+
+        // /metrics carries the admission block.
+        let mreq = crate::server::http::HttpRequest {
+            method: "GET".into(),
+            path: "/metrics".into(),
+            query: String::new(),
+            headers: Default::default(),
+            body: String::new(),
+        };
+        let m = parse_json(&server.dispatch(&mreq).body).unwrap();
+        assert_eq!(m.req("admission").f64_of("shed_requests"), 1.0);
+        assert!(m.req("admission").f64_of("brownout_clamps") >= 1.0);
+
+        // Draining: new requests get 503.
+        client.gate().begin_drain();
+        let resp = server.dispatch(&post_generate(body));
+        assert_eq!(resp.status, 503, "{}", resp.body);
+    }
+
+    #[test]
+    fn unmeetable_deadline_is_rejected_with_504_class_error() {
+        let client =
+            spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let (req, rk, _) =
+            parse_generate_body(r#"{"prompt":"1+2=","max_tokens":2,"deadline_ms":0}"#, 1)
+                .unwrap();
+        let err = client.generate(req, rk).unwrap_err();
+        assert_eq!(err.status, 504, "{}", err.message);
+        // A generous budget sails through.
+        let (req, rk, _) =
+            parse_generate_body(r#"{"prompt":"1+2=","max_tokens":2,"deadline_ms":60000}"#, 2)
+                .unwrap();
+        assert!(client.generate(req, rk).is_ok());
     }
 
     #[test]

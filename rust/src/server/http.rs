@@ -179,6 +179,8 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: String,
     pub body: String,
+    /// Extra response headers (name, value) — e.g. `Retry-After` on 429.
+    pub headers: Vec<(String, String)>,
 }
 
 fn status_text(status: u16) -> &'static str {
@@ -189,20 +191,33 @@ fn status_text(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
 
 impl HttpResponse {
     pub fn json(status: u16, body: String) -> Self {
-        HttpResponse { status, content_type: "application/json".into(), body }
+        HttpResponse {
+            status,
+            content_type: "application/json".into(),
+            body,
+            headers: Vec::new(),
+        }
     }
 
     /// Plain-text response (Prometheus exposition format 0.0.4).
     pub fn text(status: u16, body: String) -> Self {
-        HttpResponse { status, content_type: "text/plain; version=0.0.4".into(), body }
+        HttpResponse {
+            status,
+            content_type: "text/plain; version=0.0.4".into(),
+            body,
+            headers: Vec::new(),
+        }
     }
 
     pub fn error(status: u16, msg: &str) -> Self {
@@ -212,20 +227,32 @@ impl HttpResponse {
         Self::json(status, body)
     }
 
+    /// Attach one extra response header.
+    pub fn with_header(mut self, name: &str, value: String) -> Self {
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    /// The named extra header's value, if set (in-memory dispatch tests).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
     fn status_text(&self) -> &'static str {
         status_text(self.status)
     }
 
     pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
-        write!(
-            stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
-            self.status,
-            self.status_text(),
-            self.content_type,
-            self.body.len(),
-            self.body
-        )
+        write!(stream, "HTTP/1.1 {} {}\r\n", self.status, self.status_text())?;
+        write!(stream, "Content-Type: {}\r\n", self.content_type)?;
+        write!(stream, "Content-Length: {}\r\n", self.body.len())?;
+        for (name, value) in &self.headers {
+            write!(stream, "{name}: {value}\r\n")?;
+        }
+        write!(stream, "Connection: close\r\n\r\n{}", self.body)
     }
 }
 
@@ -420,6 +447,10 @@ pub struct HttpServer {
     read_timeout: Duration,
     write_timeout: Duration,
     max_body: usize,
+    /// Runs once at shutdown, after the accept loop stops taking new
+    /// connections and before waiting out in-flight handlers — the
+    /// graceful-drain hook (the engine finishes its in-flight waves here).
+    drain: Option<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl Default for HttpServer {
@@ -435,7 +466,16 @@ impl HttpServer {
             read_timeout: DEFAULT_READ_TIMEOUT,
             write_timeout: DEFAULT_WRITE_TIMEOUT,
             max_body: DEFAULT_MAX_BODY,
+            drain: None,
         }
+    }
+
+    /// Register a graceful-drain hook: called exactly once when shutdown
+    /// triggers, after the accept loop stops dispatching new connections
+    /// and before the server waits for in-flight handlers to finish.
+    pub fn with_drain(mut self, hook: impl Fn() + Send + Sync + 'static) -> Self {
+        self.drain = Some(Box::new(hook));
+        self
     }
 
     /// Socket read timeout per connection (slowloris bound). Zero means
@@ -502,6 +542,7 @@ impl HttpServer {
                         status: 200,
                         content_type: "application/octet-stream".into(),
                         body: String::from_utf8_lossy(&buf).into_owned(),
+                        headers: Vec::new(),
                     },
                 }
             }
@@ -544,7 +585,12 @@ impl HttpServer {
             if let Some(sd) = &shutdown {
                 if sd.is_triggered() {
                     // The stream that woke us (trigger's poke or a late
-                    // client) is dropped unanswered.
+                    // client) is dropped unanswered. Drain first — the
+                    // engine finishes (or times out) its in-flight waves —
+                    // then wait out the connection handlers.
+                    if let Some(drain) = &server.drain {
+                        drain();
+                    }
                     pool.wait_idle();
                     return Ok(());
                 }
@@ -894,5 +940,42 @@ mod tests {
         r.write_to(&mut out).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.contains("Content-Length: 5"));
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_and_readable() {
+        let r = HttpResponse::error(429, "overloaded").with_header("Retry-After", "2".into());
+        assert_eq!(r.header("retry-after"), Some("2"));
+        assert_eq!(r.header("Retry-After"), Some("2"));
+        assert_eq!(r.header("X-Absent"), None);
+        let mut out = Vec::new();
+        r.write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 2\r\n"), "{s}");
+        // Headers stay before the blank line that opens the body.
+        let head = s.split("\r\n\r\n").next().unwrap();
+        assert!(head.contains("Retry-After: 2"), "{head}");
+    }
+
+    #[test]
+    fn status_text_covers_overload_codes() {
+        assert_eq!(status_text(429), "Too Many Requests");
+        assert_eq!(status_text(504), "Gateway Timeout");
+        assert_eq!(status_text(499), "Client Closed Request");
+    }
+
+    #[test]
+    fn drain_hook_runs_once_before_shutdown_completes() {
+        let drained = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&drained);
+        let server = HttpServer::new()
+            .with_drain(move || flag.store(true, Ordering::SeqCst))
+            .route("GET", "/health", |_| HttpResponse::json(200, "{}".into()));
+        let (_addr, shutdown, t) = spawn(server, 1);
+        assert!(!drained.load(Ordering::SeqCst), "drain must wait for shutdown");
+        shutdown.trigger();
+        t.join().unwrap();
+        assert!(drained.load(Ordering::SeqCst), "drain hook never ran");
     }
 }

@@ -7,7 +7,10 @@ pub mod http;
 
 #[cfg(feature = "pjrt")]
 pub use api::spawn_engine;
-pub use api::{build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, EngineClient};
+pub use api::{
+    build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, ApiError,
+    EngineClient,
+};
 pub use client::{send_request, ClientResponse};
 pub use http::{
     connect_retry, ChunkSink, HttpRequest, HttpResponse, HttpServer, ParseError, Shutdown,

@@ -1,0 +1,227 @@
+//! Deterministic fault injection (zero-dependency fail-point registry).
+//!
+//! `BIFURCATED_FAILPOINTS=prefill_oom=1@3,decode_slow=*@1:25` arms named
+//! fail points that fire at exact hit counts, so the chaos suite
+//! (`tests/chaos.rs`) can inject lease exhaustion, backend errors, slow
+//! steps, and panics at chosen step boundaries and assert the serving
+//! path degrades exactly as promised. Spec grammar, comma-separated:
+//!
+//! ```text
+//! name=COUNT[@NTH][:ARG]
+//! ```
+//!
+//! * `COUNT` — how many times the point fires (`*` = every hit once armed);
+//! * `NTH`   — the 1-based hit index the first fire lands on (default 1);
+//! * `ARG`   — a `u64` payload delivered on fire (e.g. sleep millis for
+//!   `decode_slow`); 0 when omitted.
+//!
+//! So `decode_err=2@3` fails the 3rd and 4th hits of the `decode_err`
+//! site and nothing else — which is how a chaos test makes the union
+//! decode step fault *and* the first isolated-lane retry fault, pinning
+//! one deterministic victim while its wave-mates survive.
+//!
+//! The registry is **thread-local**: the engine/batcher thread that
+//! evaluates `check()` owns its own counters (initialized once from the
+//! env var), so parallel tests in one binary cannot perturb each other's
+//! hit counts, and the disabled cost is one TLS lookup on an empty map.
+//! Tests arm points programmatically with [`set`] (replacing the env
+//! config for that thread) and disarm with [`clear`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+pub const ENV_VAR: &str = "BIFURCATED_FAILPOINTS";
+
+/// One armed fail point's firing window and hit counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailPoint {
+    /// How many hits fire (`None` = every hit from `from` on).
+    pub count: Option<u64>,
+    /// 1-based hit index the first fire lands on.
+    pub from: u64,
+    /// Payload handed back by [`check`] when firing.
+    pub arg: u64,
+    hits: u64,
+    fired: u64,
+}
+
+impl FailPoint {
+    fn new(count: Option<u64>, from: u64, arg: u64) -> FailPoint {
+        FailPoint { count, from: from.max(1), arg, hits: 0, fired: 0 }
+    }
+
+    /// Register one hit; `Some(arg)` when this hit is inside the window.
+    fn hit(&mut self) -> Option<u64> {
+        self.hits += 1;
+        if self.hits < self.from {
+            return None;
+        }
+        match self.count {
+            Some(c) if self.fired >= c => None,
+            _ => {
+                self.fired += 1;
+                Some(self.arg)
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// `None` until first use; then the parsed config (possibly empty).
+    static REGISTRY: RefCell<Option<BTreeMap<String, FailPoint>>> = const { RefCell::new(None) };
+}
+
+/// Parse a spec string into named fail points. Empty input is valid
+/// (nothing armed).
+pub fn parse(spec: &str) -> Result<BTreeMap<String, FailPoint>, String> {
+    let mut map = BTreeMap::new();
+    for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, rest) = item
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint '{item}': expected name=COUNT[@NTH][:ARG]"))?;
+        let (window, arg) = match rest.split_once(':') {
+            Some((w, a)) => {
+                let arg = a.parse::<u64>().map_err(|_| format!("failpoint '{item}': bad ARG '{a}'"))?;
+                (w, arg)
+            }
+            None => (rest, 0),
+        };
+        let (count_s, from) = match window.split_once('@') {
+            Some((c, n)) => {
+                let from =
+                    n.parse::<u64>().map_err(|_| format!("failpoint '{item}': bad NTH '{n}'"))?;
+                (c, from)
+            }
+            None => (window, 1),
+        };
+        let count = if count_s == "*" {
+            None
+        } else {
+            Some(
+                count_s
+                    .parse::<u64>()
+                    .map_err(|_| format!("failpoint '{item}': bad COUNT '{count_s}'"))?,
+            )
+        };
+        map.insert(name.trim().to_string(), FailPoint::new(count, from, arg));
+    }
+    Ok(map)
+}
+
+fn from_env() -> BTreeMap<String, FailPoint> {
+    match std::env::var(ENV_VAR) {
+        Err(_) => BTreeMap::new(),
+        Ok(spec) => match parse(&spec) {
+            Ok(map) => {
+                if !map.is_empty() {
+                    crate::warn_!("failpoints armed from ${ENV_VAR}: {spec}");
+                }
+                map
+            }
+            Err(e) => {
+                crate::warn_!("ignoring ${ENV_VAR}: {e}");
+                BTreeMap::new()
+            }
+        },
+    }
+}
+
+/// Register a hit on `name` for the calling thread; `Some(arg)` when the
+/// point fires this hit. The first call on a thread initializes its
+/// registry from `$BIFURCATED_FAILPOINTS`.
+pub fn check(name: &str) -> Option<u64> {
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        let map = reg.get_or_insert_with(from_env);
+        map.get_mut(name).and_then(FailPoint::hit)
+    })
+}
+
+/// Arm `spec` on the calling thread, replacing any env-derived or prior
+/// config (hit counters restart). Panics on a malformed spec — this is
+/// the test-facing entry point and a typo should fail loudly.
+pub fn set(spec: &str) {
+    let map = parse(spec).expect("bad failpoint spec");
+    REGISTRY.with(|r| *r.borrow_mut() = Some(map));
+}
+
+/// Disarm every fail point on the calling thread (env config included).
+pub fn clear() {
+    REGISTRY.with(|r| *r.borrow_mut() = Some(BTreeMap::new()));
+}
+
+/// Bail out of an `anyhow::Result` function when the named point fires.
+#[macro_export]
+macro_rules! fail {
+    ($name:expr) => {
+        if $crate::util::failpoint::check($name).is_some() {
+            anyhow::bail!("failpoint {} injected", $name);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Names here are unique to this module so parallel lib tests that
+    // exercise real sites (decode_err, lease_oom, ...) are unaffected —
+    // and the registry is thread-local anyway.
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let m = parse("fp_a=1@3,fp_b=*:25, fp_c=2@5:7 ,").unwrap();
+        assert_eq!(m["fp_a"], FailPoint::new(Some(1), 3, 0));
+        assert_eq!(m["fp_b"], FailPoint::new(None, 1, 25));
+        assert_eq!(m["fp_c"], FailPoint::new(Some(2), 5, 7));
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("nonsense").is_err());
+        assert!(parse("x=abc").is_err());
+        assert!(parse("x=1@z").is_err());
+        assert!(parse("x=1:z").is_err());
+    }
+
+    #[test]
+    fn fires_exactly_inside_the_window() {
+        set("fp_window=2@3:9");
+        let fires: Vec<bool> = (0..6).map(|_| check("fp_window").is_some()).collect();
+        assert_eq!(fires, [false, false, true, true, false, false]);
+        clear();
+    }
+
+    #[test]
+    fn star_fires_every_hit_from_nth() {
+        set("fp_star=*@2");
+        assert!(check("fp_star").is_none());
+        assert!((0..10).all(|_| check("fp_star") == Some(0)));
+        clear();
+    }
+
+    #[test]
+    fn arg_payload_is_delivered() {
+        set("fp_arg=1:250");
+        assert_eq!(check("fp_arg"), Some(250));
+        assert_eq!(check("fp_arg"), None);
+        clear();
+    }
+
+    #[test]
+    fn unarmed_names_never_fire_and_set_replaces() {
+        set("fp_one=1");
+        assert!(check("fp_other").is_none());
+        set("fp_two=1");
+        assert!(check("fp_one").is_none(), "set() replaces the whole config");
+        assert!(check("fp_two").is_some());
+        clear();
+        assert!(check("fp_two").is_none());
+    }
+
+    #[test]
+    fn registry_is_thread_local() {
+        set("fp_tl=*");
+        let other = std::thread::spawn(|| check("fp_tl").is_some()).join().unwrap();
+        assert!(!other, "another thread must not see this thread's config");
+        assert!(check("fp_tl").is_some());
+        clear();
+    }
+}

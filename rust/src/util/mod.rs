@@ -3,6 +3,7 @@
 //! see DESIGN.md §2).
 
 pub mod cli;
+pub mod failpoint;
 pub mod histogram;
 pub mod json;
 pub mod logging;

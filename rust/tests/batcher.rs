@@ -30,6 +30,7 @@ fn req(id: u64, prompt: &str, n: usize, mode: Option<ModePolicy>) -> GenerationR
             stop_token: None,
             seed: id,
             mode,
+            deadline_ms: None,
         },
     }
 }

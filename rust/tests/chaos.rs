@@ -1,0 +1,283 @@
+//! Deterministic chaos suite: named failpoints (`util::failpoint`) inject
+//! prefill OOM, decode errors, panics, and slow steps at exact hit counts
+//! so every overload/fault path is exercised on the real engine:
+//!
+//! * a faulting lane retires with a typed [`WaveFault`] while co-batched
+//!   survivors finish **bitwise-identical** to an undisturbed solo run;
+//! * deadline expiry retires a request at the next step boundary with a
+//!   typed [`DeadlineExceeded`], again without perturbing survivors;
+//! * graceful drain finishes in-flight waves and 503s parked requests;
+//! * after every injected fault the KV manager holds zero sequences and
+//!   the engine keeps serving.
+//!
+//! The registry is thread-local and the batcher runs on the test thread
+//! (via `ScriptedSource`), so parallel tests cannot perturb each other.
+//! CI re-runs this suite with ambient `BIFURCATED_FAILPOINTS` specs; every
+//! test arms its own points with `set()` (which replaces the env config)
+//! except the ambient test at the bottom, which deliberately honors it.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use bifurcated_attn::coordinator::batcher::{BatchConfig, BatchJob, Batcher, ScriptedSource};
+use bifurcated_attn::coordinator::{
+    AdmissionGate, DeadlineExceeded, Engine, EngineConfig, GenerationRequest, ModePolicy,
+    RequestResult, SamplingParams, ShuttingDown, WaveFault,
+};
+use bifurcated_attn::runtime::models::DecodeMode;
+use bifurcated_attn::runtime::NativeBackend;
+use bifurcated_attn::util::failpoint;
+
+fn engine() -> Engine<NativeBackend> {
+    Engine::native("pico-mq", 0, EngineConfig::default()).unwrap()
+}
+
+fn req(id: u64, prompt: &str, n: usize, max_tokens: usize) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens,
+            stop_token: None,
+            seed: id,
+            mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+            deadline_ms: None,
+        },
+    }
+}
+
+/// Run a set of scripted jobs through one batcher on this thread; replies
+/// come back keyed by request id.
+fn run_jobs(
+    e: &Engine<NativeBackend>,
+    jobs: Vec<(usize, GenerationRequest)>,
+    gate: Option<Arc<AdmissionGate>>,
+) -> BTreeMap<u64, anyhow::Result<RequestResult>> {
+    let out: Rc<RefCell<BTreeMap<u64, anyhow::Result<RequestResult>>>> =
+        Rc::new(RefCell::new(BTreeMap::new()));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    for (at, r) in jobs {
+        let sink = Rc::clone(&out);
+        let id = r.id;
+        src.push(
+            at,
+            BatchJob::Generate(
+                r,
+                None,
+                Box::new(move |res| {
+                    sink.borrow_mut().insert(id, res);
+                }),
+            ),
+        );
+    }
+    let mut b = Batcher::new(e, BatchConfig { window_us: 0, max_wave_rows: 0 });
+    if let Some(g) = gate {
+        b = b.with_gate(g);
+    }
+    b.run(&mut src);
+    Rc::try_unwrap(out).ok().expect("sink still shared").into_inner()
+}
+
+fn run_one(e: &Engine<NativeBackend>, r: GenerationRequest) -> anyhow::Result<RequestResult> {
+    let id = r.id;
+    run_jobs(e, vec![(0, r)], None).remove(&id).expect("no reply")
+}
+
+/// The co-batched survivor's tokens must be bitwise what an undisturbed
+/// solo run of the same request produces on a fresh engine.
+fn assert_bitwise_solo(survivor: &RequestResult, original: GenerationRequest) {
+    failpoint::clear();
+    let solo = run_one(&engine(), original).expect("undisturbed solo run");
+    assert_eq!(
+        survivor.completions, solo.completions,
+        "survivor must be bitwise-identical to an undisturbed run"
+    );
+}
+
+fn assert_clean(e: &Engine<NativeBackend>) {
+    e.kv.borrow().check_invariants().unwrap();
+    e.cache.borrow().check_invariants(&e.kv.borrow()).unwrap();
+    let st = e.kv.borrow().stats();
+    assert_eq!(st.sequences, 0, "all leases returned");
+    assert_eq!(st.contexts, st.cached_contexts, "no active context leaked");
+}
+
+const PREFIX: &str = "10+2=12;11+3=14;12+4=";
+
+#[test]
+fn prefill_oom_failpoint_rolls_back_pins() {
+    failpoint::set("prefill_oom=1@1");
+    let e = engine();
+    let err = run_one(&e, req(1, PREFIX, 2, 4)).unwrap_err();
+    assert!(format!("{err:#}").contains("failpoint prefill_oom injected"), "{err:#}");
+    failpoint::clear();
+    assert_clean(&e);
+    // the engine keeps serving after the injected failure
+    let ok = run_one(&e, req(2, PREFIX, 2, 4)).unwrap();
+    assert_eq!(ok.completions.len(), 2);
+    assert_clean(&e);
+}
+
+#[test]
+fn decode_err_retires_one_lane_and_survivors_match_solo_bitwise() {
+    // Two requests coalesce into one wave. `decode_err=2@2` fires on the
+    // 2nd union step AND the first isolated retry, so lane 0 (request 1)
+    // is the deterministic victim while request 2 survives containment.
+    failpoint::set("decode_err=2@2");
+    let e = engine();
+    let jobs = vec![(0, req(1, PREFIX, 2, 4)), (0, req(2, PREFIX, 2, 4))];
+    let mut replies = run_jobs(&e, jobs, None);
+    let victim = replies.remove(&1).unwrap().unwrap_err();
+    let survivor = replies.remove(&2).unwrap().expect("co-batched survivor must finish");
+    assert!(victim.downcast_ref::<WaveFault>().is_some(), "typed WaveFault: {victim:#}");
+    assert!(format!("{victim:#}").contains("failpoint decode_err injected"), "{victim:#}");
+    assert!(survivor.timing.coalesced_peak_rows >= 4, "the two requests shared a wave");
+    assert_eq!(e.metrics.contained_wave_steps(), 1);
+    assert_eq!(e.metrics.wave_faults(), 1);
+    assert_clean(&e);
+    assert_bitwise_solo(&survivor, req(2, PREFIX, 2, 4));
+    // the engine keeps serving
+    assert_eq!(run_one(&e, req(3, PREFIX, 2, 4)).unwrap().completions.len(), 2);
+}
+
+#[test]
+fn decode_panic_is_contained_per_lane() {
+    // Same victim geometry as decode_err, but the union step *panics*:
+    // catch_unwind at the innermost decode converts it to a WaveFault and
+    // co-batched survivors still finish bitwise-clean.
+    failpoint::set("decode_panic=2@2");
+    let e = engine();
+    let jobs = vec![(0, req(1, PREFIX, 2, 4)), (0, req(2, PREFIX, 2, 4))];
+    let mut replies = run_jobs(&e, jobs, None);
+    let victim = replies.remove(&1).unwrap().unwrap_err();
+    let survivor = replies.remove(&2).unwrap().expect("survivor must outlive the panic");
+    assert!(victim.downcast_ref::<WaveFault>().is_some(), "typed WaveFault: {victim:#}");
+    assert!(format!("{victim:#}").contains("panic"), "{victim:#}");
+    assert_eq!(e.metrics.contained_wave_steps(), 1);
+    assert_eq!(e.metrics.wave_faults(), 1);
+    assert_clean(&e);
+    assert_bitwise_solo(&survivor, req(2, PREFIX, 2, 4));
+    assert_eq!(run_one(&e, req(3, PREFIX, 2, 4)).unwrap().completions.len(), 2);
+}
+
+#[test]
+fn all_lanes_faulting_closes_the_wave_cleanly() {
+    // `decode_err=3@1` kills the union step and both isolated retries:
+    // every lane retires, the wave closes, and the engine keeps serving.
+    failpoint::set("decode_err=3@1");
+    let e = engine();
+    let replies = run_jobs(&e, vec![(0, req(1, PREFIX, 2, 4)), (0, req(2, PREFIX, 2, 4))], None);
+    for (id, res) in replies {
+        let err = res.unwrap_err();
+        assert!(err.downcast_ref::<WaveFault>().is_some(), "req {id}: {err:#}");
+    }
+    assert_eq!(e.metrics.wave_faults(), 2);
+    assert_clean(&e);
+    failpoint::clear();
+    assert_eq!(run_one(&e, req(3, PREFIX, 2, 4)).unwrap().completions.len(), 2);
+}
+
+#[test]
+fn deadline_expires_at_a_step_boundary_without_disturbing_survivors() {
+    // Every decode step sleeps 200 ms; request 1's 150 ms deadline blows
+    // during the first step and the sweep retires it at the next boundary
+    // (the budget comfortably covers prefill, so it dies holding a lane).
+    failpoint::set("decode_slow=*@1:200");
+    let e = engine();
+    let mut slow = req(1, PREFIX, 2, 4);
+    slow.params.deadline_ms = Some(150);
+    let mut replies = run_jobs(&e, vec![(0, slow), (0, req(2, PREFIX, 2, 4))], None);
+    let expired = replies.remove(&1).unwrap().unwrap_err();
+    let survivor = replies.remove(&2).unwrap().expect("survivor must finish");
+    let d = expired
+        .downcast_ref::<DeadlineExceeded>()
+        .unwrap_or_else(|| panic!("typed DeadlineExceeded: {expired:#}"));
+    assert!(d.elapsed_ms >= 150, "expired after its budget: {d:?}");
+    assert_eq!(d.freed_rows, 2, "both sampler rows released");
+    assert_eq!(e.metrics.deadline_expired(), 1);
+    assert_clean(&e);
+    assert_bitwise_solo(&survivor, req(2, PREFIX, 2, 4));
+}
+
+#[test]
+fn unmeetable_deadline_is_rejected_at_admission() {
+    failpoint::clear();
+    let e = engine();
+    let mut r = req(1, PREFIX, 2, 4);
+    r.params.deadline_ms = Some(0);
+    let err = run_one(&e, r).unwrap_err();
+    let d = err
+        .downcast_ref::<DeadlineExceeded>()
+        .unwrap_or_else(|| panic!("typed DeadlineExceeded: {err:#}"));
+    assert_eq!(d.elapsed_ms, 0, "rejected before any work");
+    assert_clean(&e);
+}
+
+#[test]
+fn drain_finishes_active_wave_and_503s_parked_requests() {
+    failpoint::clear();
+    let e = engine();
+    let gate = AdmissionGate::new();
+    gate.configure(0, 0.0, 0.0, 5_000);
+    let out: Rc<RefCell<BTreeMap<u64, anyhow::Result<RequestResult>>>> =
+        Rc::new(RefCell::new(BTreeMap::new()));
+    let mut src: ScriptedSource<NativeBackend> = ScriptedSource::new();
+    // Poll release points: jobs at 0 land on the first poll, so request 2
+    // (different prefix) arrives one scheduling tick after request 1's
+    // wave launched, and the drain begins one tick after that.
+    for (at, r) in [(0usize, req(1, PREFIX, 2, 8)), (2, req(2, "20+3=23;21+4=25;22+5=", 2, 8))] {
+        let sink = Rc::clone(&out);
+        let id = r.id;
+        src.push(
+            at,
+            BatchJob::Generate(
+                r,
+                None,
+                Box::new(move |res| {
+                    sink.borrow_mut().insert(id, res);
+                }),
+            ),
+        );
+    }
+    // The drain, begun between steps while request 1's wave is in
+    // flight, must finish that wave and fail only the parked request.
+    let drain_gate = Arc::clone(&gate);
+    src.push(
+        3,
+        BatchJob::Inspect(Box::new(move |_e: &Engine<NativeBackend>| {
+            drain_gate.begin_drain();
+        })),
+    );
+    Batcher::new(&e, BatchConfig { window_us: 0, max_wave_rows: 0 })
+        .with_gate(Arc::clone(&gate))
+        .run(&mut src);
+    let mut replies = Rc::try_unwrap(out).ok().expect("sink still shared").into_inner();
+    let served = replies.remove(&1).unwrap().expect("in-flight wave must finish draining");
+    assert_eq!(served.completions.len(), 2);
+    let parked = replies.remove(&2).unwrap().unwrap_err();
+    assert!(parked.downcast_ref::<ShuttingDown>().is_some(), "typed ShuttingDown: {parked:#}");
+    assert_clean(&e);
+}
+
+#[test]
+fn ambient_env_failpoints_do_not_break_engine_hygiene() {
+    // Deliberately does NOT clear the registry: whatever spec CI put in
+    // $BIFURCATED_FAILPOINTS is honored. With points armed, success or
+    // failure are both acceptable — leaked state is not. With nothing
+    // armed, the request must simply succeed.
+    let ambient = std::env::var(failpoint::ENV_VAR).is_ok();
+    let e = engine();
+    match run_one(&e, req(91, PREFIX, 2, 4)) {
+        Ok(res) => assert_eq!(res.completions.len(), 2),
+        Err(err) => assert!(ambient, "clean request failed with nothing armed: {err:#}"),
+    }
+    assert_clean(&e);
+    // Disarmed, the same engine serves unconditionally.
+    failpoint::clear();
+    assert_eq!(run_one(&e, req(92, PREFIX, 2, 4)).unwrap().completions.len(), 2);
+}

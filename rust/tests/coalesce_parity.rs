@@ -40,6 +40,7 @@ fn req(
             stop_token: stop,
             seed: id,
             mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+            deadline_ms: None,
         },
     }
 }

@@ -95,6 +95,7 @@ fn req(id: u64, n: usize, max_tokens: usize) -> GenerationRequest {
             stop_token: None,
             seed: id,
             mode: None,
+            deadline_ms: None,
         },
     }
 }
@@ -180,4 +181,37 @@ fn lease_exhaustion_rolls_back_and_recovers() {
     assert_eq!(ok.completions.len(), 4);
     assert!(ok.timing.cache_hit_tokens > 0);
     engine.kv.borrow().check_invariants().unwrap();
+}
+
+#[test]
+fn injected_lease_exhaustion_mid_wave_recovers_via_eviction() {
+    // Chaos-injected allocator exhaustion (no real capacity pressure):
+    // the engine must treat it exactly like a full pool — roll the
+    // partial lease group back, evict a cold prefix-cache node, and
+    // retry to success.
+    bifurcated_attn::util::failpoint::clear();
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+
+    // Request A leaves a cold (unpinned) cache node behind.
+    engine.generate(&req(1, 2, 4)).unwrap();
+    assert_eq!(engine.cache.borrow().len(), 1);
+
+    // Request B, different prefix: its first lease hits the failpoint.
+    bifurcated_attn::util::failpoint::set("lease_oom=1@1");
+    let mut b = req(2, 2, 4);
+    b.prompt = "20+3=23;21+4=25;22+5=".into();
+    let ok = engine.generate(&b).unwrap();
+    bifurcated_attn::util::failpoint::clear();
+    assert_eq!(ok.completions.len(), 2, "retry after eviction must succeed");
+
+    let evictions = engine.cache.borrow().stats().evictions;
+    assert_eq!(evictions, 1, "recovery path must evict the cold node");
+    assert_eq!(engine.cache.borrow().len(), 1, "only B's node remains cached");
+    engine.kv.borrow().check_invariants().unwrap();
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+    let st = engine.kv.borrow().stats();
+    assert_eq!(st.sequences, 0, "all leases returned after the wave drained");
+    assert_eq!(st.contexts, st.cached_contexts, "no active context leaked");
 }

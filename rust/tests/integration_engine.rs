@@ -31,6 +31,7 @@ fn req(prompt: &str, n: usize, seed: u64) -> GenerationRequest {
             stop_token: Some(corpus::SEMI),
             seed,
             mode: None,
+            deadline_ms: None,
         },
     }
 }

@@ -232,6 +232,7 @@ fn engine_greedy_is_deterministic_across_modes() {
                 stop_token: Some(corpus::SEMI),
                 seed: 7,
                 mode: None,
+                deadline_ms: None,
             },
         };
         let res = engine.generate(&req).unwrap();
@@ -279,6 +280,7 @@ fn engine_waves_and_seeds_on_native() {
             stop_token: Some(corpus::SEMI),
             seed,
             mode: None,
+            deadline_ms: None,
         },
     };
     let r1 = engine.generate(&req(1)).unwrap();

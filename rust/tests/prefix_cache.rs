@@ -22,6 +22,7 @@ fn req(id: u64, prompt: &str, n: usize, seed: u64) -> GenerationRequest {
             stop_token: Some(corpus::SEMI),
             seed,
             mode: None,
+            deadline_ms: None,
         },
     }
 }
@@ -109,6 +110,7 @@ fn warm_full_hit_tips_auto_mode_to_bifurcated() {
             stop_token: Some(corpus::SEMI),
             seed: 1,
             mode,
+            deadline_ms: None,
         },
     };
     let cold = engine

@@ -398,6 +398,7 @@ fn prop_sampler_respects_max_tokens_and_stop() {
                 stop_token: if with_stop { Some(3) } else { None },
                 seed,
                 mode: None,
+                deadline_ms: None,
             };
             let mut sb = SamplerBatch::new(b, params, vocab, seed);
             let mut rng = Pcg::new(seed);

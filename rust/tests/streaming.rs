@@ -46,6 +46,7 @@ fn req(id: u64, n: usize, max_tokens: usize, stop: Option<i32>) -> GenerationReq
             stop_token: stop,
             seed: id,
             mode: Some(ModePolicy::Force(DecodeMode::Bifurcated)),
+            deadline_ms: None,
         },
     }
 }

@@ -41,6 +41,7 @@ fn req(seed: u64) -> GenerationRequest {
             stop_token: Some(corpus::SEMI),
             seed,
             mode: None,
+            deadline_ms: None,
         },
     }
 }
