@@ -56,6 +56,9 @@ pub struct AdmissionGate {
     /// Bound on the shutdown drain, consumed by the batcher/server.
     drain_timeout_ms: AtomicU64,
     draining: AtomicBool,
+    /// True while the engine thread is restoring a cache snapshot at
+    /// startup — `/readyz` answers 503 so orchestrators hold traffic.
+    restoring: AtomicBool,
     inflight: AtomicUsize,
     peak_inflight: AtomicUsize,
     /// Engine-published KV pressure, per mille of non-reclaimable blocks.
@@ -162,6 +165,15 @@ impl AdmissionGate {
         self.draining.load(Ordering::SeqCst)
     }
 
+    /// Engine thread: mark the startup snapshot restore window.
+    pub fn set_restoring(&self, on: bool) {
+        self.restoring.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_restoring(&self) -> bool {
+        self.restoring.load(Ordering::SeqCst)
+    }
+
     pub fn drain_timeout_ms(&self) -> u64 {
         self.drain_timeout_ms.load(Ordering::SeqCst)
     }
@@ -204,6 +216,7 @@ impl AdmissionGate {
             .set("drain_rejected", Json::Num(self.drain_rejected.load(Ordering::SeqCst) as f64))
             .set("brownout_clamps", Json::Num(self.brownout_clamps.load(Ordering::SeqCst) as f64))
             .set("draining", Json::Bool(self.draining.load(Ordering::SeqCst)))
+            .set("restoring", Json::Bool(self.restoring.load(Ordering::SeqCst)))
     }
 }
 

@@ -362,12 +362,16 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 self.admit(job);
             }
             if self.drain_tick() {
+                self.engine.drain_snapshot();
                 return;
             }
             if self.active.is_some() {
                 self.tick();
                 continue;
             }
+            // wave-idle boundary: no decode in flight, so a periodic
+            // cache snapshot here never stalls a step
+            self.engine.maybe_snapshot();
             match self.next_due() {
                 Some((_, due)) => {
                     let now = Instant::now();
@@ -379,6 +383,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 }
                 None => {
                     if source.closed() {
+                        self.engine.drain_snapshot();
                         return;
                     }
                     if let Some(job) = source.wait(IDLE_WAIT) {

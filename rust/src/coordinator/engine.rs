@@ -28,6 +28,7 @@
 //! accounting, and sampling logic drives both the native CPU backend and
 //! the PJRT artifact runtime.
 
+use std::cell::Cell;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
@@ -35,6 +36,7 @@ use anyhow::{Context, Result};
 
 use crate::kvcache::manager::{ContextId, KvManager, SeqId};
 use crate::observability::span;
+use crate::prefixcache::store::{encode_record, NodeRecord, PersistStore};
 use crate::prefixcache::PrefixCache;
 use crate::runtime::backend::{Backend, ContextView};
 use crate::runtime::models::DecodeMode;
@@ -70,6 +72,16 @@ pub struct EngineConfig {
     /// Continuous-batching knobs (admission window, wave width cap) the
     /// server's batcher runs with. The solo `generate` path ignores them.
     pub batching: BatchConfig,
+    /// Durable prefix-cache directory: enables restore-on-startup,
+    /// snapshots, and the disk spill tier. `None` keeps the cache
+    /// memory-only (every restart starts cold).
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Minimum milliseconds between periodic snapshots, taken at
+    /// wave-idle boundaries; 0 snapshots only at drain.
+    pub snapshot_interval_ms: u64,
+    /// Disk budget (bytes) for spilled cache nodes; 0 disables the spill
+    /// tier (evictions drop the node outright, as before).
+    pub spill_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -82,6 +94,9 @@ impl Default for EngineConfig {
             prefix_cache_bytes: 0,
             threads: 0,
             batching: BatchConfig::default(),
+            cache_dir: None,
+            snapshot_interval_ms: 0,
+            spill_bytes: 0,
         }
     }
 }
@@ -95,6 +110,16 @@ pub struct Engine<B: Backend> {
     pub metrics: super::metrics::Metrics,
     /// Continuous-batching configuration the server-side batcher reads.
     pub batching: BatchConfig,
+    /// Durable cache tier (`--cache-dir`): snapshot writer + spill index.
+    /// `None` when persistence is disabled or the directory failed to
+    /// open (the engine then runs memory-only, never erroring requests).
+    pub persist: std::cell::RefCell<Option<PersistStore>>,
+    snapshot_interval: Duration,
+    last_snapshot: Cell<Instant>,
+    /// Cache mutation stamp (`insertions + evictions`) captured by the
+    /// last snapshot/restore — unchanged stamp means the resident set is
+    /// already on disk and periodic snapshots can be skipped.
+    snapshot_stamp: Cell<u64>,
 }
 
 /// The sampler seed for wave `wi` of request `id` — shared by the solo
@@ -197,7 +222,27 @@ impl<B: Backend> Engine<B> {
             cfg.block_tokens,
         );
         let scheduler = Scheduler::new(cfg.scheduler, rt.buckets().to_vec());
-        Engine {
+        // The snapshot fingerprint binds an on-disk image to the model
+        // shape that produced it: restoring K_c/V_c into a different
+        // geometry would violate the bitwise-parity bar, so a mismatch
+        // drops the whole file (costing one cold prefill per prefix).
+        let fingerprint = {
+            let c = rt.cfg();
+            format!(
+                "{} d{} h{} g{} k{} l{} v{} mc{}",
+                c.name, c.d, c.h, c.g, c.k, c.l, c.vocab, c.m_c_max
+            )
+        };
+        let persist = cfg.cache_dir.as_ref().and_then(|dir| {
+            match PersistStore::open(dir, &fingerprint, cfg.spill_bytes) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    crate::warn!("cache dir {} unusable, running memory-only: {e:#}", dir.display());
+                    None
+                }
+            }
+        });
+        let engine = Engine {
             rt,
             tokenizer,
             scheduler,
@@ -208,7 +253,13 @@ impl<B: Backend> Engine<B> {
             )),
             metrics: super::metrics::Metrics::default(),
             batching: cfg.batching,
-        }
+            persist: std::cell::RefCell::new(persist),
+            snapshot_interval: Duration::from_millis(cfg.snapshot_interval_ms),
+            last_snapshot: Cell::new(Instant::now()),
+            snapshot_stamp: Cell::new(0),
+        };
+        engine.restore_from_disk();
+        engine
     }
 
     pub fn tokenize_prompt(&self, prompt: &str) -> Result<Vec<i32>> {
@@ -243,13 +294,38 @@ impl<B: Backend> Engine<B> {
         if let Some(pool) = self.rt.runtime_stats() {
             rep = rep.set("pool", pool);
         }
+        if let Some(store) = self.persist.borrow().as_ref() {
+            rep = rep.set("persist", store.stats_json());
+        }
         rep
     }
 
-    /// Evict one LRU unpinned prefix-cache node to relieve KV pressure.
+    /// Evict one LRU unpinned prefix-cache node to relieve KV pressure,
+    /// demoting its payload to the disk spill tier first when one is
+    /// configured (so the next request for that prefix promotes instead
+    /// of re-prefilling).
     fn evict_one(&self) -> bool {
+        self.spill_lru_victim();
         let mut kv = self.kv.borrow_mut();
         self.cache.borrow_mut().evict_lru(&mut kv)
+    }
+
+    /// Write the entry `evict_lru` is about to free out to the spill
+    /// tier. Best-effort: a full spill budget or an I/O error just means
+    /// the eviction drops the node as it always did.
+    fn spill_lru_victim(&self) {
+        let mut persist = self.persist.borrow_mut();
+        let Some(store) = persist.as_mut() else { return };
+        if !store.spilling_enabled() {
+            return;
+        }
+        let kv = self.kv.borrow();
+        let cache = self.cache.borrow();
+        let Some(id) = cache.lru_victim(&kv) else { return };
+        let tokens = cache.tokens_of(id);
+        let e = cache.payload(id);
+        let _sp = span("engine.spill").arg(0, tokens.len() as u64);
+        store.spill(&tokens, &e.logits, &e.kc, &e.vc, e.last_used());
     }
 
     /// Register an active (request-owned) context, evicting cache nodes
@@ -303,11 +379,8 @@ impl<B: Backend> Engine<B> {
         if !self.cache.borrow().enabled() {
             return None;
         }
-        {
-            let mut kv = self.kv.borrow_mut();
-            if !self.cache.borrow_mut().make_room(&mut kv, bytes) {
-                return None;
-            }
+        if !self.make_room_spilling(bytes) {
+            return None;
         }
         loop {
             let res = self.kv.borrow_mut().register_cached_context(tokens);
@@ -319,6 +392,188 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             }
+        }
+    }
+
+    /// Like [`PrefixCache::make_room`], but each victim passes through
+    /// the spill tier on its way out (via [`Engine::evict_one`]).
+    fn make_room_spilling(&self, incoming_bytes: usize) -> bool {
+        loop {
+            if self.cache.borrow().fits(incoming_bytes) {
+                return true;
+            }
+            if !self.evict_one() {
+                return false;
+            }
+        }
+    }
+
+    // ---- durable cache tier (`--cache-dir`) -------------------------------
+
+    /// Cache mutation stamp: changes iff the resident node set changed.
+    fn cache_stamp(&self) -> u64 {
+        let s = self.cache.borrow().stats();
+        s.insertions + s.evictions
+    }
+
+    fn cache_dirty(&self) -> bool {
+        self.cache_stamp() != self.snapshot_stamp.get()
+    }
+
+    /// Replay the on-disk snapshot into the resident cache at startup.
+    /// Records arrive oldest-first so restored LRU order matches the
+    /// pre-restart order; any record the KV budget or backend refuses is
+    /// counted as dropped, never fatal.
+    fn restore_from_disk(&self) {
+        let recs = {
+            let mut persist = self.persist.borrow_mut();
+            match persist.as_mut() {
+                Some(store) => store.restore(),
+                None => return,
+            }
+        };
+        if !recs.is_empty() {
+            let _sp = span("engine.restore").arg(0, recs.len() as u64);
+            let mut restored = 0usize;
+            for rec in recs {
+                if self.restore_record(rec).is_some() {
+                    restored += 1;
+                } else if let Some(store) = self.persist.borrow_mut().as_mut() {
+                    store.note_restore_dropped();
+                }
+            }
+            crate::info!("prefix cache restored: {restored} node(s) resident");
+        }
+        self.snapshot_stamp.set(self.cache_stamp());
+    }
+
+    /// Re-admit one verified record as a resident cache node: KV
+    /// registration (evicting/spilling under pressure), context upload,
+    /// insert. `None` when capacity or the backend refuse it.
+    fn restore_record(&self, rec: NodeRecord) -> Option<usize> {
+        let tokens = rec.tokens.len();
+        let kc = Rc::new(rec.kc);
+        let vc = Rc::new(rec.vc);
+        let ctx_id = self.try_register_cached(tokens, kc.byte_size() + vc.byte_size())?;
+        let ctx = match self.rt.upload_context(&kc, &vc, tokens) {
+            Ok(c) => c,
+            Err(e) => {
+                self.kv.borrow_mut().release_context(ctx_id);
+                crate::warn!("context upload of restored cache node failed: {e:#}");
+                return None;
+            }
+        };
+        let node = self.cache.borrow_mut().insert(
+            &rec.tokens,
+            rec.logits,
+            Rc::clone(&kc),
+            Rc::clone(&vc),
+            Rc::new(ctx),
+            ctx_id,
+        );
+        Some(node)
+    }
+
+    /// Promote the longest spilled prefix of `prompt_ids` strictly longer
+    /// than `matched` (the best resident hit) back to a resident node.
+    /// Any failure — checksum mismatch, KV pressure, upload error — just
+    /// returns `false` and the request proceeds resident/cold.
+    fn promote_spilled(&self, prompt_ids: &[i32], matched: usize) -> bool {
+        let key = {
+            let persist = self.persist.borrow();
+            let Some(key) =
+                persist.as_ref().and_then(|s| s.best_spilled(prompt_ids, matched))
+            else {
+                return false;
+            };
+            key
+        };
+        let rec = {
+            let mut persist = self.persist.borrow_mut();
+            let Some(rec) = persist.as_mut().and_then(|s| s.take_spilled(&key)) else {
+                return false;
+            };
+            rec
+        };
+        let _sp = span("engine.promote").arg(0, rec.tokens.len() as u64);
+        if self.restore_record(rec).is_none() {
+            return false;
+        }
+        if let Some(store) = self.persist.borrow_mut().as_mut() {
+            store.note_promoted();
+        }
+        true
+    }
+
+    /// Serialize every resident cache node into a snapshot image. Runs on
+    /// the engine thread (tensors are thread-bound); only the returned
+    /// bytes ever cross to the background writer.
+    fn encode_for_snapshot(&self) -> Option<Vec<u8>> {
+        let persist = self.persist.borrow();
+        let store = persist.as_ref()?;
+        let cache = self.cache.borrow();
+        let mut payloads = Vec::new();
+        for id in cache.entry_ids() {
+            let e = cache.payload(id);
+            payloads.push(encode_record(
+                &cache.tokens_of(id),
+                &e.logits,
+                &e.kc,
+                &e.vc,
+                e.last_used(),
+            ));
+        }
+        Some(store.encode_snapshot(&payloads))
+    }
+
+    /// Periodic snapshot at a wave-idle boundary: encode on the engine
+    /// thread, hand the bytes to the background writer, never block on
+    /// disk. No-op without `--cache-dir`, a nonzero interval, an elapsed
+    /// interval, and changes since the last image.
+    pub fn maybe_snapshot(&self) {
+        if self.snapshot_interval.is_zero()
+            || self.persist.borrow().is_none()
+            || self.last_snapshot.get().elapsed() < self.snapshot_interval
+            || !self.cache_dirty()
+        {
+            return;
+        }
+        let stamp = self.cache_stamp();
+        let mut sp = span("engine.snapshot");
+        let Some(image) = self.encode_for_snapshot() else { return };
+        sp.set_arg(0, image.len() as u64);
+        if let Some(store) = self.persist.borrow_mut().as_mut() {
+            store.snapshot_async(image);
+        }
+        self.last_snapshot.set(Instant::now());
+        self.snapshot_stamp.set(stamp);
+    }
+
+    /// Synchronous snapshot (drain path, tests): returns only once the
+    /// image is durable (fsync + rename done).
+    pub fn snapshot_now(&self) -> Result<()> {
+        let stamp = self.cache_stamp();
+        let mut sp = span("engine.snapshot");
+        let Some(image) = self.encode_for_snapshot() else { return Ok(()) };
+        sp.set_arg(0, image.len() as u64);
+        {
+            let mut persist = self.persist.borrow_mut();
+            let Some(store) = persist.as_mut() else { return Ok(()) };
+            store.snapshot_sync(image)?;
+        }
+        self.last_snapshot.set(Instant::now());
+        self.snapshot_stamp.set(stamp);
+        Ok(())
+    }
+
+    /// Drain-time snapshot: best-effort durable image before the engine
+    /// thread exits. Failures are logged, never fail the drain.
+    pub fn drain_snapshot(&self) {
+        if self.persist.borrow().is_none() || !self.cache_dirty() {
+            return;
+        }
+        if let Err(e) = self.snapshot_now() {
+            crate::warn!("drain snapshot failed: {e:#}");
         }
     }
 
@@ -387,12 +642,18 @@ impl<B: Backend> Engine<B> {
 
         // ---- cross-request prefix-cache lookup ----
         let mut sp_lookup = span("engine.cache_lookup").req(req.id);
-        let hit = self.cache.borrow_mut().lookup(&prompt_ids);
+        let mut hit = self.cache.borrow_mut().lookup(&prompt_ids);
+        let mut hit_len = hit.as_ref().map_or(0, |h| h.matched);
+        // disk tier: a longer spilled prefix beats the resident match —
+        // promote it back to a resident node and re-run the lookup
+        if hit_len < m_c_len && self.promote_spilled(&prompt_ids, hit_len) {
+            hit = self.cache.borrow_mut().lookup(&prompt_ids);
+            hit_len = hit.as_ref().map_or(0, |h| h.matched);
+        }
         if let Some(h) = &hit {
             self.cache.borrow_mut().pin(h.node);
             pins.push(h.node);
         }
-        let hit_len = hit.as_ref().map_or(0, |h| h.matched);
         let full_hit = hit_len == m_c_len;
         sp_lookup.set_arg(0, hit_len as u64);
         sp_lookup.set_arg(1, m_c_len as u64);

@@ -62,6 +62,7 @@ fn print_usage() {
          \x20              [--http-read-timeout-ms T] [--http-write-timeout-ms T] [--http-max-body B]\n\
          \x20              [--max-queue-depth N] [--shed-kv-watermark F] [--brownout F]\n\
          \x20              [--drain-timeout-ms T] [--trace[=kernel]] [--trace-out FILE]\n\
+         \x20              [--cache-dir DIR] [--snapshot-interval-ms T] [--spill-bytes B]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -100,6 +101,14 @@ fn print_usage() {
          co-batched survivors are unaffected. POST /admin/shutdown drains\n\
          gracefully: in-flight waves finish (bounded by --drain-timeout-ms,\n\
          default 5000), parked requests get 503.\n\
+         Durability: --cache-dir DIR persists the prefix cache across\n\
+         restarts — checksum-verified snapshots restore on startup (GET\n\
+         /readyz answers 503 until done) and a drain-time snapshot runs on\n\
+         shutdown; --snapshot-interval-ms T adds periodic snapshots at\n\
+         wave-idle boundaries (0 = drain-only); --spill-bytes B spills\n\
+         LRU-evicted nodes to disk up to B bytes and promotes them back on\n\
+         a hit (0 = off). Corrupt or torn records degrade to cold prefill,\n\
+         never wrong tokens. GET /healthz is liveness.\n\
          --trace records request/wave lifecycle spans (=kernel adds\n\
          per-(layer,group) kernel phases); equivalently set\n\
          $BIFURCATED_TRACE=1|2. Live spans: GET /trace?last=N\n\
@@ -149,6 +158,12 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.threads = args.usize_or("threads", cfg.threads);
     cfg.batching.window_us = args.usize_or("batch-window-us", cfg.batching.window_us as usize) as u64;
     cfg.batching.max_wave_rows = args.usize_or("batch-width", cfg.batching.max_wave_rows);
+    if let Some(dir) = args.get("cache-dir") {
+        cfg.cache_dir = Some(std::path::PathBuf::from(dir));
+    }
+    cfg.snapshot_interval_ms =
+        args.usize_or("snapshot-interval-ms", cfg.snapshot_interval_ms as usize) as u64;
+    cfg.spill_bytes = args.usize_or("spill-bytes", cfg.spill_bytes);
     cfg
 }
 

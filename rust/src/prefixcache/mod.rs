@@ -24,6 +24,7 @@
 //! prefix as a new node.
 
 pub mod radix;
+pub mod store;
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -51,6 +52,14 @@ pub struct CacheEntry<B: Backend> {
     pub bytes: usize,
     pins: usize,
     last_used: u64,
+}
+
+impl<B: Backend> CacheEntry<B> {
+    /// LRU clock stamp of the last touch — persisted by the snapshot
+    /// store so a restored cache keeps its eviction order.
+    pub fn last_used(&self) -> u64 {
+        self.last_used
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +146,33 @@ impl<B: Backend> PrefixCache<B> {
 
     pub fn entry_ids(&self) -> Vec<usize> {
         self.entries.keys().copied().collect()
+    }
+
+    /// The full token path of a live payload node — what the snapshot
+    /// store writes next to the node's tensors.
+    pub fn tokens_of(&self, node: usize) -> Vec<i32> {
+        self.tree.tokens_of(node)
+    }
+
+    /// Would a new entry of `incoming_bytes` fit right now, without any
+    /// eviction? Mirrors `make_room`'s loop condition so callers that
+    /// demote victims themselves (the engine's spill tier) can alternate
+    /// fit-check / evict-one instead of dropping everything in one call.
+    pub fn fits(&self, incoming_bytes: usize) -> bool {
+        self.enabled()
+            && self.entries.len() < self.max_entries
+            && (self.max_bytes == 0 || self.resident_bytes + incoming_bytes <= self.max_bytes)
+    }
+
+    /// The entry `evict_lru` would pick right now: least-recently-used
+    /// among unpinned, unleased nodes. Lets the engine spill the victim's
+    /// payload to disk *before* eviction frees it.
+    pub fn lru_victim(&self, kv: &KvManager) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.pins == 0 && kv.context_leases(e.ctx_id) == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&id, _)| id)
     }
 
     /// Longest cached prefix of `tokens`, bumping its LRU recency and the
@@ -231,13 +267,7 @@ impl<B: Backend> PrefixCache<B> {
     /// Evict the least-recently-used unpinned entry, releasing its KV
     /// registration. `false` when nothing is evictable.
     pub fn evict_lru(&mut self, kv: &mut KvManager) -> bool {
-        let victim = self
-            .entries
-            .iter()
-            .filter(|(_, e)| e.pins == 0 && kv.context_leases(e.ctx_id) == 0)
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(&id, _)| id);
-        let Some(id) = victim else { return false };
+        let Some(id) = self.lru_victim(kv) else { return false };
         let e = self.entries.remove(&id).expect("victim vanished");
         self.resident_bytes -= e.bytes;
         kv.release_context(e.ctx_id);
@@ -478,6 +508,46 @@ mod tests {
         let j = c.stats_json();
         assert_eq!(j.f64_of("resident_bytes"), (2 * entry_bytes) as f64);
         assert_eq!(j.f64_of("max_bytes"), (2 * entry_bytes) as f64);
+    }
+
+    #[test]
+    fn tokens_of_reconstructs_the_inserted_path() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let mut c = PrefixCache::new(8);
+        let short = insert(&mut c, &be, &mut kv, &[1, 2]);
+        let long = insert(&mut c, &be, &mut kv, &[1, 2, 3, 4]);
+        let other = insert(&mut c, &be, &mut kv, &[7, 7, 7]);
+        assert_eq!(c.tokens_of(short), vec![1, 2]);
+        assert_eq!(c.tokens_of(long), vec![1, 2, 3, 4]);
+        assert_eq!(c.tokens_of(other), vec![7, 7, 7]);
+        // paths survive evictions that re-merge radix chains
+        assert!(c.evict_lru(&mut kv)); // `short` is LRU
+        assert_eq!(c.tokens_of(long), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fits_and_lru_victim_mirror_eviction() {
+        let be = tiny_backend();
+        let mut kv = mgr();
+        let c0 = be.cfg();
+        let entry_bytes = 2 * c0.l * c0.g * c0.m_c_max * c0.k * 4;
+        let mut c: PrefixCache<NativeBackend> = PrefixCache::with_budgets(2, 2 * entry_bytes);
+        assert!(c.fits(entry_bytes));
+        assert!(!c.fits(3 * entry_bytes), "an entry over the byte budget never fits");
+        let a = insert(&mut c, &be, &mut kv, &[1, 1]);
+        let b = insert(&mut c, &be, &mut kv, &[2, 2]);
+        assert!(!c.fits(entry_bytes), "entry budget is full");
+        // touch `a`: the victim preview and the actual eviction agree
+        assert!(c.lookup(&[1, 1]).is_some());
+        assert_eq!(c.lru_victim(&kv), Some(b));
+        c.pin(b);
+        assert_eq!(c.lru_victim(&kv), Some(a), "pinning moves the victim");
+        c.unpin(b);
+        assert!(c.evict_lru(&mut kv));
+        assert!(!c.contains(b));
+        assert!(c.fits(entry_bytes));
+        c.check_invariants(&kv).unwrap();
     }
 
     #[test]

@@ -200,6 +200,24 @@ impl RadixTree {
         }
     }
 
+    /// The full token path from the root to `id` — the inverse of
+    /// [`RadixTree::insert`], used by the snapshot store to serialize a
+    /// payload node's identity.
+    pub fn tokens_of(&self, id: usize) -> Vec<i32> {
+        let mut edges = Vec::new();
+        let mut cur = id;
+        while cur != ROOT {
+            let n = self.node(cur);
+            edges.push(&n.edge);
+            cur = n.parent;
+        }
+        let mut tokens = Vec::with_capacity(self.node(id).depth);
+        for edge in edges.into_iter().rev() {
+            tokens.extend_from_slice(edge);
+        }
+        tokens
+    }
+
     /// Number of live nodes (root included).
     pub fn len(&self) -> usize {
         self.nodes.len() - self.free.len()
@@ -313,6 +331,22 @@ mod tests {
         assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((b, 3)));
         assert_eq!(t.len(), 2); // root + one leaf
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tokens_of_inverts_insert_across_splits_and_merges() {
+        let mut t = RadixTree::new();
+        let ab = t.insert(&[1, 2, 3, 4]);
+        let ac = t.insert(&[1, 2, 5]);
+        let mid = t.insert(&[1, 2]);
+        assert_eq!(t.tokens_of(ab), vec![1, 2, 3, 4]);
+        assert_eq!(t.tokens_of(ac), vec![1, 2, 5]);
+        assert_eq!(t.tokens_of(mid), vec![1, 2]);
+        // after a removal re-merges the chain, survivors still invert
+        t.remove_payload(mid);
+        t.check_invariants().unwrap();
+        assert_eq!(t.tokens_of(ab), vec![1, 2, 3, 4]);
+        assert_eq!(t.tokens_of(ac), vec![1, 2, 5]);
     }
 
     #[test]

@@ -1,0 +1,929 @@
+//! Durable persistence tier for the prefix cache: crash-consistent
+//! snapshots plus a checksum-verified disk spill tier.
+//!
+//! Zero dependencies by design. The on-disk format is a versioned,
+//! length-prefixed record stream so that *any* torn write, truncation,
+//! bit flip, or version/model mismatch is detected and degrades to a
+//! cold prefill for exactly the affected node — never a wrong token,
+//! never a panic:
+//!
+//! ```text
+//! file   := magic "BAPC" | version u32 | fp_len u32 | fingerprint bytes
+//!           | record*
+//! record := payload_len u32 | payload | crc32(payload) u32
+//! payload:= n_tokens u32 | token i32 *n | last_used u64
+//!           | n_logits u32 | logit f32 *n
+//!           | tensor(kc) | tensor(vc)
+//! tensor := ndim u32 | dim u32 *ndim | elem f32 *numel
+//! ```
+//!
+//! All integers little-endian. The fingerprint binds a snapshot to the
+//! model configuration that produced its K_c/V_c tensors; a mismatch
+//! drops the whole file (restoring foreign tensors would violate the
+//! bitwise-parity bar).
+//!
+//! Crash consistency: snapshots are written to a temp file, fsynced,
+//! then atomically renamed over `snapshot.bin` — a crash mid-write
+//! leaves the previous snapshot intact. Spill files (`spill-N.bin`,
+//! one record each) use the same commit path and are re-indexed on
+//! open, so spilled nodes survive restarts too.
+//!
+//! Failpoints (`util::failpoint`): `snap_write_err` aborts a commit
+//! after the temp write but before the rename (a simulated crash),
+//! `snap_read_corrupt` forces a record's checksum verification to
+//! fail, `spill_io_err` fails a spill write.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::tensor::{Data, HostTensor};
+use crate::util::failpoint;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"BAPC";
+const VERSION: u32 = 1;
+const SNAPSHOT_FILE: &str = "snapshot.bin";
+/// Parsing guard: no single record may claim more than this many bytes.
+/// Way above any real node (a pico-model K_c/V_c pair is ~100 KiB; a
+/// production one is MBs) while keeping a corrupted length prefix from
+/// driving a multi-GiB allocation.
+const MAX_RECORD_BYTES: usize = 1 << 31;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3), table-driven, implemented in-crate
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC32 of `bytes` (the zlib/PNG polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Record encode/decode (pure, filesystem-free — proptested directly)
+// ---------------------------------------------------------------------------
+
+/// One cached node, decoded and checksum-verified.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeRecord {
+    pub tokens: Vec<i32>,
+    pub last_used: u64,
+    pub logits: Vec<f32>,
+    pub kc: HostTensor,
+    pub vc: HostTensor,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &HostTensor) {
+    put_u32(out, t.shape.len() as u32);
+    for &d in &t.shape {
+        put_u32(out, d as u32);
+    }
+    for &v in t.f32s() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode one node into a record *payload* (no framing, no checksum).
+pub fn encode_record(
+    tokens: &[i32],
+    logits: &[f32],
+    kc: &HostTensor,
+    vc: &HostTensor,
+    last_used: u64,
+) -> Vec<u8> {
+    let cap = 32 + tokens.len() * 4 + logits.len() * 4 + kc.byte_size() + vc.byte_size();
+    let mut out = Vec::with_capacity(cap);
+    put_u32(&mut out, tokens.len() as u32);
+    for &t in tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    out.extend_from_slice(&last_used.to_le_bytes());
+    put_u32(&mut out, logits.len() as u32);
+    for &v in logits {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    put_tensor(&mut out, kc);
+    put_tensor(&mut out, vc);
+    out
+}
+
+/// Frame pre-encoded record payloads into a complete snapshot file image.
+pub fn encode_snapshot(fingerprint: &str, payloads: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, fingerprint.len() as u32);
+    out.extend_from_slice(fingerprint.as_bytes());
+    for p in payloads {
+        put_u32(&mut out, p.len() as u32);
+        out.extend_from_slice(p);
+        put_u32(&mut out, crc32(p));
+    }
+    out
+}
+
+/// Bounds-checked little-endian reader. Every accessor returns `None`
+/// past the end instead of slicing out of range, so decoding arbitrary
+/// bytes can never panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if n > self.remaining() {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn i32s(&mut self, n: usize) -> Option<Vec<i32>> {
+        let b = self.take(n.checked_mul(4)?)?;
+        Some(b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Option<Vec<f32>> {
+        let b = self.take(n.checked_mul(4)?)?;
+        Some(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+fn decode_tensor(c: &mut Cursor) -> Option<HostTensor> {
+    let ndim = c.u32()? as usize;
+    if ndim > 8 {
+        return None;
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut numel = 1usize;
+    for _ in 0..ndim {
+        let d = c.u32()? as usize;
+        numel = numel.checked_mul(d)?;
+        shape.push(d);
+    }
+    if numel.checked_mul(4)? > c.remaining() {
+        return None;
+    }
+    let data = c.f32s(numel)?;
+    Some(HostTensor { shape, data: Data::F32(data) })
+}
+
+/// Decode one record payload. `None` on any structural inconsistency.
+fn decode_payload(payload: &[u8]) -> Option<NodeRecord> {
+    let mut c = Cursor::new(payload);
+    let n_tokens = c.u32()? as usize;
+    if n_tokens == 0 || n_tokens.checked_mul(4)? > c.remaining() {
+        return None;
+    }
+    let tokens = c.i32s(n_tokens)?;
+    let last_used = c.u64()?;
+    let n_logits = c.u32()? as usize;
+    if n_logits.checked_mul(4)? > c.remaining() {
+        return None;
+    }
+    let logits = c.f32s(n_logits)?;
+    let kc = decode_tensor(&mut c)?;
+    let vc = decode_tensor(&mut c)?;
+    if c.remaining() != 0 {
+        return None; // trailing garbage inside a "verified" record
+    }
+    Some(NodeRecord { tokens, last_used, logits, kc, vc })
+}
+
+/// Counters produced by one decode pass.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Records decoded and checksum-verified.
+    pub nodes: u64,
+    /// Payload bytes of the verified records.
+    pub bytes: u64,
+    /// Records dropped: torn/truncated, malformed, or checksum-failed.
+    pub dropped: u64,
+    /// Subset of `dropped` that failed CRC verification specifically.
+    pub checksum_failures: u64,
+}
+
+/// Decode a snapshot image, returning only records whose checksum
+/// verified and whose payload parsed cleanly. Never panics on arbitrary
+/// input; a header (magic/version/fingerprint) mismatch drops the whole
+/// file. Honors the `snap_read_corrupt` failpoint by failing one
+/// record's verification per armed hit.
+pub fn decode_snapshot(bytes: &[u8], fingerprint: &str) -> (Vec<NodeRecord>, DecodeStats) {
+    let mut stats = DecodeStats::default();
+    let mut out = Vec::new();
+    let mut c = Cursor::new(bytes);
+    let header_ok = (|| {
+        if c.take(4)? != MAGIC || c.u32()? != VERSION {
+            return None;
+        }
+        let fp_len = c.u32()? as usize;
+        if fp_len > c.remaining() || c.take(fp_len)? != fingerprint.as_bytes() {
+            return None;
+        }
+        Some(())
+    })();
+    if header_ok.is_none() {
+        if !bytes.is_empty() {
+            stats.dropped += 1;
+        }
+        return (out, stats);
+    }
+    while c.remaining() > 0 {
+        let Some(len) = c.u32() else {
+            stats.dropped += 1; // torn length prefix
+            break;
+        };
+        let len = len as usize;
+        if len > MAX_RECORD_BYTES || len + 4 > c.remaining() {
+            stats.dropped += 1; // truncated record or insane length
+            break;
+        }
+        let payload = c.take(len).unwrap();
+        let crc = c.u32().unwrap();
+        let corrupt_injected = failpoint::check("snap_read_corrupt").is_some();
+        if corrupt_injected || crc32(payload) != crc {
+            stats.dropped += 1;
+            stats.checksum_failures += 1;
+            continue; // framing is intact: later records are still usable
+        }
+        match decode_payload(payload) {
+            Some(rec) => {
+                stats.nodes += 1;
+                stats.bytes += len as u64;
+                out.push(rec);
+            }
+            None => stats.dropped += 1,
+        }
+    }
+    (out, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Crash-consistent commit: temp file -> fsync -> atomic rename
+// ---------------------------------------------------------------------------
+
+/// Durably replace `dir/name` with `bytes`. The write lands in a temp
+/// file first and only an fsynced, complete image is renamed into
+/// place, so a crash at any point leaves either the old file or the new
+/// one — never a torn mix. The `snap_write_err` failpoint aborts after
+/// the temp write (the "crash" the chaos suite injects).
+pub fn commit_file(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    let dst = dir.join(name);
+    {
+        let mut f = fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+        std::io::Write::write_all(&mut f, bytes).with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    crate::fail!("snap_write_err");
+    fs::rename(&tmp, &dst).with_context(|| format!("rename {} -> {}", tmp.display(), dst.display()))?;
+    // best-effort directory fsync so the rename itself is durable
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Engine-side persistence counters (surfaced as the `persist` metrics
+/// object together with the writer-thread atomics below).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PersistCounters {
+    pub spills: u64,
+    pub spill_errors: u64,
+    pub promotes: u64,
+    pub checksum_failures: u64,
+    pub restore_nodes: u64,
+    pub restore_bytes: u64,
+    pub restore_dropped: u64,
+}
+
+/// Snapshot-commit counters shared with the background writer thread.
+#[derive(Default)]
+struct SnapshotShared {
+    snapshots: AtomicU64,
+    snapshot_errors: AtomicU64,
+    last_snapshot_bytes: AtomicU64,
+}
+
+struct SnapshotWriter {
+    tx: Sender<Vec<u8>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+#[derive(Debug, Clone)]
+struct SpillEntry {
+    file: PathBuf,
+    bytes: usize,
+    /// Monotonic spill order; the oldest entry is the budget victim.
+    stamp: u64,
+}
+
+/// Durable prefix-cache store rooted at one `--cache-dir` directory.
+///
+/// Owns the snapshot file, the spill-file index, and every persistence
+/// counter. All tensor encoding happens on the caller's (engine)
+/// thread — only serialized `Vec<u8>` images cross to the background
+/// snapshot writer, so the `!Send` backend contexts never do.
+pub struct PersistStore {
+    dir: PathBuf,
+    fingerprint: String,
+    spill_budget: usize,
+    spill: BTreeMap<Vec<i32>, SpillEntry>,
+    spill_bytes: usize,
+    next_spill_id: u64,
+    pub counters: PersistCounters,
+    shared: Arc<SnapshotShared>,
+    writer: Option<SnapshotWriter>,
+}
+
+impl PersistStore {
+    /// Open (creating if needed) a cache directory. Stray temp files
+    /// from crashed commits are removed and existing spill files are
+    /// re-indexed (corrupt or foreign ones are deleted and counted).
+    pub fn open(dir: &Path, fingerprint: &str, spill_budget: usize) -> Result<Self> {
+        fs::create_dir_all(dir).with_context(|| format!("create cache dir {}", dir.display()))?;
+        let mut store = PersistStore {
+            dir: dir.to_path_buf(),
+            fingerprint: fingerprint.to_string(),
+            spill_budget,
+            spill: BTreeMap::new(),
+            spill_bytes: 0,
+            next_spill_id: 0,
+            counters: PersistCounters::default(),
+            shared: Arc::new(SnapshotShared::default()),
+            writer: None,
+        };
+        store.scan_dir()?;
+        store.spawn_writer();
+        Ok(store)
+    }
+
+    fn scan_dir(&mut self) -> Result<()> {
+        for entry in fs::read_dir(&self.dir).with_context(|| format!("read {}", self.dir.display()))? {
+            let Ok(entry) = entry else { continue };
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if name.ends_with(".tmp") {
+                let _ = fs::remove_file(&path); // torn commit from a crash
+                continue;
+            }
+            if let Some(idx) = name.strip_prefix("spill-").and_then(|s| s.strip_suffix(".bin")) {
+                if let Ok(id) = idx.parse::<u64>() {
+                    self.next_spill_id = self.next_spill_id.max(id + 1);
+                }
+                let bytes = fs::read(&path).unwrap_or_default();
+                let (mut recs, stats) = decode_snapshot(&bytes, &self.fingerprint);
+                self.counters.checksum_failures += stats.checksum_failures;
+                if recs.len() == 1 {
+                    let rec = recs.pop().unwrap();
+                    self.index_spill(rec.tokens, SpillEntry {
+                        file: path,
+                        bytes: bytes.len(),
+                        stamp: rec.last_used,
+                    });
+                } else {
+                    self.counters.restore_dropped += 1;
+                    let _ = fs::remove_file(&path);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn spawn_writer(&mut self) {
+        let (tx, rx) = channel::<Vec<u8>>();
+        let dir = self.dir.clone();
+        let shared = Arc::clone(&self.shared);
+        let handle = std::thread::Builder::new()
+            .name("prefix-snapshot-writer".into())
+            .spawn(move || {
+                for bytes in rx {
+                    match commit_file(&dir, SNAPSHOT_FILE, &bytes) {
+                        Ok(()) => {
+                            shared.snapshots.fetch_add(1, Ordering::Relaxed);
+                            shared.last_snapshot_bytes.store(bytes.len() as u64, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            shared.snapshot_errors.fetch_add(1, Ordering::Relaxed);
+                            crate::warn!("prefix snapshot write failed: {e:#}");
+                        }
+                    }
+                }
+            })
+            .ok();
+        if let Some(handle) = handle {
+            self.writer = Some(SnapshotWriter { tx, handle: Some(handle) });
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Frame record payloads with this store's fingerprint.
+    pub fn encode_snapshot(&self, payloads: &[Vec<u8>]) -> Vec<u8> {
+        encode_snapshot(&self.fingerprint, payloads)
+    }
+
+    /// Queue a snapshot image for the background writer (the engine
+    /// thread never blocks on disk). Falls back to a synchronous commit
+    /// if the writer thread could not be spawned.
+    pub fn snapshot_async(&mut self, bytes: Vec<u8>) {
+        if let Some(w) = &self.writer {
+            if w.tx.send(bytes).is_ok() {
+                return;
+            }
+        }
+        // no writer (or it died): degrade to a synchronous commit
+        let bytes_len = bytes.len() as u64;
+        match commit_file(&self.dir, SNAPSHOT_FILE, &bytes) {
+            Ok(()) => {
+                self.shared.snapshots.fetch_add(1, Ordering::Relaxed);
+                self.shared.last_snapshot_bytes.store(bytes_len, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.shared.snapshot_errors.fetch_add(1, Ordering::Relaxed);
+                crate::warn!("prefix snapshot write failed: {e:#}");
+            }
+        }
+    }
+
+    /// Commit a snapshot image on the calling thread (drain-time and
+    /// test path — durable before the call returns).
+    pub fn snapshot_sync(&mut self, bytes: Vec<u8>) -> Result<()> {
+        let res = commit_file(&self.dir, SNAPSHOT_FILE, &bytes);
+        match &res {
+            Ok(()) => {
+                self.shared.snapshots.fetch_add(1, Ordering::Relaxed);
+                self.shared.last_snapshot_bytes.store(bytes.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.shared.snapshot_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        res
+    }
+
+    /// Block until every queued async snapshot has committed (or
+    /// failed). Used at drain so the final image is durable on exit.
+    pub fn flush(&mut self) {
+        if let Some(mut w) = self.writer.take() {
+            drop(w.tx);
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+        self.spawn_writer();
+    }
+
+    /// Read and verify the snapshot, oldest-`last_used` first (so
+    /// re-inserting in order reproduces the LRU ordering). Missing or
+    /// unreadable files restore nothing; every verification failure is
+    /// counted, never fatal.
+    pub fn restore(&mut self) -> Vec<NodeRecord> {
+        let path = self.dir.join(SNAPSHOT_FILE);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return Vec::new(),
+        };
+        let (mut recs, stats) = decode_snapshot(&bytes, &self.fingerprint);
+        self.counters.restore_nodes += stats.nodes;
+        self.counters.restore_bytes += stats.bytes;
+        self.counters.restore_dropped += stats.dropped;
+        self.counters.checksum_failures += stats.checksum_failures;
+        recs.sort_by_key(|r| r.last_used);
+        recs
+    }
+
+    /// Count a restore-side drop discovered outside `decode` (e.g. a
+    /// verified record that no longer fits the cache/KV budgets).
+    pub fn note_restore_dropped(&mut self) {
+        self.counters.restore_dropped += 1;
+        self.counters.restore_nodes = self.counters.restore_nodes.saturating_sub(1);
+    }
+
+    // -- spill tier ---------------------------------------------------------
+
+    pub fn spilling_enabled(&self) -> bool {
+        self.spill_budget > 0
+    }
+
+    fn index_spill(&mut self, tokens: Vec<i32>, entry: SpillEntry) {
+        if let Some(old) = self.spill.insert(tokens, entry) {
+            let _ = fs::remove_file(&old.file);
+        }
+        self.spill_bytes = self.spill.values().map(|e| e.bytes).sum();
+    }
+
+    fn drop_spilled(&mut self, tokens: &[i32]) -> Option<SpillEntry> {
+        let entry = self.spill.remove(tokens)?;
+        self.spill_bytes -= entry.bytes;
+        let _ = fs::remove_file(&entry.file);
+        Some(entry)
+    }
+
+    /// Demote one evicted node to disk. Returns `false` (and counts the
+    /// error) when spilling is disabled, the record alone exceeds the
+    /// budget, or the write fails — the caller's eviction proceeds
+    /// either way, the entry is just gone instead of demoted.
+    pub fn spill(
+        &mut self,
+        tokens: &[i32],
+        logits: &[f32],
+        kc: &HostTensor,
+        vc: &HostTensor,
+        last_used: u64,
+    ) -> bool {
+        if !self.spilling_enabled() {
+            return false;
+        }
+        let payload = encode_record(tokens, logits, kc, vc, last_used);
+        let image = self.encode_snapshot(std::slice::from_ref(&payload));
+        if image.len() > self.spill_budget {
+            return false;
+        }
+        // make room in the spill budget: drop oldest-stamped entries
+        while self.spill_bytes + image.len() > self.spill_budget {
+            let Some(oldest) =
+                self.spill.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            self.drop_spilled(&oldest);
+        }
+        if failpoint::check("spill_io_err").is_some() {
+            self.counters.spill_errors += 1;
+            return false;
+        }
+        let name = format!("spill-{}.bin", self.next_spill_id);
+        self.next_spill_id += 1;
+        match commit_file(&self.dir, &name, &image) {
+            Ok(()) => {
+                self.index_spill(
+                    tokens.to_vec(),
+                    SpillEntry { file: self.dir.join(&name), bytes: image.len(), stamp: last_used },
+                );
+                self.counters.spills += 1;
+                true
+            }
+            Err(e) => {
+                self.counters.spill_errors += 1;
+                crate::warn!("prefix spill write failed: {e:#}");
+                false
+            }
+        }
+    }
+
+    /// The longest spilled prefix of `tokens` strictly longer than
+    /// `min_len` (the caller's best resident hit), if any.
+    pub fn best_spilled(&self, tokens: &[i32], min_len: usize) -> Option<Vec<i32>> {
+        self.spill
+            .keys()
+            .filter(|k| k.len() > min_len && k.len() <= tokens.len() && tokens[..k.len()] == k[..])
+            .max_by_key(|k| k.len())
+            .cloned()
+    }
+
+    /// Take a spilled node off disk for promotion. Checksum-verified;
+    /// on any mismatch the file is deleted, the failure counted, and
+    /// `None` returned (caller falls back to cold prefill). The file is
+    /// removed on success too — a promoted node is resident again.
+    pub fn take_spilled(&mut self, tokens: &[i32]) -> Option<NodeRecord> {
+        let entry = self.spill.get(tokens)?;
+        let bytes = fs::read(&entry.file).unwrap_or_default();
+        self.drop_spilled(tokens);
+        let (mut recs, stats) = decode_snapshot(&bytes, &self.fingerprint);
+        self.counters.checksum_failures += stats.checksum_failures;
+        if recs.len() == 1 && recs[0].tokens == tokens {
+            recs.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn note_promoted(&mut self) {
+        self.counters.promotes += 1;
+    }
+
+    pub fn spilled_entries(&self) -> usize {
+        self.spill.len()
+    }
+
+    pub fn spilled_bytes(&self) -> usize {
+        self.spill_bytes
+    }
+
+    pub fn snapshots(&self) -> u64 {
+        self.shared.snapshots.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot_errors(&self) -> u64 {
+        self.shared.snapshot_errors.load(Ordering::Relaxed)
+    }
+
+    /// The `persist` object `/metrics` serves.
+    pub fn stats_json(&self) -> Json {
+        let c = &self.counters;
+        Json::obj()
+            .set("snapshots", Json::Num(self.snapshots() as f64))
+            .set("snapshot_errors", Json::Num(self.snapshot_errors() as f64))
+            .set(
+                "last_snapshot_bytes",
+                Json::Num(self.shared.last_snapshot_bytes.load(Ordering::Relaxed) as f64),
+            )
+            .set("spills", Json::Num(c.spills as f64))
+            .set("spill_errors", Json::Num(c.spill_errors as f64))
+            .set("promotes", Json::Num(c.promotes as f64))
+            .set("checksum_failures", Json::Num(c.checksum_failures as f64))
+            .set("restore_nodes", Json::Num(c.restore_nodes as f64))
+            .set("restore_bytes", Json::Num(c.restore_bytes as f64))
+            .set("restore_dropped", Json::Num(c.restore_dropped as f64))
+            .set("spilled_entries", Json::Num(self.spill.len() as f64))
+            .set("spilled_bytes", Json::Num(self.spill_bytes as f64))
+    }
+}
+
+impl Drop for PersistStore {
+    fn drop(&mut self) {
+        // drain queued snapshots so a graceful exit never loses the
+        // image that was already handed to the writer
+        if let Some(mut w) = self.writer.take() {
+            drop(w.tx);
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bifattn-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(seed: i32, n_tokens: usize) -> NodeRecord {
+        let tokens: Vec<i32> = (0..n_tokens as i32).map(|i| seed + i).collect();
+        let kc =
+            HostTensor::from_f32((0..12).map(|i| (seed * 100 + i) as f32 * 0.5).collect(), &[
+                2, 2, 3,
+            ]);
+        let vc =
+            HostTensor::from_f32((0..12).map(|i| (seed * 200 + i) as f32 * 0.25).collect(), &[
+                2, 2, 3,
+            ]);
+        NodeRecord {
+            tokens,
+            last_used: seed as u64 * 7,
+            logits: vec![seed as f32, -1.5, 0.25],
+            kc,
+            vc,
+        }
+    }
+
+    fn payload(r: &NodeRecord) -> Vec<u8> {
+        encode_record(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used)
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip_is_bit_exact() {
+        let r = rec(3, 5);
+        let image = encode_snapshot("fp", &[payload(&r)]);
+        let (got, stats) = decode_snapshot(&image, "fp");
+        assert_eq!(stats, DecodeStats {
+            nodes: 1,
+            bytes: payload(&r).len() as u64,
+            dropped: 0,
+            checksum_failures: 0
+        });
+        assert_eq!(got, vec![r]);
+    }
+
+    #[test]
+    fn fingerprint_or_version_mismatch_drops_the_whole_file() {
+        let image = encode_snapshot("model-a", &[payload(&rec(1, 3))]);
+        let (got, stats) = decode_snapshot(&image, "model-b");
+        assert!(got.is_empty());
+        assert_eq!(stats.dropped, 1);
+        // garbage that is not even a header
+        let (got, _) = decode_snapshot(b"hello world", "model-a");
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn bit_flip_drops_only_the_flipped_record() {
+        let (a, b) = (rec(1, 4), rec(9, 6));
+        let mut image = encode_snapshot("fp", &[payload(&a), payload(&b)]);
+        // flip a byte deep inside the SECOND record's tensor data
+        let n = image.len();
+        image[n - 10] ^= 0x40;
+        let (got, stats) = decode_snapshot(&image, "fp");
+        assert_eq!(got, vec![a]);
+        assert_eq!(stats.nodes, 1);
+        assert_eq!(stats.checksum_failures, 1);
+        assert_eq!(stats.dropped, 1);
+    }
+
+    #[test]
+    fn truncation_drops_only_the_torn_tail() {
+        let (a, b) = (rec(2, 3), rec(5, 8));
+        let image = encode_snapshot("fp", &[payload(&a), payload(&b)]);
+        for cut in [image.len() - 1, image.len() - 7, image.len() - payload(&b).len()] {
+            let (got, stats) = decode_snapshot(&image[..cut], "fp");
+            assert_eq!(got, vec![a.clone()], "cut at {cut}");
+            assert_eq!(stats.dropped, 1);
+        }
+        // cutting inside the FIRST record loses everything after it too
+        let (got, stats) = decode_snapshot(&image[..20], "fp");
+        assert!(got.is_empty());
+        assert_eq!(stats.dropped, 1);
+    }
+
+    #[test]
+    fn commit_is_atomic_under_snap_write_err() {
+        let dir = tmpdir("atomic");
+        let v1 = encode_snapshot("fp", &[payload(&rec(1, 3))]);
+        commit_file(&dir, SNAPSHOT_FILE, &v1).unwrap();
+
+        failpoint::set("snap_write_err=1");
+        let v2 = encode_snapshot("fp", &[payload(&rec(2, 3))]);
+        let err = commit_file(&dir, SNAPSHOT_FILE, &v2).unwrap_err();
+        assert!(err.to_string().contains("snap_write_err"));
+        failpoint::clear();
+
+        // the old image survived the crashed commit untouched
+        let on_disk = fs::read(dir.join(SNAPSHOT_FILE)).unwrap();
+        assert_eq!(on_disk, v1);
+        // and the torn temp file is swept on the next open
+        assert!(dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        let store = PersistStore::open(&dir, "fp", 0).unwrap();
+        drop(store);
+        assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_promote_roundtrip_and_budget_eviction() {
+        let dir = tmpdir("spill");
+        // budget sized for exactly two spilled records
+        let one = {
+            let r = rec(1, 4);
+            encode_snapshot("fp", &[payload(&r)]).len()
+        };
+        let mut store = PersistStore::open(&dir, "fp", 2 * one + 8).unwrap();
+        assert!(store.spilling_enabled());
+        for (i, r) in [rec(1, 4), rec(20, 4), rec(40, 4)].iter().enumerate() {
+            assert!(
+                store.spill(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used),
+                "spill {i} failed"
+            );
+        }
+        // oldest stamp (rec(1): last_used 7) was evicted for the third
+        assert_eq!(store.spilled_entries(), 2);
+        assert_eq!(store.counters.spills, 3);
+        assert!(store.best_spilled(&rec(1, 4).tokens, 0).is_none());
+
+        // promote the longest spilled prefix of an extended prompt
+        let want = rec(20, 4);
+        let mut query = want.tokens.clone();
+        query.push(99);
+        let key = store.best_spilled(&query, 0).unwrap();
+        assert_eq!(key, want.tokens);
+        let got = store.take_spilled(&key).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(store.spilled_entries(), 1, "promotion removes the spill file");
+        assert!(store.take_spilled(&key).is_none(), "double-take must miss");
+
+        // the remaining entry survives a store reopen (index rebuild)
+        drop(store);
+        let store = PersistStore::open(&dir, "fp", 2 * one + 8).unwrap();
+        assert_eq!(store.spilled_entries(), 1);
+        assert!(store.best_spilled(&rec(40, 4).tokens, 0).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_io_err_failpoint_fails_cleanly() {
+        let dir = tmpdir("spill-err");
+        let mut store = PersistStore::open(&dir, "fp", 1 << 20).unwrap();
+        let r = rec(3, 5);
+        failpoint::set("spill_io_err=1");
+        assert!(!store.spill(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used));
+        failpoint::clear();
+        assert_eq!(store.counters.spill_errors, 1);
+        assert_eq!(store.spilled_entries(), 0);
+        // next spill works again
+        assert!(store.spill(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_counts_and_sorts_by_last_used() {
+        let dir = tmpdir("restore");
+        let (mut a, mut b) = (rec(1, 3), rec(5, 4));
+        a.last_used = 100;
+        b.last_used = 2;
+        let mut store = PersistStore::open(&dir, "fp", 0).unwrap();
+        let image = store.encode_snapshot(&[payload(&a), payload(&b)]);
+        store.snapshot_sync(image).unwrap();
+        assert_eq!(store.snapshots(), 1);
+
+        let mut store2 = PersistStore::open(&dir, "fp", 0).unwrap();
+        let recs = store2.restore();
+        assert_eq!(recs, vec![b, a], "restore must come back oldest-first");
+        assert_eq!(store2.counters.restore_nodes, 2);
+        assert!(store2.counters.restore_bytes > 0);
+        assert_eq!(store2.counters.restore_dropped, 0);
+
+        // snap_read_corrupt drops exactly one record per armed hit
+        let mut store3 = PersistStore::open(&dir, "fp", 0).unwrap();
+        failpoint::set("snap_read_corrupt=1");
+        let recs = store3.restore();
+        failpoint::clear();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(store3.counters.checksum_failures, 1);
+        assert_eq!(store3.counters.restore_dropped, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn async_snapshot_flush_makes_the_image_durable() {
+        let dir = tmpdir("async");
+        let mut store = PersistStore::open(&dir, "fp", 0).unwrap();
+        let image = store.encode_snapshot(&[payload(&rec(7, 6))]);
+        store.snapshot_async(image.clone());
+        store.flush();
+        assert_eq!(store.snapshots(), 1);
+        assert_eq!(fs::read(dir.join(SNAPSHOT_FILE)).unwrap(), image);
+        let j = store.stats_json();
+        assert_eq!(j.f64_of("snapshots"), 1.0);
+        assert_eq!(j.f64_of("last_snapshot_bytes"), image.len() as f64);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

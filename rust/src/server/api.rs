@@ -77,14 +77,13 @@ impl ApiError {
         }
     }
 
-    /// The final ndjson line of a streaming response that failed.
-    fn to_stream_line(&self) -> String {
-        format!(
-            "{}\n",
-            Json::obj()
-                .set("error", Json::Str(self.message.clone()))
-                .set("status", Json::Num(self.status as f64))
-        )
+    /// The JSON payload of a streaming failure — the final ndjson line,
+    /// or the `event: error` data frame under SSE framing.
+    fn to_stream_json(&self) -> String {
+        Json::obj()
+            .set("error", Json::Str(self.message.clone()))
+            .set("status", Json::Num(self.status as f64))
+            .to_string()
     }
 }
 
@@ -241,12 +240,18 @@ where
     std::thread::Builder::new()
         .name("engine".into())
         .spawn(move || {
+            // Snapshot restore (when `--cache-dir` points at a prior
+            // image) happens inside init(); /readyz answers 503 until
+            // the resident cache is rebuilt.
+            engine_gate.set_restoring(true);
             let engine = match init() {
                 Ok(e) => {
+                    engine_gate.set_restoring(false);
                     let _ = ready_tx.send(Ok(()));
                     e
                 }
                 Err(e) => {
+                    engine_gate.set_restoring(false);
                     let _ = ready_tx.send(Err(format!("{e:#}")));
                     return;
                 }
@@ -401,13 +406,30 @@ pub fn parse_generate_body(
 /// one `{"row":R,"token":T}` line per token at the step boundary that
 /// sampled it, then a final `{"done": <buffered result>}` line. A failed
 /// chunk write (client gone) cancels the request at the next step
-/// boundary via the shared disconnect flag.
+/// boundary via the shared disconnect flag. Streaming requests that also
+/// send `Accept: text/event-stream` get SSE framing instead: the same
+/// payloads as `data:` events and a terminal `event: done` frame.
 pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
     let next_id = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(1));
     let gen_client = std::sync::Arc::clone(&client);
     let met_client = std::sync::Arc::clone(&client);
+    let ready_client = std::sync::Arc::clone(&client);
     HttpServer::new()
         .route("GET", "/health", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
+        // Liveness: the process is up and routing. Orchestrators restart
+        // on a failed /healthz and hold traffic on a failed /readyz.
+        .route("GET", "/healthz", |_| HttpResponse::json(200, "{\"ok\":true}".into()))
+        .route("GET", "/readyz", move |_| {
+            let gate = ready_client.gate();
+            let restoring = gate.is_restoring();
+            let draining = gate.is_draining();
+            let ready = !restoring && !draining;
+            let body = Json::obj()
+                .set("ready", Json::Bool(ready))
+                .set("restoring", Json::Bool(restoring))
+                .set("draining", Json::Bool(draining));
+            HttpResponse::json(if ready { 200 } else { 503 }, body.to_string())
+        })
         .route("GET", "/metrics", move |req| {
             // The admission gate lives server-side (the engine Metrics
             // cell is thread-local to the engine); merge its snapshot in
@@ -480,6 +502,13 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 greq.params.max_tokens = gen_client.gate().brownout_clamp(greq.params.max_tokens);
             }
             let streaming = stream || req.query_flag("stream");
+            // `Accept: text/event-stream` switches the chunked framing
+            // from ndjson lines to SSE events; the JSON payloads inside
+            // each frame are byte-identical either way.
+            let sse = req
+                .headers
+                .get("accept")
+                .is_some_and(|a| a.contains("text/event-stream"));
             let _sp = span("req.serve").req(id).on_request_track().arg(0, u64::from(streaming));
             if !streaming {
                 return Some(match gen_client.generate(greq, rerank_k) {
@@ -495,7 +524,12 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
             let (handle, events) = StreamHandle::channel(cap);
             let canceller = handle.canceller();
             let reply = gen_client.generate_streaming(greq, rerank_k, handle);
-            if sink.begin(200, "application/x-ndjson").is_err() {
+            let begun = if sse {
+                sink.begin_with(200, "text/event-stream", &[("Cache-Control", "no-cache")])
+            } else {
+                sink.begin(200, "application/x-ndjson")
+            };
+            if begun.is_err() {
                 canceller.cancel();
                 return None;
             }
@@ -507,8 +541,13 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 if gone {
                     continue;
                 }
-                let line = format!("{{\"row\":{},\"token\":{}}}\n", ev.row, ev.token);
-                if sink.chunk(&line).is_err() {
+                let payload = format!("{{\"row\":{},\"token\":{}}}", ev.row, ev.token);
+                let frame = if sse {
+                    format!("data: {payload}\n\n")
+                } else {
+                    format!("{payload}\n")
+                };
+                if sink.chunk(&frame).is_err() {
                     canceller.cancel();
                     gone = true;
                 } else {
@@ -520,11 +559,16 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 .map_err(|_| ApiError::new(500, "engine thread died"))
                 .and_then(|r| r);
             if !gone {
-                let line = match done {
-                    Ok(j) => format!("{}\n", Json::obj().set("done", j)),
-                    Err(e) => e.to_stream_line(),
+                let (event_name, payload) = match done {
+                    Ok(j) => ("done", Json::obj().set("done", j).to_string()),
+                    Err(e) => ("error", e.to_stream_json()),
                 };
-                let _ = sink.chunk(&line);
+                let frame = if sse {
+                    format!("event: {event_name}\ndata: {payload}\n\n")
+                } else {
+                    format!("{payload}\n")
+                };
+                let _ = sink.chunk(&frame);
                 let _ = sink.finish();
             }
             None
@@ -690,6 +734,44 @@ mod tests {
         client.gate().begin_drain();
         let resp = server.dispatch(&post_generate(body));
         assert_eq!(resp.status, 503, "{}", resp.body);
+    }
+
+    #[test]
+    fn healthz_and_readyz_track_restore_and_drain() {
+        let client =
+            spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let server = build_server(Arc::clone(&client));
+        let get = |path: &str| crate::server::http::HttpRequest {
+            method: "GET".into(),
+            path: path.into(),
+            query: String::new(),
+            headers: Default::default(),
+            body: String::new(),
+        };
+        let ready_of = |body: &str| parse_json(body).unwrap().req("ready").as_bool().unwrap();
+
+        // Up and ready once the engine thread finished its restore.
+        assert_eq!(server.dispatch(&get("/healthz")).status, 200);
+        let resp = server.dispatch(&get("/readyz"));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert!(ready_of(&resp.body));
+
+        // While restoring, /readyz holds traffic but /healthz stays green.
+        client.gate().set_restoring(true);
+        assert_eq!(server.dispatch(&get("/healthz")).status, 200);
+        let resp = server.dispatch(&get("/readyz"));
+        assert_eq!(resp.status, 503, "{}", resp.body);
+        assert!(!ready_of(&resp.body));
+        client.gate().set_restoring(false);
+        assert_eq!(server.dispatch(&get("/readyz")).status, 200);
+
+        // Draining also drops readiness; liveness is unaffected.
+        client.gate().begin_drain();
+        let resp = server.dispatch(&get("/readyz"));
+        assert_eq!(resp.status, 503, "{}", resp.body);
+        let j = parse_json(&resp.body).unwrap();
+        assert_eq!(j.req("draining").as_bool(), Some(true));
+        assert_eq!(server.dispatch(&get("/healthz")).status, 200);
     }
 
     #[test]

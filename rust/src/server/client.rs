@@ -17,11 +17,28 @@ pub fn send_request(
     path: &str,
     body: &str,
 ) -> std::io::Result<()> {
+    send_request_with(stream, method, path, body, &[])
+}
+
+/// [`send_request`] with extra request headers (e.g. `Accept:
+/// text/event-stream` to opt into SSE framing on `/generate`).
+pub fn send_request_with(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: &str,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
     write!(
         stream,
-        "{method} {path} HTTP/1.1\r\nHost: loadgen\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "{method} {path} HTTP/1.1\r\nHost: loadgen\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     )?;
+    for (k, v) in extra_headers {
+        write!(stream, "{k}: {v}\r\n")?;
+    }
+    stream.write_all(b"\r\n")?;
+    stream.write_all(body.as_bytes())?;
     stream.flush()
 }
 

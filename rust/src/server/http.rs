@@ -283,14 +283,29 @@ impl<'a> ChunkSink<'a> {
     /// Write the status line + chunked-framing headers. Must be called
     /// exactly once, before any chunk.
     pub fn begin(&mut self, status: u16, content_type: &str) -> std::io::Result<()> {
+        self.begin_with(status, content_type, &[])
+    }
+
+    /// Like [`ChunkSink::begin`] with extra response headers (SSE wants
+    /// `Cache-Control: no-cache` so proxies don't buffer the stream).
+    pub fn begin_with(
+        &mut self,
+        status: u16,
+        content_type: &str,
+        extra_headers: &[(&str, &str)],
+    ) -> std::io::Result<()> {
         assert!(!self.begun, "ChunkSink::begin called twice");
         write!(
             self.w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n",
             status,
             status_text(status),
             content_type
         )?;
+        for (k, v) in extra_headers {
+            write!(self.w, "{k}: {v}\r\n")?;
+        }
+        self.w.write_all(b"\r\n")?;
         self.w.flush()?;
         self.begun = true;
         Ok(())

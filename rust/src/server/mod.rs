@@ -11,7 +11,7 @@ pub use api::{
     build_server, parse_generate_body, spawn_engine_with, spawn_native_engine, ApiError,
     EngineClient,
 };
-pub use client::{send_request, ClientResponse};
+pub use client::{send_request, send_request_with, ClientResponse};
 pub use http::{
     connect_retry, ChunkSink, HttpRequest, HttpResponse, HttpServer, ParseError, Shutdown,
     StreamHandler,

@@ -26,6 +26,12 @@
 //! hit counts, and the disabled cost is one TLS lookup on an empty map.
 //! Tests arm points programmatically with [`set`] (replacing the env
 //! config for that thread) and disarm with [`clear`].
+//!
+//! Durable-cache sites (PR 9): `snap_write_err` fails the snapshot
+//! commit after the temp write (the prior image must survive),
+//! `snap_read_corrupt` makes restore treat a record as
+//! checksum-mismatched, and `spill_io_err` fails the spill write
+//! mid-eviction (the entry is dropped instead of demoted).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

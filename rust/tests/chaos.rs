@@ -264,6 +264,109 @@ fn drain_finishes_active_wave_and_503s_parked_requests() {
     assert_clean(&e);
 }
 
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bifattn-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn durable_engine(dir: &std::path::Path, entries: usize, spill: usize) -> Engine<NativeBackend> {
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_cache_entries = entries;
+    cfg.cache_dir = Some(dir.to_path_buf());
+    cfg.spill_bytes = spill;
+    Engine::native("pico-mq", 0, cfg).unwrap()
+}
+
+#[test]
+fn kill_mid_snapshot_preserves_the_prior_image() {
+    failpoint::clear();
+    let dir = tmpdir("midsnap");
+    let e = durable_engine(&dir, 16, 0);
+    e.generate(&req(1, "1+1=", 2, 4)).unwrap();
+    e.snapshot_now().unwrap(); // durable image v1: one node
+    e.generate(&req(2, "2+2=", 2, 4)).unwrap();
+
+    // "kill" the next commit after the temp write but before the atomic
+    // rename — exactly the torn-commit window a SIGKILL would hit
+    failpoint::set("snap_write_err=1@1");
+    let err = e.snapshot_now().unwrap_err();
+    assert!(format!("{err:#}").contains("failpoint snap_write_err injected"), "{err:#}");
+    failpoint::clear();
+    drop(e);
+
+    // the prior image survives untouched: only the v1 node restores, and
+    // the stray .tmp from the failed commit is swept on reopen
+    let e2 = durable_engine(&dir, 16, 0);
+    assert_eq!(e2.persist.borrow().as_ref().unwrap().counters.restore_nodes, 1);
+    assert!(e2.generate(&req(3, "1+1=", 2, 4)).unwrap().timing.cache_hit_tokens > 0);
+    assert_eq!(e2.generate(&req(4, "2+2=", 2, 4)).unwrap().timing.cache_hit_tokens, 0);
+    let leftover_tmp = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|f| f.ok())
+        .any(|f| f.file_name().to_string_lossy().ends_with(".tmp"));
+    assert!(!leftover_tmp, "torn commit temp file must be swept");
+    assert_clean(&e2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snap_read_corrupt_drops_one_record_and_serves_cold() {
+    failpoint::clear();
+    let dir = tmpdir("readcorrupt");
+    let e = durable_engine(&dir, 16, 0);
+    e.generate(&req(1, "1+1=", 2, 4)).unwrap();
+    e.generate(&req(2, "2+2=", 2, 4)).unwrap();
+    e.snapshot_now().unwrap();
+    drop(e);
+
+    // restore treats the first record as checksum-mismatched: it is
+    // dropped (counted), the second restores, nothing panics or errors
+    failpoint::set("snap_read_corrupt=1@1");
+    let e2 = durable_engine(&dir, 16, 0);
+    failpoint::clear();
+    {
+        let p = e2.persist.borrow();
+        let c = p.as_ref().unwrap().counters;
+        assert_eq!(c.restore_nodes, 1);
+        assert_eq!(c.restore_dropped, 1);
+        assert_eq!(c.checksum_failures, 1);
+    }
+    assert_eq!(e2.generate(&req(3, "1+1=", 2, 4)).unwrap().timing.cache_hit_tokens, 0);
+    assert!(e2.generate(&req(4, "2+2=", 2, 4)).unwrap().timing.cache_hit_tokens > 0);
+    assert_clean(&e2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_io_err_drops_the_entry_cleanly() {
+    failpoint::clear();
+    let dir = tmpdir("spillerr");
+    let e = durable_engine(&dir, 1, 64 << 20);
+    e.generate(&req(1, "1+1=", 2, 4)).unwrap();
+
+    // the second prompt evicts the first; its demotion to disk fails —
+    // the entry is dropped (old behavior), never half-written
+    failpoint::set("spill_io_err=1@1");
+    e.generate(&req(2, "2+2=", 2, 4)).unwrap();
+    failpoint::clear();
+    {
+        let p = e.persist.borrow();
+        let store = p.as_ref().unwrap();
+        assert_eq!(store.counters.spill_errors, 1);
+        assert_eq!(store.counters.spills, 0);
+        assert_eq!(store.spilled_entries(), 0, "failed spill leaves no index entry");
+    }
+    // no disk copy: the first prompt is simply cold again; the resident
+    // cache and KV accounting are unperturbed
+    let redo = e.generate(&req(3, "1+1=", 2, 4)).unwrap();
+    assert_eq!(redo.timing.cache_hit_tokens, 0);
+    assert_eq!(redo.completions.len(), 2);
+    assert_clean(&e);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn ambient_env_failpoints_do_not_break_engine_hygiene() {
     // Deliberately does NOT clear the registry: whatever spec CI put in

@@ -1,0 +1,184 @@
+//! Durable prefix cache, end-to-end on the native backend: snapshot →
+//! restart → warm hit with bitwise-identical completions and zero
+//! upload; corrupted/truncated snapshots degrade to cold prefill (never
+//! wrong tokens, never a panic); the spill tier demotes LRU victims to
+//! disk and promotes them back checksum-verified.
+
+use bifurcated_attn::coordinator::{
+    Engine, EngineConfig, GenerationRequest, ModePolicy, SamplingParams,
+};
+use bifurcated_attn::corpus;
+use bifurcated_attn::runtime::models::DecodeMode;
+
+fn req(id: u64, prompt: &str, n: usize, seed: u64) -> GenerationRequest {
+    GenerationRequest {
+        id,
+        prompt: prompt.into(),
+        params: SamplingParams {
+            n,
+            temperature: 0.8,
+            top_p: 0.95,
+            max_tokens: 6,
+            stop_token: Some(corpus::SEMI),
+            seed,
+            mode: None,
+            deadline_ms: None,
+        },
+    }
+}
+
+fn texts(r: &bifurcated_attn::coordinator::RequestResult) -> Vec<String> {
+    r.completions.iter().map(|c| c.text.clone()).collect()
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("bifattn-persist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn warm_restart_reproduces_cold_with_zero_upload() {
+    let prompt = "10+2=12;11+3=14;12+4=";
+    let dir = tmpdir("restart");
+    let mut cfg = EngineConfig::default();
+    cfg.cache_dir = Some(dir.clone());
+    let engine = Engine::native("pico-mq", 0, cfg.clone()).unwrap();
+    let prompt_len = engine.tokenize_prompt(prompt).unwrap().len();
+    let cold = engine.generate(&req(7, prompt, 8, 5)).unwrap();
+    assert_eq!(cold.mode_used, DecodeMode::Bifurcated);
+    assert!(cold.timing.upload_bytes > 0, "cold request uploads the context");
+    engine.snapshot_now().unwrap();
+    drop(engine);
+
+    // "restart": a fresh engine over the same cache dir restores the node
+    let engine2 = Engine::native("pico-mq", 0, cfg).unwrap();
+    {
+        let p = engine2.persist.borrow();
+        let c = p.as_ref().unwrap().counters;
+        assert_eq!(c.restore_nodes, 1, "one node restored");
+        assert_eq!(c.restore_dropped, 0);
+        assert_eq!(c.checksum_failures, 0);
+        assert!(c.restore_bytes > 0);
+    }
+    let warm = engine2.generate(&req(7, prompt, 8, 5)).unwrap();
+    assert_eq!(texts(&warm), texts(&cold), "restored node must reproduce cold bitwise");
+    assert_eq!(warm.timing.cache_hit_tokens, prompt_len);
+    assert_eq!(warm.timing.upload_bytes, 0, "warm restart skips the upload");
+    let m = engine2.metrics_report();
+    assert_eq!(m.req("persist").f64_of("restore_nodes"), 1.0);
+    engine2.cache.borrow().check_invariants(&engine2.kv.borrow()).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_snapshot_record_degrades_to_cold_prefill() {
+    let dir = tmpdir("corrupt");
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    cfg.cache_dir = Some(dir.clone());
+    let engine = Engine::native("pico-mq", 0, cfg.clone()).unwrap();
+    engine.generate(&req(1, "1+1=", 4, 2)).unwrap();
+    let cold2 = engine.generate(&req(2, "2+2=", 4, 3)).unwrap();
+    engine.snapshot_now().unwrap();
+    drop(engine);
+
+    // flip one payload byte in the second (last-written) record
+    let snap = dir.join("snapshot.bin");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let n = bytes.len();
+    bytes[n - 9] ^= 0x40;
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let engine2 = Engine::native("pico-mq", 0, cfg).unwrap();
+    {
+        let p = engine2.persist.borrow();
+        let c = p.as_ref().unwrap().counters;
+        assert_eq!(c.restore_nodes, 1, "only the intact record restores");
+        assert_eq!(c.restore_dropped, 1, "the flipped record is dropped, not trusted");
+        assert_eq!(c.checksum_failures, 1);
+    }
+    // the survivor is warm, the corrupted prefix serves cold — and both
+    // still produce exactly the completions a cold engine produces
+    assert!(engine2.generate(&req(3, "1+1=", 4, 2)).unwrap().timing.cache_hit_tokens > 0);
+    let redone = engine2.generate(&req(2, "2+2=", 4, 3)).unwrap();
+    assert_eq!(redone.timing.cache_hit_tokens, 0, "corrupt record must not serve");
+    assert_eq!(texts(&redone), texts(&cold2));
+    let m = engine2.metrics_report();
+    assert_eq!(m.req("persist").f64_of("checksum_failures"), 1.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_snapshot_drops_only_the_torn_tail() {
+    let dir = tmpdir("truncate");
+    let mut cfg = EngineConfig::default();
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    cfg.cache_dir = Some(dir.clone());
+    let engine = Engine::native("pico-mq", 0, cfg.clone()).unwrap();
+    engine.generate(&req(1, "1+1=", 4, 2)).unwrap();
+    engine.generate(&req(2, "2+2=", 4, 3)).unwrap();
+    engine.snapshot_now().unwrap();
+    drop(engine);
+
+    // simulate a torn write: the file ends mid-record
+    let snap = dir.join("snapshot.bin");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let n = bytes.len();
+    bytes.truncate(n - 5);
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let engine2 = Engine::native("pico-mq", 0, cfg).unwrap();
+    {
+        let p = engine2.persist.borrow();
+        let c = p.as_ref().unwrap().counters;
+        assert_eq!(c.restore_nodes, 1);
+        assert_eq!(c.restore_dropped, 1);
+        assert_eq!(c.checksum_failures, 0, "a torn tail is not a checksum failure");
+    }
+    assert!(engine2.generate(&req(3, "1+1=", 4, 2)).unwrap().timing.cache_hit_tokens > 0);
+    assert_eq!(engine2.generate(&req(4, "2+2=", 4, 3)).unwrap().timing.cache_hit_tokens, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spilled_node_promotes_back_bit_exact() {
+    let dir = tmpdir("spill");
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_cache_entries = 1;
+    cfg.cache_dir = Some(dir.clone());
+    cfg.spill_bytes = 64 << 20;
+    cfg.scheduler.policy = ModePolicy::Force(DecodeMode::Bifurcated);
+    let engine = Engine::native("pico-mq", 0, cfg).unwrap();
+    let prompt_len = engine.tokenize_prompt("1+1=").unwrap().len();
+
+    let cold = engine.generate(&req(1, "1+1=", 4, 9)).unwrap();
+    engine.generate(&req(2, "2+2=", 4, 10)).unwrap(); // evicts "1+1=" → spill
+    {
+        let p = engine.persist.borrow();
+        let store = p.as_ref().unwrap();
+        assert_eq!(store.counters.spills, 1);
+        assert_eq!(store.spilled_entries(), 1);
+        assert!(store.spilled_bytes() > 0);
+    }
+
+    // re-requesting the spilled prefix promotes it: full warm hit, no
+    // upload accounted to the request, completions bitwise-identical
+    let promoted = engine.generate(&req(1, "1+1=", 4, 9)).unwrap();
+    assert_eq!(texts(&promoted), texts(&cold), "promotion must be bit-exact");
+    assert_eq!(promoted.timing.cache_hit_tokens, prompt_len);
+    assert_eq!(promoted.timing.upload_bytes, 0);
+    {
+        let p = engine.persist.borrow();
+        let c = p.as_ref().unwrap().counters;
+        assert_eq!(c.promotes, 1);
+        assert_eq!(c.checksum_failures, 0);
+        assert_eq!(c.spills, 2, "the promotion evicted+spilled the other node");
+    }
+    let m = engine.metrics_report();
+    assert_eq!(m.req("persist").f64_of("promotes"), 1.0);
+    engine.cache.borrow().check_invariants(&engine.kv.borrow()).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -11,7 +11,7 @@ use bifurcated_attn::coordinator::{rerank_top_k, SamplerBatch, Scheduler, Schedu
 use bifurcated_attn::evalharness::pass_at_k;
 use bifurcated_attn::kvcache::manager::KvManager;
 use bifurcated_attn::kvcache::BlockAllocator;
-use bifurcated_attn::prefixcache::PrefixCache;
+use bifurcated_attn::prefixcache::{store, PrefixCache};
 use bifurcated_attn::runtime::models::DecodeMode;
 use bifurcated_attn::runtime::{Backend, HostTensor, NativeBackend};
 use bifurcated_attn::util::propcheck::forall;
@@ -514,6 +514,100 @@ fn prop_reranker_output_sorted_unique_bounded() {
                     .fold(f64::NEG_INFINITY, f64::max);
                 if first.mean_logp() + 1e-12 < global {
                     return Err("top-1 is not the argmax".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn rand_tensor(rng: &mut Pcg) -> HostTensor {
+    let dims: Vec<usize> = (0..rng.below(3) + 1).map(|_| rng.below(4) + 1).collect();
+    let numel: usize = dims.iter().product();
+    HostTensor::from_f32((0..numel).map(|_| rng.f32() * 4.0 - 2.0).collect(), &dims)
+}
+
+fn rand_records(rng: &mut Pcg) -> Vec<store::NodeRecord> {
+    (0..rng.below(5))
+        .map(|_| store::NodeRecord {
+            tokens: (0..rng.below(6) + 1).map(|_| rng.below(4096) as i32).collect(),
+            last_used: rng.next_u64() % 1000,
+            logits: (0..rng.below(8)).map(|_| rng.f32()).collect(),
+            kc: rand_tensor(rng),
+            vc: rand_tensor(rng),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_snapshot_roundtrip_is_bit_exact() {
+    // Any record set survives encode → frame → decode with bit-identical
+    // tokens, logits, tensors, and LRU stamps — and a snapshot written
+    // under one model fingerprint restores nothing under another.
+    forall(
+        "snapshot-roundtrip",
+        120,
+        |rng| rand_records(rng),
+        |recs| {
+            let payloads: Vec<Vec<u8>> = recs
+                .iter()
+                .map(|r| store::encode_record(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used))
+                .collect();
+            let image = store::encode_snapshot("prop-fp", &payloads);
+            let (got, stats) = store::decode_snapshot(&image, "prop-fp");
+            if stats.dropped != 0 || stats.checksum_failures != 0 {
+                return Err(format!("clean image lost records: {stats:?}"));
+            }
+            if stats.nodes as usize != recs.len() {
+                return Err(format!("stats.nodes {} != {} records", stats.nodes, recs.len()));
+            }
+            if &got != recs {
+                return Err("decoded records differ from what was written".into());
+            }
+            let (other, _) = store::decode_snapshot(&image, "other-model");
+            if !other.is_empty() {
+                return Err("fingerprint mismatch must restore nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_snapshot_decode_survives_truncation_and_bit_flips() {
+    // Arbitrarily truncated and/or bit-flipped images must never panic
+    // the decoder and must never yield a record that was not written
+    // verbatim — the per-record CRC gate admits no mutated bytes.
+    forall(
+        "snapshot-fuzz",
+        250,
+        |rng| {
+            let recs = rand_records(rng);
+            let payloads: Vec<Vec<u8>> = recs
+                .iter()
+                .map(|r| store::encode_record(&r.tokens, &r.logits, &r.kc, &r.vc, r.last_used))
+                .collect();
+            let mut image = store::encode_snapshot("prop-fp", &payloads);
+            if rng.below(2) == 0 {
+                let cut = rng.below(image.len() + 1);
+                image.truncate(cut);
+            }
+            if !image.is_empty() {
+                for _ in 0..rng.below(4) {
+                    let i = rng.below(image.len());
+                    image[i] ^= 1u8 << rng.below(8);
+                }
+            }
+            (recs, image)
+        },
+        |(recs, image)| {
+            let (got, stats) = store::decode_snapshot(image, "prop-fp");
+            if got.len() != stats.nodes as usize {
+                return Err(format!("stats.nodes {} != {} records", stats.nodes, got.len()));
+            }
+            for g in &got {
+                if !recs.iter().any(|r| r == g) {
+                    return Err("decode yielded a record that was never written".into());
                 }
             }
             Ok(())

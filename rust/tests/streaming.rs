@@ -24,7 +24,8 @@ use bifurcated_attn::corpus;
 use bifurcated_attn::runtime::models::DecodeMode;
 use bifurcated_attn::runtime::{NativeBackend, TokenizerInfo};
 use bifurcated_attn::server::{
-    build_server, connect_retry, send_request, spawn_native_engine, ClientResponse, Shutdown,
+    build_server, connect_retry, send_request, send_request_with, spawn_native_engine,
+    ClientResponse, Shutdown,
 };
 use bifurcated_attn::util::json;
 
@@ -402,6 +403,53 @@ fn http_stream_query_flag_equals_body_flag() {
     assert!(!resp.is_chunked(), "no flag means buffered");
     let j = json::parse(&resp.read_body().unwrap()).unwrap();
     assert_eq!(j.req("completions").as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn sse_framing_carries_byte_identical_payloads() {
+    // A fresh server per request means both requests are id 1, so the SSE
+    // and ndjson runs draw identical tokens — every JSON payload (token
+    // events and the terminal done object) must then match byte for byte;
+    // only the framing differs.
+    let body = format!(
+        r#"{{"prompt":"{PROMPT}","n":2,"max_tokens":4,"stop":null,"mode":"bifurcated","stream":true}}"#
+    );
+
+    let srv = TestServer::start();
+    let mut resp = srv.post("/generate", &body);
+    assert_eq!(resp.status, 200);
+    let ndjson: Vec<String> =
+        resp.read_body().unwrap().lines().filter(|l| !l.is_empty()).map(String::from).collect();
+    drop(srv);
+
+    let srv = TestServer::start();
+    let mut s = connect_retry(srv.addr, Duration::from_secs(5)).unwrap();
+    send_request_with(&mut s, "POST", "/generate", &body, &[("Accept", "text/event-stream")])
+        .unwrap();
+    let mut resp = ClientResponse::read_head(s).unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.is_chunked(), "SSE responses still use chunked transfer");
+    assert_eq!(resp.headers.get("content-type").map(String::as_str), Some("text/event-stream"));
+    assert_eq!(resp.headers.get("cache-control").map(String::as_str), Some("no-cache"));
+    let text = resp.read_body().unwrap();
+
+    let frames: Vec<&str> = text.split("\n\n").filter(|f| !f.is_empty()).collect();
+    assert_eq!(frames.len(), ndjson.len(), "one SSE frame per ndjson line:\n{text}");
+    for (i, (frame, line)) in frames.iter().zip(&ndjson).enumerate() {
+        let payload = if i == frames.len() - 1 {
+            frame
+                .strip_prefix("event: done\n")
+                .expect("terminal frame must be `event: done`")
+                .strip_prefix("data: ")
+                .expect("terminal frame must carry a data line")
+        } else {
+            frame.strip_prefix("data: ").expect("token frames are bare data events")
+        };
+        assert_eq!(payload, line, "frame {i}: payload must be byte-identical to ndjson");
+    }
+    // sanity: the terminal payload really carries the buffered result
+    let j = json::parse(ndjson.last().unwrap()).unwrap();
+    assert_eq!(j.req("done").req("completions").as_arr().unwrap().len(), 2);
 }
 
 #[test]
