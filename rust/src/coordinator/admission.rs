@@ -30,6 +30,10 @@ pub enum Admission {
     Shed { retry_after_ms: u64, queue_depth: usize },
     /// Server is draining for shutdown — answer 503.
     Draining,
+    /// The supervisor is rebuilding the engine after a fault — answer
+    /// 503 + `Retry-After` (the rebuild is bounded; clients should come
+    /// back).
+    Rebuilding { retry_after_ms: u64 },
 }
 
 /// RAII in-flight slot: decrements the gate's depth on drop so error
@@ -59,6 +63,11 @@ pub struct AdmissionGate {
     /// True while the engine thread is restoring a cache snapshot at
     /// startup — `/readyz` answers 503 so orchestrators hold traffic.
     restoring: AtomicBool,
+    /// True while the supervisor is rebuilding a poisoned engine —
+    /// `/readyz` answers 503 and new requests get 503 + `Retry-After`.
+    rebuilding: AtomicBool,
+    /// Monotonic sequence behind the deterministic Retry-After jitter.
+    jitter_seq: AtomicU64,
     inflight: AtomicUsize,
     peak_inflight: AtomicUsize,
     /// Engine-published KV pressure, per mille of non-reclaimable blocks.
@@ -69,6 +78,7 @@ pub struct AdmissionGate {
     step_us_ewma: AtomicU64,
     shed_requests: AtomicU64,
     drain_rejected: AtomicU64,
+    rebuild_rejected: AtomicU64,
     brownout_clamps: AtomicU64,
 }
 
@@ -99,6 +109,10 @@ impl AdmissionGate {
             self.drain_rejected.fetch_add(1, Ordering::SeqCst);
             return Admission::Draining;
         }
+        if self.rebuilding.load(Ordering::SeqCst) {
+            self.rebuild_rejected.fetch_add(1, Ordering::SeqCst);
+            return Admission::Rebuilding { retry_after_ms: self.retry_after_ms() };
+        }
         let depth = self.inflight.load(Ordering::SeqCst);
         let max = self.max_queue_depth.load(Ordering::SeqCst);
         let over_depth = max > 0 && depth >= max;
@@ -116,11 +130,19 @@ impl AdmissionGate {
 
     /// Suggested client back-off: the backlog ahead of a retrying
     /// client times the observed per-request cadence, floored so cold
-    /// servers don't advertise a zero wait.
+    /// servers don't advertise a zero wait, then spread ±25% by a
+    /// deterministic jitter — a herd of clients shed (or failed over a
+    /// rebuild) at the same instant would otherwise all come back in
+    /// one synchronized stampede.
     pub fn retry_after_ms(&self) -> u64 {
         let depth = self.inflight.load(Ordering::SeqCst) as u64;
         let req_ms = self.request_us_ewma.load(Ordering::SeqCst) / 1000;
-        ((depth + 1) * req_ms).max(MIN_RETRY_AFTER_MS)
+        let base = ((depth + 1) * req_ms).max(MIN_RETRY_AFTER_MS);
+        // Seeded counter hash -> per-mille factor in [750, 1250]. The
+        // result never drops below 3/4 of the cold-start floor.
+        let n = self.jitter_seq.fetch_add(1, Ordering::Relaxed);
+        let milli = 750 + mix64(n ^ JITTER_SEED) % 501;
+        (base * milli / 1000).max(MIN_RETRY_AFTER_MS * 3 / 4)
     }
 
     /// Engine thread: publish current KV pressure (fraction in [0, 1]).
@@ -174,6 +196,16 @@ impl AdmissionGate {
         self.restoring.load(Ordering::SeqCst)
     }
 
+    /// Supervisor: mark the engine-rebuild window (poisoned or panicked
+    /// engine thread being replaced from the last snapshot).
+    pub fn set_rebuilding(&self, on: bool) {
+        self.rebuilding.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_rebuilding(&self) -> bool {
+        self.rebuilding.load(Ordering::SeqCst)
+    }
+
     pub fn drain_timeout_ms(&self) -> u64 {
         self.drain_timeout_ms.load(Ordering::SeqCst)
     }
@@ -214,10 +246,28 @@ impl AdmissionGate {
             .set("step_ms_ewma", Json::Num(self.step_us_ewma.load(Ordering::SeqCst) as f64 / 1000.0))
             .set("shed_requests", Json::Num(self.shed_requests.load(Ordering::SeqCst) as f64))
             .set("drain_rejected", Json::Num(self.drain_rejected.load(Ordering::SeqCst) as f64))
+            .set(
+                "rebuild_rejected",
+                Json::Num(self.rebuild_rejected.load(Ordering::SeqCst) as f64),
+            )
             .set("brownout_clamps", Json::Num(self.brownout_clamps.load(Ordering::SeqCst) as f64))
             .set("draining", Json::Bool(self.draining.load(Ordering::SeqCst)))
             .set("restoring", Json::Bool(self.restoring.load(Ordering::SeqCst)))
+            .set("rebuilding", Json::Bool(self.rebuilding.load(Ordering::SeqCst)))
     }
+}
+
+/// Seed folded into the jitter counter so the factor stream is stable
+/// across runs but uncorrelated with the raw sequence.
+const JITTER_SEED: u64 = 0xB1F0_CA7E_5EED_0001;
+
+/// SplitMix64 finalizer — a stateless avalanche mix (same construction
+/// as [`crate::util::prng`]'s seeding).
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
 }
 
 fn to_milli(fraction: f64) -> usize {
@@ -275,7 +325,7 @@ mod tests {
         match g.try_admit() {
             Admission::Shed { queue_depth, retry_after_ms } => {
                 assert_eq!(queue_depth, 2);
-                assert!(retry_after_ms >= MIN_RETRY_AFTER_MS);
+                assert!(retry_after_ms >= MIN_RETRY_AFTER_MS * 3 / 4, "jittered floor");
             }
             _ => panic!("third request must shed at depth 2"),
         }
@@ -322,7 +372,11 @@ mod tests {
     #[test]
     fn retry_after_scales_with_observed_cadence_and_depth() {
         let g = AdmissionGate::new();
-        assert_eq!(g.retry_after_ms(), MIN_RETRY_AFTER_MS, "cold gate uses the floor");
+        let cold = g.retry_after_ms();
+        assert!(
+            (MIN_RETRY_AFTER_MS * 3 / 4..=MIN_RETRY_AFTER_MS * 5 / 4).contains(&cold),
+            "cold gate uses the floor ±25% jitter, got {cold}"
+        );
         for _ in 0..64 {
             g.observe_request_ms(2000.0);
         }
@@ -333,7 +387,52 @@ mod tests {
         let suggestion = g.retry_after_ms();
         assert!(
             (3000..=5000).contains(&suggestion),
-            "2 queued × ~2000ms cadence, got {suggestion}"
+            "2 queued × ~2000ms cadence ±25%, got {suggestion}"
         );
+    }
+
+    #[test]
+    fn retry_after_jitter_spreads_and_respects_the_floor() {
+        let g = AdmissionGate::new();
+        // Cold gate: the base is the 1000ms floor, so every suggestion
+        // must land in [750, 1250] and the sequence must actually spread
+        // (not collapse onto one value — that's the stampede).
+        let suggestions: Vec<u64> = (0..64).map(|_| g.retry_after_ms()).collect();
+        let lo = MIN_RETRY_AFTER_MS * 3 / 4;
+        let hi = MIN_RETRY_AFTER_MS * 5 / 4;
+        for &s in &suggestions {
+            assert!((lo..=hi).contains(&s), "suggestion {s} outside [{lo}, {hi}]");
+        }
+        let distinct: std::collections::BTreeSet<u64> = suggestions.iter().copied().collect();
+        assert!(distinct.len() > 16, "expected a spread, got {} distinct values", distinct.len());
+        let min = *suggestions.iter().min().unwrap();
+        let max = *suggestions.iter().max().unwrap();
+        assert!(min < MIN_RETRY_AFTER_MS * 9 / 10, "low half of the band unused: min={min}");
+        assert!(max > MIN_RETRY_AFTER_MS * 11 / 10, "high half of the band unused: max={max}");
+        // Deterministic: a fresh gate replays the identical sequence.
+        let g2 = AdmissionGate::new();
+        let replay: Vec<u64> = (0..64).map(|_| g2.retry_after_ms()).collect();
+        assert_eq!(suggestions, replay);
+    }
+
+    #[test]
+    fn rebuilding_rejects_with_retry_after_until_cleared() {
+        let g = AdmissionGate::new();
+        assert!(!g.is_rebuilding());
+        g.set_rebuilding(true);
+        match g.try_admit() {
+            Admission::Rebuilding { retry_after_ms } => {
+                assert!(retry_after_ms >= MIN_RETRY_AFTER_MS * 3 / 4);
+            }
+            _ => panic!("rebuilding gate must turn requests away"),
+        }
+        assert_eq!(g.snapshot_json().get("rebuild_rejected").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(g.snapshot_json().get("rebuilding"), Some(&Json::Bool(true)));
+        g.set_rebuilding(false);
+        assert!(matches!(g.try_admit(), Admission::Admit(_)));
+        // Draining outranks rebuilding: shutdown wins the race.
+        g.set_rebuilding(true);
+        g.begin_drain();
+        assert!(matches!(g.try_admit(), Admission::Draining));
     }
 }

@@ -36,6 +36,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -318,6 +319,15 @@ pub struct Batcher<'e, B: Backend> {
     avg_request_ms: f64,
     /// Stamped at the first scheduling round that saw the gate draining.
     drain_started: Option<Instant>,
+    /// Liveness epoch stamped once per scheduling round (step boundary
+    /// or idle tick) — one relaxed store when healthy. The supervisor's
+    /// watchdog reads it; `None` for embedded runs (tests, benches).
+    heartbeat: Option<Arc<AtomicU64>>,
+    /// Abandon fence, set by the supervisor after declaring this engine
+    /// generation poisoned: a fenced batcher exits at the next round
+    /// WITHOUT the drain snapshot, so a test-released zombie can never
+    /// clobber the replacement engine's snapshot lineage.
+    fence: Option<Arc<AtomicBool>>,
 }
 
 impl<'e, B: Backend> Batcher<'e, B> {
@@ -343,6 +353,8 @@ impl<'e, B: Backend> Batcher<'e, B> {
             gate: None,
             avg_request_ms: 0.0,
             drain_started: None,
+            heartbeat: None,
+            fence: None,
         }
     }
 
@@ -354,10 +366,39 @@ impl<'e, B: Backend> Batcher<'e, B> {
         self
     }
 
+    /// Attach the supervisor's liveness epoch — stamped with one relaxed
+    /// store per scheduling round; see [`crate::coordinator::supervisor`].
+    pub fn with_heartbeat(mut self, heartbeat: Arc<AtomicU64>) -> Self {
+        self.heartbeat = Some(heartbeat);
+        self
+    }
+
+    /// Attach the supervisor's abandon fence: once it reads true the
+    /// batcher exits at the next round without touching the snapshot
+    /// store.
+    pub fn with_fence(mut self, fence: Arc<AtomicBool>) -> Self {
+        self.fence = Some(fence);
+        self
+    }
+
     /// Serve jobs until the source closes and every admitted request has
     /// drained.
     pub fn run(&mut self, source: &mut dyn JobSource<B>) {
+        let mut beat: u64 = 0;
         loop {
+            if let Some(hb) = &self.heartbeat {
+                beat += 1;
+                hb.store(beat, Ordering::Relaxed);
+            }
+            if self.fence.as_ref().is_some_and(|f| f.load(Ordering::Relaxed)) {
+                crate::warn_!("engine generation fenced; exiting without drain snapshot");
+                return;
+            }
+            if crate::util::hang::on_engine_thread()
+                && crate::util::failpoint::check("engine_thread_panic").is_some()
+            {
+                panic!("failpoint engine_thread_panic injected");
+            }
             for job in source.poll() {
                 self.admit(job);
             }
@@ -750,6 +791,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
                 if let Some(ms) = crate::util::failpoint::check("decode_slow") {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
+                crate::util::hang::check_decode_hang();
                 crate::fail!("decode_err");
                 if crate::util::failpoint::check("decode_panic").is_some() {
                     panic!("failpoint decode_panic injected");
@@ -1346,6 +1388,7 @@ impl<'e, B: Backend> Batcher<'e, B> {
             if let Some(ms) = crate::util::failpoint::check("decode_slow") {
                 std::thread::sleep(Duration::from_millis(ms));
             }
+            crate::util::hang::check_decode_hang();
             crate::fail!("decode_err");
             if crate::util::failpoint::check("decode_panic").is_some() {
                 panic!("failpoint decode_panic injected");

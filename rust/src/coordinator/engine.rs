@@ -857,6 +857,7 @@ impl<B: Backend> Engine<B> {
                     if let Some(ms) = crate::util::failpoint::check("decode_slow") {
                         std::thread::sleep(Duration::from_millis(ms));
                     }
+                    crate::util::hang::check_decode_hang();
                     crate::fail!("decode_err");
                     if crate::util::failpoint::check("decode_panic").is_some() {
                         panic!("failpoint decode_panic injected");

@@ -68,6 +68,24 @@ impl fmt::Display for ShuttingDown {
 
 impl std::error::Error for ShuttingDown {}
 
+/// Rejected or abandoned because the supervisor declared the engine
+/// thread poisoned (stalled or panicked) and is rebuilding it from the
+/// last snapshot. Maps to HTTP 503 + `Retry-After` — the rebuild is
+/// bounded, so clients should retry rather than fail over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineRebuilding {
+    /// Suggested client back-off while the replacement engine warms up.
+    pub retry_after_ms: u64,
+}
+
+impl fmt::Display for EngineRebuilding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine rebuilding after fault; retry after {} ms", self.retry_after_ms)
+    }
+}
+
+impl std::error::Error for EngineRebuilding {}
+
 /// The request's decode work errored or panicked and the fault was
 /// contained to this request (co-batched lanes continue). Maps to
 /// HTTP 500.
@@ -129,6 +147,10 @@ mod tests {
 
         let e = anyhow::Error::new(ShuttingDown);
         assert!(e.downcast_ref::<ShuttingDown>().is_some());
+
+        let e = anyhow::Error::new(EngineRebuilding { retry_after_ms: 900 }).context("retire");
+        assert_eq!(e.downcast_ref::<EngineRebuilding>().unwrap().retry_after_ms, 900);
+        assert!(format!("{}", e.root_cause()).contains("engine rebuilding"));
     }
 
     #[test]

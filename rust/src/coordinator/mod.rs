@@ -14,13 +14,15 @@ pub mod request;
 pub mod sampler;
 pub mod scheduler;
 pub mod stream;
+pub mod supervisor;
 
 pub use admission::{Admission, AdmissionGate, Ticket};
 pub use batcher::{BatchConfig, BatchJob, Batcher, JobSource, ScriptedSource};
 pub use engine::{wave_seed, Engine, EngineConfig, Prepared};
-pub use errors::{contain_panic, DeadlineExceeded, Shed, ShuttingDown, WaveFault};
+pub use errors::{contain_panic, DeadlineExceeded, EngineRebuilding, Shed, ShuttingDown, WaveFault};
 pub use ranker::rerank_top_k;
 pub use request::{Completion, GenerationRequest, RequestResult, SamplingParams, Timing};
 pub use sampler::SamplerBatch;
 pub use scheduler::{ModePolicy, Scheduler, SchedulerConfig, Wave};
 pub use stream::{Cancelled, Canceller, StreamEvent, StreamHandle};
+pub use supervisor::{supervise, EngineGeneration, InflightGuard, InflightTable, SupervisorStats};

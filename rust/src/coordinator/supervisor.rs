@@ -1,0 +1,488 @@
+//! Engine supervision: heartbeat watchdog, stall escalation, and
+//! snapshot-backed rebuild of a poisoned engine thread.
+//!
+//! PR 8's per-lane containment handles faults *inside* a decode step;
+//! what it cannot reach is the engine thread itself wedging (a stuck
+//! kernel, a pool deadlock) or dying outside the step boundary while
+//! HTTP workers keep feeding a pipeline that will never drain. The
+//! supervisor closes that gap:
+//!
+//! * the [`Batcher`](super::Batcher) stamps a relaxed atomic epoch once
+//!   per scheduling round (step boundary or idle tick — at most ~50 ms
+//!   apart when healthy, one relaxed store on the hot path);
+//! * a watchdog thread ([`supervise`]) watches the epoch; no progress
+//!   for `stall_ms` escalates: dump the trace ring and flight recorder
+//!   to the log, declare the engine **poisoned**, and rebuild;
+//! * rebuild abandons the wedged thread behind an atomic **fence** (a
+//!   fenced batcher exits without touching the snapshot store, so a
+//!   late-released zombie can never clobber the replacement's
+//!   lineage), fails every registered in-flight request with a typed
+//!   [`EngineRebuilding`](super::errors::EngineRebuilding) (503 +
+//!   `Retry-After`), and spawns a fresh engine generation whose
+//!   `Engine::new` restores the prefix cache from the last `--cache-dir`
+//!   snapshot — warm requests after the rebuild are bitwise-identical
+//!   to their pre-fault completions with `upload_bytes == 0`;
+//! * a panicked engine thread (observed via `JoinHandle::join`) takes
+//!   the same rebuild path without waiting out the stall budget.
+//!
+//! The backend-specific plumbing (job channel swap, request registry
+//! wiring) lives in `server::api`; this module owns the generic state
+//! machine so it stays testable without an HTTP stack.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::observability::span;
+use crate::util::json::Json;
+
+/// Default heartbeat stall budget before the watchdog poisons the
+/// engine (`--watchdog-stall-ms`). Healthy idle ticks stamp every
+/// ~50 ms, so anything comfortably above that is a real wedge.
+pub const DEFAULT_STALL_MS: u64 = 10_000;
+
+/// How many trace spans / flight records the stall escalation dumps.
+const DUMP_SPANS: usize = 32;
+const DUMP_FLIGHTS: usize = 16;
+
+/// One spawned engine-thread generation, as the supervisor sees it.
+pub struct EngineGeneration {
+    /// The batcher's liveness epoch (one relaxed store per round).
+    pub heartbeat: Arc<AtomicU64>,
+    /// Abandon fence: set by the supervisor at poison time.
+    pub fence: Arc<AtomicBool>,
+    /// The engine thread itself; `join` distinguishes clean exit from
+    /// panic.
+    pub handle: JoinHandle<()>,
+}
+
+/// All-atomic supervision counters plus the watchdog knob, merged into
+/// `/metrics` as the `supervisor` object by the HTTP layer (the
+/// engine-side `Metrics` cell dies with its generation; these must
+/// survive rebuilds).
+pub struct SupervisorStats {
+    /// Watchdog stall budget in ms (`--watchdog-stall-ms`).
+    stall_ms: AtomicU64,
+    /// The live generation's heartbeat epoch, re-attached per rebuild.
+    heartbeat: Mutex<Arc<AtomicU64>>,
+    stalls_detected: AtomicU64,
+    rebuilds: AtomicU64,
+    failed_inflight: AtomicU64,
+    dedup_hits: AtomicU64,
+    dedup_joins: AtomicU64,
+}
+
+impl SupervisorStats {
+    pub fn new() -> Arc<SupervisorStats> {
+        Arc::new(SupervisorStats {
+            stall_ms: AtomicU64::new(DEFAULT_STALL_MS),
+            heartbeat: Mutex::new(Arc::new(AtomicU64::new(0))),
+            stalls_detected: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            failed_inflight: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            dedup_joins: AtomicU64::new(0),
+        })
+    }
+
+    /// Configure the watchdog stall budget (0 keeps the default). Read
+    /// every poll round, so it can be set after the engine spawned.
+    pub fn set_stall_ms(&self, ms: u64) {
+        if ms > 0 {
+            self.stall_ms.store(ms, Ordering::SeqCst);
+        }
+    }
+
+    pub fn stall_ms(&self) -> u64 {
+        self.stall_ms.load(Ordering::SeqCst)
+    }
+
+    fn attach_heartbeat(&self, hb: Arc<AtomicU64>) {
+        *self.heartbeat.lock().unwrap() = hb;
+    }
+
+    /// Current liveness epoch of the live engine generation.
+    pub fn heartbeats(&self) -> u64 {
+        self.heartbeat.lock().unwrap().load(Ordering::Relaxed)
+    }
+
+    pub fn stalls_detected(&self) -> u64 {
+        self.stalls_detected.load(Ordering::SeqCst)
+    }
+
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::SeqCst)
+    }
+
+    pub fn failed_inflight(&self) -> u64 {
+        self.failed_inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn observe_dedup_hit(&self) {
+        self.dedup_hits.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn observe_dedup_join(&self) {
+        self.dedup_joins.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// The `supervisor` object merged into `/metrics`.
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj()
+            .set("stall_ms", Json::Num(self.stall_ms() as f64))
+            .set("heartbeats", Json::Num(self.heartbeats() as f64))
+            .set("stalls_detected", Json::Num(self.stalls_detected() as f64))
+            .set("rebuilds", Json::Num(self.rebuilds() as f64))
+            .set("failed_inflight", Json::Num(self.failed_inflight() as f64))
+            .set("dedup_hits", Json::Num(self.dedup_hits.load(Ordering::SeqCst) as f64))
+            .set("dedup_joins", Json::Num(self.dedup_joins.load(Ordering::SeqCst) as f64))
+    }
+}
+
+/// Abort callback registered per in-flight request: invoked exactly
+/// once, on the supervisor thread, when the engine is poisoned. The
+/// server registers a closure that resolves the request's reply channel
+/// with a typed `EngineRebuilding` and records the flight outcome.
+type Abort = Box<dyn FnOnce() + Send>;
+
+/// Registry of requests currently inside the engine pipeline. HTTP
+/// workers register before enqueueing and deregister (via the RAII
+/// [`InflightGuard`]) when the reply resolves; the supervisor drains it
+/// wholesale at poison time so no client is left waiting on a thread
+/// that will never answer.
+#[derive(Default)]
+pub struct InflightTable {
+    inner: Mutex<BTreeMap<u64, Abort>>,
+}
+
+impl InflightTable {
+    pub fn new() -> Arc<InflightTable> {
+        Arc::new(InflightTable::default())
+    }
+
+    /// Register `abort` for request `id`; dropping the guard removes it
+    /// without invoking.
+    pub fn register(self: &Arc<Self>, id: u64, abort: Abort) -> InflightGuard {
+        self.inner.lock().unwrap().insert(id, abort);
+        InflightGuard { table: Arc::clone(self), id }
+    }
+
+    /// Poison path: invoke and clear every registered abort. Returns
+    /// how many requests were failed.
+    pub fn fail_all(&self) -> usize {
+        let drained = std::mem::take(&mut *self.inner.lock().unwrap());
+        let n = drained.len();
+        for (_, abort) in drained {
+            abort();
+        }
+        n
+    }
+
+    /// Registered requests right now (test/diagnostic visibility).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn deregister(&self, id: u64) {
+        self.inner.lock().unwrap().remove(&id);
+    }
+}
+
+/// RAII in-flight registration: dropping (reply resolved, handler
+/// unwound) removes the abort without firing it.
+pub struct InflightGuard {
+    table: Arc<InflightTable>,
+    id: u64,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.table.deregister(self.id);
+    }
+}
+
+/// Why the watchdog stopped watching a generation.
+enum Verdict {
+    /// The engine thread returned — clean drain or closed job channel.
+    /// Joining tells clean exit from panic.
+    Finished,
+    /// The heartbeat made no progress for the stall budget.
+    Stalled { silent_ms: u64 },
+}
+
+/// Watch one generation until it finishes or stalls. Polls at 1/8 of
+/// the (live-reconfigurable) stall budget, clamped to [5, 250] ms, so
+/// detection lands within the budget without busy-spinning.
+fn watch(gen: &EngineGeneration, stats: &SupervisorStats) -> Verdict {
+    let mut last_epoch = gen.heartbeat.load(Ordering::Relaxed);
+    let mut last_progress = Instant::now();
+    loop {
+        let stall = stats.stall_ms().max(1);
+        let poll = (stall / 8).clamp(5, 250);
+        std::thread::sleep(Duration::from_millis(poll));
+        if gen.handle.is_finished() {
+            return Verdict::Finished;
+        }
+        let epoch = gen.heartbeat.load(Ordering::Relaxed);
+        if epoch != last_epoch {
+            last_epoch = epoch;
+            last_progress = Instant::now();
+            continue;
+        }
+        let silent = last_progress.elapsed();
+        if silent >= Duration::from_millis(stall) {
+            return Verdict::Stalled { silent_ms: silent.as_millis() as u64 };
+        }
+    }
+}
+
+/// Stall escalation, step one: dump the trace ring and the flight
+/// recorder to the log so the wedge is diagnosable post-mortem even if
+/// the process is killed before `/trace` is scraped.
+fn dump_diagnostics(silent_ms: u64, stall_ms: u64) {
+    crate::warn_!(
+        "watchdog: engine heartbeat silent for {silent_ms} ms (budget {stall_ms} ms); \
+         dumping diagnostics before poisoning"
+    );
+    for r in crate::observability::recorder::snapshot(DUMP_SPANS) {
+        crate::warn_!(
+            "  trace: {} req={} wave={} start_ns={} dur_ns={} args={:?}",
+            r.name,
+            r.req,
+            r.wave,
+            r.start_ns,
+            r.dur_ns,
+            r.args
+        );
+    }
+    for f in crate::observability::flight::recent(DUMP_FLIGHTS) {
+        crate::warn_!(
+            "  flight: id={} outcome={} steps={} tokens={} reason={}",
+            f.id,
+            f.outcome,
+            f.decode_steps,
+            f.generated_tokens,
+            f.reason
+        );
+    }
+}
+
+/// The supervisor loop. Owns the current [`EngineGeneration`]; returns
+/// only when a generation exits cleanly (graceful drain, or every
+/// client handle dropped and the job channel closed).
+///
+/// `respawn` builds the replacement: fresh job channel swapped into the
+/// client's sender slot, fresh backend + worker pool + batcher restored
+/// from the last snapshot. It runs on the supervisor thread and may be
+/// called repeatedly if a rebuild itself fails (retried with backoff —
+/// the gate keeps rejecting with 503 + `Retry-After` meanwhile).
+pub fn supervise(
+    mut gen: EngineGeneration,
+    stats: Arc<SupervisorStats>,
+    gate: Arc<super::AdmissionGate>,
+    inflight: Arc<InflightTable>,
+    mut respawn: impl FnMut() -> anyhow::Result<EngineGeneration>,
+) {
+    loop {
+        stats.attach_heartbeat(Arc::clone(&gen.heartbeat));
+        let verdict = watch(&gen, &stats);
+        let reason: &str = match verdict {
+            Verdict::Finished => match gen.handle.join() {
+                Ok(()) => {
+                    crate::info!("supervisor: engine thread exited cleanly; supervision ends");
+                    return;
+                }
+                Err(_) => {
+                    crate::warn_!("supervisor: engine thread PANICKED; rebuilding");
+                    "engine thread panicked"
+                }
+            },
+            Verdict::Stalled { silent_ms } => {
+                let mut sp = span("supervisor.stall");
+                sp.set_arg(0, silent_ms);
+                stats.stalls_detected.fetch_add(1, Ordering::SeqCst);
+                dump_diagnostics(silent_ms, stats.stall_ms());
+                gen.fence.store(true, Ordering::SeqCst);
+                "engine heartbeat stalled"
+            }
+        };
+        // Poison: reject new work, cut the zombie loose, fail everyone
+        // parked behind it so no client waits on a dead pipeline.
+        gate.set_rebuilding(true);
+        gen.fence.store(true, Ordering::SeqCst);
+        // A failpoint-parked thread unblocks here and exits at the
+        // fence; a genuinely wedged one is simply abandoned.
+        crate::util::hang::release_all();
+        let failed = inflight.fail_all();
+        stats.failed_inflight.fetch_add(failed as u64, Ordering::SeqCst);
+        crate::warn_!(
+            "supervisor: engine poisoned ({reason}); failed {failed} in-flight request(s), \
+             rebuilding from last snapshot"
+        );
+        loop {
+            let mut sp = span("supervisor.rebuild");
+            sp.set_arg(0, failed as u64);
+            match respawn() {
+                Ok(next) => {
+                    gen = next;
+                    break;
+                }
+                Err(e) => {
+                    drop(sp);
+                    crate::warn_!("supervisor: rebuild failed ({e:#}); retrying");
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+            }
+        }
+        stats.rebuilds.fetch_add(1, Ordering::SeqCst);
+        gate.set_rebuilding(false);
+        crate::info!("supervisor: engine rebuilt (generation {})", stats.rebuilds());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn inflight_table_registers_fails_and_releases() {
+        let table = InflightTable::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f1 = Arc::clone(&fired);
+        let g1 = table.register(
+            1,
+            Box::new(move || {
+                f1.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        let f2 = Arc::clone(&fired);
+        let _g2 = table.register(
+            2,
+            Box::new(move || {
+                f2.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        assert_eq!(table.len(), 2);
+        // A resolved request deregisters without firing its abort.
+        drop(g1);
+        assert_eq!(table.len(), 1);
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        // Poison fires the rest exactly once and clears the table.
+        assert_eq!(table.fail_all(), 1);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert!(table.is_empty());
+        assert_eq!(table.fail_all(), 0, "idempotent when already drained");
+    }
+
+    #[test]
+    fn stats_snapshot_carries_all_counters() {
+        let s = SupervisorStats::new();
+        s.set_stall_ms(250);
+        s.set_stall_ms(0); // 0 = keep
+        assert_eq!(s.stall_ms(), 250);
+        s.observe_dedup_hit();
+        s.observe_dedup_join();
+        s.observe_dedup_join();
+        let hb = Arc::new(AtomicU64::new(41));
+        s.attach_heartbeat(Arc::clone(&hb));
+        hb.store(42, Ordering::Relaxed);
+        let j = s.snapshot_json();
+        assert_eq!(j.get("heartbeats").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(j.get("dedup_hits").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("dedup_joins").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("stall_ms").and_then(Json::as_f64), Some(250.0));
+        assert_eq!(j.get("rebuilds").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn watchdog_poisons_a_silent_generation_and_rebuilds() {
+        // A fake "engine thread" that stamps once then goes silent, and a
+        // respawn that produces a healthy replacement which exits when
+        // its fence is set — exercising the full supervise() loop
+        // without a backend.
+        let stats = SupervisorStats::new();
+        stats.set_stall_ms(60);
+        let gate = super::super::AdmissionGate::new();
+        let inflight = InflightTable::new();
+        let aborted = Arc::new(AtomicUsize::new(0));
+        let a = Arc::clone(&aborted);
+        let _guard = inflight.register(
+            7,
+            Box::new(move || {
+                a.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+
+        let silent_gen = || {
+            let hb = Arc::new(AtomicU64::new(0));
+            let fence = Arc::new(AtomicBool::new(false));
+            let (h, f) = (Arc::clone(&hb), Arc::clone(&fence));
+            let handle = std::thread::Builder::new()
+                .name("engine".into())
+                .spawn(move || {
+                    h.store(1, Ordering::Relaxed);
+                    // wedge: stop stamping, wait for the fence
+                    while !f.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+                .unwrap();
+            EngineGeneration { heartbeat: hb, fence, handle }
+        };
+        let healthy_gen = || {
+            let hb = Arc::new(AtomicU64::new(0));
+            let fence = Arc::new(AtomicBool::new(false));
+            let (h, f) = (Arc::clone(&hb), Arc::clone(&fence));
+            let handle = std::thread::Builder::new()
+                .name("engine".into())
+                .spawn(move || {
+                    let mut beat = 0u64;
+                    while !f.load(Ordering::Relaxed) {
+                        beat += 1;
+                        h.store(beat, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+                .unwrap();
+            EngineGeneration { heartbeat: hb, fence, handle }
+        };
+
+        let replacement_fence: Arc<Mutex<Option<Arc<AtomicBool>>>> = Arc::new(Mutex::new(None));
+        let rf = Arc::clone(&replacement_fence);
+        let (sv_stats, sv_gate, sv_inflight) =
+            (Arc::clone(&stats), Arc::clone(&gate), Arc::clone(&inflight));
+        let sup = std::thread::spawn(move || {
+            supervise(silent_gen(), sv_stats, sv_gate, sv_inflight, move || {
+                let g = healthy_gen();
+                *rf.lock().unwrap() = Some(Arc::clone(&g.fence));
+                Ok(g)
+            });
+        });
+
+        // Stall must be detected within a few budgets; the in-flight
+        // request fails; the gate flips rebuilding and back.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while stats.rebuilds() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(stats.stalls_detected(), 1, "stall must be detected");
+        assert_eq!(stats.rebuilds(), 1, "rebuild must complete");
+        assert_eq!(aborted.load(Ordering::SeqCst), 1, "in-flight request aborted");
+        assert_eq!(stats.failed_inflight(), 1);
+        assert!(!gate.is_rebuilding(), "gate clears after rebuild");
+        // Healthy replacement keeps the watchdog quiet.
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(stats.stalls_detected(), 1, "healthy generation must not re-trip");
+        assert!(stats.heartbeats() > 0, "stats track the live generation's epoch");
+        // Clean exit of the replacement ends supervision.
+        replacement_fence.lock().unwrap().as_ref().unwrap().store(true, Ordering::Relaxed);
+        sup.join().unwrap();
+    }
+}

@@ -63,6 +63,7 @@ fn print_usage() {
          \x20              [--max-queue-depth N] [--shed-kv-watermark F] [--brownout F]\n\
          \x20              [--drain-timeout-ms T] [--trace[=kernel]] [--trace-out FILE]\n\
          \x20              [--cache-dir DIR] [--snapshot-interval-ms T] [--spill-bytes B]\n\
+         \x20              [--watchdog-stall-ms T] [--idempotency-entries N]\n\
          generate       --model pico-mq --prompt '7+8=' --n 8 [--temperature 0.8] [--mode ...]\n\
          \x20              [--prefix-cache N] [--threads N] [--backend ...]\n\
          simulate       --hw h100 --ctx 16384 --bs 16 [--impl bifurcated] [--compiled]\n\
@@ -109,6 +110,15 @@ fn print_usage() {
          LRU-evicted nodes to disk up to B bytes and promotes them back on\n\
          a hit (0 = off). Corrupt or torn records degrade to cold prefill,\n\
          never wrong tokens. GET /healthz is liveness.\n\
+         Self-healing: a supervisor watches the engine thread's heartbeat\n\
+         and, after --watchdog-stall-ms of silence (default 10000) or an\n\
+         engine panic, fails in-flight requests with 503 + Retry-After,\n\
+         flips /readyz to rebuilding, and rebuilds the engine from the\n\
+         last --cache-dir snapshot. Clients may send an Idempotency-Key\n\
+         header (or \"request_key\" in the body): retries replay the\n\
+         recorded byte-identical response without re-decoding\n\
+         (--idempotency-entries bounds the table, default 1024). SIGINT/\n\
+         SIGTERM drain gracefully, same as POST /admin/shutdown.\n\
          --trace records request/wave lifecycle spans (=kernel adds\n\
          per-(layer,group) kernel phases); equivalently set\n\
          $BIFURCATED_TRACE=1|2. Live spans: GET /trace?last=N\n\
@@ -235,7 +245,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.f64_or("brownout", 0.0),
         args.usize_or("drain-timeout-ms", 5_000) as u64,
     );
+    // Self-healing knobs: watchdog stall budget before a wedged engine is
+    // poisoned and rebuilt, and the idempotent-retry table bound (0 keeps
+    // the defaults: 10 s / 1024 entries).
+    client.supervisor_stats().set_stall_ms(args.usize_or("watchdog-stall-ms", 0) as u64);
+    client.dedup().set_capacity(args.usize_or("idempotency-entries", 0));
     let shutdown = bifurcated_attn::server::Shutdown::new();
+    install_signal_drain(&shutdown);
     let sd = std::sync::Arc::clone(&shutdown);
     let drain_client = std::sync::Arc::clone(&client);
     let served = bifurcated_attn::server::build_server(client)
@@ -261,6 +277,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     served
 }
+
+/// Wire SIGINT/SIGTERM into the same graceful-drain path as POST
+/// /admin/shutdown: the handler only flips an atomic (async-signal-safe);
+/// a watcher thread notices and triggers the accept loop's drain, so
+/// in-flight waves finish and a drain snapshot lands before exit.
+#[cfg(unix)]
+fn install_signal_drain(shutdown: &std::sync::Arc<bifurcated_attn::server::Shutdown>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static SIGNALED: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    let sd = std::sync::Arc::clone(shutdown);
+    std::thread::Builder::new()
+        .name("signal-watch".into())
+        .spawn(move || loop {
+            if SIGNALED.load(Ordering::SeqCst) {
+                info!("signal received; draining gracefully");
+                sd.trigger();
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        })
+        .expect("spawn signal watcher");
+}
+
+#[cfg(not(unix))]
+fn install_signal_drain(_shutdown: &std::sync::Arc<bifurcated_attn::server::Shutdown>) {}
 
 /// Dump everything the recorder holds as a Chrome/Perfetto trace file.
 fn write_trace(path: &str) -> Result<()> {

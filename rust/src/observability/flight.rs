@@ -26,8 +26,9 @@ pub struct RequestSummary {
     pub coalesced: bool,
     pub cache_hit_tokens: u64,
     pub mode: String,
-    /// `"ok"`, `"error"`, `"cancelled"`, `"shed"`, `"deadline"`, or
-    /// `"fault"`.
+    /// `"ok"`, `"error"`, `"cancelled"`, `"shed"`, `"deadline"`,
+    /// `"fault"`, or `"rebuilding"` (failed by the supervisor while the
+    /// engine was being rebuilt after a stall or panic).
     pub outcome: &'static str,
     /// Why the request retired the way it did — the retiring error's
     /// display for non-ok outcomes, empty for `"ok"`.

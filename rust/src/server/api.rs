@@ -13,20 +13,23 @@
 //! the classic solo path. `/metrics` requests are answered at step
 //! boundaries, so they never wait for an in-flight wave to drain.
 
+use std::sync::atomic::{AtomicBool, AtomicU64};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    rerank_top_k, Admission, AdmissionGate, BatchJob, Batcher, Cancelled, DeadlineExceeded,
-    Engine, EngineConfig, GenerationRequest, JobSource, ModePolicy, SamplingParams, Shed,
-    ShuttingDown, StreamHandle, WaveFault,
+    rerank_top_k, supervise, Admission, AdmissionGate, BatchJob, Batcher, Cancelled,
+    DeadlineExceeded, Engine, EngineConfig, EngineGeneration, EngineRebuilding, GenerationRequest,
+    InflightGuard, InflightTable, JobSource, ModePolicy, SamplingParams, Shed, ShuttingDown,
+    StreamHandle, SupervisorStats, WaveFault,
 };
 use crate::observability::{chrome, event, flight, prometheus, recorder, span};
 use crate::runtime::models::DecodeMode;
 use crate::runtime::Backend;
 use crate::util::json::{parse as parse_json, Json};
 
+use super::dedup::{Begin, DedupTable};
 use super::http::{HttpResponse, HttpServer};
 
 /// Cap on any one request's stream-channel capacity (a pathological
@@ -58,6 +61,8 @@ impl ApiError {
             ApiError::new(504, message)
         } else if let Some(s) = e.downcast_ref::<Shed>() {
             ApiError { status: 429, message, retry_after_ms: Some(s.retry_after_ms) }
+        } else if let Some(r) = e.downcast_ref::<EngineRebuilding>() {
+            ApiError { status: 503, message, retry_after_ms: Some(r.retry_after_ms) }
         } else if e.downcast_ref::<ShuttingDown>().is_some() {
             ApiError::new(503, message)
         } else if e.downcast_ref::<WaveFault>().is_some() {
@@ -98,6 +103,10 @@ impl std::error::Error for ApiError {}
 enum Job {
     Generate(GenerationRequest, usize, Option<StreamHandle>, Sender<Result<Json, ApiError>>),
     Metrics(Sender<Json>),
+    /// Run a closure on the engine thread at the next step boundary
+    /// (test/diagnostic hook — e.g. arming thread-local failpoints on
+    /// the thread they must fire on).
+    Probe(Box<dyn FnOnce() + Send>),
 }
 
 /// [`JobSource`] over the server's mpsc channel: `poll` drains whatever
@@ -125,6 +134,7 @@ impl ChannelSource {
             Job::Metrics(tx) => BatchJob::Inspect(Box::new(move |engine: &Engine<B>| {
                 let _ = tx.send(engine.metrics_report());
             })),
+            Job::Probe(f) => BatchJob::Inspect(Box::new(move |_: &Engine<B>| f())),
         }
     }
 }
@@ -161,22 +171,113 @@ impl<B: Backend> JobSource<B> for ChannelSource {
     }
 }
 
+/// The 503 every supervisor-failed or mid-rebuild request gets: typed
+/// like the engine-side [`EngineRebuilding`] retire, with a jittered
+/// `Retry-After` from the gate's observed service cadence.
+fn rebuilding_error(gate: &AdmissionGate) -> ApiError {
+    let ms = gate.retry_after_ms();
+    ApiError {
+        status: 503,
+        message: format!("engine rebuilding after fault; retry after {ms} ms"),
+        retry_after_ms: Some(ms),
+    }
+}
+
 /// Cloneable handle HTTP workers use to reach the engine thread.
+///
+/// The job sender lives behind a swappable slot: when the supervisor
+/// poisons a wedged or panicked engine generation, it installs the
+/// replacement generation's channel here once that generation reports
+/// ready. Sends that race the swap fail fast with a 503 — never hang on
+/// a dead pipeline.
 pub struct EngineClient {
-    tx: Mutex<Sender<Job>>,
+    tx: Arc<Mutex<Sender<Job>>>,
     /// Overload-control state shared with the batcher: admission counters,
-    /// shed watermarks, brownout, drain signal.
+    /// shed watermarks, brownout, drain signal, rebuild signal.
     gate: Arc<AdmissionGate>,
+    /// Watchdog/rebuild counters, surviving engine generations.
+    supervisor: Arc<SupervisorStats>,
+    /// Requests currently inside the engine pipeline; the supervisor
+    /// fails them all at poison time.
+    inflight: Arc<InflightTable>,
+    /// Idempotent-retry table (`Idempotency-Key` / `"request_key"`).
+    dedup: Arc<DedupTable>,
 }
 
 impl EngineClient {
-    fn send(&self, job: Job) {
-        self.tx.lock().unwrap().send(job).expect("engine thread died");
+    fn send(&self, job: Job) -> Result<(), ApiError> {
+        self.tx.lock().unwrap().send(job).map_err(|_| self.channel_lost_error())
+    }
+
+    /// The reply (or job) channel died under us: during a rebuild that is
+    /// the expected 503-retryable shape; otherwise it is a hard 500.
+    fn channel_lost_error(&self) -> ApiError {
+        if self.gate.is_rebuilding() {
+            rebuilding_error(&self.gate)
+        } else {
+            ApiError::new(500, "engine thread died")
+        }
+    }
+
+    /// Register `reply` so the supervisor can fail this request with a
+    /// typed 503 (and a flight-recorder entry) if the engine is poisoned
+    /// while it is in flight.
+    fn register_inflight(&self, id: u64, reply: Sender<Result<Json, ApiError>>) -> InflightGuard {
+        let gate = Arc::clone(&self.gate);
+        self.inflight.register(
+            id,
+            Box::new(move || {
+                let e = rebuilding_error(&gate);
+                flight::record(flight::RequestSummary {
+                    id,
+                    queue_ms: 0.0,
+                    window_ms: 0.0,
+                    prefill_ms: 0.0,
+                    decode_steps: 0,
+                    generated_tokens: 0,
+                    peak_rows: 0,
+                    coalesced: false,
+                    cache_hit_tokens: 0,
+                    mode: "n/a".to_string(),
+                    outcome: "rebuilding",
+                    reason: e.message.clone(),
+                    deadline_slack_ms: None,
+                });
+                event("req.rebuilding", id, 0, [e.retry_after_ms.unwrap_or(0), 0, 0]);
+                let _ = reply.send(Err(e));
+            }),
+        )
     }
 
     /// The admission gate shared with the engine thread.
     pub fn gate(&self) -> &Arc<AdmissionGate> {
         &self.gate
+    }
+
+    /// Watchdog/rebuild/dedup counters (`supervisor` object at /metrics).
+    pub fn supervisor_stats(&self) -> &Arc<SupervisorStats> {
+        &self.supervisor
+    }
+
+    /// The idempotent-retry table backing `Idempotency-Key`.
+    pub fn dedup(&self) -> &Arc<DedupTable> {
+        &self.dedup
+    }
+
+    /// Run `f` on the engine thread at the next step boundary and wait
+    /// for it to execute. Returns false if the engine is unreachable.
+    /// Test/diagnostic hook: thread-local state (failpoints) must be
+    /// armed on the thread where it fires.
+    pub fn probe(&self, f: impl FnOnce() + Send + 'static) -> bool {
+        let (tx, rx) = channel();
+        let job = Job::Probe(Box::new(move || {
+            f();
+            let _ = tx.send(());
+        }));
+        if self.send(job).is_err() {
+            return false;
+        }
+        rx.recv_timeout(Duration::from_millis(2000)).is_ok()
     }
 
     /// Graceful drain: flip the gate (the batcher fails parked requests
@@ -196,9 +297,13 @@ impl EngineClient {
     }
 
     pub fn generate(&self, req: GenerationRequest, rerank_k: usize) -> Result<Json, ApiError> {
+        let id = req.id;
         let (tx, rx) = channel();
-        self.send(Job::Generate(req, rerank_k, None, tx));
-        rx.recv().map_err(|_| ApiError::new(500, "engine thread died"))?
+        // Registered before the send so there is no window where the job
+        // is queued but invisible to the supervisor's fail_all().
+        let _guard = self.register_inflight(id, tx.clone());
+        self.send(Job::Generate(req, rerank_k, None, tx))?;
+        rx.recv().map_err(|_| self.channel_lost_error())?
     }
 
     /// Submit a streaming request: tokens flow through `stream`'s paired
@@ -207,51 +312,77 @@ impl EngineClient {
     /// must NOT keep a [`StreamHandle`] clone — hold a
     /// [`crate::coordinator::Canceller`] instead, so the event receiver
     /// sees EOF when the engine side finishes.
+    /// The caller must hold the returned [`InflightGuard`] for the whole
+    /// drain loop so a poisoned engine fails this request promptly.
     pub fn generate_streaming(
         &self,
         req: GenerationRequest,
         rerank_k: usize,
         stream: StreamHandle,
-    ) -> Receiver<Result<Json, ApiError>> {
+    ) -> (Receiver<Result<Json, ApiError>>, InflightGuard) {
+        let id = req.id;
         let (tx, rx) = channel();
-        self.send(Job::Generate(req, rerank_k, Some(stream), tx));
-        rx
+        let guard = self.register_inflight(id, tx.clone());
+        let tx_err = tx.clone();
+        if let Err(e) = self.send(Job::Generate(req, rerank_k, Some(stream), tx)) {
+            // The dropped job also drops the StreamHandle, so the event
+            // receiver sees EOF and the drain loop falls through to this.
+            let _ = tx_err.send(Err(e));
+        }
+        (rx, guard)
     }
 
     pub fn metrics(&self) -> Json {
         let (tx, rx) = channel();
-        self.send(Job::Metrics(tx));
-        rx.recv().unwrap_or_else(|_| Json::obj())
+        if self.send(Job::Metrics(tx)).is_err() {
+            return Json::obj();
+        }
+        // Bounded wait: a wedged engine must not hang the metrics
+        // endpoint the operator needs to diagnose it.
+        rx.recv_timeout(Duration::from_millis(1000)).unwrap_or_else(|_| Json::obj())
     }
 }
 
-/// Spawn an engine event loop from a backend-specific constructor run on
-/// the engine thread itself (backends need not be `Send`); returns the
-/// client handle once initialization succeeds.
-pub fn spawn_engine_with<B, F>(init: F) -> anyhow::Result<std::sync::Arc<EngineClient>>
+/// Spawn one engine-thread generation: a thread named "engine" that
+/// constructs the backend via `init` (snapshot restore included), reports
+/// ready, and runs the continuous batcher with the supervisor's heartbeat
+/// and abandon fence wired in.
+fn spawn_generation<B, F>(
+    init: Arc<F>,
+    rx: Receiver<Job>,
+    gate: Arc<AdmissionGate>,
+    first: bool,
+) -> anyhow::Result<EngineGeneration>
 where
     B: Backend + 'static,
-    F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+    F: Fn() -> anyhow::Result<Engine<B>> + Send + Sync + 'static,
 {
-    let (tx, rx) = channel::<Job>();
+    let heartbeat = Arc::new(AtomicU64::new(0));
+    let fence = Arc::new(AtomicBool::new(false));
+    let (hb, fc) = (Arc::clone(&heartbeat), Arc::clone(&fence));
     let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-    let gate = AdmissionGate::new();
-    let engine_gate = Arc::clone(&gate);
-    std::thread::Builder::new()
+    let handle = std::thread::Builder::new()
         .name("engine".into())
         .spawn(move || {
+            if !first {
+                // A rebuilt generation must not inherit the fault that
+                // killed its predecessor: failpoint specs are
+                // thread-local and re-parse `$BIFURCATED_FAILPOINTS` on
+                // first check, so disarm them before the first step.
+                crate::util::failpoint::clear();
+            }
             // Snapshot restore (when `--cache-dir` points at a prior
             // image) happens inside init(); /readyz answers 503 until
             // the resident cache is rebuilt.
-            engine_gate.set_restoring(true);
-            let engine = match init() {
+            gate.set_restoring(true);
+            let engine = match (*init)() {
                 Ok(e) => {
-                    engine_gate.set_restoring(false);
+                    gate.set_restoring(false);
                     let _ = ready_tx.send(Ok(()));
                     e
                 }
                 Err(e) => {
-                    engine_gate.set_restoring(false);
+                    gate.set_restoring(false);
                     let _ = ready_tx.send(Err(format!("{e:#}")));
                     return;
                 }
@@ -260,13 +391,70 @@ where
             // concurrent requests coalesce into shared decode waves.
             let batching = engine.batching.clone();
             let mut source = ChannelSource { rx, closed: false };
-            Batcher::new(&engine, batching).with_gate(engine_gate).run(&mut source);
+            Batcher::new(&engine, batching)
+                .with_gate(gate)
+                .with_heartbeat(hb)
+                .with_fence(fc)
+                .run(&mut source);
         })?;
-    ready_rx
-        .recv()
-        .map_err(|_| anyhow::anyhow!("engine thread exited during init"))?
-        .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
-    Ok(std::sync::Arc::new(EngineClient { tx: Mutex::new(tx), gate }))
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(EngineGeneration { heartbeat, fence, handle }),
+        Ok(Err(e)) => {
+            let _ = handle.join();
+            Err(anyhow::anyhow!("engine init failed: {e}"))
+        }
+        Err(_) => {
+            let _ = handle.join();
+            Err(anyhow::anyhow!("engine thread exited during init"))
+        }
+    }
+}
+
+/// Spawn an engine event loop from a backend-specific constructor run on
+/// the engine thread itself (backends need not be `Send`); returns the
+/// client handle once initialization succeeds.
+///
+/// The constructor is `Fn`, not `FnOnce`: the supervisor thread re-runs
+/// it to rebuild the engine after a stall or panic, restoring the prefix
+/// cache from the last `--cache-dir` snapshot exactly like a process
+/// restart would. First-generation init errors still propagate to the
+/// caller; rebuild-time init errors are retried by the supervisor while
+/// the gate answers 503 + Retry-After.
+pub fn spawn_engine_with<B, F>(init: F) -> anyhow::Result<std::sync::Arc<EngineClient>>
+where
+    B: Backend + 'static,
+    F: Fn() -> anyhow::Result<Engine<B>> + Send + Sync + 'static,
+{
+    let gate = AdmissionGate::new();
+    let supervisor = SupervisorStats::new();
+    let inflight = InflightTable::new();
+    let init = Arc::new(init);
+
+    let (tx, rx) = channel::<Job>();
+    let first = spawn_generation(Arc::clone(&init), rx, Arc::clone(&gate), true)?;
+
+    let tx_slot = Arc::new(Mutex::new(tx));
+    let client = std::sync::Arc::new(EngineClient {
+        tx: Arc::clone(&tx_slot),
+        gate: Arc::clone(&gate),
+        supervisor: Arc::clone(&supervisor),
+        inflight: Arc::clone(&inflight),
+        dedup: DedupTable::new(),
+    });
+
+    let respawn_gate = Arc::clone(&gate);
+    std::thread::Builder::new().name("supervisor".into()).spawn(move || {
+        supervise(first, supervisor, gate, inflight, move || {
+            let (tx, rx) = channel::<Job>();
+            let gen = spawn_generation(Arc::clone(&init), rx, Arc::clone(&respawn_gate), false)?;
+            // Swap the job channel only once the replacement reported
+            // ready — sends racing the rebuild fail fast instead of
+            // queueing against a generation that may never come up.
+            *tx_slot.lock().unwrap() = tx;
+            Ok(gen)
+        });
+    })?;
+    Ok(client)
 }
 
 /// Spawn a native-backend engine (the default: no artifacts required).
@@ -275,7 +463,7 @@ pub fn spawn_native_engine(
     weight_seed: u64,
     cfg: EngineConfig,
 ) -> anyhow::Result<std::sync::Arc<EngineClient>> {
-    spawn_engine_with(move || Engine::native(&model, weight_seed, cfg))
+    spawn_engine_with(move || Engine::native(&model, weight_seed, cfg.clone()))
 }
 
 /// Spawn a PJRT-backed engine from the AOT artifacts.
@@ -290,7 +478,7 @@ pub fn spawn_engine(
         let manifest = Manifest::load(&artifacts)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&manifest, &client, &model)?;
-        Ok(Engine::new(manifest.tokenizer.clone(), rt, cfg))
+        Ok(Engine::new(manifest.tokenizer.clone(), rt, cfg.clone()))
     })
 }
 
@@ -398,6 +586,12 @@ pub fn parse_generate_body(
     Ok((GenerationRequest { id: next_id, prompt, params }, rerank_k, stream))
 }
 
+/// The optional `"request_key"` idempotency field of a /generate body
+/// (the `Idempotency-Key` header takes precedence at the route).
+pub fn request_key_of(body: &str) -> Option<String> {
+    parse_json(body).ok()?.get("request_key")?.as_str().map(String::from)
+}
+
 /// Build the HTTP routing table over an engine client.
 ///
 /// `/generate` is a sink-style route: without `stream` it answers with
@@ -423,11 +617,13 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
             let gate = ready_client.gate();
             let restoring = gate.is_restoring();
             let draining = gate.is_draining();
-            let ready = !restoring && !draining;
+            let rebuilding = gate.is_rebuilding();
+            let ready = !restoring && !draining && !rebuilding;
             let body = Json::obj()
                 .set("ready", Json::Bool(ready))
                 .set("restoring", Json::Bool(restoring))
-                .set("draining", Json::Bool(draining));
+                .set("draining", Json::Bool(draining))
+                .set("rebuilding", Json::Bool(rebuilding));
             HttpResponse::json(if ready { 200 } else { 503 }, body.to_string())
         })
         .route("GET", "/metrics", move |req| {
@@ -436,7 +632,8 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
             // so shedding and brownout are observable at /metrics too.
             let m = met_client
                 .metrics()
-                .set("admission", met_client.gate().snapshot_json());
+                .set("admission", met_client.gate().snapshot_json())
+                .set("supervisor", met_client.supervisor_stats().snapshot_json());
             if req.query_param("format") == Some("prometheus") {
                 HttpResponse::text(200, prometheus::render(&m))
             } else {
@@ -455,6 +652,22 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
         })
         .route_streaming("POST", "/generate", move |req, sink| {
             let id = next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            // Idempotent-retry fast path: a key (`Idempotency-Key`
+            // header, or the body's `"request_key"` field) whose response
+            // is already recorded replays the exact bytes before
+            // admission even looks — a retrying client gets its answer
+            // while the engine is shedding, draining, or mid-rebuild.
+            let key = req
+                .headers
+                .get("idempotency-key")
+                .cloned()
+                .or_else(|| request_key_of(&req.body));
+            if let Some(k) = &key {
+                if let Some(bytes) = gen_client.dedup().lookup(k) {
+                    gen_client.supervisor_stats().observe_dedup_hit();
+                    return Some(HttpResponse::json(200, (*bytes).clone()));
+                }
+            }
             // Load shedding happens here, before the request touches the
             // engine channel: past the queue bound or the KV-pressure
             // watermark the client gets an immediate 429 with a
@@ -492,6 +705,32 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 Admission::Draining => {
                     return Some(ApiError::new(503, "server shutting down").to_response());
                 }
+                Admission::Rebuilding { retry_after_ms } => {
+                    flight::record(flight::RequestSummary {
+                        id,
+                        queue_ms: 0.0,
+                        window_ms: 0.0,
+                        prefill_ms: 0.0,
+                        decode_steps: 0,
+                        generated_tokens: 0,
+                        peak_rows: 0,
+                        coalesced: false,
+                        cache_hit_tokens: 0,
+                        mode: "n/a".to_string(),
+                        outcome: "rebuilding",
+                        reason: "engine rebuilding after fault".to_string(),
+                        deadline_slack_ms: None,
+                    });
+                    event("req.rebuilding", id, 0, [retry_after_ms, 0, 0]);
+                    let e = ApiError {
+                        status: 503,
+                        message: format!(
+                            "engine rebuilding after fault; retry in {retry_after_ms} ms"
+                        ),
+                        retry_after_ms: Some(retry_after_ms),
+                    };
+                    return Some(e.to_response());
+                }
             };
             let (mut greq, rerank_k, stream) = match parse_generate_body(&req.body, id) {
                 Err(e) => return Some(HttpResponse::error(400, &e)),
@@ -511,11 +750,51 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 .is_some_and(|a| a.contains("text/event-stream"));
             let _sp = span("req.serve").req(id).on_request_track().arg(0, u64::from(streaming));
             if !streaming {
+                if let Some(k) = &key {
+                    return Some(match gen_client.dedup().begin(k) {
+                        Begin::Recorded(bytes) => {
+                            gen_client.supervisor_stats().observe_dedup_hit();
+                            HttpResponse::json(200, (*bytes).clone())
+                        }
+                        Begin::Joined(rx) => {
+                            // The original attempt is still decoding:
+                            // ride along and return its exact bytes.
+                            gen_client.supervisor_stats().observe_dedup_join();
+                            match rx.recv() {
+                                Ok(Some(bytes)) => HttpResponse::json(200, (*bytes).clone()),
+                                // The primary failed — its error was not
+                                // recorded; this retry (and the next)
+                                // re-executes from scratch.
+                                Ok(None) | Err(_) => ApiError {
+                                    status: 503,
+                                    message: "original attempt failed; retry".to_string(),
+                                    retry_after_ms: Some(gen_client.gate().retry_after_ms()),
+                                }
+                                .to_response(),
+                            }
+                        }
+                        Begin::Primary(pending) => match gen_client.generate(greq, rerank_k) {
+                            Ok(j) => {
+                                let body = j.to_string();
+                                pending.complete(&body);
+                                HttpResponse::json(200, body)
+                            }
+                            // Dropping `pending` wakes joiners with None:
+                            // errors are never recorded as "the" response.
+                            Err(e) => e.to_response(),
+                        },
+                    });
+                }
                 return Some(match gen_client.generate(greq, rerank_k) {
                     Ok(j) => HttpResponse::json(200, j.to_string()),
                     Err(e) => e.to_response(),
                 });
             }
+            // Streaming + idempotency: a recorded key replays the
+            // buffered response via the fast path above (tokens were
+            // already delivered once); an unrecorded key executes as a
+            // plain stream and is NOT recorded — chunked replay is out
+            // of scope.
             // Bounded to the request's own token budget so the engine
             // thread never blocks on this client (overflow = disconnect).
             let cap = (greq.params.n.saturating_mul(greq.params.max_tokens))
@@ -523,7 +802,7 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 .min(MAX_STREAM_CAPACITY);
             let (handle, events) = StreamHandle::channel(cap);
             let canceller = handle.canceller();
-            let reply = gen_client.generate_streaming(greq, rerank_k, handle);
+            let (reply, _inflight_guard) = gen_client.generate_streaming(greq, rerank_k, handle);
             let begun = if sse {
                 sink.begin_with(200, "text/event-stream", &[("Cache-Control", "no-cache")])
             } else {
@@ -534,30 +813,51 @@ pub fn build_server(client: std::sync::Arc<EngineClient>) -> HttpServer {
                 return None;
             }
             let mut gone = false;
-            // recv() sees EOF once the engine side retires the request
-            // and drops its handles; keep draining after a dead write so
-            // the engine-side bounded channel never fills against us.
-            while let Ok(ev) = events.recv() {
-                if gone {
-                    continue;
-                }
-                let payload = format!("{{\"row\":{},\"token\":{}}}", ev.row, ev.token);
-                let frame = if sse {
-                    format!("data: {payload}\n\n")
-                } else {
-                    format!("{payload}\n")
-                };
-                if sink.chunk(&frame).is_err() {
-                    canceller.cancel();
-                    gone = true;
-                } else {
-                    event("stream.emit", id, 0, [ev.row as u64, 1, 0]);
+            // The event channel sees EOF once the engine side retires the
+            // request and drops its handles; keep draining after a dead
+            // write so the engine-side bounded channel never fills
+            // against us. A poisoned engine resolves the *reply* channel
+            // (via the supervisor's abort) without ever closing the
+            // stream handle — the periodic timeout checks for that so no
+            // client hangs on a wedged generation.
+            let mut early: Option<Result<Json, ApiError>> = None;
+            loop {
+                match events.recv_timeout(Duration::from_millis(100)) {
+                    Ok(ev) => {
+                        if gone {
+                            continue;
+                        }
+                        let payload = format!("{{\"row\":{},\"token\":{}}}", ev.row, ev.token);
+                        let frame = if sse {
+                            format!("data: {payload}\n\n")
+                        } else {
+                            format!("{payload}\n")
+                        };
+                        if sink.chunk(&frame).is_err() {
+                            canceller.cancel();
+                            gone = true;
+                        } else {
+                            event("stream.emit", id, 0, [ev.row as u64, 1, 0]);
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                    Err(RecvTimeoutError::Timeout) => match reply.try_recv() {
+                        Ok(r) => {
+                            early = Some(r);
+                            break;
+                        }
+                        Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => break,
+                    },
                 }
             }
-            let done = reply
-                .recv()
-                .map_err(|_| ApiError::new(500, "engine thread died"))
-                .and_then(|r| r);
+            let done = match early {
+                Some(r) => r,
+                None => reply
+                    .recv_timeout(Duration::from_secs(5))
+                    .map_err(|_| ApiError::new(500, "engine thread died"))
+                    .and_then(|r| r),
+            };
             if !gone {
                 let (event_name, payload) = match done {
                     Ok(j) => ("done", Json::obj().set("done", j).to_string()),
@@ -788,6 +1088,191 @@ mod tests {
             parse_generate_body(r#"{"prompt":"1+2=","max_tokens":2,"deadline_ms":60000}"#, 2)
                 .unwrap();
         assert!(client.generate(req, rk).is_ok());
+    }
+
+    fn wait_for_rebuild(client: &EngineClient, n: u64) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (client.supervisor_stats().rebuilds() < n || client.gate().is_rebuilding())
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(client.supervisor_stats().rebuilds() >= n, "rebuild did not complete in time");
+        assert!(!client.gate().is_rebuilding());
+    }
+
+    #[test]
+    fn stall_watchdog_fails_inflight_fast_and_rebuilds() {
+        let client = spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        client.supervisor_stats().set_stall_ms(150);
+        let body = r#"{"prompt":"1+2=","n":2,"max_tokens":3,"seed":11}"#;
+        let (req, rk, _) = parse_generate_body(body, 1).unwrap();
+        let baseline = client.generate(req, rk).unwrap();
+
+        // Arm the hang on the engine thread itself (failpoints are
+        // thread-local), then trip it with a request: the engine parks
+        // mid-decode and stops stamping its heartbeat.
+        assert!(client.probe(|| crate::util::failpoint::set("decode_hang=1")));
+        let (req, rk, _) = parse_generate_body(body, 2).unwrap();
+        let t0 = Instant::now();
+        let err = client.generate(req, rk).unwrap_err();
+        // The supervisor fails the parked request with a retryable 503 —
+        // fast (one stall budget + polling slack), not a client hang.
+        assert_eq!(err.status, 503, "{}", err.message);
+        assert!(err.retry_after_ms.is_some(), "rebuild 503 must carry Retry-After");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "in-flight failure must be prompt, took {:?}",
+            t0.elapsed()
+        );
+        wait_for_rebuild(&client, 1);
+        assert_eq!(client.supervisor_stats().stalls_detected(), 1);
+        assert!(client.supervisor_stats().failed_inflight() >= 1);
+
+        // The rebuilt engine serves the same request with bitwise-equal
+        // completions (decode is deterministic in the request seed).
+        let (req, rk, _) = parse_generate_body(body, 3).unwrap();
+        let after = client.generate(req, rk).unwrap();
+        assert_eq!(
+            after.req("completions").to_string(),
+            baseline.req("completions").to_string(),
+            "post-rebuild decode must match pre-fault bytes"
+        );
+        // The supervisor-failed request is visible in the flight recorder
+        // under its own outcome.
+        assert!(
+            flight::recent(64).iter().any(|r| r.outcome == "rebuilding"),
+            "supervisor-failed request must appear with outcome=rebuilding"
+        );
+    }
+
+    #[test]
+    fn engine_panic_triggers_rebuild_and_service_recovers() {
+        let client = spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        client.supervisor_stats().set_stall_ms(200);
+        let body = r#"{"prompt":"1+2=","max_tokens":2,"seed":4}"#;
+        let (req, rk, _) = parse_generate_body(body, 1).unwrap();
+        let baseline = client.generate(req, rk).unwrap();
+
+        // The panic fires at the next scheduling-loop top; the join-based
+        // verdict takes the rebuild path without waiting out the stall
+        // budget.
+        assert!(client.probe(|| crate::util::failpoint::set("engine_thread_panic=1")));
+        wait_for_rebuild(&client, 1);
+
+        let (req, rk, _) = parse_generate_body(body, 2).unwrap();
+        let after = client.generate(req, rk).unwrap();
+        assert_eq!(after.req("completions").to_string(), baseline.req("completions").to_string());
+        // /metrics carries the supervisor block with the rebuild counted.
+        let server = build_server(Arc::clone(&client));
+        let mreq = crate::server::http::HttpRequest {
+            method: "GET".into(),
+            path: "/metrics".into(),
+            query: String::new(),
+            headers: Default::default(),
+            body: String::new(),
+        };
+        let m = parse_json(&server.dispatch(&mreq).body).unwrap();
+        assert!(m.req("supervisor").f64_of("rebuilds") >= 1.0);
+        assert!(m.req("supervisor").f64_of("heartbeats") > 0.0);
+    }
+
+    #[test]
+    fn idempotency_key_replays_recorded_response_without_redecoding() {
+        let client = spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let server = build_server(Arc::clone(&client));
+        let body = r#"{"prompt":"1+2=","n":2,"max_tokens":3,"seed":9}"#;
+        let keyed = |k: &str| {
+            let mut r = post_generate(body);
+            r.headers.insert("idempotency-key".into(), k.into());
+            r
+        };
+
+        let r1 = server.dispatch(&keyed("key-a"));
+        assert_eq!(r1.status, 200, "{}", r1.body);
+        let decoded = client.metrics().f64_of("requests");
+        let r2 = server.dispatch(&keyed("key-a"));
+        assert_eq!(r2.status, 200);
+        assert_eq!(r1.body, r2.body, "retry must replay byte-identical bytes");
+        assert_eq!(
+            client.metrics().f64_of("requests"),
+            decoded,
+            "replay must not re-decode"
+        );
+
+        // Body-field variant: `"request_key"` behaves like the header.
+        let kbody = r#"{"prompt":"1+2=","max_tokens":2,"seed":2,"request_key":"key-b"}"#;
+        let r3 = server.dispatch(&post_generate(kbody));
+        assert_eq!(r3.status, 200, "{}", r3.body);
+        let decoded = client.metrics().f64_of("requests");
+        let r4 = server.dispatch(&post_generate(kbody));
+        assert_eq!(r4.body, r3.body);
+        assert_eq!(client.metrics().f64_of("requests"), decoded);
+
+        // A different key is a different request — never cross-replayed.
+        let other = r#"{"prompt":"1+2=","max_tokens":2,"seed":2,"request_key":"key-c"}"#;
+        let r5 = server.dispatch(&post_generate(other));
+        assert_eq!(r5.status, 200);
+        assert!(client.metrics().f64_of("requests") > decoded, "fresh key must decode");
+
+        // Replays are counted at /metrics under the supervisor block.
+        assert!(client.supervisor_stats().snapshot_json().f64_of("dedup_hits") >= 2.0);
+    }
+
+    #[test]
+    fn readyz_and_generate_reject_while_rebuilding_without_hanging() {
+        let client = spawn_native_engine("pico-mq".into(), 0, EngineConfig::default()).unwrap();
+        let server = Arc::new(build_server(Arc::clone(&client)));
+        client.gate().set_rebuilding(true);
+
+        // Concurrent probes during the rebuild window: every request
+        // resolves promptly with a 503 naming the reason — no hangs.
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let srv = Arc::clone(&server);
+            joins.push(std::thread::spawn(move || {
+                let ready = srv.dispatch(&crate::server::http::HttpRequest {
+                    method: "GET".into(),
+                    path: "/readyz".into(),
+                    query: String::new(),
+                    headers: Default::default(),
+                    body: String::new(),
+                });
+                assert_eq!(ready.status, 503);
+                let j = parse_json(&ready.body).unwrap();
+                assert_eq!(j.req("rebuilding").as_bool(), Some(true));
+                assert_eq!(j.req("ready").as_bool(), Some(false));
+                let gen = srv.dispatch(&post_generate(r#"{"prompt":"1+2=","max_tokens":2}"#));
+                assert_eq!(gen.status, 503, "{}", gen.body);
+                assert!(gen.header("Retry-After").is_some(), "rebuild 503 carries Retry-After");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // An idempotent replay still answers 200 mid-rebuild.
+        let kbody = r#"{"prompt":"1+2=","max_tokens":2,"seed":2,"request_key":"key-r"}"#;
+        client.gate().set_rebuilding(false);
+        let recorded = server.dispatch(&post_generate(kbody));
+        assert_eq!(recorded.status, 200, "{}", recorded.body);
+        client.gate().set_rebuilding(true);
+        let replay = server.dispatch(&post_generate(kbody));
+        assert_eq!(replay.status, 200, "recorded keys replay during rebuild");
+        assert_eq!(replay.body, recorded.body);
+
+        client.gate().set_rebuilding(false);
+        assert_eq!(
+            server
+                .dispatch(&crate::server::http::HttpRequest {
+                    method: "GET".into(),
+                    path: "/readyz".into(),
+                    query: String::new(),
+                    headers: Default::default(),
+                    body: String::new(),
+                })
+                .status,
+            200
+        );
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Idempotent-retry dedup table for `/generate`.
+//!
+//! The supervisor's rebuild path (and PR 8's shedding) answers in-flight
+//! requests with 503 + `Retry-After` — which makes *client retry* part
+//! of the serving contract. A naive retry of a sampled generation is not
+//! idempotent: the request would land in a different wave with a
+//! different wave seed and decode different tokens. This table closes
+//! the loop: a client that stamps its request with an `Idempotency-Key`
+//! header (or a `"request_key"` body field) gets the recorded
+//! byte-identical response on retry, without re-decoding.
+//!
+//! Semantics, in order of precedence per key:
+//!
+//! 1. **Recorded** — a completed 200 response exists: replay its exact
+//!    bytes (an LRU touch refreshes recency).
+//! 2. **Joined** — the original attempt is still decoding: block on a
+//!    channel and receive the primary's bytes when it completes
+//!    (`None` if the primary failed — the joiner gets a 503 and may
+//!    retry, becoming the new primary).
+//! 3. **Primary** — no record, no primary: caller executes the request
+//!    holding a [`PendingGuard`]; `complete(body)` records and wakes
+//!    joiners, drop-without-complete (error/panic path) wakes them with
+//!    `None`. Only 200s are ever recorded — a failed attempt must not
+//!    pin its error as "the" response for the key.
+//!
+//! The completed side is a bounded LRU (`--idempotency-entries`,
+//! default 1024): memory stays O(capacity · response size) no matter
+//! how many keys clients invent. Eviction is least-recent-stamp scan —
+//! O(n) at capacity, fine for the table sizes this serves.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+#[derive(Default)]
+struct Inner {
+    /// key → (recency stamp, recorded response bytes).
+    completed: HashMap<String, (u64, Arc<String>)>,
+    /// key → joiners waiting on the in-flight primary.
+    pending: HashMap<String, Vec<Sender<Option<Arc<String>>>>>,
+    /// Monotonic LRU clock (bumped on insert and on hit).
+    clock: u64,
+}
+
+/// Bounded LRU of completed responses plus a join-in-flight map,
+/// shared across HTTP workers and supervisor rebuilds.
+pub struct DedupTable {
+    inner: Mutex<Inner>,
+    capacity: AtomicUsize,
+}
+
+/// Outcome of [`DedupTable::begin`].
+pub enum Begin {
+    /// A completed response is recorded for this key — replay it.
+    Recorded(Arc<String>),
+    /// Another attempt with this key is mid-decode — wait for its bytes
+    /// (`None` = the primary failed; caller should answer 503-retryable).
+    Joined(Receiver<Option<Arc<String>>>),
+    /// This caller is the primary; execute and settle via the guard.
+    Primary(PendingGuard),
+}
+
+impl DedupTable {
+    pub fn new() -> Arc<DedupTable> {
+        Arc::new(DedupTable {
+            inner: Mutex::new(Inner::default()),
+            capacity: AtomicUsize::new(DEFAULT_CAPACITY),
+        })
+    }
+
+    /// Configure the completed-LRU bound (`--idempotency-entries`; 0
+    /// keeps the default). Shrinking applies on the next record.
+    pub fn set_capacity(&self, n: usize) {
+        if n > 0 {
+            self.capacity.store(n, Ordering::SeqCst);
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::SeqCst)
+    }
+
+    /// Completed entries currently held (test/diagnostic visibility).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().completed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-registering probe: the recorded response for `key`, if any,
+    /// refreshing its recency. Used for replay-before-admission (a
+    /// recorded key answers even while shedding or rebuilding) and for
+    /// streaming requests, which replay but never record.
+    pub fn lookup(&self, key: &str) -> Option<Arc<String>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.completed.get_mut(key).map(|slot| {
+            slot.0 = clock;
+            Arc::clone(&slot.1)
+        })
+    }
+
+    /// Claim `key`: replay if recorded, join if in-flight, otherwise
+    /// become the primary attempt.
+    pub fn begin(self: &Arc<Self>, key: &str) -> Begin {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(slot) = inner.completed.get_mut(key) {
+            slot.0 = clock;
+            return Begin::Recorded(Arc::clone(&slot.1));
+        }
+        if let Some(waiters) = inner.pending.get_mut(key) {
+            let (tx, rx) = channel();
+            waiters.push(tx);
+            return Begin::Joined(rx);
+        }
+        inner.pending.insert(key.to_string(), Vec::new());
+        Begin::Primary(PendingGuard {
+            table: Arc::clone(self),
+            key: key.to_string(),
+            settled: false,
+        })
+    }
+
+    /// Record `body` for `key`, evicting the least-recently-used entry
+    /// if at capacity, and return it for broadcast.
+    fn record(&self, key: &str, body: String) -> Arc<String> {
+        let cap = self.capacity().max(1);
+        let mut inner = self.inner.lock().unwrap();
+        while inner.completed.len() >= cap && !inner.completed.contains_key(key) {
+            if let Some(oldest) =
+                inner.completed.iter().min_by_key(|(_, (stamp, _))| *stamp).map(|(k, _)| k.clone())
+            {
+                inner.completed.remove(&oldest);
+            } else {
+                break;
+            }
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        let body = Arc::new(body);
+        inner.completed.insert(key.to_string(), (clock, Arc::clone(&body)));
+        body
+    }
+
+    fn settle(&self, key: &str, body: Option<String>) {
+        let recorded = body.map(|b| self.record(key, b));
+        let waiters = self.inner.lock().unwrap().pending.remove(key).unwrap_or_default();
+        for w in waiters {
+            let _ = w.send(recorded.clone());
+        }
+    }
+}
+
+/// Primary-attempt claim on a key. Call [`complete`](Self::complete)
+/// with the exact response body on success; dropping without completing
+/// (error retire, handler panic) releases the key and wakes joiners
+/// with `None` so a retry can become the new primary.
+pub struct PendingGuard {
+    table: Arc<DedupTable>,
+    key: String,
+    settled: bool,
+}
+
+impl PendingGuard {
+    /// Record the successful response and broadcast it to joiners.
+    pub fn complete(mut self, body: &str) {
+        self.settled = true;
+        self.table.settle(&self.key, Some(body.to_string()));
+    }
+}
+
+impl Drop for PendingGuard {
+    fn drop(&mut self) {
+        if !self.settled {
+            self.table.settle(&self.key, None);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::prng::Pcg;
+
+    fn claim(t: &Arc<DedupTable>, key: &str) -> Begin {
+        t.begin(key)
+    }
+
+    #[test]
+    fn primary_records_and_replays() {
+        let t = DedupTable::new();
+        match claim(&t, "k1") {
+            Begin::Primary(g) => g.complete("{\"id\":1}"),
+            _ => panic!("first claim must be primary"),
+        }
+        match claim(&t, "k1") {
+            Begin::Recorded(b) => assert_eq!(&*b, "{\"id\":1}"),
+            _ => panic!("second claim must replay"),
+        }
+        assert_eq!(t.lookup("k1").as_deref().map(String::as_str), Some("{\"id\":1}"));
+        assert!(t.lookup("other").is_none());
+    }
+
+    #[test]
+    fn failed_primary_releases_the_key() {
+        let t = DedupTable::new();
+        let g = match claim(&t, "k") {
+            Begin::Primary(g) => g,
+            _ => panic!("primary expected"),
+        };
+        let joiner = match claim(&t, "k") {
+            Begin::Joined(rx) => rx,
+            _ => panic!("join expected while pending"),
+        };
+        drop(g); // error path: never completed
+        assert_eq!(joiner.recv().unwrap(), None, "joiner learns the primary failed");
+        assert!(t.lookup("k").is_none(), "failures are never recorded");
+        assert!(matches!(claim(&t, "k"), Begin::Primary(_)), "retry becomes the new primary");
+    }
+
+    #[test]
+    fn join_in_flight_receives_identical_bytes() {
+        let t = DedupTable::new();
+        let g = match claim(&t, "k") {
+            Begin::Primary(g) => g,
+            _ => panic!("primary expected"),
+        };
+        let mut joiners = Vec::new();
+        for _ in 0..3 {
+            match claim(&t, "k") {
+                Begin::Joined(rx) => joiners.push(rx),
+                _ => panic!("join expected"),
+            }
+        }
+        g.complete("payload-bytes");
+        for rx in joiners {
+            assert_eq!(rx.recv().unwrap().as_deref().map(String::as_str), Some("payload-bytes"));
+        }
+        match claim(&t, "k") {
+            Begin::Recorded(b) => assert_eq!(&*b, "payload-bytes"),
+            _ => panic!("later claims replay the record"),
+        }
+    }
+
+    // --- property tests (seeded; PROPCHECK_SEED overrides) ---
+
+    #[test]
+    fn prop_never_returns_bytes_for_a_different_key() {
+        // Random interleavings of insert/hit over a small key space:
+        // every replay must carry exactly the bytes recorded for that
+        // key, and never leak another key's response.
+        forall(
+            "dedup_key_isolation",
+            64,
+            |rng: &mut Pcg| {
+                (0..40)
+                    .map(|_| (rng.below(8) as u64, rng.below(3) as u8))
+                    .collect::<Vec<(u64, u8)>>()
+            },
+            |ops| {
+                let t = DedupTable::new();
+                t.set_capacity(4); // force evictions mid-sequence
+                for (i, &(key_id, op)) in ops.iter().enumerate() {
+                    let key = format!("key-{key_id}");
+                    let body = format!("body-for-{key_id}");
+                    match op {
+                        0 => match t.begin(&key) {
+                            Begin::Primary(g) => g.complete(&body),
+                            Begin::Recorded(b) if *b == body => {}
+                            Begin::Recorded(b) => {
+                                return Err(format!("op {i}: key {key} replayed {b:?}"))
+                            }
+                            Begin::Joined(_) => {
+                                return Err(format!("op {i}: unexpected join (no primary held)"))
+                            }
+                        },
+                        1 => {
+                            if let Some(b) = t.lookup(&key) {
+                                if *b != body {
+                                    return Err(format!("op {i}: lookup {key} got {b:?}"));
+                                }
+                            }
+                        }
+                        _ => {
+                            // failed primary: claim then drop uncompleted
+                            if let Begin::Primary(g) = t.begin(&key) {
+                                drop(g);
+                                if t.lookup(&key).is_some() {
+                                    return Err(format!("op {i}: failure was recorded"));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_memory_stays_bounded_under_random_churn() {
+        forall(
+            "dedup_bounded_memory",
+            48,
+            |rng: &mut Pcg| {
+                let cap = 1 + rng.below(6);
+                let ops: Vec<u64> = (0..60).map(|_| rng.next_u64() % 32).collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let t = DedupTable::new();
+                t.set_capacity(*cap);
+                for &k in ops {
+                    let key = format!("k{k}");
+                    if let Begin::Primary(g) = t.begin(&key) {
+                        g.complete("x");
+                    }
+                    if t.len() > *cap {
+                        return Err(format!("table grew to {} past capacity {cap}", t.len()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_eviction_keeps_most_recently_used() {
+        let t = DedupTable::new();
+        t.set_capacity(2);
+        for k in ["a", "b"] {
+            if let Begin::Primary(g) = t.begin(k) {
+                g.complete(k);
+            }
+        }
+        t.lookup("a"); // refresh a → b is now LRU
+        if let Begin::Primary(g) = t.begin("c") {
+            g.complete("c");
+        }
+        assert!(t.lookup("a").is_some(), "recently-used survives eviction");
+        assert!(t.lookup("b").is_none(), "LRU entry evicted");
+        assert!(t.lookup("c").is_some());
+    }
+}

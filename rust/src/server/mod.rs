@@ -3,6 +3,7 @@
 
 pub mod api;
 pub mod client;
+pub mod dedup;
 pub mod http;
 
 #[cfg(feature = "pjrt")]
@@ -12,6 +13,7 @@ pub use api::{
     EngineClient,
 };
 pub use client::{send_request, send_request_with, ClientResponse};
+pub use dedup::{Begin, DedupTable, PendingGuard};
 pub use http::{
     connect_retry, ChunkSink, HttpRequest, HttpResponse, HttpServer, ParseError, Shutdown,
     StreamHandler,

@@ -32,6 +32,14 @@
 //! `snap_read_corrupt` makes restore treat a record as
 //! checksum-mismatched, and `spill_io_err` fails the spill write
 //! mid-eviction (the entry is dropped instead of demoted).
+//!
+//! Supervision sites (PR 10): `decode_hang` parks the engine thread on a
+//! test-released condvar mid-decode (see `util::hang`) so only the stall
+//! watchdog can observe it, and `engine_thread_panic` panics at the next
+//! scheduling-loop top. Both are gated to the thread named "engine":
+//! ambient (env-armed) chaos runs drive the batcher inline on test
+//! threads, where a hang or panic would wedge the harness instead of
+//! exercising the supervisor.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

@@ -1,0 +1,100 @@
+//! Test-released parking lot for the `decode_hang` failpoint.
+//!
+//! A hang is the one fault the chaos suite cannot simulate with an
+//! `Err` or a panic: the engine thread simply stops making progress
+//! while holding its lanes, and only the supervisor's stall watchdog
+//! can notice. The `decode_hang` failpoint site calls [`park`], which
+//! blocks the calling thread on a global condvar until a test (or the
+//! process exit path) calls [`release_all`] — deterministic to arm,
+//! deterministic to release, and leak-free: released threads return
+//! normally so a fenced zombie batcher can unwind its stack.
+//!
+//! The parked thread holds no locks the rest of the process needs
+//! (the registry here is dedicated), so `/metrics`, `/readyz`, and the
+//! supervisor all keep running while the engine is wedged — exactly
+//! the failure shape a stuck kernel or pool deadlock would produce.
+
+use std::sync::{Condvar, Mutex, OnceLock};
+
+struct Lot {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+fn lot() -> &'static Lot {
+    static LOT: OnceLock<Lot> = OnceLock::new();
+    LOT.get_or_init(|| Lot { epoch: Mutex::new(0), cv: Condvar::new() })
+}
+
+/// Block the calling thread until the next [`release_all`]. Returns the
+/// number of release epochs observed (useful only for debugging).
+pub fn park() -> u64 {
+    let l = lot();
+    let mut epoch = l.epoch.lock().unwrap();
+    let entered = *epoch;
+    while *epoch == entered {
+        epoch = l.cv.wait(epoch).unwrap();
+    }
+    *epoch
+}
+
+/// Release every thread currently parked in [`park`]. Threads that call
+/// `park` *after* this returns block until the next release.
+pub fn release_all() {
+    let l = lot();
+    *l.epoch.lock().unwrap() += 1;
+    l.cv.notify_all();
+}
+
+/// True on the spawned serving thread. The `decode_hang` and
+/// `engine_thread_panic` failpoint sites only arm there: the chaos
+/// suite drives the batcher inline on *test* threads (via
+/// `ScriptedSource`), where an ambient hang/panic spec would wedge or
+/// kill the test harness instead of exercising the supervisor.
+pub fn on_engine_thread() -> bool {
+    std::thread::current().name() == Some("engine")
+}
+
+/// The `decode_hang` failpoint site: park the calling engine thread on
+/// the test-released condvar, simulating a stuck kernel / pool deadlock
+/// that only the stall watchdog can observe.
+pub fn check_decode_hang() {
+    if on_engine_thread() && crate::util::failpoint::check("decode_hang").is_some() {
+        crate::warn_!("failpoint decode_hang fired: parking the engine thread");
+        park();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn park_blocks_until_release() {
+        let woke = Arc::new(AtomicBool::new(false));
+        let w = woke.clone();
+        let h = std::thread::spawn(move || {
+            park();
+            w.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!woke.load(Ordering::SeqCst), "park returned before release");
+        release_all();
+        h.join().unwrap();
+        assert!(woke.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn release_only_wakes_current_parkers() {
+        // A release with nobody parked must not satisfy a later park.
+        release_all();
+        let h = std::thread::spawn(park);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "park consumed a stale release epoch");
+        release_all();
+        h.join().unwrap();
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod failpoint;
+pub mod hang;
 pub mod histogram;
 pub mod json;
 pub mod logging;
